@@ -1,0 +1,49 @@
+//! Bench E7/E8 (detection side): the full Table 2 / Fig. 11 detection
+//! pipeline — accelerator-model FPS for SECOND plus the host-side
+//! end-to-end frame through the real numerics.
+
+use voxel_cim::bench_util::bench;
+use voxel_cim::coordinator::scheduler::{NetworkRunner, RunnerConfig};
+use voxel_cim::mapsearch::Doms;
+use voxel_cim::model::second;
+use voxel_cim::pointcloud::voxelize::Voxelizer;
+use voxel_cim::sim::accelerator::{Accelerator, SimOptions};
+use voxel_cim::sim::baselines::{BASELINES, GPU_DET_FPS};
+use voxel_cim::sparse::tensor::SparseTensor;
+use voxel_cim::spconv::layer::NativeEngine;
+use voxel_cim::util::rng::Pcg64;
+
+fn main() {
+    println!("# e2e_detection — SECOND / KITTI-like (Table 2 Det row, Fig. 11)");
+    // Accelerator-model simulation at full resolution.
+    let net = second::second();
+    let g = Voxelizer::synth_clustered(net.extent, 6.0e-4, 10, 0.35, 31);
+    let input = SparseTensor::from_coords(net.extent, g.coords(), 1);
+    let acc = Accelerator::default();
+    println!("input: {} voxels at {:?}", input.len(), net.extent);
+    bench("detection/accel_sim_full", 0, 5, || {
+        acc.simulate(&net, &input, &Doms::default(), &SimOptions::default())
+    });
+    let rep = acc.simulate(&net, &input, &Doms::default(), &SimOptions::default());
+    println!(
+        "model: {:.1} fps | {:.2} mJ/frame | paper 106 fps | GPU {:.1} fps | best accel {:.1} fps",
+        rep.fps(),
+        rep.energy_joules * 1e3,
+        GPU_DET_FPS,
+        BASELINES.iter().filter_map(|b| b.det_fps).fold(0.0, f64::max),
+    );
+
+    // Host-side real-numerics frame at the reduced grid.
+    let small = second::second_small();
+    let runner = NetworkRunner::new(small.clone(), RunnerConfig::default());
+    let gs = Voxelizer::synth_occupancy(small.extent, 2500.0 / small.extent.volume() as f64, 32);
+    let mut t = SparseTensor::from_coords(small.extent, gs.coords(), 4);
+    let mut rng = Pcg64::new(33);
+    for v in t.features.iter_mut() {
+        *v = rng.next_i8(0, 12);
+    }
+    let r = bench("detection/host_frame_native", 0, 3, || {
+        runner.run_frame(t.clone(), &mut NativeEngine::default()).unwrap()
+    });
+    println!("host frame mean: {:.1} ms (CPU-emulated CIM numerics)", r.mean() * 1e3);
+}

@@ -1,0 +1,53 @@
+//! Bench E7/E8 (segmentation side): MinkUNet / SemanticKITTI-like — the
+//! Table 2 Seg row, Fig. 11 seg bars, and the W2B contribution at the
+//! pipeline level.
+
+use voxel_cim::bench_util::bench;
+use voxel_cim::coordinator::scheduler::{NetworkRunner, RunnerConfig};
+use voxel_cim::mapsearch::Doms;
+use voxel_cim::model::minkunet;
+use voxel_cim::pointcloud::voxelize::Voxelizer;
+use voxel_cim::sim::accelerator::{Accelerator, SimOptions};
+use voxel_cim::sim::baselines::GPU_SEG_FPS;
+use voxel_cim::sparse::tensor::SparseTensor;
+use voxel_cim::spconv::layer::NativeEngine;
+use voxel_cim::util::rng::Pcg64;
+
+fn main() {
+    println!("# e2e_segmentation — MinkUNet / SemanticKITTI-like (Table 2 Seg row)");
+    let net = minkunet::minkunet();
+    let g = Voxelizer::synth_clustered(net.extent, 2.3e-4, 14, 0.3, 41);
+    let input = SparseTensor::from_coords(net.extent, g.coords(), 1);
+    let acc = Accelerator::default();
+    println!("input: {} voxels at {:?}", input.len(), net.extent);
+    bench("segmentation/accel_sim_full", 0, 3, || {
+        acc.simulate(&net, &input, &Doms::default(), &SimOptions::default())
+    });
+    let with = acc.simulate(&net, &input, &Doms::default(), &SimOptions::default());
+    let without = acc.simulate(
+        &net,
+        &input,
+        &Doms::default(),
+        &SimOptions { w2b: false, ..Default::default() },
+    );
+    println!(
+        "model: {:.1} fps (W2B) vs {:.1} fps (no W2B) | paper 107 fps | GPU {:.1} fps",
+        with.fps(),
+        without.fps(),
+        GPU_SEG_FPS
+    );
+
+    // Host-side real-numerics UNet at the reduced grid.
+    let small = minkunet::minkunet_small();
+    let runner = NetworkRunner::new(small.clone(), RunnerConfig::default());
+    let gs = Voxelizer::synth_clustered(small.extent, 900.0 / small.extent.volume() as f64, 42, 0.3, 43);
+    let mut t = SparseTensor::from_coords(small.extent, gs.coords(), 4);
+    let mut rng = Pcg64::new(44);
+    for v in t.features.iter_mut() {
+        *v = rng.next_i8(0, 12);
+    }
+    let r = bench("segmentation/host_frame_native", 0, 3, || {
+        runner.run_frame(t.clone(), &mut NativeEngine::default()).unwrap()
+    });
+    println!("host frame mean: {:.1} ms (CPU-emulated CIM numerics)", r.mean() * 1e3);
+}

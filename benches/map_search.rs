@@ -1,0 +1,41 @@
+//! Bench E1-E4: map-search dataflows across the paper's two resolutions
+//! (Fig. 2d / Fig. 9 regimes) — wall-clock of the behavioral searchers
+//! plus the normalized access volumes they model.
+
+use voxel_cim::bench_util::bench;
+use voxel_cim::experiments::{sweep_tensor, HIGH_RES, LOW_RES};
+use voxel_cim::mapsearch::{BlockDoms, Doms, MapSearch, OutputMajor, WeightMajor};
+
+fn main() {
+    println!("# map_search — Fig. 2(d) / Fig. 9 regimes");
+    for (label, extent, s) in [
+        ("lowres_s0.005", LOW_RES, 0.005),
+        ("highres_s0.005", HIGH_RES, 0.005),
+    ] {
+        let t = sweep_tensor(extent, s, 42);
+        let n = t.len() as u64;
+        println!("\n## {label}: N = {n} voxels");
+        let r = bench(&format!("map_search/hash_oracle/{label}"), 1, 10, || {
+            voxel_cim::sparse::hash_map_search(&t, voxel_cim::sparse::rulebook::ConvKind::subm3())
+        });
+        r.print_throughput(n, "voxels");
+        for (name, searcher) in [
+            ("weight_major", Box::new(WeightMajor::default()) as Box<dyn MapSearch>),
+            ("output_major", Box::new(OutputMajor::default())),
+            ("doms", Box::new(Doms::default())),
+            ("block_doms_2x8", Box::new(BlockDoms::default())),
+        ] {
+            let r = bench(&format!("map_search/{name}/{label}"), 1, 10, || {
+                searcher.search_subm(&t, 3)
+            });
+            r.print_throughput(n, "voxels");
+            let (_, st) = searcher.search_subm(&t, 3);
+            println!(
+                "        access {:.2}x N | {} sorter passes | table {} B",
+                st.normalized(t.len()),
+                st.sorter_passes,
+                st.table_bytes
+            );
+        }
+    }
+}

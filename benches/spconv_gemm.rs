@@ -1,0 +1,57 @@
+//! Bench: the compute hot path — sub-matrix GEMM waves through the
+//! native engine and (when artifacts exist) the PJRT executables, plus a
+//! full subm3 layer execution. This is the L3-side measurement for the
+//! §Perf pass in EXPERIMENTS.md.
+
+use voxel_cim::bench_util::{bench, black_box};
+use voxel_cim::geom::Extent3;
+use voxel_cim::pointcloud::voxelize::Voxelizer;
+use voxel_cim::runtime::{Runtime, RuntimeConfig};
+use voxel_cim::sparse::rulebook::ConvKind;
+use voxel_cim::sparse::{hash_map_search, SparseTensor};
+use voxel_cim::spconv::layer::{GemmEngine, LayerWeights, NativeEngine, SpconvLayer};
+use voxel_cim::util::rng::Pcg64;
+
+fn main() {
+    println!("# spconv_gemm — compute hot path");
+    let mut rng = Pcg64::new(9);
+    let acts: Vec<i8> = (0..1024 * 64).map(|_| rng.next_i8(-128, 127)).collect();
+    let w: Vec<i8> = (0..64 * 64).map(|_| rng.next_i8(-128, 127)).collect();
+
+    let mut native = NativeEngine::default();
+    for b in [64usize, 256, 1024] {
+        let r = bench(&format!("gemm/native/b{b}"), 2, 10, || {
+            native.gemm_i8(&acts[..b * 64], &w, b, 64, 64).unwrap()
+        });
+        let macs = (b * 64 * 64) as u64;
+        r.print_throughput(macs, "MAC");
+    }
+
+    match Runtime::load(&RuntimeConfig::discover()) {
+        Ok(mut rt) => {
+            for b in [64usize, 256, 1024] {
+                let r = bench(&format!("gemm/pjrt/b{b}"), 2, 10, || {
+                    rt.gemm_i8(&acts[..b * 64], &w, b, 64, 64).unwrap()
+                });
+                let macs = (b * 64 * 64) as u64;
+                r.print_throughput(macs, "MAC");
+            }
+        }
+        Err(e) => println!("(PJRT skipped: {e:#})"),
+    }
+
+    // Full subm3 layer at realistic sparsity.
+    let e = Extent3::new(176, 200, 10);
+    let grid = Voxelizer::synth_occupancy(e, 3000.0 / e.volume() as f64, 10);
+    let mut t = SparseTensor::from_coords(e, grid.coords(), 16);
+    for v in t.features.iter_mut() {
+        *v = rng.next_i8(-8, 8);
+    }
+    let rb = hash_map_search(&t, ConvKind::subm3());
+    println!("\nlayer: {} voxels, {} pairs", t.len(), rb.len());
+    let layer = SpconvLayer::new(LayerWeights::random(27, 16, 16, 11), 256);
+    let r = bench("spconv_layer/native/subm3_c16", 1, 8, || {
+        black_box(layer.execute(&t, &rb, &mut NativeEngine::default()).unwrap())
+    });
+    r.print_throughput(rb.len() as u64 * 16 * 16, "MAC");
+}

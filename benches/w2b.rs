@@ -1,0 +1,33 @@
+//! Bench E5/E6: the W2B allocator itself plus the Fig. 10 simulation
+//! (MinkUNet with and without W2B).
+
+use voxel_cim::bench_util::bench;
+use voxel_cim::cim::w2b::w2b_allocate;
+use voxel_cim::experiments::w2b_fig10;
+use voxel_cim::util::rng::Pcg64;
+
+fn main() {
+    println!("# w2b — allocator and Fig. 10 simulation");
+    let mut rng = Pcg64::new(12);
+    let skewed: Vec<u64> = (0..27)
+        .map(|i| if i == 13 { 40_000 } else { rng.next_below(2_000) })
+        .collect();
+    bench("w2b/allocate/k27_budget54", 10, 50, || {
+        w2b_allocate(&skewed, 54)
+    });
+    let wide: Vec<u64> = (0..125).map(|_| rng.next_below(100_000)).collect();
+    bench("w2b/allocate/k125_budget500", 10, 50, || {
+        w2b_allocate(&wide, 500)
+    });
+
+    let r = bench("w2b/fig10_full_sim", 0, 3, || w2b_fig10::run_fig10(21));
+    let _ = r;
+    let res = w2b_fig10::run_fig10(21);
+    println!(
+        "fig10: {:.1} fps with W2B vs {:.1} fps without -> {:.2}x speedup, {:.1}% energy reduction (paper: 2.3x, 6%)",
+        res.with_w2b.fps(),
+        res.without_w2b.fps(),
+        res.speedup(),
+        res.energy_reduction() * 100.0
+    );
+}

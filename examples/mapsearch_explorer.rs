@@ -1,0 +1,92 @@
+//! Map-search explorer: sweep any searcher over any (resolution,
+//! sparsity, distribution) point and print the full access breakdown —
+//! the tool for reproducing Fig. 2(d)/Fig. 9 style studies beyond the
+//! paper's exact configurations.
+//!
+//! ```sh
+//! cargo run --release --example mapsearch_explorer -- \
+//!     --extent 1408x1600x41 --sparsity 0.005 --clustered --fifo 64
+//! ```
+
+use voxel_cim::experiments::{sweep_tensor, sweep_tensor_clustered};
+use voxel_cim::geom::Extent3;
+use voxel_cim::mapsearch::{BlockDoms, Doms, MapSearch, OutputMajor, WeightMajor};
+use voxel_cim::sparse::hash_search::hash_table_bytes;
+use voxel_cim::util::cli::Args;
+
+fn parse_extent(s: &str) -> Extent3 {
+    let parts: Vec<usize> = s.split('x').map(|t| t.parse().expect("extent int")).collect();
+    assert_eq!(parts.len(), 3, "extent must be XxYxZ");
+    Extent3::new(parts[0], parts[1], parts[2])
+}
+
+fn main() {
+    let args = Args::new("Sweep all map-search dataflows over one configuration")
+        .opt("extent", "352x400x10", "voxel grid XxYxZ")
+        .opt("sparsity", "0.005", "2.5D sparsity (N = X*Y*s)")
+        .opt("fifo", "64", "row-FIFO / sorter-buffer capacity in voxels")
+        .opt("bx", "2", "block-DOMS partition in x")
+        .opt("by", "8", "block-DOMS partition in y")
+        .opt("seed", "3", "occupancy seed")
+        .switch("clustered", "use the dense-cluster distribution (Fig. 2b)")
+        .parse();
+
+    let extent = parse_extent(args.get("extent"));
+    let s = args.get_f64("sparsity");
+    let t = if args.get_bool("clustered") {
+        sweep_tensor_clustered(extent, s, args.get_u64("seed"))
+    } else {
+        sweep_tensor(extent, s, args.get_u64("seed"))
+    };
+    let fifo = args.get_usize("fifo");
+    println!(
+        "grid {extent:?} | N = {} voxels | table-aided baseline table: {:.1} MiB",
+        t.len(),
+        hash_table_bytes(extent) as f64 / (1024.0 * 1024.0)
+    );
+    println!(
+        "{:<24} {:>10} {:>12} {:>14} {:>12}",
+        "searcher", "reads/N", "writes/N", "sorter passes", "table bytes"
+    );
+
+    let run = |name: &str, rb_stats: (voxel_cim::sparse::Rulebook, voxel_cim::mapsearch::AccessStats)| {
+        let (rb, st) = rb_stats;
+        println!(
+            "{:<24} {:>10.2} {:>12.3} {:>14} {:>12}   ({} pairs)",
+            name,
+            st.voxel_reads as f64 / t.len() as f64,
+            st.voxel_writes as f64 / t.len() as f64,
+            st.sorter_passes,
+            st.table_bytes,
+            rb.len()
+        );
+    };
+
+    run("weight-major (PointAcc)", WeightMajor::default().search_subm(&t, 3));
+    run(
+        "output-major (MARS)",
+        OutputMajor {
+            buffer_voxels: fifo,
+            sorter_len: 64,
+        }
+        .search_subm(&t, 3),
+    );
+    run(
+        "DOMS",
+        Doms {
+            fifo_voxels: fifo,
+            sorter_len: 64,
+        }
+        .search_subm(&t, 3),
+    );
+    let bd = BlockDoms {
+        bx: args.get_usize("bx"),
+        by: args.get_usize("by"),
+        fifo_voxels: fifo,
+        sorter_len: 64,
+    };
+    run(
+        &format!("block-DOMS ({},{})", bd.bx, bd.by),
+        bd.search_subm(&t, 3),
+    );
+}

@@ -1,0 +1,84 @@
+//! Quickstart: the whole stack in ~60 lines.
+//!
+//! Generates a synthetic LiDAR frame, voxelizes it, builds the IN-OUT map
+//! with DOMS, and runs one subm3 sparse convolution through the compiled
+//! PJRT artifact (falling back to the native engine when `make artifacts`
+//! hasn't been run).
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use voxel_cim::geom::Extent3;
+use voxel_cim::mapsearch::{Doms, MapSearch};
+use voxel_cim::pointcloud::scene::SceneConfig;
+use voxel_cim::pointcloud::vfe::{Vfe, VfeKind};
+use voxel_cim::pointcloud::voxelize::Voxelizer;
+use voxel_cim::runtime::{Runtime, RuntimeConfig};
+use voxel_cim::sparse::tensor::SparseTensor;
+use voxel_cim::spconv::layer::{GemmEngine, LayerWeights, NativeEngine, SpconvLayer};
+
+fn main() -> voxel_cim::Result<()> {
+    // 1. A synthetic urban LiDAR frame (KITTI substitute — see DESIGN.md).
+    let points = SceneConfig::default().with_points(20_000).generate();
+    println!("scene: {} LiDAR returns", points.len());
+
+    // 2. Voxelize at the paper's low-resolution grid and extract features.
+    let extent = Extent3::new(352, 400, 10);
+    let vx = Voxelizer::new((70.4, 80.0, 4.0), extent, 32);
+    let grid = vx.voxelize(&points);
+    let (feats, scale) = Vfe::new(VfeKind::Simple).extract_i8(&grid);
+    println!(
+        "voxelized: {} occupied voxels (sparsity {:.5}, quant scale {:.4})",
+        grid.len(),
+        grid.sparsity(),
+        scale
+    );
+    let input = SparseTensor::new(
+        extent,
+        grid.voxels
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (v.coord, feats[i * 4..(i + 1) * 4].to_vec()))
+            .collect(),
+        4,
+    );
+
+    // 3. Map search with DOMS: the paper's O(N) searcher.
+    let (rulebook, stats) = Doms::default().search(&input, voxel_cim::sparse::rulebook::ConvKind::subm3());
+    println!(
+        "DOMS: {} IN-OUT pairs | off-chip access {:.2}x N | {} sorter passes | table {} B",
+        rulebook.len(),
+        stats.normalized(input.len()),
+        stats.sorter_passes,
+        stats.table_bytes
+    );
+
+    // 4. One subm3 layer (4 -> 16 channels) through the CIM GEMM.
+    let layer = SpconvLayer::new(LayerWeights::random(27, 4, 16, 7), 256);
+    let out = match Runtime::load(&RuntimeConfig::discover()) {
+        Ok(mut rt) => {
+            println!("engine: PJRT CPU (AOT Pallas artifacts)");
+            let out = layer.execute(&input, &rulebook, &mut rt)?;
+            println!("PJRT GEMM dispatches: {}", rt.dispatches());
+            out
+        }
+        Err(e) => {
+            println!("engine: native fallback ({e:#})");
+            layer.execute(&input, &rulebook, &mut NativeEngine::default())?
+        }
+    };
+    println!(
+        "spconv3d: {} -> {} voxels, {} channels, {} GEMM tiles",
+        input.len(),
+        out.tensor.len(),
+        out.tensor.channels,
+        out.gemm_calls
+    );
+    let active = out.tensor.features.iter().filter(|&&v| v != 0).count();
+    println!(
+        "output features: {:.1}% non-zero after ReLU",
+        100.0 * active as f64 / out.tensor.features.len() as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! End-to-end segmentation driver (EXPERIMENTS.md E9): MinkUNet on a
+//! synthetic SemanticKITTI-like frame — the Spconv3D-dominated workload
+//! the paper runs the W2B study on. Streams frames through the full UNet
+//! (encoder gconv2 downs, decoder tconv2 ups) with real numerics, then
+//! prints the accelerator-model projection with and without W2B.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example segmentation_e2e
+//! ```
+
+use voxel_cim::coordinator::scheduler::{NetworkRunner, RunnerConfig};
+use voxel_cim::mapsearch::Doms;
+use voxel_cim::model::minkunet;
+use voxel_cim::pointcloud::scene::{SceneConfig, SceneKind};
+use voxel_cim::pointcloud::vfe::{Vfe, VfeKind};
+use voxel_cim::pointcloud::voxelize::Voxelizer;
+use voxel_cim::runtime::{Runtime, RuntimeConfig};
+use voxel_cim::sim::accelerator::{Accelerator, SimOptions};
+use voxel_cim::sparse::tensor::SparseTensor;
+use voxel_cim::spconv::layer::NativeEngine;
+use voxel_cim::util::cli::Args;
+
+fn main() -> voxel_cim::Result<()> {
+    let args = Args::new("MinkUNet end-to-end segmentation on a synthetic frame")
+        .opt("points", "15000", "LiDAR returns")
+        .opt("seed", "11", "scene seed")
+        .switch("native", "skip PJRT, use the native engine")
+        .parse();
+
+    let net = minkunet::minkunet_small();
+    println!("=== {} | extent {:?} ===", net.name, net.extent);
+
+    // Clustered scene: segmentation frames have strong local density.
+    let pts = SceneConfig {
+        kind: SceneKind::Clustered,
+        num_points: args.get_usize("points"),
+        ..Default::default()
+    }
+    .with_seed(args.get_u64("seed"))
+    .generate();
+    let vx = Voxelizer::new((70.4, 80.0, 4.0), net.extent, 32);
+    let grid = vx.voxelize(&pts);
+    let (feats, _) = Vfe::new(VfeKind::Dynamic).extract_i8(&grid);
+    println!("frame: {} points -> {} voxels", pts.len(), grid.len());
+    let input = SparseTensor::new(
+        net.extent,
+        grid.voxels
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (v.coord, feats[i * 4..(i + 1) * 4].to_vec()))
+            .collect(),
+        4,
+    );
+
+    let runner = NetworkRunner::new(net.clone(), RunnerConfig::default());
+    let res = if args.get_bool("native") {
+        runner.run_frame(input, &mut NativeEngine::default())?
+    } else {
+        match Runtime::load(&RuntimeConfig::discover()) {
+            Ok(mut rt) => {
+                println!("engine: PJRT CPU, GEMM batches {:?}", rt.gemm_batches());
+                runner.run_frame(input, &mut rt)?
+            }
+            Err(e) => {
+                println!("engine: native fallback ({e:#})");
+                runner.run_frame(input, &mut NativeEngine::default())?
+            }
+        }
+    };
+
+    println!("\nper-layer (UNet):");
+    for r in &res.records {
+        println!(
+            "  {:<34} pairs {:>9}  out {:>8}  compute {:>8.1}ms{}",
+            r.name,
+            r.pairs,
+            r.out_voxels,
+            r.compute_seconds * 1e3,
+            if r.ms_seconds == 0.0 && r.pairs > 0 {
+                "  (shared MS)"
+            } else {
+                ""
+            }
+        );
+    }
+    println!(
+        "\nsegmentation output: {} voxels labeled | host total {:.1} ms",
+        res.out_voxels,
+        res.total_seconds * 1e3
+    );
+
+    // Accelerator projection at full scale, W2B on/off (Fig. 10's story).
+    let full = minkunet::minkunet();
+    let gs = Voxelizer::synth_clustered(full.extent, 2.3e-4, 14, 0.3, args.get_u64("seed"));
+    let full_in = SparseTensor::from_coords(full.extent, gs.coords(), 1);
+    let acc = Accelerator::default();
+    let with = acc.simulate(&full, &full_in, &Doms::default(), &SimOptions::default());
+    let without = acc.simulate(
+        &full,
+        &full_in,
+        &Doms::default(),
+        &SimOptions { w2b: false, ..Default::default() },
+    );
+    println!(
+        "accelerator model (full MinkUNet, {} voxels): {:.1} fps with W2B | {:.1} fps without | {:.2}x (paper: 2.3x, 107 fps)",
+        full_in.len(),
+        with.fps(),
+        without.fps(),
+        without.seconds / with.seconds
+    );
+    Ok(())
+}

@@ -1,0 +1,152 @@
+"""AOT export: lower every L2 entry point to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT `lowered.compile().serialize()` and NOT
+a serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction
+ids which xla_extension 0.5.1 (the version behind the published `xla` crate)
+rejects (`proto.id() <= INT_MAX`). The text parser reassigns ids, so text
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Every computation is lowered with `return_tuple=True`; the rust runtime
+unwraps with `to_tuple1()`.
+
+Output layout:
+    artifacts/<name>.hlo.txt      one per entry point x shape variant
+    artifacts/manifest.txt        machine-readable index for rust
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# The universal CIM sub-matrix tile: C1 = C2 = 64 int8 weights. Every layer
+# of SECOND / MinkUNet is decomposed by the rust coordinator into these
+# tiles (channels padded up to a multiple of 64), mirroring how the paper
+# maps C1 x C2 weight slices onto PE-sized regions of the 1024x1024 array.
+TILE_C = 64
+# Batch variants: small for latency-critical tail waves, large for bulk.
+GEMM_BATCHES = (64, 256, 1024)
+# Fused-wave variant: all 27 offsets of a subm3 layer in one dispatch.
+FUSED_K3 = 27
+FUSED_B = 64
+# RPN fused conv tile (NHWC), one per-row grid kernel.
+RPN_H, RPN_W = 32, 32
+# VFE shapes.
+VFE_V, VFE_P, VFE_F = 512, 32, 4
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_entries():
+    """(name, fn, arg_specs, manifest_kv) for every artifact."""
+    entries = []
+    for b in GEMM_BATCHES:
+        entries.append(
+            (
+                f"cim_gemm_b{b}",
+                lambda a, w: (model.offset_gemm(a, w),),
+                (_spec((b, TILE_C), jnp.int8), _spec((TILE_C, TILE_C), jnp.int8)),
+                {"kind": "gemm", "b": b, "c1": TILE_C, "c2": TILE_C},
+            )
+        )
+    entries.append(
+        (
+            f"cim_gemm_fused_k{FUSED_K3}_b{FUSED_B}",
+            lambda a, w: (model.offset_gemm_fused(a, w),),
+            (
+                _spec((FUSED_K3, FUSED_B, TILE_C), jnp.int8),
+                _spec((FUSED_K3, TILE_C, TILE_C), jnp.int8),
+            ),
+            {"kind": "gemm_fused", "k3": FUSED_K3, "b": FUSED_B, "c1": TILE_C, "c2": TILE_C},
+        )
+    )
+    entries.append(
+        (
+            f"rpn_conv3x3_h{RPN_H}_w{RPN_W}",
+            lambda x, w: (model.rpn_conv3x3(x, w),),
+            (
+                _spec((1, RPN_H, RPN_W, TILE_C), jnp.int8),
+                _spec((3, 3, TILE_C, TILE_C), jnp.int8),
+            ),
+            {"kind": "conv3x3", "h": RPN_H, "w": RPN_W, "c1": TILE_C, "c2": TILE_C},
+        )
+    )
+    for b in (64, 256, 1024):
+        entries.append(
+            (
+                f"epilogue_b{b}",
+                lambda p, s, z: (model.dequant_relu_quant(p, s, z),),
+                (
+                    _spec((b, TILE_C), jnp.int32),
+                    _spec((TILE_C,), jnp.float32),
+                    _spec((TILE_C,), jnp.float32),
+                ),
+                {"kind": "epilogue", "b": b, "c": TILE_C},
+            )
+        )
+    entries.append(
+        (
+            f"vfe_mean_v{VFE_V}",
+            lambda p, c: (model.vfe_mean(p, c),),
+            (
+                _spec((VFE_V, VFE_P, VFE_F), jnp.float32),
+                _spec((VFE_V,), jnp.int32),
+            ),
+            {"kind": "vfe_mean", "v": VFE_V, "p": VFE_P, "f": VFE_F},
+        )
+    )
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated artifact name filter"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest_lines = []
+    for name, fn, specs, kv in build_entries():
+        if only is not None and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        kvs = " ".join(f"{k}={v}" for k, v in kv.items())
+        manifest_lines.append(f"{name} file={fname} {kvs}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    if only is None:
+        with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+            f.write("# name file=<hlo file> kind=<kind> <shape params>\n")
+            f.write("\n".join(manifest_lines) + "\n")
+        print(f"wrote manifest with {len(manifest_lines)} entries")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""L1 Pallas kernel: the CIM macro's bit-serial MAC wave.
+
+This is the compute hot-spot of the whole stack: every Spconv3D offset-GEMM
+and every RPN Conv2D (via im2col) in the rust coordinator dispatches to the
+HLO lowered from this kernel.
+
+Hardware adaptation (CIM -> Pallas/TPU, see DESIGN.md §Hardware-Adaptation):
+
+  * CIM array (weight-stationary SRAM sub-matrix)  -> the [C1, C2] weight
+    block resident in VMEM across the whole batch grid dimension.
+  * bit-serial input drivers                       -> loop over `input_bits`
+    bit-planes of the int8 activations; each plane is a {0,1} matrix fed to
+    the MXU as the LHS of a matmul (the analog MAC wave).
+  * per-column ADC with `adc_bits` resolution      -> clamp of the bit-plane
+    partial sum.
+  * shift-adder                                    -> scaled accumulation
+    (psum << b), MSB negative (two's complement).
+
+BlockSpec tiles the batch into `block_b` rows so the weight block is reused
+`ceil(B/block_b)` times from VMEM — the Pallas analogue of leaving weights
+in the array. `interpret=True` always: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; numerics are identical.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# TPU-friendly default: 8x128 lane multiples; on interpret/CPU any block
+# works, but we keep the layout MXU-aligned so the same kernel is TPU-ready.
+# 128 fills the MXU's row dimension completely (EXPERIMENTS.md §Perf L1
+# iteration 1: halves the grid steps of the B>=128 artifacts; the B=64
+# artifact clamps down automatically).
+DEFAULT_BLOCK_B = 128
+
+
+def _cim_gemm_kernel(a_ref, w_ref, o_ref, *, input_bits: int, adc_bits: int):
+    """Pallas kernel body: one [block_b, C1] x [C1, C2] bit-serial GEMM."""
+    a = a_ref[...].astype(jnp.int32)  # [bB, C1] int8 -> int32
+    w = w_ref[...].astype(jnp.int32)  # [C1, C2]
+    lo = -(1 << (adc_bits - 1))
+    hi = (1 << (adc_bits - 1)) - 1
+    acc = jnp.zeros(o_ref.shape, jnp.int32)
+    # Python loop (static, input_bits is a compile-time constant): unrolls
+    # into `input_bits` MXU waves, exactly like the PE's bit-serial schedule.
+    for b in range(input_bits):
+        bit = (a >> b) & 1
+        # The analog MAC wave: all rows activated by this bit-plane.
+        psum = jax.lax.dot_general(
+            bit,
+            w,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        psum = jnp.clip(psum, lo, hi)  # ADC saturation
+        sign = -1 if b == input_bits - 1 else 1
+        acc = acc + sign * (psum << b)  # shift-adder
+    o_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("input_bits", "adc_bits", "block_b")
+)
+def cim_gemm(
+    acts: jnp.ndarray,
+    weights: jnp.ndarray,
+    *,
+    input_bits: int = ref.INPUT_BITS,
+    adc_bits: int = ref.ADC_BITS,
+    block_b: int = DEFAULT_BLOCK_B,
+) -> jnp.ndarray:
+    """Bit-serial CIM GEMM: [B, C1] int8 x [C1, C2] int8 -> [B, C2] int32.
+
+    B must be a multiple of `block_b` (the rust dispatcher always pads to
+    the artifact's batch shape, so this holds by construction).
+    """
+    b_dim, c1 = acts.shape
+    c1w, c2 = weights.shape
+    assert c1 == c1w, f"contraction mismatch {c1} vs {c1w}"
+    block_b = min(block_b, b_dim)  # small batches use one whole-B block
+    assert b_dim % block_b == 0, f"B={b_dim} not a multiple of {block_b}"
+    grid = (b_dim // block_b,)
+    kernel = functools.partial(
+        _cim_gemm_kernel, input_bits=input_bits, adc_bits=adc_bits
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, c1), lambda i: (i, 0)),
+            # Weight block is the same for every grid step: resident reuse.
+            pl.BlockSpec((c1, c2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, c2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b_dim, c2), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(acts, weights)
+
+
+def vmem_footprint_bytes(
+    block_b: int, c1: int, c2: int, input_bits: int = ref.INPUT_BITS
+) -> int:
+    """Estimated VMEM working set of one grid step (for DESIGN.md §Perf).
+
+    acts block (int8) + weight block (int8) + int32 bit-plane psum +
+    int32 accumulator + int32 widened activation copy.
+    """
+    acts = block_b * c1  # int8
+    w = c1 * c2  # int8
+    a32 = block_b * c1 * 4  # widened copy
+    psum = block_b * c2 * 4
+    acc = block_b * c2 * 4
+    return acts + w + a32 + psum + acc
+
+
+def mxu_utilization_estimate(block_b: int, c1: int, c2: int) -> float:
+    """Fraction of 128x128 MXU lanes used by one bit-plane wave.
+
+    The bit-plane matmul is [block_b, c1] x [c1, c2]; the MXU processes
+    128x128 tiles, so utilization is the product of the fill ratios of the
+    three dims against their padded-to-128 sizes.
+    """
+
+    def fill(n: int) -> float:
+        pad = ((n + 127) // 128) * 128
+        return n / pad
+
+    return fill(block_b) * fill(c1) * fill(c2)

@@ -1,0 +1,98 @@
+"""L1 Pallas kernel: RPN dense Conv2D with the CIM sub-matrix schedule.
+
+The paper maps Conv2D onto the same CIM fabric with K x K sub-matrices
+(Fig. 5c): the kernel slides, and the input feature vector gathered for
+sub-matrix (ky, kx) this cycle is reused by the neighbouring sub-matrix
+next cycle. In our stack the bulk data movement lives in the rust
+coordinator (spconv/conv2d.rs builds im2col batches dispatched to the
+shared cim_gemm artifact); this module additionally provides a *fused*
+Pallas conv used for small RPN feature maps, demonstrating the sub-matrix
+schedule inside one kernel: each of the 9 weight slices is a resident
+sub-block activated in turn, with the bit-serial ADC datapath of
+cim_gemm applied per activation wave.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _conv3x3_kernel(x_ref, w_ref, o_ref, *, input_bits: int, adc_bits: int):
+    """One output row of a SAME, stride-1, 3x3 conv, NHWC.
+
+    x_ref : [1, H+2, W+2, C1] the whole padded image of this batch element
+    w_ref : [3, 3, C1, C2]    resident weight sub-matrices
+    o_ref : [1, 1, W, C2]     output row `pl.program_id(1)`
+    """
+    hrow = pl.program_id(1)
+    _, _, wpad, c1 = x_ref.shape
+    w_out = o_ref.shape[2]
+    c2 = o_ref.shape[3]
+    lo = -(1 << (adc_bits - 1))
+    hi = (1 << (adc_bits - 1)) - 1
+    acc = jnp.zeros((w_out, c2), jnp.int32)
+    # Three padded input rows hrow .. hrow+2 form the halo of output row
+    # hrow (padded coordinates).
+    halo = jax.lax.dynamic_slice(
+        x_ref[...], (0, hrow, 0, 0), (1, 3, wpad, c1)
+    )[0].astype(jnp.int32)  # [3, W+2, C1]
+    # Sub-matrix schedule: activate each of the 9 weight sub-matrices in
+    # turn; the gathered input row is shared between horizontally adjacent
+    # sub-matrices (the paper's Conv2D feature-reuse argument).
+    for ky in range(3):
+        row = halo[ky]  # [W+2, C1]
+        for kx in range(3):
+            xs = jax.lax.dynamic_slice(row, (kx, 0), (w_out, c1))
+            wsub = w_ref[ky, kx, :, :].astype(jnp.int32)  # [C1, C2]
+            for b in range(input_bits):
+                bit = (xs >> b) & 1
+                psum = jax.lax.dot_general(
+                    bit,
+                    wsub,
+                    (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.int32,
+                )
+                psum = jnp.clip(psum, lo, hi)  # ADC saturation
+                sign = -1 if b == input_bits - 1 else 1
+                acc = acc + sign * (psum << b)  # shift-adder
+    o_ref[0, 0, :, :] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("input_bits", "adc_bits"))
+def conv2d_3x3(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    input_bits: int = ref.INPUT_BITS,
+    adc_bits: int = ref.ADC_BITS,
+) -> jnp.ndarray:
+    """Fused 3x3 SAME stride-1 conv, int8 NHWC x [3,3,C1,C2] -> int32 NHWC.
+
+    Grid = (N, H): one kernel invocation per output row. The padded image
+    block stays resident across the H grid dimension (index map ignores the
+    row index), so HBM->VMEM traffic is O(image), not O(image * H).
+    """
+    n, h, width, c1 = x.shape
+    c2 = w.shape[3]
+    assert w.shape[:3] == (3, 3, c1), f"bad weight shape {w.shape}"
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    kernel = functools.partial(
+        _conv3x3_kernel, input_bits=input_bits, adc_bits=adc_bits
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n, h),
+        in_specs=[
+            pl.BlockSpec((1, h + 2, width + 2, c1), lambda ni, hi_: (ni, 0, 0, 0)),
+            pl.BlockSpec((3, 3, c1, c2), lambda ni, hi_: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, width, c2), lambda ni, hi_: (ni, hi_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h, width, c2), jnp.int32),
+        interpret=True,
+    )(xp, w)

@@ -1,0 +1,98 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the bit-exact references used by pytest. The CIM PE datapath
+(Fig. 7 of the paper) is:
+
+    weights  : int8, resident in the SRAM sub-array (sub-matrix mapping)
+    inputs   : int8 activations, fed bit-serially (one bit-plane per cycle)
+    per bit-plane b: analog MAC wave -> column partial sum -> ADC (clamped
+                     to `adc_bits` of resolution) -> shift-adder adds
+                     (psum_b << b) into the digital accumulator
+
+Everything is integer math; the oracle reproduces the clamp exactly so the
+Pallas kernel can be checked bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Default datapath parameters (match rust/src/cim/pe.rs PeConfig::default).
+INPUT_BITS = 8  # int8 activations, bit-serial
+ADC_BITS = 8  # ADC resolution per column read
+
+
+def adc_range(adc_bits: int = ADC_BITS) -> tuple[int, int]:
+    """Signed saturation range of the ADC digital output."""
+    lo = -(1 << (adc_bits - 1))
+    hi = (1 << (adc_bits - 1)) - 1
+    return lo, hi
+
+
+def cim_gemm_ref(
+    acts: jnp.ndarray,
+    weights: jnp.ndarray,
+    *,
+    input_bits: int = INPUT_BITS,
+    adc_bits: int = ADC_BITS,
+) -> jnp.ndarray:
+    """Bit-serial CIM GEMM oracle.
+
+    acts    : [B, C1] int8 activations
+    weights : [C1, C2] int8 weights
+    returns : [B, C2] int32 partial sums (after shift-add recombination)
+
+    Activations are two's-complement: bit `input_bits-1` has weight
+    -(2^(input_bits-1)); lower bits are positive. Each bit-plane MAC result
+    is clamped to the ADC range before the shift-add — this is the paper's
+    quantization point (partial-sum quantization), NOT a full-precision
+    matmul, so the result can differ from `acts @ weights` when a column
+    partial sum overflows the ADC range. test_kernel.py exercises both the
+    exact regime (small magnitudes) and the saturating regime.
+    """
+    if acts.dtype != jnp.int8 or weights.dtype != jnp.int8:
+        raise TypeError("cim_gemm_ref expects int8 acts/weights")
+    a = acts.astype(jnp.int32)
+    w = weights.astype(jnp.int32)
+    lo, hi = adc_range(adc_bits)
+    acc = jnp.zeros((acts.shape[0], weights.shape[1]), jnp.int32)
+    for b in range(input_bits):
+        bit = (a >> b) & 1  # [B, C1] in {0,1}
+        psum = bit @ w  # analog column MAC wave
+        psum = jnp.clip(psum, lo, hi)  # ADC saturation
+        sign = -1 if b == input_bits - 1 else 1  # two's-complement MSB
+        acc = acc + sign * (psum << b)  # shift-adder
+    return acc
+
+
+def gemm_exact_ref(acts: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """Full-precision int GEMM (what an ideal, unclamped ADC would give)."""
+    return acts.astype(jnp.int32) @ weights.astype(jnp.int32)
+
+
+def conv2d_ref(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """Dense 2D convolution oracle, NHWC x HWIO -> NHWC, SAME padding.
+
+    Used for the RPN path. Integer dtypes are accumulated in int32.
+    """
+    import jax.lax as lax
+
+    acc_t = jnp.int32 if jnp.issubdtype(x.dtype, jnp.integer) else jnp.float32
+    return lax.conv_general_dilated(
+        x.astype(acc_t),
+        w.astype(acc_t),
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def vfe_mean_ref(points: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
+    """Mean-VFE oracle: average the (padded) points in each voxel.
+
+    points : [V, P, F] float32, zero-padded along P
+    counts : [V] int32 number of valid points per voxel (>= 1)
+    returns: [V, F] float32 per-voxel mean feature
+    """
+    s = points.sum(axis=1)
+    return s / counts[:, None].astype(jnp.float32)

@@ -1,0 +1,69 @@
+"""L2: the JAX compute graph of Voxel-CIM's numerics, calling the L1 kernels.
+
+Each public function here is a fixed-shape, jit-lowerable computation that
+`aot.py` exports to HLO text. The rust coordinator (L3) composes them:
+
+  * `offset_gemm`   — one Spconv3D kernel-offset sub-matrix MAC: the
+                      gathered activation batch times that offset's C1 x C2
+                      weight slice (Fig. 5b). The coordinator calls this once
+                      per offset per batch wave and scatter-adds the psums.
+  * `offset_gemm_fused` — K^3 offsets in one call: [K3, B, C1] x
+                      [K3, C1, C2] -> [K3, B, C2], the whole-tile MAC wave
+                      (all sub-matrices of one layer activated in a cycle).
+  * `rpn_conv3x3`   — fused dense 3x3 conv for the RPN (Fig. 5c schedule).
+  * `vfe_mean`      — simple/mean VFE reduction.
+  * `dequant_relu_quant` — the inter-layer requantization: int32 psum ->
+                      scale -> ReLU -> int8, the digital epilogue after the
+                      shift-adders.
+
+All shapes are static; the rust side pads batches to the artifact shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import cim_gemm as ck
+from .kernels import conv2d as c2
+from .kernels import ref
+
+
+def offset_gemm(acts: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """[B, C1] int8 x [C1, C2] int8 -> [B, C2] int32 via the CIM PE kernel."""
+    return ck.cim_gemm(acts, weights)
+
+
+def offset_gemm_fused(acts: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """All kernel offsets in one wave.
+
+    acts    : [K3, B, C1] int8 (gathered batch per offset)
+    weights : [K3, C1, C2] int8 (all sub-matrices of the layer)
+    returns : [K3, B, C2] int32
+    """
+    return jax.vmap(ck.cim_gemm)(acts, weights)
+
+
+def rpn_conv3x3(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Fused RPN conv block step: int8 NHWC x [3,3,C1,C2] -> int32 NHWC."""
+    return c2.conv2d_3x3(x, w)
+
+
+def vfe_mean(points: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
+    """Mean VFE: [V, P, F] f32 zero-padded points, [V] i32 counts -> [V, F]."""
+    return ref.vfe_mean_ref(points, counts)
+
+
+def dequant_relu_quant(
+    psum: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray
+) -> jnp.ndarray:
+    """Inter-layer epilogue: int32 psum -> f32 scale -> ReLU -> int8.
+
+    psum  : [B, C] int32 accumulated partial sums
+    scale : [C] f32 per-channel requant scale
+    zero  : [C] f32 per-channel bias (already folded to f32)
+    """
+    y = psum.astype(jnp.float32) * scale[None, :] + zero[None, :]
+    y = jnp.maximum(y, 0.0)
+    y = jnp.clip(jnp.round(y), -128.0, 127.0)
+    return y.astype(jnp.int8)

@@ -1,0 +1,78 @@
+"""L2 correctness: model-level compositions and the epilogue."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+class TestOffsetGemm:
+    def test_fused_equals_per_offset(self):
+        rng = np.random.default_rng(10)
+        k3, b, c = 27, 64, 64
+        a = jnp.array(rng.integers(-128, 128, (k3, b, c), dtype=np.int8))
+        w = jnp.array(rng.integers(-128, 128, (k3, c, c), dtype=np.int8))
+        fused = model.offset_gemm_fused(a, w)
+        for k in range(0, k3, 5):
+            want = model.offset_gemm(a[k], w[k])
+            np.testing.assert_array_equal(fused[k], want)
+
+    def test_offset_gemm_is_ref(self):
+        rng = np.random.default_rng(11)
+        a = jnp.array(rng.integers(-128, 128, (64, 64), dtype=np.int8))
+        w = jnp.array(rng.integers(-128, 128, (64, 64), dtype=np.int8))
+        np.testing.assert_array_equal(
+            model.offset_gemm(a, w), ref.cim_gemm_ref(a, w)
+        )
+
+
+class TestVfe:
+    def test_mean_simple(self):
+        pts = np.zeros((4, 8, 4), np.float32)
+        cnt = np.array([1, 2, 4, 8], np.int32)
+        for v in range(4):
+            pts[v, : cnt[v]] = v + 1.0
+        out = model.vfe_mean(jnp.array(pts), jnp.array(cnt))
+        want = np.array([[1.0] * 4, [2.0] * 4, [3.0] * 4, [4.0] * 4])
+        np.testing.assert_allclose(out, want, rtol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(v=st.integers(1, 16), p=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+    def test_prop_mean_matches_numpy(self, v, p, seed):
+        rng = np.random.default_rng(seed)
+        cnt = rng.integers(1, p + 1, v).astype(np.int32)
+        pts = np.zeros((v, p, 4), np.float32)
+        for i in range(v):
+            pts[i, : cnt[i]] = rng.normal(size=(cnt[i], 4)).astype(np.float32)
+        out = np.asarray(model.vfe_mean(jnp.array(pts), jnp.array(cnt)))
+        want = pts.sum(1) / cnt[:, None]
+        np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-6)
+
+
+class TestEpilogue:
+    def test_relu_clamps_negative(self):
+        psum = jnp.array([[-100, 50]], jnp.int32)
+        scale = jnp.array([1.0, 1.0], jnp.float32)
+        zero = jnp.array([0.0, 0.0], jnp.float32)
+        out = model.dequant_relu_quant(psum, scale, zero)
+        np.testing.assert_array_equal(out, np.array([[0, 50]], np.int8))
+
+    def test_saturates_to_int8(self):
+        psum = jnp.array([[10_000, -10_000]], jnp.int32)
+        scale = jnp.array([1.0, 1.0], jnp.float32)
+        zero = jnp.array([0.0, 0.0], jnp.float32)
+        out = model.dequant_relu_quant(psum, scale, zero)
+        np.testing.assert_array_equal(out, np.array([[127, 0]], np.int8))
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_prop_range_and_monotonic(self, seed):
+        rng = np.random.default_rng(seed)
+        psum = jnp.array(rng.integers(-(2**20), 2**20, (8, 16)), jnp.int32)
+        scale = jnp.array(np.abs(rng.normal(0.01, 0.005, 16)) + 1e-4, jnp.float32)
+        zero = jnp.array(rng.normal(0, 1, 16), jnp.float32)
+        out = np.asarray(model.dequant_relu_quant(psum, scale, zero))
+        assert out.dtype == np.int8
+        assert (out >= 0).all()  # ReLU then quantize: never negative

@@ -1,0 +1,114 @@
+//! Criterion-style benchmark harness (the vendored registry has no
+//! criterion). Provides warmup, N timed samples, and mean/p50/p95 output
+//! in a stable, greppable format:
+//!
+//! ```text
+//! bench: map_search/doms/highres  mean 12.345 ms  p50 12.1 ms  p95 13.0 ms  (20 samples)
+//! ```
+//!
+//! Used by the `benches/*.rs` binaries (`cargo bench`).
+
+use std::time::Instant;
+
+use crate::util::stats::percentile;
+
+/// One benchmark's measured distribution.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples_secs: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f64 {
+        self.samples_secs.iter().sum::<f64>() / self.samples_secs.len() as f64
+    }
+    pub fn p50(&self) -> f64 {
+        percentile(&self.samples_secs, 50.0)
+    }
+    pub fn p95(&self) -> f64 {
+        percentile(&self.samples_secs, 95.0)
+    }
+
+    pub fn print(&self) {
+        println!(
+            "bench: {:<44} mean {}  p50 {}  p95 {}  ({} samples)",
+            self.name,
+            fmt_secs(self.mean()),
+            fmt_secs(self.p50()),
+            fmt_secs(self.p95()),
+            self.samples_secs.len()
+        );
+    }
+
+    /// Throughput line for item-rate benches.
+    pub fn print_throughput(&self, items: u64, unit: &str) {
+        let rate = items as f64 / self.mean();
+        println!(
+            "bench: {:<44} mean {}  throughput {:.3} M{}/s",
+            self.name,
+            fmt_secs(self.mean()),
+            rate / 1e6,
+            unit
+        );
+    }
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Run a benchmark: `warmup` unmeasured iterations then `samples`
+/// measured ones. The closure's return value is black-boxed.
+pub fn bench<T>(name: &str, warmup: usize, samples: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut xs = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        black_box(f());
+        xs.push(t.elapsed().as_secs_f64());
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        samples_secs: xs,
+    };
+    r.print();
+    r
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let r = bench("test/noop", 1, 5, || 1 + 1);
+        assert_eq!(r.samples_secs.len(), 5);
+        assert!(r.mean() >= 0.0);
+        assert!(r.p95() >= r.p50());
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_secs(2e-9).ends_with("ns"));
+        assert!(fmt_secs(2e-5).ends_with("µs"));
+        assert!(fmt_secs(2e-2).ends_with("ms"));
+        assert!(fmt_secs(2.0).ends_with(" s"));
+    }
+}

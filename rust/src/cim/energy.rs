@@ -1,0 +1,150 @@
+//! 22 nm energy model, NeuroSim-style decomposition (array read + ADC +
+//! digital + buffers + DRAM), with macro constants calibrated so the
+//! whole core reproduces Table 2's operating points:
+//!
+//! * peak throughput 27.8 TOPS @ 1 GHz ([`crate::cim::CimConfig::peak_tops`]),
+//! * peak energy efficiency **10.8 TOPS/W @ 0.85 V**.
+//!
+//! The paper's numbers are produced by DNN+NeuroSim v2.0 [29]; we keep
+//! NeuroSim's *structure* (what scales with rows/columns/conversions) and
+//! fit the three leading coefficients to the published operating point —
+//! see DESIGN.md §3 for why this preserves every downstream ratio.
+
+use crate::cim::tile::CimConfig;
+
+/// Energy coefficients (joules).
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyModel {
+    /// Per bit-cell read (wordline + bitline + sense share), J.
+    pub e_cell_read: f64,
+    /// Per ADC conversion (8-bit SAR at 0.85 V, 22 nm), J.
+    pub e_adc: f64,
+    /// Digital per active-cycle per tile (shift-adders, accumulators,
+    /// control), J.
+    pub e_digital_tile_cycle: f64,
+    /// On-chip buffer access per byte, J.
+    pub e_buffer_byte: f64,
+    /// Off-chip DRAM access per byte (HBM2), J.
+    pub e_dram_byte: f64,
+    /// Static/leakage power of the whole core, W.
+    pub p_leak: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        Self {
+            // Calibrated triple: with the default CimConfig these yield
+            // 10.8 TOPS/W at peak (see `peak_tops_per_watt` test).
+            e_cell_read: 0.60e-15,
+            e_adc: 1.48e-12,
+            e_digital_tile_cycle: 45.0e-12,
+            e_buffer_byte: 1.2e-12,
+            e_dram_byte: 31.2e-12, // ~3.9 pJ/bit, HBM2-class
+            p_leak: 0.08,
+        }
+    }
+}
+
+impl EnergyModel {
+    /// Dynamic energy of one fully-active core cycle: all rows driven,
+    /// `cols / mux` bit-columns read and converted per tile, plus the
+    /// digital pipeline.
+    pub fn energy_per_cycle(&self, cfg: &CimConfig) -> f64 {
+        let cells_read = cfg.total_cells() as f64 / cfg.pe.col_mux as f64;
+        cells_read * self.e_cell_read
+            + self.adc_energy_per_cycle(cfg)
+            + cfg.tiles as f64 * self.e_digital_tile_cycle
+    }
+
+    /// ADC energy per fully-active cycle: one conversion per resident ADC
+    /// (`cols / mux` ADCs per tile).
+    fn adc_energy_per_cycle(&self, cfg: &CimConfig) -> f64 {
+        let adcs = cfg.tiles as f64 * cfg.tile_cols as f64 / cfg.pe.col_mux as f64;
+        adcs * self.e_adc
+    }
+
+    /// Peak power (W) at full activity.
+    pub fn peak_power(&self, cfg: &CimConfig) -> f64 {
+        self.energy_per_cycle(cfg) * cfg.freq_hz + self.p_leak
+    }
+
+    /// Peak efficiency in TOPS/W — Table 2's headline 10.8.
+    pub fn peak_tops_per_watt(&self, cfg: &CimConfig) -> f64 {
+        cfg.peak_tops() / self.peak_power(cfg)
+    }
+
+    /// Energy of a compute phase of `cycles` cycles with an `activity`
+    /// fraction of the array busy.
+    pub fn compute_energy(&self, cfg: &CimConfig, cycles: u64, activity: f64) -> f64 {
+        self.energy_per_cycle(cfg) * cycles as f64 * activity.clamp(0.0, 1.0)
+            + self.p_leak * cycles as f64 / cfg.freq_hz
+    }
+
+    /// Dynamic energy of one useful MAC. Independent of replication: W2B
+    /// spreads the same MACs over more sub-matrices in fewer cycles, so
+    /// per-MAC energy is the invariant quantity (idle PEs are
+    /// clock-gated); only leakage scales with runtime — which is exactly
+    /// why the paper's Fig. 10 shows a large speedup but only a ~6%
+    /// energy reduction.
+    pub fn energy_per_mac(&self, cfg: &CimConfig) -> f64 {
+        self.energy_per_cycle(cfg) / (cfg.macs_per_cycle() * cfg.array_efficiency)
+    }
+
+    /// Energy of moving `bytes` through the on-chip buffers.
+    pub fn buffer_energy(&self, bytes: u64) -> f64 {
+        bytes as f64 * self.e_buffer_byte
+    }
+
+    /// Energy of `bytes` of DRAM traffic.
+    pub fn dram_energy(&self, bytes: u64) -> f64 {
+        bytes as f64 * self.e_dram_byte
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_efficiency_matches_table2() {
+        let cfg = CimConfig::default();
+        let em = EnergyModel::default();
+        let eff = em.peak_tops_per_watt(&cfg);
+        assert!(
+            (eff - 10.8).abs() / 10.8 < 0.05,
+            "peak efficiency {eff} TOPS/W vs Table 2's 10.8"
+        );
+    }
+
+    #[test]
+    fn power_budget_is_watts_scale() {
+        let p = EnergyModel::default().peak_power(&CimConfig::default());
+        assert!(p > 1.0 && p < 5.0, "peak power {p} W implausible");
+    }
+
+    #[test]
+    fn adc_dominates_array_read() {
+        // Sanity on the decomposition: ADC is the biggest dynamic term in
+        // SRAM CIM at 8-bit resolution (the standard NeuroSim finding).
+        let cfg = CimConfig::default();
+        let em = EnergyModel::default();
+        let adc = em.adc_energy_per_cycle(&cfg);
+        let cells = cfg.total_cells() as f64 / cfg.pe.col_mux as f64 * em.e_cell_read;
+        assert!(adc > cells);
+    }
+
+    #[test]
+    fn compute_energy_scales_with_activity() {
+        let cfg = CimConfig::default();
+        let em = EnergyModel::default();
+        let full = em.compute_energy(&cfg, 1000, 1.0);
+        let half = em.compute_energy(&cfg, 1000, 0.5);
+        assert!(half < full && half > 0.4 * full);
+    }
+
+    #[test]
+    fn dram_energy_dwarfs_buffer_energy_per_byte() {
+        let em = EnergyModel::default();
+        assert!(em.e_dram_byte > 10.0 * em.e_buffer_byte);
+    }
+}

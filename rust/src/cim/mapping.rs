@@ -1,0 +1,175 @@
+//! Weight-mapping strategies (§3.2A, Fig. 5).
+//!
+//! * **Traditional** (Fig. 5a): each output channel's whole `C1·K³` kernel
+//!   column is unrolled into one array column. Fine for dense Conv2D,
+//!   wasteful for Spconv3D: with output-stationary dataflow only the rows
+//!   whose inputs exist are driven (utilization = the output's pair count
+//!   over K³), and with weight-stationary the psums of one column belong
+//!   to different outputs and cannot be accumulated in-array.
+//! * **Sub-matrix** (Fig. 5b/c): each kernel offset's `C1 x C2` slice is
+//!   an independently-activated sub-matrix; the gather unit feeds each
+//!   offset its own input batch (weight-stationary), and the scatter unit
+//!   accumulates digitally.
+//!
+//! The plan computed here is consumed by the latency model and by
+//! [`crate::cim::w2b`] for replication.
+
+use crate::cim::tile::CimConfig;
+use crate::sparse::rulebook::Rulebook;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MappingStrategy {
+    Traditional,
+    SubMatrix,
+}
+
+/// A placed layer: how many sub-matrix instances exist per kernel offset
+/// and what the resulting makespan is.
+#[derive(Clone, Debug)]
+pub struct SubMatrixPlan {
+    pub c1: usize,
+    pub c2: usize,
+    pub k_volume: usize,
+    /// Copies per offset (all 1 without W2B).
+    pub copies: Vec<u32>,
+    /// Per-offset workload (pair count).
+    pub workload: Vec<u64>,
+}
+
+impl SubMatrixPlan {
+    /// Plan a layer without replication.
+    pub fn new(c1: usize, c2: usize, rb: &Rulebook) -> Self {
+        let workload = rb.workload_per_offset();
+        Self {
+            c1,
+            c2,
+            k_volume: workload.len(),
+            copies: vec![1; workload.len()],
+            workload,
+        }
+    }
+
+    /// Weights stored (including replication), in int8 units.
+    pub fn weights_stored(&self) -> u64 {
+        let per = (self.c1 * self.c2) as u64;
+        self.copies.iter().map(|&c| c as u64 * per).sum()
+    }
+
+    /// Does the plan fit the core?
+    pub fn fits(&self, cfg: &CimConfig) -> bool {
+        self.weights_stored() <= cfg.weight_capacity()
+    }
+
+    /// Makespan in *pair-slots*: all sub-matrices operate in parallel, so
+    /// the layer finishes when its most-loaded instance finishes.
+    pub fn makespan_pairs(&self) -> u64 {
+        self.workload
+            .iter()
+            .zip(&self.copies)
+            .map(|(&w, &c)| w.div_ceil(c as u64))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Layer compute cycles under this plan.
+    pub fn cycles(&self, cfg: &CimConfig) -> u64 {
+        cfg.cycles_for_pairs(self.makespan_pairs())
+    }
+
+    /// Resource utilization: useful pair-slots over allocated pair-slots.
+    pub fn utilization(&self) -> f64 {
+        let total: u64 = self.workload.iter().sum();
+        let slots: u64 = self.makespan_pairs() * self.copies.iter().map(|&c| c as u64).sum::<u64>();
+        if slots == 0 {
+            0.0
+        } else {
+            total as f64 / slots as f64
+        }
+    }
+}
+
+/// Cycle estimate for the *traditional* mapping running the same rulebook
+/// with an output-stationary dataflow: each output is processed as one
+/// array activation in which only its valid rows are driven — K³·C1 rows
+/// allocated, `pairs(o)·C1` useful. Cycles = outputs × (bit-serial ·
+/// mux) as every output needs a full wave regardless of fill.
+pub fn traditional_cycles(rb: &Rulebook, cfg: &CimConfig) -> u64 {
+    rb.out_coords.len() as u64 * cfg.pe.cycles_per_pair()
+}
+
+/// Utilization of the traditional mapping on a sparse rulebook: average
+/// fraction of driven rows that carry real inputs.
+pub fn traditional_utilization(rb: &Rulebook) -> f64 {
+    let k3 = rb.kind.kernel_volume() as f64;
+    if rb.out_coords.is_empty() {
+        return 0.0;
+    }
+    rb.len() as f64 / (rb.out_coords.len() as f64 * k3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::Extent3;
+    use crate::pointcloud::voxelize::Voxelizer;
+    use crate::sparse::rulebook::ConvKind;
+    use crate::sparse::{hash_map_search, SparseTensor};
+
+    fn rulebook(n: usize, seed: u64) -> Rulebook {
+        let e = Extent3::new(32, 32, 8);
+        let g = Voxelizer::synth_occupancy(e, n as f64 / e.volume() as f64, seed);
+        let t = SparseTensor::from_coords(e, g.coords(), 4);
+        hash_map_search(&t, ConvKind::subm3())
+    }
+
+    #[test]
+    fn plan_fits_and_measures() {
+        let rb = rulebook(800, 81);
+        let plan = SubMatrixPlan::new(64, 64, &rb);
+        let cfg = CimConfig::default();
+        assert!(plan.fits(&cfg));
+        assert_eq!(plan.weights_stored(), 27 * 64 * 64);
+        // Center offset dominates the makespan.
+        let w = rb.workload_per_offset();
+        assert_eq!(plan.makespan_pairs(), *w.iter().max().unwrap());
+    }
+
+    #[test]
+    fn submatrix_beats_traditional_on_sparse_data() {
+        // Without replication, sub-matrix weight-stationary and
+        // traditional output-stationary both bottleneck on the center
+        // offset (= one wave per output); the sub-matrix mapping's win is
+        // that it *admits* W2B replication, which traditional mapping
+        // cannot (its column psums belong to one output).
+        let rb = rulebook(500, 82);
+        let cfg = CimConfig::default();
+        let mut plan = SubMatrixPlan::new(16, 16, &rb);
+        assert!(traditional_utilization(&rb) < 0.5);
+        // Identical bottleneck before W2B:
+        assert_eq!(plan.cycles(&cfg), traditional_cycles(&rb, &cfg));
+        // With W2B the sub-matrix plan pulls ahead.
+        let alloc = crate::cim::w2b::w2b_allocate(&plan.workload, 54);
+        plan.copies = alloc.copies.clone();
+        assert!(plan.fits(&cfg));
+        assert!(plan.cycles(&cfg) < traditional_cycles(&rb, &cfg));
+        assert!(plan.utilization() > traditional_utilization(&rb));
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let rb = rulebook(300, 83);
+        let plan = SubMatrixPlan::new(16, 16, &rb);
+        let u = plan.utilization();
+        assert!(u > 0.0 && u <= 1.0);
+    }
+
+    #[test]
+    fn oversized_replication_does_not_fit() {
+        let rb = rulebook(300, 84);
+        let mut plan = SubMatrixPlan::new(256, 256, &rb);
+        // 27 x 256x256 = 1.77M weights > 1M capacity.
+        assert!(!plan.fits(&CimConfig::default()));
+        plan.copies = vec![1; 27];
+        assert_eq!(plan.weights_stored(), 27 * 256 * 256);
+    }
+}

@@ -1,0 +1,16 @@
+//! The CIM computing core (§3.2, Fig. 7 right): SRAM tiles partitioned
+//! into PEs, the sub-matrix weight-mapping strategies for Spconv3D /
+//! Conv2D, the W2B workload balancer, and the 22 nm energy/latency model
+//! calibrated to the paper's Table 2 operating points.
+
+pub mod energy;
+pub mod mapping;
+pub mod pe;
+pub mod tile;
+pub mod w2b;
+
+pub use energy::EnergyModel;
+pub use mapping::{MappingStrategy, SubMatrixPlan};
+pub use pe::PeConfig;
+pub use tile::CimConfig;
+pub use w2b::{w2b_allocate, W2bAllocation};

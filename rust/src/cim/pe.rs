@@ -1,0 +1,71 @@
+//! PE (processing element) datapath parameters.
+//!
+//! Each PE owns a region of the tile plus "all necessary resources to
+//! perform MAC operations, such as MUXs, ADCs, Shift-Adders" (Fig. 7).
+//! The numeric semantics (bit-serial input, per-bit-plane ADC clamp,
+//! shift-add) are implemented by the L1 Pallas kernel / `quant::cim_gemm_ref`;
+//! this struct carries the *timing* parameters.
+
+/// PE configuration. Defaults match the L1 kernel constants
+/// (`python/compile/kernels/ref.py`) and a typical 22 nm SRAM-CIM macro.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PeConfig {
+    /// Activation bit width (bit-serial cycles per input wave).
+    pub input_bits: u32,
+    /// Weight bit width (bit-columns per logical weight column).
+    pub weight_bits: u32,
+    /// ADC resolution; MUST match the AOT kernel's `adc_bits`.
+    pub adc_bits: u32,
+    /// Columns sharing one ADC (time-multiplexed reads).
+    pub col_mux: u32,
+}
+
+impl Default for PeConfig {
+    fn default() -> Self {
+        Self {
+            input_bits: 8,
+            weight_bits: 8,
+            adc_bits: 8,
+            col_mux: 8,
+        }
+    }
+}
+
+impl PeConfig {
+    /// Cycles for one input vector against one resident sub-matrix
+    /// (regardless of its column count — all columns of the sub-matrix
+    /// region are read through their own ADCs in `col_mux` rounds):
+    /// bit-serial input × column multiplexing.
+    pub fn cycles_per_pair(&self) -> u64 {
+        (self.input_bits * self.col_mux) as u64
+    }
+
+    /// Bit-cells per logical int8 weight.
+    pub fn cells_per_weight(&self) -> u64 {
+        self.weight_bits as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_kernel_constants() {
+        let pe = PeConfig::default();
+        // These two must stay in lock-step with python/compile/kernels/ref.py.
+        assert_eq!(pe.input_bits, 8);
+        assert_eq!(pe.adc_bits, 8);
+    }
+
+    #[test]
+    fn pair_cycles() {
+        assert_eq!(PeConfig::default().cycles_per_pair(), 64);
+        let fast = PeConfig {
+            input_bits: 4,
+            col_mux: 4,
+            ..Default::default()
+        };
+        assert_eq!(fast.cycles_per_pair(), 16);
+    }
+}

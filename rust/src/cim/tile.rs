@@ -1,0 +1,115 @@
+//! CIM tile geometry and the macro-level throughput model.
+//!
+//! "The CIM unit is composed of tiles, where each tile contains 1024x1024
+//! memory cells. Each cell can store 1 bit" (§3.3). Table 2 gives the
+//! operating points we calibrate to: 27.8 TOPS peak at 1 GHz / 22 nm and
+//! 10.8 TOPS/W at 0.85 V.
+
+use crate::cim::pe::PeConfig;
+
+/// Whole computing-core configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct CimConfig {
+    pub pe: PeConfig,
+    /// Number of 1024x1024 tiles.
+    pub tiles: usize,
+    /// Tile edge in cells.
+    pub tile_rows: usize,
+    pub tile_cols: usize,
+    /// Clock frequency in Hz (Table 2: 1000 MHz).
+    pub freq_hz: f64,
+    /// Fraction of ideal array throughput delivered at peak (peripheral
+    /// and pipeline overheads). Calibrated so `peak_tops()` reproduces
+    /// Table 2's 27.8 TOPS.
+    pub array_efficiency: f64,
+}
+
+impl Default for CimConfig {
+    fn default() -> Self {
+        Self {
+            pe: PeConfig::default(),
+            tiles: 8,
+            tile_rows: 1024,
+            tile_cols: 1024,
+            freq_hz: 1.0e9,
+            array_efficiency: 0.849,
+        }
+    }
+}
+
+impl CimConfig {
+    /// Total bit-cells.
+    pub fn total_cells(&self) -> u64 {
+        (self.tiles * self.tile_rows * self.tile_cols) as u64
+    }
+
+    /// Int8 weights the core can hold resident.
+    pub fn weight_capacity(&self) -> u64 {
+        self.total_cells() / self.pe.cells_per_weight()
+    }
+
+    /// MACs per cycle at full activation: every row driven, `cols/mux`
+    /// bit-columns read per cycle, one full int8xint8 MAC per
+    /// `weight_bits` bit-columns per `input_bits` bit-serial waves.
+    pub fn macs_per_cycle(&self) -> f64 {
+        let bitcol_reads =
+            self.tiles as f64 * self.tile_rows as f64 * self.tile_cols as f64
+                / self.pe.col_mux as f64;
+        bitcol_reads / (self.pe.weight_bits as f64 * self.pe.input_bits as f64)
+    }
+
+    /// Peak throughput in TOPS (2 ops per MAC), including the calibrated
+    /// array efficiency.
+    pub fn peak_tops(&self) -> f64 {
+        self.macs_per_cycle() * 2.0 * self.freq_hz * self.array_efficiency / 1e12
+    }
+
+    /// Sub-matrix slots: how many `c1 x c2` int8 sub-matrices fit the
+    /// core (the W2B copy budget is capped by this).
+    pub fn submatrix_slots(&self, c1: usize, c2: usize) -> u64 {
+        self.weight_capacity() / (c1 as u64 * c2 as u64)
+    }
+
+    /// Cycles to stream `pairs` input vectors through one sub-matrix
+    /// instance (no replication).
+    pub fn cycles_for_pairs(&self, pairs: u64) -> u64 {
+        pairs * self.pe.cycles_per_pair()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity() {
+        let c = CimConfig::default();
+        assert_eq!(c.total_cells(), 8 * 1024 * 1024);
+        assert_eq!(c.weight_capacity(), 1024 * 1024);
+    }
+
+    #[test]
+    fn peak_matches_table2() {
+        // Table 2: 27822 GOPS peak. Calibrated within 1%.
+        let tops = CimConfig::default().peak_tops();
+        assert!(
+            (tops - 27.822).abs() / 27.822 < 0.01,
+            "peak {tops} TOPS vs Table 2's 27.822"
+        );
+    }
+
+    #[test]
+    fn submatrix_slots_for_tile_c() {
+        let c = CimConfig::default();
+        // 64x64 int8 sub-matrix = 4096 weights: 256 slots.
+        assert_eq!(c.submatrix_slots(64, 64), 256);
+        // SECOND L1 (16 ch): tiny sub-matrices, huge budget.
+        assert!(c.submatrix_slots(4, 16) > 10_000);
+    }
+
+    #[test]
+    fn cycle_model_scales_linearly() {
+        let c = CimConfig::default();
+        assert_eq!(c.cycles_for_pairs(10), 640);
+    }
+}

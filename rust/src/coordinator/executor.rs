@@ -1,0 +1,181 @@
+//! A small fixed worker pool over `std::thread` + `mpsc` (the vendored
+//! registry has no tokio; map-search jobs are CPU-bound anyway, so a
+//! thread pool is the right substrate).
+//!
+//! Jobs are `FnOnce` closures; `submit` returns a [`JobHandle`] whose
+//! `join` blocks for the result. The scheduler uses this to run the next
+//! layer's map search concurrently with the current layer's compute (the
+//! MS-wise pipeline of Fig. 8).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool.
+pub struct WorkerPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+/// Handle to a submitted job's result.
+pub struct JobHandle<T> {
+    rx: mpsc::Receiver<T>,
+}
+
+impl<T> JobHandle<T> {
+    /// Block until the job finishes.
+    pub fn join(self) -> T {
+        self.rx.recv().expect("worker dropped result channel")
+    }
+
+    /// Non-blocking poll.
+    pub fn try_join(&self) -> Option<T> {
+        self.rx.try_recv().ok()
+    }
+}
+
+impl WorkerPool {
+    pub fn new(threads: usize) -> Self {
+        assert!(threads >= 1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("voxel-cim-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().expect("poisoned job queue");
+                            guard.recv()
+                        };
+                        match job {
+                            // Contain job panics to the job: the worker
+                            // survives and the job's result channel simply
+                            // closes (join() then panics in the caller).
+                            Ok(job) => {
+                                let _ = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(job),
+                                );
+                            }
+                            Err(_) => break, // pool dropped
+                        }
+                    })
+                    .expect("spawning worker")
+            })
+            .collect();
+        Self {
+            tx: Some(tx),
+            workers,
+        }
+    }
+
+    /// Submit a job; the closure runs on a worker thread.
+    pub fn submit<T, F>(&self, f: F) -> JobHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (rtx, rrx) = mpsc::channel();
+        let job: Job = Box::new(move || {
+            let out = f();
+            let _ = rtx.send(out); // receiver may have been dropped
+        });
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(job)
+            .expect("workers alive");
+        JobHandle { rx: rrx }
+    }
+
+    /// Map a function over items in parallel, preserving order.
+    pub fn map<T, U, F>(&self, items: Vec<T>, f: F) -> Vec<U>
+    where
+        T: Send + 'static,
+        U: Send + 'static,
+        F: Fn(T) -> U + Send + Sync + Clone + 'static,
+    {
+        let handles: Vec<JobHandle<U>> = items
+            .into_iter()
+            .map(|it| {
+                let f = f.clone();
+                self.submit(move || f(it))
+            })
+            .collect();
+        handles.into_iter().map(JobHandle::join).collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn submit_and_join() {
+        let pool = WorkerPool::new(2);
+        let h = pool.submit(|| 40 + 2);
+        assert_eq!(h.join(), 42);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = WorkerPool::new(4);
+        let out = pool.map((0..32).collect(), |x: i32| x * x);
+        assert_eq!(out, (0..32).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn jobs_actually_run_concurrently() {
+        let pool = WorkerPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                    // Busy-wait until all four jobs are in flight (proves
+                    // >1 worker) with a timeout escape.
+                    let start = std::time::Instant::now();
+                    while c.load(Ordering::SeqCst) < 4 {
+                        if start.elapsed().as_secs() > 5 {
+                            return false;
+                        }
+                        std::hint::spin_loop();
+                    }
+                    true
+                })
+            })
+            .collect();
+        assert!(handles.into_iter().all(|h| h.join()));
+    }
+
+    #[test]
+    fn drop_joins_workers_cleanly() {
+        let pool = WorkerPool::new(2);
+        let _ = pool.submit(|| std::thread::sleep(std::time::Duration::from_millis(10)));
+        drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_pool_consumers() {
+        let pool = WorkerPool::new(1);
+        // A panicking job poisons nothing outside its closure: the result
+        // channel just closes.
+        let h = pool.submit(|| -> i32 { panic!("job failure") });
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| h.join()));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 coordination: the worker pool, the hybrid MS-wise / compute-wise
+//! pipeline model (Fig. 8), and the network scheduler that drives whole
+//! frames through map search → gather/GEMM/scatter → RPN on the request
+//! path.
+
+pub mod executor;
+pub mod pipeline;
+pub mod scheduler;
+pub mod stream;
+
+pub use executor::WorkerPool;
+pub use pipeline::{HybridPipeline, PhaseTiming};
+pub use scheduler::{FrameResult, NetworkRunner, RunnerConfig};
+pub use stream::{StreamReport, StreamServer};

@@ -1,0 +1,157 @@
+//! The hybrid pipeline timing model of Fig. 8.
+//!
+//! * **MS-wise pipeline** — map search for layer i+1 does not depend on
+//!   layer i's convolution, only on layer i's map search (the output
+//!   coordinate set is known from the search alone); MS(i+1) starts when
+//!   MS(i) ends.
+//! * **Compute-wise pipeline** — layer i's convolution starts once a
+//!   fill-threshold fraction of its IN-OUT pairs is available (it does
+//!   not wait for its map search to finish), but must wait for layer
+//!   i-1's convolution.
+//! * Consecutive subm3 layers share one map search (zero MS time for the
+//!   second).
+//!
+//! Inputs are per-layer (ms_time, compute_time) pairs in seconds; the
+//! output is the pipelined end-to-end latency, vs the serial sum.
+
+/// Per-layer phase durations (seconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTiming {
+    pub ms: f64,
+    pub compute: f64,
+}
+
+/// Hybrid pipeline evaluator.
+#[derive(Clone, Debug)]
+pub struct HybridPipeline {
+    /// Fraction of a layer's map search that must complete before its
+    /// compute may start (Fig. 8 shows compute trailing MS closely; we
+    /// default to 10%).
+    pub fill_threshold: f64,
+}
+
+impl Default for HybridPipeline {
+    fn default() -> Self {
+        Self {
+            fill_threshold: 0.1,
+        }
+    }
+}
+
+/// Result of scheduling one frame.
+#[derive(Clone, Debug, Default)]
+pub struct PipelineSchedule {
+    /// (ms_start, ms_end, compute_start, compute_end) per layer.
+    pub spans: Vec<(f64, f64, f64, f64)>,
+    pub total: f64,
+    pub serial_total: f64,
+}
+
+impl PipelineSchedule {
+    pub fn speedup_vs_serial(&self) -> f64 {
+        if self.total == 0.0 {
+            1.0
+        } else {
+            self.serial_total / self.total
+        }
+    }
+}
+
+impl HybridPipeline {
+    /// Schedule a frame. `layers[i]` is the timing of layer i; a layer
+    /// with `ms == 0` shares the previous search (consecutive subm3).
+    pub fn schedule(&self, layers: &[PhaseTiming]) -> PipelineSchedule {
+        let mut spans = Vec::with_capacity(layers.len());
+        let mut ms_free = 0.0f64; // when the MS core is next available
+        let mut compute_free = 0.0f64; // when the compute core is free
+        let mut serial = 0.0f64;
+        for l in layers {
+            serial += l.ms + l.compute;
+            let ms_start = ms_free;
+            let ms_end = ms_start + l.ms;
+            ms_free = ms_end;
+            // Compute may start once the fill threshold of *this* layer's
+            // search is done and the compute core is free.
+            let gate = ms_start + l.ms * self.fill_threshold.clamp(0.0, 1.0);
+            let compute_start = gate.max(compute_free);
+            // A layer's compute cannot finish before its own MS finishes
+            // delivering pairs; model: compute runs at full rate but its
+            // completion is at least ms_end (pairs arrive throughout MS).
+            let compute_end = (compute_start + l.compute).max(ms_end);
+            compute_free = compute_end;
+            spans.push((ms_start, ms_end, compute_start, compute_end));
+        }
+        let total = spans.last().map(|s| s.3).unwrap_or(0.0);
+        PipelineSchedule {
+            spans,
+            total,
+            serial_total: serial,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::check;
+
+    #[test]
+    fn empty_schedule() {
+        let s = HybridPipeline::default().schedule(&[]);
+        assert_eq!(s.total, 0.0);
+    }
+
+    #[test]
+    fn single_layer_overlaps_ms_and_compute() {
+        let s = HybridPipeline::default().schedule(&[PhaseTiming { ms: 1.0, compute: 1.0 }]);
+        // compute starts at 0.1, ends at 1.1 (not 2.0 serial).
+        assert!((s.total - 1.1).abs() < 1e-9);
+        assert!(s.speedup_vs_serial() > 1.8);
+    }
+
+    #[test]
+    fn ms_wise_pipeline_runs_ahead() {
+        // Layer 2's MS starts when layer 1's MS ends, not when layer 1's
+        // compute ends.
+        let s = HybridPipeline::default().schedule(&[
+            PhaseTiming { ms: 1.0, compute: 5.0 },
+            PhaseTiming { ms: 1.0, compute: 1.0 },
+        ]);
+        let (ms2_start, ..) = s.spans[1];
+        assert!((ms2_start - 1.0).abs() < 1e-9);
+        // Layer 2 compute waits for layer 1 compute (5.1) then runs.
+        assert!((s.total - 6.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shared_subm_search_is_free() {
+        let s = HybridPipeline::default().schedule(&[
+            PhaseTiming { ms: 1.0, compute: 2.0 },
+            PhaseTiming { ms: 0.0, compute: 2.0 }, // shares rulebook
+        ]);
+        assert!((s.total - 4.1).abs() < 1e-9, "total {}", s.total);
+    }
+
+    #[test]
+    fn pipeline_never_beats_critical_path_prop() {
+        check("pipeline bounds", 50, |g| {
+            let layers: Vec<PhaseTiming> = g.vec(1, 10, |g| PhaseTiming {
+                ms: g.f64(0.0, 3.0),
+                compute: g.f64(0.0, 3.0),
+            });
+            let s = HybridPipeline::default().schedule(&layers);
+            let ms_sum: f64 = layers.iter().map(|l| l.ms).sum();
+            let c_sum: f64 = layers.iter().map(|l| l.compute).sum();
+            // Lower bound: both resources are serial pipelines.
+            assert!(s.total >= ms_sum - 1e-9);
+            assert!(s.total >= c_sum - 1e-9);
+            // Upper bound: serial execution.
+            assert!(s.total <= s.serial_total + 1e-9);
+            // Spans are internally consistent.
+            for w in s.spans.windows(2) {
+                assert!(w[1].0 >= w[0].0 - 1e-12); // MS order
+                assert!(w[1].3 >= w[0].3 - 1e-12); // compute order
+            }
+        });
+    }
+}

@@ -1,0 +1,388 @@
+//! The network scheduler: drives one frame through the full request path
+//! — map search (on the worker pool, MS-wise pipelined) → gather / GEMM /
+//! scatter via a [`GemmEngine`] → BEV flatten → RPN — and reports
+//! per-layer statistics.
+//!
+//! This is the leader loop of the system: pure rust, artifacts already
+//! compiled, no python anywhere.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::executor::WorkerPool;
+use crate::geom::Extent3;
+use crate::mapsearch::{AccessStats, Doms, MapSearch};
+use crate::model::layer::{LayerSpec, NetworkSpec};
+use crate::sparse::rulebook::{ConvKind, Rulebook};
+use crate::sparse::tensor::SparseTensor;
+use crate::spconv::conv2d::{conv2d_im2col, DenseMap};
+use crate::spconv::layer::{GemmEngine, LayerWeights, SpconvLayer};
+use crate::spconv::quant;
+
+/// Scheduler configuration.
+#[derive(Clone, Debug)]
+pub struct RunnerConfig {
+    /// GEMM wave batch size.
+    pub batch: usize,
+    /// Worker threads for map search.
+    pub workers: usize,
+    /// Weight seed (weights are random — hardware cost is value-free).
+    pub seed: u64,
+}
+
+impl Default for RunnerConfig {
+    fn default() -> Self {
+        Self {
+            batch: 256,
+            workers: 2,
+            seed: 0x5EC0,
+        }
+    }
+}
+
+/// Per-layer record.
+#[derive(Clone, Debug)]
+pub struct LayerRecord {
+    pub name: String,
+    pub pairs: u64,
+    pub out_voxels: u64,
+    pub gemm_calls: u64,
+    pub ms_seconds: f64,
+    pub compute_seconds: f64,
+    pub access: AccessStats,
+    /// Per-offset workload (for W2B studies).
+    pub workload: Vec<u64>,
+}
+
+/// Result of one frame.
+#[derive(Debug)]
+pub struct FrameResult {
+    pub records: Vec<LayerRecord>,
+    /// Segmentation: per-voxel logits tensor. Detection: BEV head output.
+    pub out_voxels: u64,
+    /// Dense head output (detection): (h, w, c).
+    pub head_shape: Option<(usize, usize, usize)>,
+    pub total_seconds: f64,
+}
+
+impl FrameResult {
+    pub fn total_pairs(&self) -> u64 {
+        self.records.iter().map(|r| r.pairs).sum()
+    }
+    pub fn ms_seconds(&self) -> f64 {
+        self.records.iter().map(|r| r.ms_seconds).sum()
+    }
+    pub fn compute_seconds(&self) -> f64 {
+        self.records.iter().map(|r| r.compute_seconds).sum()
+    }
+}
+
+/// The network runner.
+pub struct NetworkRunner {
+    pub net: NetworkSpec,
+    pub cfg: RunnerConfig,
+    pool: WorkerPool,
+}
+
+impl NetworkRunner {
+    pub fn new(net: NetworkSpec, cfg: RunnerConfig) -> Self {
+        let pool = WorkerPool::new(cfg.workers.max(1));
+        Self { net, cfg, pool }
+    }
+
+    /// Run one frame through the network.
+    pub fn run_frame<E: GemmEngine>(
+        &self,
+        input: SparseTensor,
+        engine: &mut E,
+    ) -> crate::Result<FrameResult> {
+        let t0 = Instant::now();
+        let mut records = Vec::new();
+        let mut cur = input;
+        let mut bev: Option<DenseMap> = None;
+        let mut weight_seed = self.cfg.seed;
+
+        // MS-wise pipelining: the *next* sparse layer's map search runs on
+        // the worker pool while the current layer computes. `pending`
+        // holds the handle for the upcoming layer when its geometry is
+        // already determined (consecutive subm3 share geometry).
+        let mut shared_rb: Option<Arc<Rulebook>> = None;
+        // UNet skip connections: gconv2 pushes its input coordinate set;
+        // tconv2 pops it and prunes its outputs to that set (MinkUNet's
+        // decoder semantics — without this, coordinates dilate 8x per
+        // upsampling stage).
+        let mut skip_stack: Vec<(Extent3, Vec<crate::geom::Coord3>)> = Vec::new();
+
+        let mut i = 0usize;
+        let layers = self.net.layers.clone();
+        while i < layers.len() {
+            let spec = layers[i];
+            match spec {
+                LayerSpec::Subm3 { .. } | LayerSpec::GConv2 { .. } | LayerSpec::TConv2 { .. } => {
+                    let kind = spec.conv_kind().unwrap();
+                    let (c_in_decl, c_out) = spec.channels();
+                    let c_in = cur.channels;
+                    debug_assert!(
+                        c_in == c_in_decl || i == 0,
+                        "channel drift at layer {i}: {c_in} vs {c_in_decl}"
+                    );
+                    // Map search (shared for consecutive subm3).
+                    if matches!(kind, ConvKind::Generalized { .. }) {
+                        skip_stack.push((cur.extent, cur.coords.clone()));
+                    }
+                    let reuse = matches!(kind, ConvKind::Submanifold { .. })
+                        && shared_rb
+                            .as_ref()
+                            .map(|rb| rb.out_coords == cur.coords)
+                            .unwrap_or(false);
+                    let skip_target = match kind {
+                        ConvKind::Transposed { .. } => skip_stack.pop(),
+                        _ => None,
+                    };
+                    let (rb, access, ms_secs) = if reuse {
+                        (shared_rb.clone().unwrap(), AccessStats::default(), 0.0)
+                    } else if let (ConvKind::Transposed { k, stride }, Some((ext, target))) =
+                        (kind, skip_target)
+                    {
+                        // Pruned transposed conv (UNet decoder): outputs
+                        // restricted to the matching encoder stage.
+                        let t = Instant::now();
+                        let rb = crate::sparse::hash_search::tconv_pruned(
+                            &cur, k, stride, ext, &target,
+                        );
+                        let access = AccessStats {
+                            voxel_reads: cur.len() as u64 + target.len() as u64,
+                            ..Default::default()
+                        };
+                        shared_rb = None;
+                        (Arc::new(rb), access, t.elapsed().as_secs_f64())
+                    } else {
+                        let coords_tensor =
+                            SparseTensor::from_coords(cur.extent, cur.coords.clone(), 1);
+                        let handle = self.pool.submit(move || {
+                            let t = Instant::now();
+                            let (rb, st) = Doms::default().search(&coords_tensor, kind);
+                            (rb, st, t.elapsed().as_secs_f64())
+                        });
+                        let (rb, st, secs) = handle.join();
+                        let rb = Arc::new(rb);
+                        if matches!(kind, ConvKind::Submanifold { .. }) {
+                            shared_rb = Some(rb.clone());
+                        } else {
+                            shared_rb = None;
+                        }
+                        (rb, st, secs)
+                    };
+
+                    let weights =
+                        LayerWeights::random(spec.kernel_volume(), c_in, c_out, weight_seed);
+                    weight_seed = weight_seed.wrapping_add(1);
+                    let layer = SpconvLayer::new(weights, self.cfg.batch);
+                    let tc = Instant::now();
+                    let out = layer.execute(&cur, &rb, engine)?;
+                    let compute_seconds = tc.elapsed().as_secs_f64();
+                    records.push(LayerRecord {
+                        name: format!("{spec:?}"),
+                        pairs: rb.len() as u64,
+                        out_voxels: rb.out_coords.len() as u64,
+                        gemm_calls: out.gemm_calls,
+                        ms_seconds: ms_secs,
+                        compute_seconds,
+                        access,
+                        workload: rb.workload_per_offset(),
+                    });
+                    cur = out.tensor;
+                }
+                LayerSpec::ToBev => {
+                    bev = Some(to_bev(&cur));
+                    records.push(LayerRecord {
+                        name: "ToBev".into(),
+                        pairs: 0,
+                        out_voxels: cur.len() as u64,
+                        gemm_calls: 0,
+                        ms_seconds: 0.0,
+                        compute_seconds: 0.0,
+                        access: AccessStats::default(),
+                        workload: Vec::new(),
+                    });
+                }
+                LayerSpec::Conv2d { c_out, k, stride, .. } => {
+                    let x = bev.take().expect("Conv2d before ToBev");
+                    let tc = Instant::now();
+                    let (y, secs) =
+                        run_conv2d(&x, c_out, k, stride, 1, weight_seed, engine)?;
+                    weight_seed = weight_seed.wrapping_add(1);
+                    let _ = tc;
+                    records.push(LayerRecord {
+                        name: format!("{spec:?}"),
+                        pairs: (y.h * y.w) as u64 * (k * k) as u64,
+                        out_voxels: (y.h * y.w) as u64,
+                        gemm_calls: 0,
+                        ms_seconds: 0.0,
+                        compute_seconds: secs,
+                        access: AccessStats::default(),
+                        workload: Vec::new(),
+                    });
+                    bev = Some(y);
+                }
+                LayerSpec::Deconv2d { c_out, k, up, .. } => {
+                    let x = bev.take().expect("Deconv2d before ToBev");
+                    let (y, secs) = run_conv2d(&x, c_out, k, 1, up, weight_seed, engine)?;
+                    weight_seed = weight_seed.wrapping_add(1);
+                    records.push(LayerRecord {
+                        name: format!("{spec:?}"),
+                        pairs: (y.h * y.w) as u64 * (k * k) as u64,
+                        out_voxels: (y.h * y.w) as u64,
+                        gemm_calls: 0,
+                        ms_seconds: 0.0,
+                        compute_seconds: secs,
+                        access: AccessStats::default(),
+                        workload: Vec::new(),
+                    });
+                    bev = Some(y);
+                }
+            }
+            i += 1;
+        }
+
+        let head_shape = bev.as_ref().map(|b| (b.h, b.w, b.c));
+        Ok(FrameResult {
+            out_voxels: cur.len() as u64,
+            records,
+            head_shape,
+            total_seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// Flatten a sparse 3D tensor to a dense BEV map: z folds into channels.
+pub fn to_bev(t: &SparseTensor) -> DenseMap {
+    let Extent3 { x, y, z } = t.extent;
+    let c_bev = t.channels * z;
+    let mut m = DenseMap::zeros(y, x, c_bev);
+    for (i, &c) in t.coords.iter().enumerate() {
+        let px = m.pixel_mut(c.y as usize, c.x as usize);
+        let base = c.z as usize * t.channels;
+        px[base..base + t.channels].copy_from_slice(t.feature(i));
+    }
+    m
+}
+
+/// Nearest-neighbor upsample (for the deconv head model).
+fn upsample(x: &DenseMap, up: usize) -> DenseMap {
+    if up <= 1 {
+        return x.clone();
+    }
+    let mut y = DenseMap::zeros(x.h * up, x.w * up, x.c);
+    for oy in 0..y.h {
+        for ox in 0..y.w {
+            let src = x.pixel(oy / up, ox / up).to_vec();
+            y.pixel_mut(oy, ox).copy_from_slice(&src);
+        }
+    }
+    y
+}
+
+fn run_conv2d<E: GemmEngine>(
+    x: &DenseMap,
+    c_out: usize,
+    k: usize,
+    stride: usize,
+    up: usize,
+    seed: u64,
+    engine: &mut E,
+) -> crate::Result<(DenseMap, f64)> {
+    let t = Instant::now();
+    let x = upsample(x, up);
+    let mut rng = crate::util::rng::Pcg64::new(seed);
+    let w: Vec<i8> = (0..k * k * x.c * c_out).map(|_| rng.next_i8(-16, 16)).collect();
+    let (psums, ho, wo) = conv2d_im2col(&x, &w, k, stride, c_out, engine)?;
+    let scale = vec![0.03f32; c_out];
+    let zero = vec![0f32; c_out];
+    let feats = quant::dequant_relu_quant(&psums, &scale, &zero, c_out);
+    Ok((
+        DenseMap {
+            h: ho,
+            w: wo,
+            c: c_out,
+            data: feats,
+        },
+        t.elapsed().as_secs_f64(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::Coord3;
+    use crate::model::{minkunet, second};
+    use crate::pointcloud::voxelize::Voxelizer;
+    use crate::spconv::layer::NativeEngine;
+
+    fn frame(extent: Extent3, n: usize, c: usize, seed: u64) -> SparseTensor {
+        let g = Voxelizer::synth_occupancy(extent, n as f64 / extent.volume() as f64, seed);
+        let mut t = SparseTensor::from_coords(extent, g.coords(), c);
+        let mut rng = crate::util::rng::Pcg64::new(seed);
+        for v in t.features.iter_mut() {
+            *v = rng.next_i8(0, 8);
+        }
+        t
+    }
+
+    #[test]
+    fn to_bev_roundtrip_values() {
+        let e = Extent3::new(4, 3, 2);
+        let mut t = SparseTensor::from_coords(
+            e,
+            vec![Coord3::new(1, 2, 0), Coord3::new(3, 0, 1)],
+            2,
+        );
+        t.feature_mut(0).copy_from_slice(&[5, 6]);
+        t.feature_mut(1).copy_from_slice(&[7, 8]);
+        let m = to_bev(&t);
+        assert_eq!((m.h, m.w, m.c), (3, 4, 4));
+        assert_eq!(&m.pixel(2, 1)[0..2], &[5, 6]); // z=0 slot
+        assert_eq!(&m.pixel(0, 3)[2..4], &[7, 8]); // z=1 slot
+    }
+
+    #[test]
+    fn second_small_frame_end_to_end() {
+        let net = second::second_small();
+        let runner = NetworkRunner::new(net, RunnerConfig {
+            batch: 128,
+            workers: 2,
+            seed: 7,
+        });
+        let input = frame(Extent3::new(176, 200, 10), 1500, 4, 71);
+        let res = runner.run_frame(input, &mut NativeEngine::default()).unwrap();
+        // Detection path ends in a dense head.
+        let (h, w, c) = res.head_shape.expect("detection head");
+        assert_eq!(c, 128);
+        assert!(h > 0 && w > 0);
+        assert!(res.total_pairs() > 0);
+        // Consecutive subm3 layers shared searches: some records have
+        // zero MS time.
+        let shared = res
+            .records
+            .iter()
+            .filter(|r| r.name.contains("Subm3") && r.ms_seconds == 0.0)
+            .count();
+        assert!(shared >= 3, "expected shared subm searches, got {shared}");
+    }
+
+    #[test]
+    fn minkunet_small_frame_end_to_end() {
+        let net = minkunet::minkunet_small();
+        let runner = NetworkRunner::new(net, RunnerConfig {
+            batch: 128,
+            workers: 2,
+            seed: 8,
+        });
+        let input = frame(Extent3::new(128, 128, 16), 1200, 4, 72);
+        let res = runner.run_frame(input, &mut NativeEngine::default()).unwrap();
+        assert!(res.head_shape.is_none());
+        assert!(res.out_voxels > 0);
+        // UNet output voxel count >= input (upsampled back + dilation).
+        assert!(res.records.last().unwrap().out_voxels >= 1000);
+    }
+}

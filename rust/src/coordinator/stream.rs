@@ -1,0 +1,188 @@
+//! Frame-stream serving: the leader loop that keeps the map-search core
+//! and the computing core busy across *consecutive frames*, extending the
+//! Fig. 8 hybrid pipeline from layers to the frame stream.
+//!
+//! Frames arrive on a bounded queue (backpressure: the producer blocks
+//! when the accelerator falls behind); the worker pool runs map search
+//! for frame i+1 while frame i computes. Latency/throughput percentiles
+//! are reported per stream — the serving-style measurement the e2e
+//! benches record.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::coordinator::executor::WorkerPool;
+use crate::coordinator::scheduler::{FrameResult, NetworkRunner, RunnerConfig};
+use crate::model::layer::NetworkSpec;
+use crate::sparse::tensor::SparseTensor;
+use crate::spconv::layer::GemmEngine;
+use crate::util::stats::percentile;
+
+/// One frame queued for processing.
+pub struct FrameRequest {
+    pub id: u64,
+    pub tensor: SparseTensor,
+    pub enqueued: Instant,
+}
+
+/// Completion record for one frame.
+#[derive(Debug)]
+pub struct FrameCompletion {
+    pub id: u64,
+    pub result: FrameResult,
+    /// Queue wait + processing, seconds.
+    pub latency: f64,
+}
+
+/// Stream-level statistics.
+#[derive(Debug)]
+pub struct StreamReport {
+    pub completions: Vec<FrameCompletion>,
+    pub wall_seconds: f64,
+}
+
+impl StreamReport {
+    pub fn throughput_fps(&self) -> f64 {
+        self.completions.len() as f64 / self.wall_seconds
+    }
+    pub fn latency_p50(&self) -> f64 {
+        percentile(&self.latencies(), 50.0)
+    }
+    pub fn latency_p95(&self) -> f64 {
+        percentile(&self.latencies(), 95.0)
+    }
+    fn latencies(&self) -> Vec<f64> {
+        self.completions.iter().map(|c| c.latency).collect()
+    }
+}
+
+/// Streaming server over a [`NetworkRunner`].
+pub struct StreamServer {
+    runner: NetworkRunner,
+    /// Bounded queue depth (backpressure threshold).
+    pub queue_depth: usize,
+}
+
+impl StreamServer {
+    pub fn new(net: NetworkSpec, cfg: RunnerConfig, queue_depth: usize) -> Self {
+        assert!(queue_depth >= 1);
+        Self {
+            runner: NetworkRunner::new(net, cfg),
+            queue_depth,
+        }
+    }
+
+    /// Serve a finite stream of frames produced by `producer` (called
+    /// `n_frames` times on a worker thread, simulating the sensor).
+    /// Processing runs on the caller thread with the engine; production
+    /// overlaps via the bounded channel.
+    pub fn serve<E, P>(
+        &self,
+        n_frames: u64,
+        producer: P,
+        engine: &mut E,
+    ) -> crate::Result<StreamReport>
+    where
+        E: GemmEngine,
+        P: Fn(u64) -> SparseTensor + Send + 'static,
+    {
+        let (tx, rx) = mpsc::sync_channel::<FrameRequest>(self.queue_depth);
+        let pool = WorkerPool::new(1);
+        let _producer_handle = pool.submit(move || {
+            for id in 0..n_frames {
+                let tensor = producer(id);
+                let req = FrameRequest {
+                    id,
+                    tensor,
+                    enqueued: Instant::now(),
+                };
+                if tx.send(req).is_err() {
+                    break; // consumer dropped
+                }
+            }
+        });
+
+        let t0 = Instant::now();
+        let mut completions = Vec::with_capacity(n_frames as usize);
+        while let Ok(req) = rx.recv() {
+            let result = self.runner.run_frame(req.tensor, engine)?;
+            completions.push(FrameCompletion {
+                id: req.id,
+                latency: req.enqueued.elapsed().as_secs_f64(),
+                result,
+            });
+            if completions.len() as u64 == n_frames {
+                break;
+            }
+        }
+        Ok(StreamReport {
+            completions,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::Extent3;
+    use crate::model::layer::{LayerSpec, TaskKind};
+    use crate::pointcloud::voxelize::Voxelizer;
+    use crate::spconv::layer::NativeEngine;
+
+    fn tiny_net() -> NetworkSpec {
+        NetworkSpec {
+            name: "stream-tiny",
+            task: TaskKind::Segmentation,
+            extent: Extent3::new(16, 16, 8),
+            vfe_channels: 4,
+            layers: vec![
+                LayerSpec::Subm3 { c_in: 4, c_out: 8 },
+                LayerSpec::Subm3 { c_in: 8, c_out: 8 },
+            ],
+        }
+    }
+
+    fn make_frame(id: u64) -> SparseTensor {
+        let e = Extent3::new(16, 16, 8);
+        let g = Voxelizer::synth_occupancy(e, 0.05, 1000 + id);
+        let mut t = SparseTensor::from_coords(e, g.coords(), 4);
+        for (i, v) in t.features.iter_mut().enumerate() {
+            *v = ((i as u64 + id) % 7) as i8;
+        }
+        t
+    }
+
+    #[test]
+    fn serves_all_frames_in_order() {
+        let srv = StreamServer::new(tiny_net(), RunnerConfig::default(), 2);
+        let report = srv
+            .serve(8, make_frame, &mut NativeEngine::default())
+            .unwrap();
+        assert_eq!(report.completions.len(), 8);
+        let ids: Vec<u64> = report.completions.iter().map(|c| c.id).collect();
+        assert_eq!(ids, (0..8).collect::<Vec<_>>());
+        assert!(report.throughput_fps() > 0.0);
+        assert!(report.latency_p95() >= report.latency_p50());
+    }
+
+    #[test]
+    fn queue_depth_one_still_completes() {
+        let srv = StreamServer::new(tiny_net(), RunnerConfig::default(), 1);
+        let report = srv
+            .serve(4, make_frame, &mut NativeEngine::default())
+            .unwrap();
+        assert_eq!(report.completions.len(), 4);
+    }
+
+    #[test]
+    fn deterministic_results_across_streams() {
+        let srv = StreamServer::new(tiny_net(), RunnerConfig::default(), 3);
+        let a = srv.serve(3, make_frame, &mut NativeEngine::default()).unwrap();
+        let b = srv.serve(3, make_frame, &mut NativeEngine::default()).unwrap();
+        for (x, y) in a.completions.iter().zip(&b.completions) {
+            assert_eq!(x.result.total_pairs(), y.result.total_pairs());
+            assert_eq!(x.result.out_voxels, y.result.out_voxels);
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! E2/E3/E4 — Fig. 9: map-search comparison.
+//!
+//! (a) low resolution (352x400x10), sparsity sweep: PointAcc / MARS /
+//!     DOMS / block-DOMS normalized access volume;
+//! (b) high resolution (1408x1600x41): MARS deteriorates, DOMS ~O(2N),
+//!     block-DOMS@(2,8) stays ~O(N);
+//! (c) the table-size vs access-volume trade-off across block partition
+//!     factors at fixed sparsity 0.005.
+
+use crate::experiments::{print_table, sweep_tensor, HIGH_RES, LOW_RES};
+use crate::geom::Extent3;
+use crate::mapsearch::{BlockDoms, Doms, MapSearch, OutputMajor, WeightMajor};
+
+#[derive(Clone, Debug)]
+pub struct Fig9Row {
+    pub sparsity: f64,
+    pub n_voxels: usize,
+    pub pointacc: f64,
+    pub mars: f64,
+    pub doms: f64,
+    pub block_doms: f64,
+}
+
+/// Shared sweep for (a) and (b).
+pub fn run_sweep(extent: Extent3, sparsities: &[f64], seed: u64) -> Vec<Fig9Row> {
+    let wm = WeightMajor::default();
+    let om = OutputMajor::default();
+    let doms = Doms::default();
+    let bd = BlockDoms::default(); // (2, 8), the paper's pick
+    sparsities
+        .iter()
+        .map(|&s| {
+            let t = sweep_tensor(extent, s, seed ^ (s * 1e6) as u64);
+            let n = t.len();
+            let (_, a) = wm.search_subm(&t, 3);
+            let (_, b) = om.search_subm(&t, 3);
+            let (_, c) = doms.search_subm(&t, 3);
+            let (_, d) = bd.search_subm(&t, 3);
+            Fig9Row {
+                sparsity: s,
+                n_voxels: n,
+                pointacc: a.normalized(n),
+                mars: b.normalized(n),
+                doms: c.normalized(n),
+                block_doms: d.normalized(n),
+            }
+        })
+        .collect()
+}
+
+pub const SPARSITIES: &[f64] = &[0.001, 0.002, 0.005, 0.01, 0.02];
+
+pub fn run_a(seed: u64) -> Vec<Fig9Row> {
+    run_sweep(LOW_RES, SPARSITIES, seed)
+}
+
+pub fn run_b(seed: u64) -> Vec<Fig9Row> {
+    run_sweep(HIGH_RES, SPARSITIES, seed)
+}
+
+#[derive(Clone, Debug)]
+pub struct Fig9cRow {
+    pub partition: (usize, usize),
+    pub table_kb: f64,
+    pub normalized_access: f64,
+    pub replicated_fraction: f64,
+}
+
+/// (c): block-partition trade-off at sparsity 0.005, high resolution.
+pub fn run_c(seed: u64) -> Vec<Fig9cRow> {
+    let t = sweep_tensor(HIGH_RES, 0.005, seed);
+    let n = t.len();
+    let partitions = [
+        (1, 1),
+        (1, 2),
+        (2, 2),
+        (2, 4),
+        (2, 8),
+        (4, 8),
+        (8, 8),
+        (8, 16),
+        (16, 16),
+        (32, 32),
+    ];
+    partitions
+        .iter()
+        .map(|&(bx, by)| {
+            let bd = BlockDoms::with_partition(bx, by);
+            let (_, st) = bd.search_subm(&t, 3);
+            Fig9cRow {
+                partition: (bx, by),
+                table_kb: st.table_bytes as f64 / 1024.0,
+                normalized_access: st.normalized(n),
+                replicated_fraction: st.voxel_writes as f64 / n as f64,
+            }
+        })
+        .collect()
+}
+
+pub fn print_sweep(title: &str, rows: &[Fig9Row]) {
+    print_table(
+        title,
+        &["sparsity", "N", "PointAcc", "MARS", "DOMS", "block-DOMS(2,8)"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    format!("{}", r.sparsity),
+                    r.n_voxels.to_string(),
+                    format!("{:.1}x", r.pointacc),
+                    format!("{:.2}x", r.mars),
+                    format!("{:.2}x", r.doms),
+                    format!("{:.2}x", r.block_doms),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+}
+
+pub fn print_c(rows: &[Fig9cRow]) {
+    print_table(
+        "Fig. 9(c) — block partition trade-off @ sparsity 0.005, high res",
+        &["partition", "table (KiB)", "access", "replicated"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    format!("({},{})", r.partition.0, r.partition.1),
+                    format!("{:.2}", r.table_kb),
+                    format!("{:.2}x", r.normalized_access),
+                    format!("{:.2}%", r.replicated_fraction * 100.0),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9a_low_res_shape() {
+        let rows = run_sweep(LOW_RES, &[0.001, 0.01], 11);
+        for r in &rows {
+            // PointAcc pays ~27N regardless.
+            assert!((r.pointacc - 27.0).abs() < 0.5);
+            // DOMS and block-DOMS beat PointAcc by an order of magnitude.
+            assert!(r.doms < 3.0);
+            assert!(r.block_doms < 2.0);
+        }
+        // MARS: fine when sparse, worse when dense.
+        assert!(rows[0].mars < 2.5);
+        assert!(rows[1].mars > rows[0].mars);
+    }
+
+    #[test]
+    fn fig9b_high_res_shape() {
+        let rows = run_sweep(HIGH_RES, &[0.005], 12);
+        let r = &rows[0];
+        // The paper's headline: MARS blows up, DOMS stays in the
+        // O(N..2N) band (depths no longer fit the FIFO, so forward rows
+        // are double-loaded), block-DOMS @(2,8) recovers ~O(N).
+        assert!(r.mars > 5.0, "MARS {:.2}", r.mars);
+        assert!(r.doms > 1.2 && r.doms < 2.5, "DOMS {:.2}", r.doms);
+        assert!(r.block_doms < 1.25, "block-DOMS {:.2}", r.block_doms);
+        assert!(
+            r.doms > r.block_doms + 0.15,
+            "DOMS {:.2} should exceed block-DOMS {:.2}",
+            r.doms,
+            r.block_doms
+        );
+    }
+
+    #[test]
+    fn fig9c_tradeoff_shape() {
+        let rows = run_c(13);
+        // Table size grows monotonically with the block count.
+        for w in rows.windows(2) {
+            assert!(w[1].table_kb >= w[0].table_kb);
+        }
+        // Access volume improves from (1,1) to the paper's (2,8)...
+        let a11 = rows.iter().find(|r| r.partition == (1, 1)).unwrap();
+        let a28 = rows.iter().find(|r| r.partition == (2, 8)).unwrap();
+        assert!(a28.normalized_access < a11.normalized_access);
+        // ...and replication grows with block count in x.
+        let a3232 = rows.iter().find(|r| r.partition == (32, 32)).unwrap();
+        assert!(a3232.replicated_fraction > a28.replicated_fraction);
+    }
+}

@@ -1,0 +1,181 @@
+//! E5/E6 — Fig. 6 (workload histograms + copy factors) and Fig. 10
+//! (MinkUNet FPS / energy with and without W2B).
+
+use crate::cim::w2b::{w2b_allocate, W2bAllocation};
+use crate::experiments::print_table;
+use crate::geom::Extent3;
+use crate::mapsearch::Doms;
+use crate::model::minkunet;
+use crate::model::second;
+use crate::pointcloud::voxelize::Voxelizer;
+use crate::sim::accelerator::{Accelerator, SimOptions, SimReport};
+use crate::sparse::rulebook::ConvKind;
+use crate::sparse::tensor::SparseTensor;
+use crate::sparse::hash_map_search;
+
+/// Fig. 6: the workload histogram of SECOND's first subm3 layer, before
+/// and after W2B, plus the copy factors (the paper's Fig. 6c).
+pub struct Fig6Result {
+    pub workload: Vec<u64>,
+    pub alloc: W2bAllocation,
+}
+
+pub fn run_fig6(seed: u64) -> Fig6Result {
+    // SECOND layer 1 on a LiDAR-like clustered frame at the detection
+    // resolution — the skew source is the scene structure itself.
+    let extent = Extent3::new(1408, 1600, 41);
+    let n = ((extent.x * extent.y) as f64 * 0.005) as usize;
+    let g = Voxelizer::synth_clustered(extent, n as f64 / extent.volume() as f64, 10, 0.35, seed);
+    let t = SparseTensor::from_coords(extent, g.coords(), 1);
+    let rb = hash_map_search(&t, ConvKind::subm3());
+    let workload = rb.workload_per_offset();
+    let alloc = w2b_allocate(&workload, 54); // 2x the kernel volume
+    Fig6Result { workload, alloc }
+}
+
+pub fn print_fig6(r: &Fig6Result) {
+    let norm = r.alloc.normalized_workload(&r.workload);
+    let rows: Vec<Vec<String>> = r
+        .workload
+        .iter()
+        .enumerate()
+        .map(|(k, &w)| {
+            vec![
+                format!("δ[{k}]"),
+                w.to_string(),
+                r.alloc.copies[k].to_string(),
+                format!("{:.0}", norm[k]),
+            ]
+        })
+        .collect();
+    print_table(
+        "Fig. 6 — per-offset workload, copies (W2B @ 54), normalized workload",
+        &["offset", "pairs", "copies", "pairs/copies"],
+        &rows,
+    );
+    let max_w = *r.workload.iter().max().unwrap() as f64;
+    let min_w = r.workload.iter().copied().filter(|&w| w > 0).min().unwrap() as f64;
+    println!(
+        "imbalance before: {:.1}x (max/min) | makespan {} -> {} | speedup {:.2}x",
+        max_w / min_w,
+        r.alloc.makespan_before,
+        r.alloc.makespan_after,
+        r.alloc.speedup()
+    );
+}
+
+/// Fig. 10: MinkUNet with/without W2B — FPS and energy per frame.
+pub struct Fig10Result {
+    pub with_w2b: SimReport,
+    pub without_w2b: SimReport,
+}
+
+impl Fig10Result {
+    pub fn speedup(&self) -> f64 {
+        self.without_w2b.seconds / self.with_w2b.seconds
+    }
+    pub fn energy_reduction(&self) -> f64 {
+        1.0 - self.with_w2b.energy_joules / self.without_w2b.energy_joules
+    }
+}
+
+pub fn run_fig10(seed: u64) -> Fig10Result {
+    let net = minkunet::minkunet();
+    // Clustered SemanticKITTI-like occupancy (~120k voxels).
+    let g = Voxelizer::synth_clustered(net.extent, 2.3e-4, 14, 0.3, seed);
+    let input = SparseTensor::from_coords(net.extent, g.coords(), 1);
+    let acc = Accelerator::default();
+    let doms = Doms::default();
+    let with_w2b = acc.simulate(&net, &input, &doms, &SimOptions::default());
+    let without_w2b = acc.simulate(
+        &net,
+        &input,
+        &doms,
+        &SimOptions {
+            w2b: false,
+            ..Default::default()
+        },
+    );
+    Fig10Result {
+        with_w2b,
+        without_w2b,
+    }
+}
+
+pub fn print_fig10(r: &Fig10Result) {
+    print_table(
+        "Fig. 10 — W2B ablation on MinkUNet (segmentation)",
+        &["config", "fps", "energy/frame (mJ)"],
+        &[
+            vec![
+                "baseline (no W2B)".into(),
+                format!("{:.1}", r.without_w2b.fps()),
+                format!("{:.2}", r.without_w2b.energy_joules * 1e3),
+            ],
+            vec![
+                "with W2B".into(),
+                format!("{:.1}", r.with_w2b.fps()),
+                format!("{:.2}", r.with_w2b.energy_joules * 1e3),
+            ],
+        ],
+    );
+    println!(
+        "W2B speedup: {:.2}x (paper: 2.3x) | energy reduction: {:.1}% (paper: 6%)",
+        r.speedup(),
+        r.energy_reduction() * 100.0
+    );
+}
+
+/// Fig. 6(c) companion: the detection-layer copy factors the paper
+/// tabulates, for SECOND L1 specifically.
+pub fn second_l1_copy_factors(seed: u64) -> Vec<u32> {
+    let _ = second::second();
+    run_fig6(seed).alloc.copies
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_shows_large_imbalance_then_flat() {
+        let r = run_fig6(21);
+        let max_w = *r.workload.iter().max().unwrap();
+        let nonzero_min = r.workload.iter().copied().filter(|&w| w > 0).min().unwrap();
+        // The paper reports the central/peripheral gap "can even be more
+        // than 40x"; a clustered LiDAR-like frame shows a strong skew.
+        assert!(
+            max_w as f64 / nonzero_min as f64 > 3.0,
+            "imbalance too small: {max_w}/{nonzero_min}"
+        );
+        // After W2B, normalized workload spread is much tighter.
+        let norm = r.alloc.normalized_workload(&r.workload);
+        let nz: Vec<f64> = norm.iter().copied().filter(|&x| x > 0.0).collect();
+        let max_n = nz.iter().cloned().fold(0.0, f64::max);
+        let min_n = nz.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(
+            max_n / min_n < max_w as f64 / nonzero_min as f64,
+            "W2B did not flatten the histogram"
+        );
+        // Center offset is the most replicated.
+        let center_copies = r.alloc.copies[13];
+        assert_eq!(
+            center_copies,
+            *r.alloc.copies.iter().max().unwrap(),
+            "center should get the most copies"
+        );
+    }
+
+    #[test]
+    fn fig10_speedup_band() {
+        let r = run_fig10(22);
+        let s = r.speedup();
+        // Paper: 2.3x. Our synthetic SemanticKITTI stand-in has a
+        // somewhat stronger center-offset skew than real scans, so we
+        // accept a 1.5x..5.5x band; EXPERIMENTS.md records the measured
+        // value against the paper's.
+        assert!(s > 1.5 && s < 5.5, "W2B speedup {s:.2} out of band");
+        let e = r.energy_reduction();
+        assert!(e > 0.0 && e < 0.25, "energy reduction {e:.3} out of band");
+    }
+}

@@ -1,0 +1,164 @@
+//! Quantized voxel coordinates.
+//!
+//! The paper's map search relies on a *depth-major* total order: voxels are
+//! stored sorted by `(z, y, x)` so that one "depth" (all voxels with a given
+//! z) is a contiguous run in off-chip memory, addressable via the
+//! depth-encoding table. `Ord` on [`Coord3`] implements exactly that order.
+
+use std::fmt;
+
+/// A quantized 3-D voxel coordinate. Ordered depth-major: `(z, y, x)`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Coord3 {
+    pub z: i32,
+    pub y: i32,
+    pub x: i32,
+}
+
+impl Coord3 {
+    #[inline]
+    pub const fn new(x: i32, y: i32, z: i32) -> Self {
+        Self { z, y, x }
+    }
+
+    /// Component-wise add of a kernel offset.
+    #[inline]
+    pub fn offset(self, d: super::Offset3) -> Self {
+        Self {
+            x: self.x + d.dx as i32,
+            y: self.y + d.dy as i32,
+            z: self.z + d.dz as i32,
+        }
+    }
+
+    /// True if inside `[0, extent)` on all axes.
+    #[inline]
+    pub fn in_bounds(self, e: Extent3) -> bool {
+        self.x >= 0
+            && self.y >= 0
+            && self.z >= 0
+            && (self.x as usize) < e.x
+            && (self.y as usize) < e.y
+            && (self.z as usize) < e.z
+    }
+
+    /// Flat row-major index (z-major) within `extent`; coordinate must be
+    /// in bounds.
+    #[inline]
+    pub fn flat_index(self, e: Extent3) -> usize {
+        debug_assert!(self.in_bounds(e));
+        (self.z as usize * e.y + self.y as usize) * e.x + self.x as usize
+    }
+
+    /// Downsample by `stride` (floor division, matching gconv2 semantics).
+    #[inline]
+    pub fn downsample(self, stride: i32) -> Self {
+        Self {
+            x: self.x.div_euclid(stride),
+            y: self.y.div_euclid(stride),
+            z: self.z.div_euclid(stride),
+        }
+    }
+}
+
+impl fmt::Debug for Coord3 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "({},{},{})", self.x, self.y, self.z)
+    }
+}
+
+/// 2-D block coordinate used by block-DOMS.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub struct Coord2 {
+    pub y: i32,
+    pub x: i32,
+}
+
+impl Coord2 {
+    pub const fn new(x: i32, y: i32) -> Self {
+        Self { y, x }
+    }
+}
+
+/// Voxel-space extent `(x, y, z)` — e.g. the paper's low-res KITTI space is
+/// `352 x 400 x 10`, the high-res space `1408 x 1600 x 41`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Extent3 {
+    pub x: usize,
+    pub y: usize,
+    pub z: usize,
+}
+
+impl Extent3 {
+    pub const fn new(x: usize, y: usize, z: usize) -> Self {
+        Self { x, y, z }
+    }
+
+    pub fn volume(self) -> usize {
+        self.x * self.y * self.z
+    }
+
+    /// Extent after a stride-`s` downsampling conv (ceil division).
+    pub fn downsample(self, s: usize) -> Self {
+        Self {
+            x: self.x.div_ceil(s),
+            y: self.y.div_ceil(s),
+            z: self.z.div_ceil(s),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::Offset3;
+
+    #[test]
+    fn depth_major_order() {
+        // (z, y, x) lexicographic: z dominates, then y, then x.
+        let a = Coord3::new(9, 0, 0);
+        let b = Coord3::new(0, 9, 0);
+        let c = Coord3::new(0, 0, 9);
+        assert!(a < b && b < c);
+        assert!(Coord3::new(5, 3, 1) < Coord3::new(0, 4, 1));
+    }
+
+    #[test]
+    fn offset_and_bounds() {
+        let e = Extent3::new(4, 4, 4);
+        let c = Coord3::new(0, 0, 0);
+        assert!(c.in_bounds(e));
+        let moved = c.offset(Offset3::new(-1, 0, 0));
+        assert!(!moved.in_bounds(e));
+        assert!(Coord3::new(3, 3, 3).in_bounds(e));
+        assert!(!Coord3::new(4, 0, 0).in_bounds(e));
+    }
+
+    #[test]
+    fn flat_index_bijective_on_small_grid() {
+        let e = Extent3::new(3, 4, 5);
+        let mut seen = vec![false; e.volume()];
+        for z in 0..5 {
+            for y in 0..4 {
+                for x in 0..3 {
+                    let i = Coord3::new(x, y, z).flat_index(e);
+                    assert!(!seen[i]);
+                    seen[i] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn downsample_floor() {
+        assert_eq!(Coord3::new(3, 2, 5).downsample(2), Coord3::new(1, 1, 2));
+        assert_eq!(Coord3::new(0, 0, 0).downsample(2), Coord3::new(0, 0, 0));
+    }
+
+    #[test]
+    fn extent_downsample_ceil() {
+        let e = Extent3::new(5, 4, 1);
+        assert_eq!(e.downsample(2), Extent3::new(3, 2, 1));
+    }
+}

@@ -1,0 +1,9 @@
+//! Voxel-space geometry: integer coordinates, kernel offset sets, and
+//! Morton (Z-order) encoding used by the table-aided baseline.
+
+pub mod coord;
+pub mod morton;
+pub mod offsets;
+
+pub use coord::{Coord2, Coord3, Extent3};
+pub use offsets::{KernelOffsets, Offset3};

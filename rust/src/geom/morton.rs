@@ -1,0 +1,79 @@
+//! Morton (Z-order) encoding.
+//!
+//! Used by the table-aided / octree-encoding baseline (SpOctA-style): a
+//! voxel's Morton code is its position along the octree's space-filling
+//! curve, so an octree-encoded table is an array indexed by Morton code
+//! prefix. We use it to size the table-aided baseline's storage in
+//! `mapsearch::table` and as an alternative sort order in tests.
+
+/// Spread the low 21 bits of `v` so there are two zero bits between each
+/// original bit (the classic magic-number dilation).
+#[inline]
+fn part1by2(v: u32) -> u64 {
+    let mut y = (v as u64) & 0x1f_ffff; // 21 bits
+    y = (y | (y << 32)) & 0x001f_0000_0000_ffff;
+    y = (y | (y << 16)) & 0x001f_0000_ff00_00ff;
+    y = (y | (y << 8)) & 0x100f_00f0_0f00_f00f;
+    y = (y | (y << 4)) & 0x10c3_0c30_c30c_30c3;
+    y = (y | (y << 2)) & 0x1249_2492_4924_9249;
+    y
+}
+
+/// Inverse of [`part1by2`].
+#[inline]
+fn compact1by2(x: u64) -> u32 {
+    let mut v = x & 0x1249_2492_4924_9249;
+    v = (v ^ (v >> 2)) & 0x10c3_0c30_c30c_30c3;
+    v = (v ^ (v >> 4)) & 0x100f_00f0_0f00_f00f;
+    v = (v ^ (v >> 8)) & 0x001f_0000_ff00_00ff;
+    v = (v ^ (v >> 16)) & 0x001f_0000_0000_ffff;
+    v = (v ^ (v >> 32)) & 0x1f_ffff;
+    v as u32
+}
+
+/// Interleave (x, y, z) (each < 2^21) into a 63-bit Morton code.
+#[inline]
+pub fn encode(x: u32, y: u32, z: u32) -> u64 {
+    debug_assert!(x < (1 << 21) && y < (1 << 21) && z < (1 << 21));
+    part1by2(x) | (part1by2(y) << 1) | (part1by2(z) << 2)
+}
+
+/// Inverse of [`encode`].
+#[inline]
+pub fn decode(m: u64) -> (u32, u32, u32) {
+    (compact1by2(m), compact1by2(m >> 1), compact1by2(m >> 2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::check;
+
+    #[test]
+    fn known_values() {
+        assert_eq!(encode(0, 0, 0), 0);
+        assert_eq!(encode(1, 0, 0), 0b001);
+        assert_eq!(encode(0, 1, 0), 0b010);
+        assert_eq!(encode(0, 0, 1), 0b100);
+        assert_eq!(encode(1, 1, 1), 0b111);
+        assert_eq!(encode(2, 0, 0), 0b001_000);
+    }
+
+    #[test]
+    fn roundtrip_prop() {
+        check("morton roundtrip", 500, |g| {
+            let x = g.usize(0, 1 << 21) as u32;
+            let y = g.usize(0, 1 << 21) as u32;
+            let z = g.usize(0, 1 << 21) as u32;
+            assert_eq!(decode(encode(x, y, z)), (x, y, z));
+        });
+    }
+
+    #[test]
+    fn order_locality() {
+        // Within one octant, all codes are below the next octant's codes.
+        let inside = encode(7, 7, 7);
+        let outside = encode(8, 0, 0);
+        assert!(inside < outside);
+    }
+}

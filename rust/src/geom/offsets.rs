@@ -1,0 +1,180 @@
+//! Kernel offset sets Δ³(K) and the central-symmetry halving that MARS and
+//! DOMS exploit (Fig. 2a): for a centrally-symmetric kernel, if the pair
+//! `(P, Q, W_δ)` exists then `(Q, P, W_{-δ})` exists, so only half of the
+//! non-center offsets need to be searched.
+
+/// One kernel offset δ ∈ Δ³(K).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct Offset3 {
+    pub dz: i8,
+    pub dy: i8,
+    pub dx: i8,
+}
+
+impl Offset3 {
+    pub const fn new(dx: i8, dy: i8, dz: i8) -> Self {
+        Self { dz, dy, dx }
+    }
+
+    pub const ZERO: Offset3 = Offset3::new(0, 0, 0);
+
+    #[inline]
+    pub fn negate(self) -> Self {
+        Self {
+            dx: -self.dx,
+            dy: -self.dy,
+            dz: -self.dz,
+        }
+    }
+
+    /// True for the "positive half" of the offset set: the first nonzero
+    /// component in (z, y, x) order is positive. The center offset is in
+    /// neither half.
+    #[inline]
+    pub fn is_positive_half(self) -> bool {
+        if self.dz != 0 {
+            return self.dz > 0;
+        }
+        if self.dy != 0 {
+            return self.dy > 0;
+        }
+        self.dx > 0
+    }
+}
+
+/// The full offset set of a K×K×K kernel (odd K, e.g. subm3) or a
+/// downsampling kernel (gconv2: offsets `{0, 1}³` relative to the scaled
+/// output coordinate).
+#[derive(Clone, Debug)]
+pub struct KernelOffsets {
+    pub k: usize,
+    pub offsets: Vec<Offset3>,
+}
+
+impl KernelOffsets {
+    /// Δ³(K) for odd K, centered: components in `[-(K-1)/2, (K-1)/2]`.
+    /// Offsets are enumerated in (dz, dy, dx) lexicographic order, so
+    /// `offset_index` is stable and matches the weight sub-matrix layout.
+    pub fn centered(k: usize) -> Self {
+        assert!(k % 2 == 1, "centered kernel requires odd K");
+        let r = (k / 2) as i8;
+        let mut offsets = Vec::with_capacity(k * k * k);
+        for dz in -r..=r {
+            for dy in -r..=r {
+                for dx in -r..=r {
+                    offsets.push(Offset3::new(dx, dy, dz));
+                }
+            }
+        }
+        Self { k, offsets }
+    }
+
+    /// Offsets of a stride-s downsampling kernel of size K (gconv2 uses
+    /// K = 2): input coordinate = s * output + δ with δ ∈ [0, K)³.
+    pub fn downsample(k: usize) -> Self {
+        let mut offsets = Vec::with_capacity(k * k * k);
+        for dz in 0..k as i8 {
+            for dy in 0..k as i8 {
+                for dx in 0..k as i8 {
+                    offsets.push(Offset3::new(dx, dy, dz));
+                }
+            }
+        }
+        Self { k, offsets }
+    }
+
+    pub fn len(&self) -> usize {
+        self.offsets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.offsets.is_empty()
+    }
+
+    /// Index of an offset in the canonical enumeration.
+    pub fn index_of(&self, o: Offset3) -> Option<usize> {
+        self.offsets.iter().position(|&x| x == o)
+    }
+
+    /// The 13 positive-half offsets of a centered kernel (excludes center).
+    pub fn positive_half(&self) -> Vec<Offset3> {
+        self.offsets
+            .iter()
+            .copied()
+            .filter(|o| o.is_positive_half())
+            .collect()
+    }
+
+    /// Positive half + center: what an output-major searcher visits per
+    /// output (13 + 1 for subm3).
+    pub fn search_half(&self) -> Vec<Offset3> {
+        let mut v = vec![Offset3::ZERO];
+        v.extend(self.positive_half());
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn centered_k3_has_27() {
+        let k = KernelOffsets::centered(3);
+        assert_eq!(k.len(), 27);
+        assert_eq!(k.index_of(Offset3::ZERO), Some(13)); // center is middle
+    }
+
+    #[test]
+    fn positive_half_is_13_for_k3() {
+        let k = KernelOffsets::centered(3);
+        let half = k.positive_half();
+        assert_eq!(half.len(), 13);
+        // Halves partition the non-center offsets under negation.
+        for o in &k.offsets {
+            if *o == Offset3::ZERO {
+                continue;
+            }
+            assert_ne!(o.is_positive_half(), o.negate().is_positive_half());
+        }
+    }
+
+    #[test]
+    fn search_half_has_14_for_k3() {
+        let k = KernelOffsets::centered(3);
+        assert_eq!(k.search_half().len(), 14);
+    }
+
+    #[test]
+    fn positive_half_reaches_only_forward_depths() {
+        // DOMS invariant: every positive-half offset has dz in {0, +1} for
+        // K=3, and those with dz == 0 have (dy, dx) lexicographically > 0.
+        let k = KernelOffsets::centered(3);
+        for o in k.positive_half() {
+            assert!(o.dz == 0 || o.dz == 1);
+            if o.dz == 0 {
+                assert!(o.dy > 0 || (o.dy == 0 && o.dx > 0));
+            }
+        }
+    }
+
+    #[test]
+    fn downsample_k2_has_8_nonnegative() {
+        let k = KernelOffsets::downsample(2);
+        assert_eq!(k.len(), 8);
+        assert!(k.offsets.iter().all(|o| o.dx >= 0 && o.dy >= 0 && o.dz >= 0));
+    }
+
+    #[test]
+    fn k5_counts() {
+        let k = KernelOffsets::centered(5);
+        assert_eq!(k.len(), 125);
+        assert_eq!(k.positive_half().len(), 62);
+    }
+
+    #[test]
+    #[should_panic]
+    fn even_centered_panics() {
+        let _ = KernelOffsets::centered(2);
+    }
+}

@@ -1,0 +1,61 @@
+//! # voxel-cim
+//!
+//! A full-system software reproduction of **"Voxel-CIM: An Efficient
+//! Compute-in-Memory Accelerator for Voxel-based Point Cloud Neural
+//! Networks"** (Lin, Huang, Jiang — ICCAD 2024).
+//!
+//! The crate is the L3 coordinator of a three-layer stack:
+//!
+//! * **L3 (this crate)** — synthetic LiDAR scenes, voxelization, VFE, the
+//!   paper's map-search core (DOMS / block-DOMS plus the PointAcc and MARS
+//!   baselines), the CIM computing-core model (tiles, sub-matrix weight
+//!   mapping, W2B workload balancing, a 22 nm energy/latency model), the
+//!   sparse-convolution execution engine, SECOND / MinkUNet network
+//!   definitions, the hybrid MS-wise / compute-wise pipeline, and the
+//!   experiment harness that regenerates every figure and table of the
+//!   paper's evaluation.
+//! * **L2 (python/compile/model.py, build-time)** — the JAX compute graph.
+//! * **L1 (python/compile/kernels/, build-time)** — Pallas kernels for the
+//!   CIM PE datapath (bit-serial MAC + ADC clamp + shift-add).
+//!
+//! Python never runs on the request path: `make artifacts` lowers L2/L1
+//! once to HLO text in `artifacts/`, and [`runtime`] loads + executes them
+//! through the PJRT CPU client (`xla` crate).
+//!
+//! See `DESIGN.md` for the full module map and experiment index.
+
+pub mod cim;
+pub mod coordinator;
+pub mod experiments;
+pub mod geom;
+pub mod mapsearch;
+pub mod model;
+pub mod pointcloud;
+pub mod runtime;
+pub mod sim;
+pub mod sparse;
+pub mod spconv;
+pub mod testing;
+pub mod util;
+
+pub mod bench_util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Common imports for examples and benches.
+pub mod prelude {
+    pub use crate::cim::{CimConfig, EnergyModel, W2bAllocation};
+    pub use crate::geom::{Coord3, KernelOffsets};
+    pub use crate::coordinator::{NetworkRunner, RunnerConfig, StreamServer};
+    pub use crate::mapsearch::{
+        AccessStats, BlockDoms, Doms, MapSearch, OctreeSearch, OutputMajor, WeightMajor,
+    };
+    pub use crate::model::{minkunet, second, LayerSpec, NetworkSpec};
+    pub use crate::pointcloud::{SceneConfig, SceneKind, Voxelizer};
+    pub use crate::runtime::{Runtime, RuntimeConfig};
+    pub use crate::sim::{Accelerator, SimReport};
+    pub use crate::sparse::{Rulebook, SparseTensor};
+    pub use crate::util::rng::Pcg64;
+    pub use crate::Result;
+}

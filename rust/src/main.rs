@@ -1,0 +1,190 @@
+//! `voxel-cim` — the leader binary.
+//!
+//! ```text
+//! voxel-cim exp <fig2d|fig9a|fig9b|fig9c|fig6|fig10|fig11|table2|all>
+//! voxel-cim run-det [--points N] [--native]    end-to-end SECOND frame
+//! voxel-cim run-seg [--points N] [--native]    end-to-end MinkUNet frame
+//! voxel-cim info                               config + artifact status
+//! ```
+
+use voxel_cim::coordinator::scheduler::{NetworkRunner, RunnerConfig};
+use voxel_cim::experiments as exp;
+use voxel_cim::model::{minkunet, second};
+use voxel_cim::pointcloud::scene::SceneConfig;
+use voxel_cim::pointcloud::vfe::{Vfe, VfeKind};
+use voxel_cim::pointcloud::voxelize::Voxelizer;
+use voxel_cim::runtime::{Runtime, RuntimeConfig};
+use voxel_cim::sparse::tensor::SparseTensor;
+use voxel_cim::spconv::layer::{GemmEngine, NativeEngine};
+use voxel_cim::util::cli::Args;
+
+fn main() -> voxel_cim::Result<()> {
+    let args = Args::new(
+        "voxel-cim — Compute-in-Memory accelerator for voxel-based point cloud networks \
+         (ICCAD'24 reproduction)\n\nUsage: voxel-cim <exp|run-det|run-seg|info> [flags]",
+    )
+    .opt("seed", "42", "experiment seed")
+    .opt("points", "20000", "LiDAR points per synthetic frame")
+    .opt("extent", "small", "grid for run-*: small|full")
+    .opt("config", "", "TOML run config (see examples/configs/)")
+    .switch("native", "use the native GEMM engine instead of PJRT artifacts")
+    .parse();
+
+    let seed = args.get_u64("seed");
+    let pos = args.positional();
+    match pos.first().map(String::as_str) {
+        Some("exp") => run_experiments(pos.get(1).map(String::as_str).unwrap_or("all"), seed),
+        Some("run-det") => run_net(true, &args),
+        Some("run-seg") => run_net(false, &args),
+        Some("info") => info(),
+        other => {
+            eprintln!("unknown command {other:?}\n\n{}", args.usage());
+            std::process::exit(2);
+        }
+    }
+}
+
+fn run_experiments(which: &str, seed: u64) -> voxel_cim::Result<()> {
+    let all = which == "all";
+    if all || which == "fig2d" {
+        exp::fig2d::print(&exp::fig2d::run(seed));
+    }
+    if all || which == "fig9a" {
+        exp::fig9::print_sweep(
+            "Fig. 9(a) — low resolution (352x400x10)",
+            &exp::fig9::run_a(seed),
+        );
+    }
+    if all || which == "fig9b" {
+        exp::fig9::print_sweep(
+            "Fig. 9(b) — high resolution (1408x1600x41)",
+            &exp::fig9::run_b(seed),
+        );
+    }
+    if all || which == "fig9c" {
+        exp::fig9::print_c(&exp::fig9::run_c(seed));
+    }
+    if all || which == "fig6" {
+        exp::w2b_fig10::print_fig6(&exp::w2b_fig10::run_fig6(seed));
+    }
+    if all || which == "fig10" {
+        exp::w2b_fig10::print_fig10(&exp::w2b_fig10::run_fig10(seed));
+    }
+    if all || which == "fig11" {
+        exp::fig11::print(&exp::fig11::run(seed));
+    }
+    if all || which == "table2" {
+        exp::table2::print(&exp::table2::run(seed));
+    }
+    if all || which == "ablations" {
+        exp::ablations::print_all(seed);
+    }
+    Ok(())
+}
+
+fn run_net(detection: bool, args: &Args) -> voxel_cim::Result<()> {
+    // Optional TOML config overrides the CLI defaults.
+    let cfg = match args.get("config") {
+        "" => voxel_cim::util::config::Config::default(),
+        path => voxel_cim::util::config::Config::load(path)?,
+    };
+    let full = args.get("extent") == "full";
+    let net = match (detection, full) {
+        (true, true) => second::second(),
+        (true, false) => second::second_small(),
+        (false, true) => minkunet::minkunet(),
+        (false, false) => minkunet::minkunet_small(),
+    };
+    println!("network: {} | extent {:?}", net.name, net.extent);
+
+    // Synthetic frame -> voxelize -> VFE (the preprocessing path).
+    let mut scene = SceneConfig::default()
+        .with_points(cfg.int_or("scene.points", args.get_usize("points") as i64) as usize)
+        .with_seed(cfg.int_or("seed", args.get_u64("seed") as i64) as u64);
+    if let Some(kind) =
+        voxel_cim::pointcloud::scene::SceneKind::parse(cfg.str_or("scene.kind", "urban"))
+    {
+        scene.kind = kind;
+    }
+    let scene = scene;
+    let pts = scene.generate();
+    let e = net.extent;
+    let vx = Voxelizer::new((70.4, 80.0, 4.0), e, 32);
+    let grid = vx.voxelize(&pts);
+    let vfe = Vfe::new(VfeKind::Simple);
+    let (feats, scale) = vfe.extract_i8(&grid);
+    println!(
+        "frame: {} points -> {} voxels (sparsity {:.5}, vfe scale {:.4})",
+        pts.len(),
+        grid.len(),
+        grid.sparsity(),
+        scale
+    );
+    let input = SparseTensor::new(
+        e,
+        grid.voxels
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (v.coord, feats[i * 4..(i + 1) * 4].to_vec()))
+            .collect(),
+        4,
+    );
+
+    let runner_cfg = RunnerConfig {
+        batch: cfg.int_or("runner.batch", 256) as usize,
+        workers: cfg.int_or("runner.workers", 2) as usize,
+        ..Default::default()
+    };
+    let runner = NetworkRunner::new(net, runner_cfg);
+    let res = if args.get_bool("native") {
+        let mut engine = NativeEngine::default();
+        runner.run_frame(input, &mut engine)?
+    } else {
+        let mut engine = Runtime::load(&RuntimeConfig::discover())?;
+        println!("runtime: PJRT CPU, batches {:?}", engine.gemm_batches());
+        let r = runner.run_frame(input, &mut engine)?;
+        println!("PJRT dispatches: {}", engine.dispatches());
+        r
+    };
+
+    println!("\nper-layer:");
+    for r in &res.records {
+        println!(
+            "  {:<38} pairs {:>9}  out {:>8}  ms {:>9.3?}ms  compute {:>9.3}ms",
+            r.name,
+            r.pairs,
+            r.out_voxels,
+            r.ms_seconds * 1e3,
+            r.compute_seconds * 1e3
+        );
+    }
+    println!(
+        "\ntotal: {:.1} ms ({} pairs, map-search {:.1} ms, compute {:.1} ms)",
+        res.total_seconds * 1e3,
+        res.total_pairs(),
+        res.ms_seconds() * 1e3,
+        res.compute_seconds() * 1e3
+    );
+    if let Some((h, w, c)) = res.head_shape {
+        println!("detection head: {h}x{w}x{c}");
+    } else {
+        println!("segmentation output voxels: {}", res.out_voxels);
+    }
+    Ok(())
+}
+
+fn info() -> voxel_cim::Result<()> {
+    use voxel_cim::cim::{CimConfig, EnergyModel};
+    let cim = CimConfig::default();
+    let em = EnergyModel::default();
+    println!("Voxel-CIM configuration");
+    println!("  tiles: {} x {}x{} cells", cim.tiles, cim.tile_rows, cim.tile_cols);
+    println!("  weight capacity: {} int8", cim.weight_capacity());
+    println!("  peak throughput: {:.1} TOPS @ {:.0} MHz", cim.peak_tops(), cim.freq_hz / 1e6);
+    println!("  peak efficiency: {:.2} TOPS/W", em.peak_tops_per_watt(&cim));
+    match Runtime::load(&RuntimeConfig::discover()) {
+        Ok(rt) => println!("  artifacts: loaded (GEMM batches {:?})", rt.gemm_batches()),
+        Err(e) => println!("  artifacts: NOT loaded ({e:#}) — run `make artifacts`"),
+    }
+    Ok(())
+}

@@ -1,0 +1,176 @@
+//! Row-granular FIFO voxel-buffer model (buffers I and II of Fig. 7).
+//!
+//! The map-search core stores voxel *rows* (all voxels sharing (y, z)) in
+//! two FIFO buffers. The model tracks which rows are resident and charges
+//! a DRAM read for each voxel of a row that has to be (re)loaded — this is
+//! what produces O(N) vs O(2N) vs blow-up behavior across the searchers.
+
+use std::collections::VecDeque;
+
+use rustc_hash::FxHashSet as HashSet;
+
+/// Identifier of a voxel row: (z, y). Block-DOMS additionally scopes rows
+/// by block id packed into the high bits of `y` by the caller.
+pub type RowId = (i32, i64);
+
+/// A FIFO of voxel rows with a capacity in *voxels* (the paper sizes the
+/// buffer to the merge-sorter length, 64).
+///
+/// Membership is tracked in a side `HashSet`: with ~1-voxel rows at high
+/// resolution the FIFO holds up to `capacity` rows, and a linear scan per
+/// `ensure` dominated the DOMS hot loop (EXPERIMENTS.md §Perf L3
+/// iteration 3).
+#[derive(Clone, Debug)]
+pub struct RowFifo {
+    pub capacity: usize,
+    resident: VecDeque<(RowId, usize)>,
+    members: HashSet<RowId>,
+    occupied: usize,
+    /// Total voxels loaded from DRAM into this buffer.
+    pub loads: u64,
+}
+
+impl RowFifo {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity,
+            resident: VecDeque::new(),
+            members: HashSet::default(),
+            occupied: 0,
+            loads: 0,
+        }
+    }
+
+    pub fn contains(&self, row: RowId) -> bool {
+        self.members.contains(&row)
+    }
+
+    /// Ensure `row` (with `size` voxels) is resident; returns the number
+    /// of voxels read from DRAM (0 if already resident). Rows larger than
+    /// the whole buffer are streamed through: they are charged fully and
+    /// marked non-resident (they can never be reused).
+    pub fn ensure(&mut self, row: RowId, size: usize) -> u64 {
+        if size == 0 {
+            return 0;
+        }
+        if self.contains(row) {
+            return 0;
+        }
+        self.loads += size as u64;
+        if size > self.capacity {
+            // Streamed, not retained.
+            return size as u64;
+        }
+        while self.occupied + size > self.capacity {
+            let (evicted, s) = self.resident.pop_front().expect("occupied>0");
+            self.members.remove(&evicted);
+            self.occupied -= s;
+        }
+        self.resident.push_back((row, size));
+        self.members.insert(row);
+        self.occupied += size;
+        size as u64
+    }
+
+    /// Drop a specific row (Fig. 3 step 4: first row released after use).
+    pub fn release(&mut self, row: RowId) {
+        if let Some(pos) = self.resident.iter().position(|(r, _)| *r == row) {
+            let (_, s) = self.resident.remove(pos).unwrap();
+            self.members.remove(&row);
+            self.occupied -= s;
+        }
+    }
+
+    /// Drop everything (depth advance).
+    pub fn clear(&mut self) {
+        self.resident.clear();
+        self.members.clear();
+        self.occupied = 0;
+    }
+
+    pub fn occupied(&self) -> usize {
+        self.occupied
+    }
+
+    /// Adopt the contents of another FIFO (the DOMS O(N) optimization:
+    /// when a whole depth fits, buffer II's rows become buffer I's rows on
+    /// depth advance without touching DRAM).
+    pub fn adopt(&mut self, other: &mut RowFifo) {
+        self.clear();
+        std::mem::swap(&mut self.resident, &mut other.resident);
+        std::mem::swap(&mut self.members, &mut other.members);
+        self.occupied = other.occupied;
+        other.occupied = 0;
+        other.members.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_load_charged_reuse_free() {
+        let mut f = RowFifo::new(16);
+        assert_eq!(f.ensure((0, 0), 4), 4);
+        assert_eq!(f.ensure((0, 0), 4), 0);
+        assert_eq!(f.loads, 4);
+    }
+
+    #[test]
+    fn eviction_fifo_order() {
+        let mut f = RowFifo::new(8);
+        f.ensure((0, 0), 4);
+        f.ensure((0, 1), 4);
+        f.ensure((0, 2), 4); // evicts (0,0)
+        assert!(!f.contains((0, 0)));
+        assert!(f.contains((0, 1)));
+        assert!(f.contains((0, 2)));
+        // Reloading the evicted row costs again.
+        assert_eq!(f.ensure((0, 0), 4), 4);
+    }
+
+    #[test]
+    fn oversized_row_streams_without_residency() {
+        let mut f = RowFifo::new(8);
+        assert_eq!(f.ensure((0, 0), 20), 20);
+        assert!(!f.contains((0, 0)));
+        assert_eq!(f.occupied(), 0);
+        // And it did not evict anything resident.
+        f.ensure((0, 1), 8);
+        assert_eq!(f.ensure((0, 2), 30), 30);
+        assert!(f.contains((0, 1)));
+    }
+
+    #[test]
+    fn release_frees_space() {
+        let mut f = RowFifo::new(8);
+        f.ensure((0, 0), 4);
+        f.ensure((0, 1), 4);
+        f.release((0, 0));
+        assert_eq!(f.occupied(), 4);
+        assert_eq!(f.ensure((0, 2), 4), 4);
+        assert!(f.contains((0, 1)) && f.contains((0, 2)));
+    }
+
+    #[test]
+    fn adopt_moves_rows_without_dram_traffic() {
+        let mut a = RowFifo::new(8);
+        let mut b = RowFifo::new(8);
+        b.ensure((1, 0), 4);
+        b.ensure((1, 1), 2);
+        let loads_before = a.loads;
+        a.adopt(&mut b);
+        assert_eq!(a.loads, loads_before);
+        assert!(a.contains((1, 0)) && a.contains((1, 1)));
+        assert_eq!(a.occupied(), 6);
+        assert_eq!(b.occupied(), 0);
+    }
+
+    #[test]
+    fn zero_size_row_free() {
+        let mut f = RowFifo::new(4);
+        assert_eq!(f.ensure((0, 5), 0), 0);
+        assert_eq!(f.loads, 0);
+    }
+}

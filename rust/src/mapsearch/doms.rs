@@ -1,0 +1,228 @@
+//! DOMS — Depth-encoding-based Output Major Search (§3.1B-C, Fig. 3).
+//!
+//! The insight: an output voxel Q = (x₀, y₀, z₀) never needs two whole
+//! depths — its positive-half search space is exactly
+//!
+//! * rows `y₀ .. y₀+1` at depth `z₀` (same-depth forward offsets), and
+//! * rows `y₀-1 .. y₀+1` at depth `z₀+1` (next-depth offsets),
+//!
+//! and with a **depth-encoding table** holding each depth's start pointer,
+//! those rows can be fetched directly from DRAM. Two row-FIFO buffers
+//! (I: current depth, II: next depth) slide down the rows of a depth;
+//! margin rows are reused between consecutive outputs, so each voxel is
+//! loaded at most twice (once serving outputs of depth z-1, once serving
+//! depth z) → stable O(2N). If a FIFO can hold an entire depth, buffer II
+//! is *adopted* as buffer I on the depth advance and access drops to O(N).
+//!
+//! This module is a behavioral simulation of that exact schedule: the
+//! reads counted are the reads the Fig. 7 map-search core would issue.
+
+use crate::geom::KernelOffsets;
+use crate::mapsearch::buffer::RowFifo;
+use crate::mapsearch::output_major::emit_output_pairs_rows;
+use crate::mapsearch::table::DepthTable;
+use crate::mapsearch::{AccessStats, MapSearch};
+use crate::sparse::rulebook::{ConvKind, Rulebook};
+use crate::sparse::tensor::SparseTensor;
+
+#[derive(Clone, Debug)]
+pub struct Doms {
+    /// Capacity of each row-FIFO buffer, in voxels (paper: 64, matching
+    /// the merge-sorter length).
+    pub fifo_voxels: usize,
+    /// Merge-sorter length.
+    pub sorter_len: usize,
+}
+
+impl Default for Doms {
+    fn default() -> Self {
+        Self {
+            fifo_voxels: 64,
+            sorter_len: 64,
+        }
+    }
+}
+
+impl Doms {
+    /// Sorter passes for one output: its 5-row window streams through the
+    /// fixed network alongside the 14 query positions.
+    fn sorter_passes_for(&self, window: usize, queries: usize) -> u64 {
+        let payload = window + queries;
+        payload.div_ceil(self.sorter_len).max(1) as u64
+    }
+}
+
+impl MapSearch for Doms {
+    fn name(&self) -> &'static str {
+        "DOMS"
+    }
+
+    fn search_subm(&self, input: &SparseTensor, k: usize) -> (Rulebook, AccessStats) {
+        assert_eq!(k, 3, "DOMS row-window model is calibrated for subm3");
+        let offs = KernelOffsets::centered(k);
+        let dt = DepthTable::build(input);
+        let qpo = offs.search_half().len(); // 14
+        let mut stats = AccessStats {
+            table_bytes: dt.table_bytes(),
+            ..Default::default()
+        };
+        let mut buf_i = RowFifo::new(self.fifo_voxels); // depth z rows
+        let mut buf_ii = RowFifo::new(self.fifo_voxels); // depth z+1 rows
+        // Subm3 on LiDAR-like data averages ~4-8 pairs/voxel; presizing
+        // avoids repeated reallocation of the dominant output vector.
+        let mut pairs = Vec::with_capacity(input.len() * 8);
+
+        let depths = input.extent.z as i32;
+        for z in 0..depths {
+            let len_z = dt.depth_len(z);
+            if len_z == 0 {
+                buf_i.clear();
+                buf_ii.clear();
+                continue;
+            }
+            // Depth advance (Fig. 3 end): buffer II's rows (depth z) become
+            // buffer I's working set without re-reading DRAM — the O(N)
+            // optimization — as long as the depth can fit at all.
+            if len_z <= self.fifo_voxels {
+                buf_i.adopt(&mut buf_ii);
+            } else {
+                buf_i.clear();
+                buf_ii.clear();
+            }
+
+            // Outputs advance row-major within the depth (Step 2-4).
+            let start = dt.starts[z as usize];
+            let end = dt.starts[z as usize + 1];
+            let mut o = start;
+            while o < end {
+                let y0 = input.coords[o].y;
+                // All outputs of row (z, y0) share the same 5-row window;
+                // process the row as one scheduling step.
+                let row_end = {
+                    let mut j = o;
+                    while j < end && input.coords[j].y == y0 {
+                        j += 1;
+                    }
+                    j
+                };
+                // Rows y0, y0+1 at depth z into buffer I.
+                let mut window = 0usize;
+                for dy in 0..=1 {
+                    let (_, rl) = dt.row(z, y0 + dy);
+                    stats.voxel_reads += buf_i.ensure((z, (y0 + dy) as i64), rl);
+                    window += rl;
+                }
+                // Rows y0-1 .. y0+1 at depth z+1 into buffer II (located
+                // via the depth-encoding table).
+                if z + 1 < depths {
+                    for dy in -1..=1 {
+                        let (_, rl) = dt.row(z + 1, y0 + dy);
+                        stats.voxel_reads += buf_ii.ensure((z + 1, (y0 + dy) as i64), rl);
+                        window += rl;
+                    }
+                }
+                // One sorter schedule per output in this row.
+                for o_i in o..row_end {
+                    stats.sorter_passes += self.sorter_passes_for(window, qpo);
+                    emit_output_pairs_rows(input, &dt, o_i, &mut pairs);
+                }
+                o = row_end;
+            }
+        }
+
+        let l = self.sorter_len;
+        stats.sorter_compares = stats.sorter_passes
+            * (l / 2 * (l.ilog2() as usize * (l.ilog2() as usize + 1) / 2)) as u64;
+
+        let mut rb = Rulebook {
+            kind: ConvKind::Submanifold { k },
+            pairs,
+            out_coords: input.coords.clone(),
+            out_extent: input.extent,
+        };
+        rb.canonicalize();
+        (rb, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::Extent3;
+    use crate::mapsearch::OutputMajor;
+    use crate::pointcloud::voxelize::Voxelizer;
+    use crate::sparse::hash_map_search;
+    use crate::testing::prop::check;
+
+    fn tensor(e: Extent3, sparsity: f64, seed: u64) -> SparseTensor {
+        let g = Voxelizer::synth_occupancy(e, sparsity, seed);
+        SparseTensor::from_coords(e, g.coords(), 1)
+    }
+
+    #[test]
+    fn matches_hash_oracle() {
+        let t = tensor(Extent3::new(24, 24, 8), 0.05, 31);
+        let (rb, _) = Doms::default().search_subm(&t, 3);
+        let want = hash_map_search(&t, ConvKind::subm3());
+        assert_eq!(rb.pairs, want.pairs);
+    }
+
+    #[test]
+    fn matches_hash_oracle_prop() {
+        check("DOMS == hash oracle", 15, |g| {
+            let e = Extent3::new(g.usize(4, 24), g.usize(4, 24), g.usize(2, 10));
+            let t = tensor(e, g.f64(0.01, 0.35), g.usize(0, 1 << 30) as u64);
+            let (rb, _) = Doms::default().search_subm(&t, 3);
+            let want = hash_map_search(&t, ConvKind::subm3());
+            assert_eq!(rb.pairs, want.pairs);
+        });
+    }
+
+    #[test]
+    fn access_bounded_by_2n_when_rows_fit() {
+        // Dense case that breaks MARS (two-depth windows >> 64) but whose
+        // individual rows fit the FIFOs: DOMS stays at <= ~2N.
+        let t = tensor(Extent3::new(64, 64, 8), 0.10, 32);
+        let (_, doms) = Doms::default().search_subm(&t, 3);
+        let norm = doms.normalized(t.len());
+        assert!(norm <= 2.2, "DOMS should be ~O(2N), got {norm}x");
+        let (_, mars) = OutputMajor::default().search_subm(&t, 3);
+        assert!(
+            mars.normalized(t.len()) > 5.0 * norm,
+            "MARS should deteriorate far beyond DOMS here"
+        );
+    }
+
+    #[test]
+    fn whole_depth_fifo_gives_o_n() {
+        let t = tensor(Extent3::new(32, 32, 8), 0.02, 33);
+        // FIFO big enough for any whole depth.
+        let big = Doms {
+            fifo_voxels: 100_000,
+            sorter_len: 64,
+        };
+        let (_, stats) = big.search_subm(&t, 3);
+        let norm = stats.normalized(t.len());
+        assert!(norm <= 1.05, "expected O(N), got {norm}x");
+    }
+
+    #[test]
+    fn table_bytes_one_pointer_per_depth() {
+        let t = tensor(Extent3::new(16, 16, 10), 0.05, 34);
+        let (_, stats) = Doms::default().search_subm(&t, 3);
+        assert_eq!(stats.table_bytes, 10 * 4);
+    }
+
+    #[test]
+    fn stable_across_density_prop() {
+        // The paper's headline claim: normalized access stays O(2N)-ish
+        // regardless of sparsity, as long as single rows fit the FIFO.
+        check("DOMS stable O(2N)", 8, |g| {
+            let e = Extent3::new(48, 48, 8);
+            let t = tensor(e, g.f64(0.005, 0.12), g.usize(0, 1 << 30) as u64);
+            let (_, stats) = Doms::default().search_subm(&t, 3);
+            let norm = stats.normalized(t.len());
+            assert!(norm <= 2.5, "sparsity broke DOMS: {norm}x");
+        });
+    }
+}

@@ -1,0 +1,136 @@
+//! The map-search core — the paper's primary contribution (§3.1).
+//!
+//! Five interchangeable searchers build the same [`Rulebook`] with very
+//! different off-chip access behavior:
+//!
+//! | searcher | paper | off-chip access |
+//! |---|---|---|
+//! | [`hash`] (oracle, in `sparse::hash_search`) | table-aided | O(N) probes but >100 MB table |
+//! | [`WeightMajor`] | PointAcc [13] | O(K³·N) |
+//! | [`OutputMajor`] | MARS [14] | O(N) if two depths fit the sorter buffer, blows up otherwise |
+//! | [`Doms`] | this paper | stable O(2N), O(N) with a depth-sized FIFO |
+//! | [`BlockDoms`] | this paper | stable O(N) + <6% replication |
+//!
+//! Correctness and cost are deliberately separated: neighbor existence is
+//! resolved against the sorted coordinate list (bit-identical rulebooks,
+//! property-tested against the hash oracle), while [`AccessStats`] comes
+//! from a behavioral model of the FIFO buffers, merge sorter, and
+//! depth-encoding tables that each dataflow would exercise.
+
+pub mod block_doms;
+pub mod buffer;
+pub mod doms;
+pub mod octree;
+pub mod output_major;
+pub mod sorter;
+pub mod table;
+pub mod weight_major;
+
+pub use block_doms::BlockDoms;
+pub use doms::Doms;
+pub use octree::OctreeSearch;
+pub use output_major::OutputMajor;
+pub use weight_major::WeightMajor;
+
+use crate::sparse::rulebook::{ConvKind, Rulebook};
+use crate::sparse::tensor::SparseTensor;
+
+/// Off-chip / on-chip activity of one map-search run.
+///
+/// `voxel_reads` is the paper's "data access volume": the number of voxel
+/// coordinates fetched from off-chip memory. Figures 2(d) and 9 plot this
+/// normalized by N (the voxel count).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AccessStats {
+    /// Voxel coordinates read from DRAM.
+    pub voxel_reads: u64,
+    /// Voxel coordinates written back to DRAM (re-organization, block
+    /// replication).
+    pub voxel_writes: u64,
+    /// Merge-sorter invocations (fixed-length bitonic passes).
+    pub sorter_passes: u64,
+    /// Comparator operations inside the sorter (cycle proxy).
+    pub sorter_compares: u64,
+    /// Bytes of on-chip table state required (depth-encoding tables).
+    pub table_bytes: u64,
+}
+
+impl AccessStats {
+    /// Data access volume normalized by the voxel count — the y-axis of
+    /// Fig. 2(d) / Fig. 9.
+    pub fn normalized(&self, n_voxels: usize) -> f64 {
+        if n_voxels == 0 {
+            0.0
+        } else {
+            (self.voxel_reads + self.voxel_writes) as f64 / n_voxels as f64
+        }
+    }
+
+    pub fn add(&mut self, other: &AccessStats) {
+        self.voxel_reads += other.voxel_reads;
+        self.voxel_writes += other.voxel_writes;
+        self.sorter_passes += other.sorter_passes;
+        self.sorter_compares += other.sorter_compares;
+        self.table_bytes = self.table_bytes.max(other.table_bytes);
+    }
+}
+
+/// A map-search engine: builds the rulebook and reports its access cost.
+pub trait MapSearch {
+    fn name(&self) -> &'static str;
+
+    /// Search a submanifold (K=3, stride 1) neighborhood — the operation
+    /// all four dataflows differ on.
+    fn search_subm(&self, input: &SparseTensor, k: usize) -> (Rulebook, AccessStats);
+
+    /// Full dispatch. Generalized / transposed convolutions with K == s
+    /// have non-overlapping windows, so every searcher handles them with
+    /// the same single linear stream (each input maps to exactly one
+    /// output): O(N) reads, no neighborhood search.
+    fn search(&self, input: &SparseTensor, kind: ConvKind) -> (Rulebook, AccessStats) {
+        match kind {
+            ConvKind::Submanifold { k } => self.search_subm(input, k),
+            _ => {
+                let rb = crate::sparse::hash_map_search(input, kind);
+                let stats = AccessStats {
+                    voxel_reads: input.len() as u64,
+                    voxel_writes: rb.out_coords.len() as u64,
+                    ..Default::default()
+                };
+                (rb, stats)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalized_access() {
+        let s = AccessStats {
+            voxel_reads: 200,
+            voxel_writes: 0,
+            ..Default::default()
+        };
+        assert!((s.normalized(100) - 2.0).abs() < 1e-12);
+        assert_eq!(s.normalized(0), 0.0);
+    }
+
+    #[test]
+    fn add_accumulates_and_maxes_table() {
+        let mut a = AccessStats {
+            voxel_reads: 10,
+            table_bytes: 100,
+            ..Default::default()
+        };
+        a.add(&AccessStats {
+            voxel_reads: 5,
+            table_bytes: 40,
+            ..Default::default()
+        });
+        assert_eq!(a.voxel_reads, 15);
+        assert_eq!(a.table_bytes, 100);
+    }
+}

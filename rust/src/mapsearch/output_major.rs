@@ -1,0 +1,318 @@
+//! Output-major map search — the MARS [14] baseline.
+//!
+//! Concentrates on each output voxel and exploits kernel symmetry (only
+//! the 13 positive-half offsets + center are searched; the reverse pair is
+//! inferred, Fig. 2a). To search one output exhaustively in a single load
+//! the sorter buffer must hold the voxels of **two whole consecutive
+//! depths**. When it does, each depth is loaded once → O(N). When the two
+//! depths outgrow the buffer (high resolution / dense regions, Fig. 2c-d),
+//! every group of outputs must re-stream the whole two-depth window from
+//! DRAM, and the access volume deteriorates rapidly — the behavior this
+//! model reproduces and Fig. 9(b) quantifies.
+
+use crate::geom::KernelOffsets;
+use crate::mapsearch::table::DepthTable;
+use crate::mapsearch::{AccessStats, MapSearch};
+use crate::sparse::rulebook::{ConvKind, Rulebook, RulePair};
+use crate::sparse::tensor::SparseTensor;
+
+#[derive(Clone, Debug)]
+pub struct OutputMajor {
+    /// Sorter buffer capacity in voxels. The paper's stress setting sizes
+    /// it to the merge-sorter length (64).
+    pub buffer_voxels: usize,
+    /// Merge-sorter length.
+    pub sorter_len: usize,
+}
+
+impl Default for OutputMajor {
+    fn default() -> Self {
+        Self {
+            buffer_voxels: 64,
+            sorter_len: 64,
+        }
+    }
+}
+
+impl OutputMajor {
+    /// Queries per output: 13 positive-half positions + center.
+    fn queries_per_output(k: usize) -> usize {
+        let offs = KernelOffsets::centered(k);
+        offs.search_half().len()
+    }
+}
+
+/// Emit the pairs for output index `o` by probing the positive half, and
+/// infer the symmetric reverse pairs. The straightforward
+/// binary-search-per-offset formulation — kept as the reference that
+/// [`emit_output_pairs_rows`] (the optimized version all searchers use)
+/// is property-tested against.
+#[cfg_attr(not(test), allow(dead_code))]
+pub(crate) fn emit_output_pairs(
+    input: &SparseTensor,
+    offs: &KernelOffsets,
+    o: usize,
+    pairs: &mut Vec<RulePair>,
+) {
+    let q = input.coords[o];
+    // Center: submanifold outputs are the inputs, pair with itself.
+    let center = offs.index_of(crate::geom::Offset3::ZERO).unwrap() as u16;
+    pairs.push(RulePair {
+        offset: center,
+        input: o as u32,
+        output: o as u32,
+    });
+    for &delta in offs.positive_half().iter() {
+        let p = q.offset(delta);
+        if !p.in_bounds(input.extent) {
+            continue;
+        }
+        if let Some(i) = input.find(p) {
+            let d = offs.index_of(delta).unwrap() as u16;
+            // (P=Q+δ, Q, W_δ): input i contributes to output o via δ.
+            pairs.push(RulePair {
+                offset: d,
+                input: i as u32,
+                output: o as u32,
+            });
+            // Symmetric reverse pair (Fig. 2a): output at P takes input Q
+            // via -δ.
+            let dneg = offs.index_of(delta.negate()).unwrap() as u16;
+            pairs.push(RulePair {
+                offset: dneg,
+                input: o as u32,
+                output: i as u32,
+            });
+        }
+    }
+}
+
+/// K=3 offset index in the canonical (dz, dy, dx) enumeration.
+#[inline]
+pub(crate) fn offset_index3(dx: i32, dy: i32, dz: i32) -> u16 {
+    ((dz + 1) * 9 + (dy + 1) * 3 + (dx + 1)) as u16
+}
+
+/// Fast K=3 variant of [`emit_output_pairs`]: instead of 13 binary
+/// searches over the whole coordinate array, probe the (at most 5)
+/// affected row spans from the depth table and scan the 1-3 candidate x
+/// positions inside each — the same lookups the hardware's merge sorter
+/// performs against its row-window, and ~10x faster on the host
+/// (EXPERIMENTS.md §Perf L3 iteration 1).
+pub(crate) fn emit_output_pairs_rows(
+    input: &SparseTensor,
+    dt: &DepthTable,
+    o: usize,
+    pairs: &mut Vec<RulePair>,
+) {
+    let q = input.coords[o];
+    let o32 = o as u32;
+    pairs.push(RulePair {
+        offset: offset_index3(0, 0, 0),
+        input: o32,
+        output: o32,
+    });
+    // Probe x0+dx within row span (start, len) for dx in [x_lo..=1].
+    let probe_row = |y: i32, z: i32, dx_lo: i32, pairs: &mut Vec<RulePair>| {
+        let (start, len) = dt.row(z, y);
+        if len == 0 {
+            return;
+        }
+        let row = &input.coords[start..start + len];
+        // Rows are short; find the lower bound of x0-1 then scan.
+        let x_lo = q.x + dx_lo;
+        let x_hi = q.x + 1;
+        let mut i = row.partition_point(|c| c.x < x_lo);
+        while i < len && row[i].x <= x_hi {
+            let p = row[i];
+            let (dx, dy, dz) = (p.x - q.x, y - q.y, z - q.z);
+            // Skip the center (handled above) and non-window positions.
+            if !(dx == 0 && dy == 0 && dz == 0) {
+                let d = offset_index3(dx, dy, dz);
+                let dneg = offset_index3(-dx, -dy, -dz);
+                let i32idx = (start + i) as u32;
+                pairs.push(RulePair {
+                    offset: d,
+                    input: i32idx,
+                    output: o32,
+                });
+                pairs.push(RulePair {
+                    offset: dneg,
+                    input: o32,
+                    output: i32idx,
+                });
+            }
+            i += 1;
+        }
+    };
+    // Positive half for K=3: same depth — (dx=1, dy=0) and row y0+1 with
+    // dx in {-1,0,1}; next depth — rows y0-1..y0+1, dx in {-1,0,1}.
+    probe_row(q.y, q.z, 1, pairs);
+    probe_row(q.y + 1, q.z, -1, pairs);
+    for dy in -1..=1 {
+        probe_row(q.y + dy, q.z + 1, -1, pairs);
+    }
+}
+
+impl MapSearch for OutputMajor {
+    fn name(&self) -> &'static str {
+        "output-major (MARS)"
+    }
+
+    fn search_subm(&self, input: &SparseTensor, k: usize) -> (Rulebook, AccessStats) {
+        assert_eq!(k, 3, "output-major model is calibrated for subm3");
+        let dt = DepthTable::build(input);
+        let qpo = Self::queries_per_output(k);
+        let mut pairs = Vec::with_capacity(input.len() * 8);
+        let mut stats = AccessStats::default();
+
+        let depths = input.extent.z;
+        let mut prev_window_resident = false;
+        for z in 0..depths as i32 {
+            let len_z = dt.depth_len(z);
+            if len_z == 0 {
+                prev_window_resident = false;
+                continue;
+            }
+            let len_next = if (z as usize) + 1 < depths {
+                dt.depth_len(z + 1)
+            } else {
+                0
+            };
+            let window = len_z + len_next;
+
+            if window <= self.buffer_voxels {
+                // Window fits: depth z is already resident iff the
+                // previous window (z-1, z) fit too; depth z+1 must be
+                // loaded fresh.
+                if prev_window_resident {
+                    stats.voxel_reads += len_next as u64;
+                } else {
+                    stats.voxel_reads += window as u64;
+                }
+                prev_window_resident = true;
+                // Sorter: outputs grouped so window + queries fit a pass.
+                let free = self.sorter_len.saturating_sub(window).max(1);
+                let group = (free / qpo).max(1);
+                stats.sorter_passes += len_z.div_ceil(group) as u64;
+            } else {
+                // Window exceeds the buffer: each output group must
+                // re-stream the entire two-depth window from DRAM in
+                // sorter-sized chunks (the "multiple loading" regime).
+                // Outputs are batched through a query FIFO so a quarter
+                // of the buffer's worth of outputs share one window
+                // stream.
+                let group = (self.buffer_voxels / 4).max(1);
+                let groups = len_z.div_ceil(group) as u64;
+                stats.voxel_reads += groups * window as u64;
+                let chunks = window.div_ceil((self.sorter_len / 2).max(1)) as u64;
+                stats.sorter_passes += groups * chunks;
+                prev_window_resident = false;
+            }
+
+            // Functional result (identical across searchers).
+            let (start, _) = (dt.starts[z as usize], ());
+            let end = dt.starts[z as usize + 1];
+            for o in start..end {
+                emit_output_pairs_rows(input, &dt, o, &mut pairs);
+            }
+        }
+
+        // Comparator count proxy: full network per pass.
+        let l = self.sorter_len;
+        stats.sorter_compares =
+            stats.sorter_passes * (l / 2 * (l.ilog2() as usize * (l.ilog2() as usize + 1) / 2)) as u64;
+
+        let mut rb = Rulebook {
+            kind: ConvKind::Submanifold { k },
+            pairs,
+            out_coords: input.coords.clone(),
+            out_extent: input.extent,
+        };
+        rb.canonicalize();
+        (rb, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::Extent3;
+    use crate::pointcloud::voxelize::Voxelizer;
+    use crate::sparse::hash_map_search;
+    use crate::testing::prop::check;
+
+    fn tensor(e: Extent3, sparsity: f64, seed: u64) -> SparseTensor {
+        let g = Voxelizer::synth_occupancy(e, sparsity, seed);
+        SparseTensor::from_coords(e, g.coords(), 1)
+    }
+
+    #[test]
+    fn matches_hash_oracle() {
+        let t = tensor(Extent3::new(24, 24, 8), 0.04, 21);
+        let (rb, _) = OutputMajor::default().search_subm(&t, 3);
+        let want = hash_map_search(&t, ConvKind::subm3());
+        assert_eq!(rb.pairs, want.pairs);
+    }
+
+    #[test]
+    fn matches_hash_oracle_prop() {
+        check("output-major == hash oracle", 15, |g| {
+            let e = Extent3::new(g.usize(4, 20), g.usize(4, 20), g.usize(2, 10));
+            let t = tensor(e, g.f64(0.01, 0.3), g.usize(0, 1 << 30) as u64);
+            let (rb, _) = OutputMajor::default().search_subm(&t, 3);
+            let want = hash_map_search(&t, ConvKind::subm3());
+            assert_eq!(rb.pairs, want.pairs);
+        });
+    }
+
+    #[test]
+    fn fast_emit_equals_reference_emit() {
+        check("row emit == binary-search emit", 25, |g| {
+            let e = Extent3::new(g.usize(3, 24), g.usize(3, 24), g.usize(2, 8));
+            let t = tensor(e, g.f64(0.02, 0.4), g.usize(0, 1 << 30) as u64);
+            if t.is_empty() {
+                return;
+            }
+            let dt = crate::mapsearch::table::DepthTable::build(&t);
+            let offs = KernelOffsets::centered(3);
+            let o = g.usize(0, t.len());
+            let mut a = Vec::new();
+            emit_output_pairs(&t, &offs, o, &mut a);
+            let mut b = Vec::new();
+            emit_output_pairs_rows(&t, &dt, o, &mut b);
+            a.sort();
+            b.sort();
+            assert_eq!(a, b);
+        });
+    }
+
+    #[test]
+    fn sparse_case_is_o_n() {
+        // Low resolution, very sparse: every two-depth window fits in 64.
+        let t = tensor(Extent3::new(32, 32, 8), 0.002, 22);
+        let (_, stats) = OutputMajor::default().search_subm(&t, 3);
+        let norm = stats.normalized(t.len());
+        assert!(norm <= 2.0, "expected ~O(N), got {norm}x");
+    }
+
+    #[test]
+    fn dense_case_blows_up() {
+        // Dense: two-depth windows far exceed 64 voxels.
+        let t = tensor(Extent3::new(64, 64, 8), 0.10, 23);
+        let (_, stats) = OutputMajor::default().search_subm(&t, 3);
+        let norm = stats.normalized(t.len());
+        assert!(norm > 27.0, "expected blow-up beyond weight-major, got {norm}x");
+    }
+
+    #[test]
+    fn bigger_buffer_restores_o_n() {
+        let t = tensor(Extent3::new(64, 64, 8), 0.10, 23);
+        let big = OutputMajor {
+            buffer_voxels: 4096,
+            sorter_len: 4096,
+        };
+        let (_, stats) = big.search_subm(&t, 3);
+        assert!(stats.normalized(t.len()) <= 2.0);
+    }
+}

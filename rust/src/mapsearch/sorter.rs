@@ -1,0 +1,230 @@
+//! Bitonic merge-sorter model (Fig. 7, map search core).
+//!
+//! The hardware is a fixed-length (64) bitonic sorting network followed by
+//! a comparator-based intersection detector that compares the three
+//! coordinates of adjacent items in parallel. We implement the actual
+//! bitonic network (so the comparator count is the real O(L·log²L) cost,
+//! not a formula) and count invocations + comparator ops; these feed the
+//! map-search latency model.
+
+use crate::geom::Coord3;
+
+/// Fixed-length bitonic merge sorter.
+#[derive(Clone, Debug)]
+pub struct MergeSorter {
+    /// Network length (power of two). The paper's design uses 64.
+    pub length: usize,
+    pub passes: u64,
+    pub compares: u64,
+}
+
+/// Tag distinguishing "input voxel" items from "output adjacent position"
+/// items inside the sorter stream.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Item {
+    /// An input voxel coordinate, carrying its index in the tensor.
+    Input(Coord3, u32),
+    /// A candidate adjacent position of output `out`, for offset index
+    /// `offset`.
+    Query(Coord3, u32, u16),
+}
+
+impl Item {
+    #[inline]
+    fn key(&self) -> (Coord3, u8) {
+        // Inputs sort before queries at equal coordinates so the
+        // intersection detector sees Input immediately followed by its
+        // matching Query items.
+        match self {
+            Item::Input(c, _) => (*c, 0),
+            Item::Query(c, _, _) => (*c, 1),
+        }
+    }
+
+    #[inline]
+    pub fn coord(&self) -> Coord3 {
+        match self {
+            Item::Input(c, _) | Item::Query(c, _, _) => *c,
+        }
+    }
+}
+
+/// One detected intersection: (input index, output index, offset index).
+pub type Match = (u32, u32, u16);
+
+impl MergeSorter {
+    pub fn new(length: usize) -> Self {
+        assert!(length.is_power_of_two(), "bitonic network needs 2^k length");
+        Self {
+            length,
+            passes: 0,
+            compares: 0,
+        }
+    }
+
+    /// The paper's configuration.
+    pub fn paper_default() -> Self {
+        Self::new(64)
+    }
+
+    /// Sort up to `length` items with the bitonic network (shorter inputs
+    /// are padded with sentinels, as real fixed networks do) and return
+    /// all Input/Query coordinate matches.
+    pub fn sort_and_detect(&mut self, items: &[Item]) -> Vec<Match> {
+        assert!(
+            items.len() <= self.length,
+            "stream of {} exceeds sorter length {}",
+            items.len(),
+            self.length
+        );
+        self.passes += 1;
+        // Pad to the fixed network length with +inf sentinels.
+        let sentinel = Item::Input(Coord3::new(i32::MAX, i32::MAX, i32::MAX), u32::MAX);
+        let mut buf: Vec<Item> = Vec::with_capacity(self.length);
+        buf.extend_from_slice(items);
+        buf.resize(self.length, sentinel);
+        self.bitonic_sort(&mut buf);
+        // Intersection detector: a run of equal coordinates contains at
+        // most one Input (coords are unique) followed by its Queries.
+        let mut matches = Vec::new();
+        let mut i = 0;
+        while i < buf.len() {
+            let c = buf[i].coord();
+            if c.x == i32::MAX {
+                break; // sentinels
+            }
+            let mut j = i;
+            let mut input_idx: Option<u32> = None;
+            while j < buf.len() && buf[j].coord() == c {
+                if let Item::Input(_, idx) = buf[j] {
+                    input_idx = Some(idx);
+                }
+                j += 1;
+            }
+            if let Some(idx) = input_idx {
+                for item in &buf[i..j] {
+                    if let Item::Query(_, out, off) = *item {
+                        matches.push((idx, out, off));
+                    }
+                }
+            }
+            i = j;
+        }
+        matches
+    }
+
+    /// In-place bitonic sort, counting comparator operations.
+    fn bitonic_sort(&mut self, buf: &mut [Item]) {
+        let n = buf.len();
+        let mut k = 2;
+        while k <= n {
+            let mut j = k / 2;
+            while j > 0 {
+                for i in 0..n {
+                    let l = i ^ j;
+                    if l > i {
+                        self.compares += 1;
+                        let up = (i & k) == 0;
+                        if (buf[i].key() > buf[l].key()) == up {
+                            buf.swap(i, l);
+                        }
+                    }
+                }
+                j /= 2;
+            }
+            k *= 2;
+        }
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.passes = 0;
+        self.compares = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::check;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn sorts_and_detects_simple_match() {
+        let mut s = MergeSorter::new(8);
+        let items = vec![
+            Item::Query(Coord3::new(1, 1, 1), 7, 3),
+            Item::Input(Coord3::new(2, 2, 2), 0),
+            Item::Input(Coord3::new(1, 1, 1), 5),
+            Item::Query(Coord3::new(9, 9, 9), 7, 4),
+        ];
+        let m = s.sort_and_detect(&items);
+        assert_eq!(m, vec![(5, 7, 3)]);
+        assert_eq!(s.passes, 1);
+    }
+
+    #[test]
+    fn comparator_count_is_network_size() {
+        // Bitonic network on n elements: n/2 * log2(n) * (log2(n)+1) / 2
+        // comparators per pass.
+        let mut s = MergeSorter::new(64);
+        let _ = s.sort_and_detect(&[]);
+        let want = 64 / 2 * (6 * 7 / 2);
+        assert_eq!(s.compares, want as u64);
+    }
+
+    #[test]
+    #[should_panic]
+    fn overlong_stream_panics() {
+        let mut s = MergeSorter::new(4);
+        let items = vec![Item::Input(Coord3::new(0, 0, 0), 0); 5];
+        let _ = s.sort_and_detect(&items);
+    }
+
+    #[test]
+    fn detect_matches_prop() {
+        check("sorter detects exactly the coordinate matches", 50, |g| {
+            let mut s = MergeSorter::new(64);
+            let mut rng = Pcg64::new(g.usize(0, 1 << 30) as u64);
+            // Unique input coords.
+            let mut inputs = std::collections::HashSet::new();
+            let n_in = g.usize(0, 20);
+            while inputs.len() < n_in {
+                inputs.insert(Coord3::new(
+                    rng.range(0, 6) as i32,
+                    rng.range(0, 6) as i32,
+                    rng.range(0, 6) as i32,
+                ));
+            }
+            let inputs: Vec<Coord3> = inputs.into_iter().collect();
+            let n_q = g.usize(0, 30);
+            let mut items: Vec<Item> = inputs
+                .iter()
+                .enumerate()
+                .map(|(i, &c)| Item::Input(c, i as u32))
+                .collect();
+            let mut queries = Vec::new();
+            for qi in 0..n_q {
+                let c = Coord3::new(
+                    rng.range(0, 6) as i32,
+                    rng.range(0, 6) as i32,
+                    rng.range(0, 6) as i32,
+                );
+                items.push(Item::Query(c, qi as u32, 0));
+                queries.push(c);
+            }
+            let got = {
+                let mut m = s.sort_and_detect(&items);
+                m.sort();
+                m
+            };
+            let mut want: Vec<Match> = Vec::new();
+            for (qi, qc) in queries.iter().enumerate() {
+                if let Some(ii) = inputs.iter().position(|c| c == qc) {
+                    want.push((ii as u32, qi as u32, 0));
+                }
+            }
+            want.sort();
+            assert_eq!(got, want);
+        });
+    }
+}

@@ -1,0 +1,188 @@
+//! Depth-encoding tables (§3.1B) and their storage accounting.
+//!
+//! A depth-encoding table records, for each depth z (and in block-DOMS,
+//! for each (block, z)), the start pointer of that depth's voxel run in
+//! off-chip memory. With coords stored depth-major + row-major, the start
+//! of any *row* (y, z) can then be found with a bounded scan of that depth
+//! — the key to loading exactly the 2+3 rows DOMS needs.
+
+use rustc_hash::FxHashMap as HashMap;
+
+use crate::geom::Coord3;
+use crate::sparse::tensor::SparseTensor;
+
+/// Bytes per table entry: a 32-bit DRAM pointer.
+pub const PTR_BYTES: u64 = 4;
+
+/// Depth-encoding table for a single (non-blocked) voxel space.
+#[derive(Clone, Debug)]
+pub struct DepthTable {
+    /// `starts[z] .. starts[z+1]` is depth z's run in the coord array.
+    pub starts: Vec<usize>,
+    /// Per-row index within each depth: (z, y) -> (start, len). Built
+    /// lazily by the searcher from the depth runs; its storage is *not*
+    /// part of the table (it is derived on the fly by the row locator),
+    /// but we keep it here for the behavioral model's O(1) lookups.
+    row_index: HashMap<(i32, i32), (usize, usize)>,
+}
+
+impl DepthTable {
+    pub fn build(input: &SparseTensor) -> Self {
+        let starts = input.depth_starts();
+        let mut row_index = HashMap::default();
+        let mut i = 0usize;
+        while i < input.coords.len() {
+            let c = input.coords[i];
+            let mut j = i;
+            while j < input.coords.len()
+                && input.coords[j].z == c.z
+                && input.coords[j].y == c.y
+            {
+                j += 1;
+            }
+            row_index.insert((c.z, c.y), (i, j - i));
+            i = j;
+        }
+        Self { starts, row_index }
+    }
+
+    /// Table storage in bytes: one pointer per depth.
+    pub fn table_bytes(&self) -> u64 {
+        (self.starts.len().saturating_sub(1)) as u64 * PTR_BYTES
+    }
+
+    /// Number of voxels at depth `z`.
+    pub fn depth_len(&self, z: i32) -> usize {
+        let z = z as usize;
+        if z + 1 >= self.starts.len() {
+            return 0;
+        }
+        self.starts[z + 1] - self.starts[z]
+    }
+
+    /// Row (z, y): (start index, length), empty row -> (_, 0).
+    pub fn row(&self, z: i32, y: i32) -> (usize, usize) {
+        self.row_index.get(&(z, y)).copied().unwrap_or((0, 0))
+    }
+
+    /// All distinct y values present at depth z, ascending.
+    pub fn rows_at_depth(&self, input: &SparseTensor, z: i32) -> Vec<i32> {
+        let zu = z as usize;
+        if zu + 1 >= self.starts.len() {
+            return Vec::new();
+        }
+        let mut ys: Vec<i32> = input.coords[self.starts[zu]..self.starts[zu + 1]]
+            .iter()
+            .map(|c| c.y)
+            .collect();
+        ys.dedup();
+        ys
+    }
+}
+
+/// Block partition for block-DOMS: a (bx, by) grid over the (x, y) plane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockPartition {
+    pub bx: usize,
+    pub by: usize,
+    /// Voxel-space extent the partition covers.
+    pub ext_x: usize,
+    pub ext_y: usize,
+}
+
+impl BlockPartition {
+    pub fn new(bx: usize, by: usize, ext_x: usize, ext_y: usize) -> Self {
+        assert!(bx >= 1 && by >= 1);
+        Self { bx, by, ext_x, ext_y }
+    }
+
+    #[inline]
+    pub fn block_w(&self) -> usize {
+        self.ext_x.div_ceil(self.bx)
+    }
+
+    #[inline]
+    pub fn block_h(&self) -> usize {
+        self.ext_y.div_ceil(self.by)
+    }
+
+    /// Block id (i, j) of a coordinate: i indexes x, j indexes y.
+    #[inline]
+    pub fn block_of(&self, c: Coord3) -> (usize, usize) {
+        (
+            (c.x as usize / self.block_w()).min(self.bx - 1),
+            (c.y as usize / self.block_h()).min(self.by - 1),
+        )
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.bx * self.by
+    }
+
+    /// Total depth-encoding table storage for all blocks (Fig. 9c's
+    /// x-axis trade-off): one pointer per (block, depth).
+    pub fn table_bytes(&self, depths: usize) -> u64 {
+        (self.num_blocks() * depths) as u64 * PTR_BYTES
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::Extent3;
+
+    fn tensor() -> SparseTensor {
+        SparseTensor::from_coords(
+            Extent3::new(8, 8, 3),
+            vec![
+                Coord3::new(0, 0, 0),
+                Coord3::new(3, 0, 0),
+                Coord3::new(5, 2, 0),
+                Coord3::new(1, 1, 2),
+            ],
+            1,
+        )
+    }
+
+    #[test]
+    fn depth_lens_and_rows() {
+        let t = tensor();
+        let dt = DepthTable::build(&t);
+        assert_eq!(dt.depth_len(0), 3);
+        assert_eq!(dt.depth_len(1), 0);
+        assert_eq!(dt.depth_len(2), 1);
+        assert_eq!(dt.row(0, 0), (0, 2));
+        assert_eq!(dt.row(0, 2), (2, 1));
+        assert_eq!(dt.row(2, 1), (3, 1));
+        assert_eq!(dt.row(1, 0).1, 0);
+    }
+
+    #[test]
+    fn rows_at_depth_sorted_unique() {
+        let t = tensor();
+        let dt = DepthTable::build(&t);
+        assert_eq!(dt.rows_at_depth(&t, 0), vec![0, 2]);
+        assert_eq!(dt.rows_at_depth(&t, 2), vec![1]);
+        assert!(dt.rows_at_depth(&t, 1).is_empty());
+    }
+
+    #[test]
+    fn table_bytes_one_ptr_per_depth() {
+        let t = tensor();
+        let dt = DepthTable::build(&t);
+        assert_eq!(dt.table_bytes(), 3 * PTR_BYTES);
+    }
+
+    #[test]
+    fn block_partition_geometry() {
+        let p = BlockPartition::new(2, 8, 352, 400);
+        assert_eq!(p.block_w(), 176);
+        assert_eq!(p.block_h(), 50);
+        assert_eq!(p.block_of(Coord3::new(0, 0, 0)), (0, 0));
+        assert_eq!(p.block_of(Coord3::new(175, 49, 0)), (0, 0));
+        assert_eq!(p.block_of(Coord3::new(176, 50, 0)), (1, 1));
+        assert_eq!(p.block_of(Coord3::new(351, 399, 0)), (1, 7));
+        assert_eq!(p.num_blocks(), 16);
+        assert_eq!(p.table_bytes(10), 16 * 10 * PTR_BYTES);
+    }
+}

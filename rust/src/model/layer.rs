@@ -1,0 +1,202 @@
+//! Layer and network specifications.
+
+use crate::geom::Extent3;
+use crate::sparse::rulebook::ConvKind;
+
+/// One layer of a voxel-based network (Fig. 1's three stages flattened).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerSpec {
+    /// Submanifold Spconv3D, K=3, stride 1.
+    Subm3 { c_in: usize, c_out: usize },
+    /// Generalized (downsampling) Spconv3D, K=2, stride 2.
+    GConv2 { c_in: usize, c_out: usize },
+    /// Transposed (upsampling) Spconv3D, K=2, stride 2.
+    TConv2 { c_in: usize, c_out: usize },
+    /// Flatten the sparse 3D tensor to a dense BEV map (z folded into
+    /// channels) — the handoff from the 3D encoder to the RPN.
+    ToBev,
+    /// Dense 2D convolution (RPN), SAME padding.
+    Conv2d {
+        c_in: usize,
+        c_out: usize,
+        k: usize,
+        stride: usize,
+    },
+    /// Dense 2D transposed conv (RPN upsampling head), modeled as a
+    /// stride-1 conv at the upsampled resolution.
+    Deconv2d {
+        c_in: usize,
+        c_out: usize,
+        k: usize,
+        up: usize,
+    },
+}
+
+impl LayerSpec {
+    /// The sparse-conv kind, if this is a Spconv3D layer.
+    pub fn conv_kind(&self) -> Option<ConvKind> {
+        match *self {
+            LayerSpec::Subm3 { .. } => Some(ConvKind::subm3()),
+            LayerSpec::GConv2 { .. } => Some(ConvKind::gconv2()),
+            LayerSpec::TConv2 { .. } => Some(ConvKind::tconv2()),
+            _ => None,
+        }
+    }
+
+    pub fn channels(&self) -> (usize, usize) {
+        match *self {
+            LayerSpec::Subm3 { c_in, c_out }
+            | LayerSpec::GConv2 { c_in, c_out }
+            | LayerSpec::TConv2 { c_in, c_out }
+            | LayerSpec::Conv2d { c_in, c_out, .. }
+            | LayerSpec::Deconv2d { c_in, c_out, .. } => (c_in, c_out),
+            LayerSpec::ToBev => (0, 0),
+        }
+    }
+
+    /// Kernel volume (number of weight sub-matrices).
+    pub fn kernel_volume(&self) -> usize {
+        match *self {
+            LayerSpec::Subm3 { .. } => 27,
+            LayerSpec::GConv2 { .. } | LayerSpec::TConv2 { .. } => 8,
+            LayerSpec::Conv2d { k, .. } => k * k,
+            LayerSpec::Deconv2d { k, .. } => k * k,
+            LayerSpec::ToBev => 0,
+        }
+    }
+
+    /// Multiply-accumulates per IN-OUT pair (or per output pixel for
+    /// dense layers).
+    pub fn macs_per_pair(&self) -> u64 {
+        let (c1, c2) = self.channels();
+        (c1 * c2) as u64
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    Detection,
+    Segmentation,
+}
+
+/// A whole network: the 3D feature encoder plus task head.
+#[derive(Clone, Debug)]
+pub struct NetworkSpec {
+    pub name: &'static str,
+    pub task: TaskKind,
+    /// Input voxel-grid extent.
+    pub extent: Extent3,
+    /// VFE output channels (input to the first 3D layer).
+    pub vfe_channels: usize,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl NetworkSpec {
+    /// Sanity: channel chain must be consistent across consecutive
+    /// compute layers.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut c = self.vfe_channels;
+        let mut bev_mult = 1usize;
+        for (i, l) in self.layers.iter().enumerate() {
+            match *l {
+                LayerSpec::ToBev => {
+                    // z folds into channels; the multiplier is decided by
+                    // the encoder's final z extent at runtime. Spec-level
+                    // validation just remembers a fold happened.
+                    bev_mult = 0;
+                    continue;
+                }
+                _ => {
+                    let (c_in, c_out) = l.channels();
+                    if bev_mult == 0 {
+                        // First dense layer after ToBev: c_in is the
+                        // folded channel count, checked at runtime.
+                        bev_mult = 1;
+                    } else if c_in != c {
+                        return Err(format!(
+                            "layer {i} ({l:?}): expects c_in {c_in}, got {c}"
+                        ));
+                    }
+                    c = c_out;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of Spconv3D layers.
+    pub fn n_sparse_layers(&self) -> usize {
+        self.layers.iter().filter(|l| l.conv_kind().is_some()).count()
+    }
+
+    /// Consecutive subm3 runs share one rulebook (§3.3): the number of
+    /// *distinct* map searches the network needs.
+    pub fn n_map_searches(&self) -> usize {
+        let mut n = 0;
+        let mut prev_was_subm = false;
+        for l in &self.layers {
+            match l.conv_kind() {
+                Some(ConvKind::Submanifold { .. }) => {
+                    if !prev_was_subm {
+                        n += 1;
+                    }
+                    prev_was_subm = true;
+                }
+                Some(_) => {
+                    n += 1;
+                    prev_was_subm = false;
+                }
+                None => prev_was_subm = false,
+            }
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_volumes() {
+        assert_eq!(LayerSpec::Subm3 { c_in: 4, c_out: 16 }.kernel_volume(), 27);
+        assert_eq!(LayerSpec::GConv2 { c_in: 16, c_out: 32 }.kernel_volume(), 8);
+        assert_eq!(
+            LayerSpec::Conv2d { c_in: 64, c_out: 128, k: 3, stride: 2 }.kernel_volume(),
+            9
+        );
+    }
+
+    #[test]
+    fn validate_catches_channel_break() {
+        let bad = NetworkSpec {
+            name: "bad",
+            task: TaskKind::Detection,
+            extent: Extent3::new(8, 8, 8),
+            vfe_channels: 4,
+            layers: vec![
+                LayerSpec::Subm3 { c_in: 4, c_out: 16 },
+                LayerSpec::Subm3 { c_in: 32, c_out: 32 },
+            ],
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn map_search_sharing() {
+        let net = NetworkSpec {
+            name: "t",
+            task: TaskKind::Segmentation,
+            extent: Extent3::new(8, 8, 8),
+            vfe_channels: 4,
+            layers: vec![
+                LayerSpec::Subm3 { c_in: 4, c_out: 16 },
+                LayerSpec::Subm3 { c_in: 16, c_out: 16 }, // shared
+                LayerSpec::GConv2 { c_in: 16, c_out: 32 },
+                LayerSpec::Subm3 { c_in: 32, c_out: 32 },
+            ],
+        };
+        assert_eq!(net.n_sparse_layers(), 4);
+        assert_eq!(net.n_map_searches(), 3);
+    }
+}

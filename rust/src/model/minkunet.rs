@@ -1,0 +1,91 @@
+//! MinkUNet [8] — the SemanticKITTI segmentation benchmark (Table 1,
+//! "Seg"): a sparse 3D UNet of submanifold blocks with generalized-conv
+//! downsampling and transposed-conv upsampling. Segmentation networks are
+//! Spconv3D-dominated, which is why the paper runs the W2B study on this
+//! model (Fig. 10).
+
+use crate::geom::Extent3;
+use crate::model::layer::{LayerSpec, NetworkSpec, TaskKind};
+
+/// MinkUNet14-style topology (channels 32-64-128-256 encoder,
+/// 128-96-96 decoder), 4 downsampling stages.
+pub fn minkunet() -> NetworkSpec {
+    use LayerSpec::*;
+    NetworkSpec {
+        name: "MinkUNet",
+        task: TaskKind::Segmentation,
+        // SemanticKITTI at 0.05 m: ~100 m x 100 m x 6.5 m scene.
+        extent: Extent3::new(2048, 2048, 128),
+        vfe_channels: 4,
+        layers: vec![
+            // Stem.
+            Subm3 { c_in: 4, c_out: 32 },
+            Subm3 { c_in: 32, c_out: 32 },
+            // Encoder stage 1.
+            GConv2 { c_in: 32, c_out: 64 },
+            Subm3 { c_in: 64, c_out: 64 },
+            Subm3 { c_in: 64, c_out: 64 },
+            // Encoder stage 2.
+            GConv2 { c_in: 64, c_out: 128 },
+            Subm3 { c_in: 128, c_out: 128 },
+            Subm3 { c_in: 128, c_out: 128 },
+            // Encoder stage 3.
+            GConv2 { c_in: 128, c_out: 256 },
+            Subm3 { c_in: 256, c_out: 256 },
+            Subm3 { c_in: 256, c_out: 256 },
+            // Decoder stage 1.
+            TConv2 { c_in: 256, c_out: 128 },
+            Subm3 { c_in: 128, c_out: 128 },
+            Subm3 { c_in: 128, c_out: 128 },
+            // Decoder stage 2.
+            TConv2 { c_in: 128, c_out: 96 },
+            Subm3 { c_in: 96, c_out: 96 },
+            Subm3 { c_in: 96, c_out: 96 },
+            // Decoder stage 3 (back to input resolution).
+            TConv2 { c_in: 96, c_out: 96 },
+            Subm3 { c_in: 96, c_out: 96 },
+            // Per-voxel classifier head (1x1x1 == subm with K=1, modeled
+            // as a subm3 with the same channel change for simplicity of
+            // the spec; compute model uses its MACs).
+            Subm3 { c_in: 96, c_out: 32 },
+        ],
+    }
+}
+
+/// Reduced extent for tests and the quickstart.
+pub fn minkunet_small() -> NetworkSpec {
+    let mut net = minkunet();
+    net.name = "MinkUNet-small";
+    net.extent = Extent3::new(128, 128, 16);
+    net
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_is_consistent() {
+        let net = minkunet();
+        net.validate().unwrap();
+        assert_eq!(net.task, TaskKind::Segmentation);
+        // Spconv3D-dominated: no dense layers at all.
+        assert_eq!(net.n_sparse_layers(), net.layers.len());
+    }
+
+    #[test]
+    fn unet_is_symmetric_in_downs_and_ups() {
+        let net = minkunet();
+        let downs = net
+            .layers
+            .iter()
+            .filter(|l| matches!(l, LayerSpec::GConv2 { .. }))
+            .count();
+        let ups = net
+            .layers
+            .iter()
+            .filter(|l| matches!(l, LayerSpec::TConv2 { .. }))
+            .count();
+        assert_eq!(downs, ups);
+    }
+}

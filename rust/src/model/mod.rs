@@ -1,0 +1,10 @@
+//! Network definitions: the two benchmark models of Table 1 (SECOND for
+//! KITTI detection, MinkUNet for SemanticKITTI segmentation) expressed as
+//! layer-spec sequences the execution engine and the performance
+//! simulator both consume.
+
+pub mod layer;
+pub mod minkunet;
+pub mod second;
+
+pub use layer::{LayerSpec, NetworkSpec, TaskKind};

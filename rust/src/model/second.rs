@@ -1,0 +1,91 @@
+//! SECOND [5] — the KITTI detection benchmark (Table 1, "Det").
+//!
+//! Voxel grid 1408 x 1600 x 41 (0.05 m x 0.05 m x 0.1 m over x 0..70.4,
+//! y ±40, z -3..1), simple VFE, the SpMiddleFHD-style sparse 3D encoder,
+//! BEV flatten, and the three-block RPN of §2C.
+
+use crate::geom::Extent3;
+use crate::model::layer::{LayerSpec, NetworkSpec, TaskKind};
+
+/// The full-resolution SECOND network.
+pub fn second() -> NetworkSpec {
+    use LayerSpec::*;
+    NetworkSpec {
+        name: "SECOND",
+        task: TaskKind::Detection,
+        extent: Extent3::new(1408, 1600, 41),
+        vfe_channels: 4,
+        layers: vec![
+            // 3D feature encoder (SpMiddleFHD).
+            Subm3 { c_in: 4, c_out: 16 },
+            Subm3 { c_in: 16, c_out: 16 },
+            GConv2 { c_in: 16, c_out: 32 },
+            Subm3 { c_in: 32, c_out: 32 },
+            Subm3 { c_in: 32, c_out: 32 },
+            GConv2 { c_in: 32, c_out: 64 },
+            Subm3 { c_in: 64, c_out: 64 },
+            Subm3 { c_in: 64, c_out: 64 },
+            GConv2 { c_in: 64, c_out: 64 },
+            Subm3 { c_in: 64, c_out: 64 },
+            Subm3 { c_in: 64, c_out: 64 },
+            // Hand-off to the RPN: z (41 -> 6) folds into channels.
+            ToBev,
+            // RPN block 1 (stride 1 at BEV resolution).
+            Conv2d { c_in: 384, c_out: 128, k: 3, stride: 1 },
+            Conv2d { c_in: 128, c_out: 128, k: 3, stride: 1 },
+            Conv2d { c_in: 128, c_out: 128, k: 3, stride: 1 },
+            // RPN block 2 (downsample x2).
+            Conv2d { c_in: 128, c_out: 128, k: 3, stride: 2 },
+            Conv2d { c_in: 128, c_out: 128, k: 3, stride: 1 },
+            Conv2d { c_in: 128, c_out: 128, k: 3, stride: 1 },
+            // RPN block 3 (downsample x2).
+            Conv2d { c_in: 128, c_out: 256, k: 3, stride: 2 },
+            Conv2d { c_in: 256, c_out: 256, k: 3, stride: 1 },
+            Conv2d { c_in: 256, c_out: 256, k: 3, stride: 1 },
+            // Upsample head chain back to BEV resolution (the paper's RPN
+            // upsamples blocks 2/3 and concatenates with block 1; we model
+            // the same MAC volume as a sequential trunk — see DESIGN.md).
+            Deconv2d { c_in: 256, c_out: 128, k: 3, up: 1 },
+            Deconv2d { c_in: 128, c_out: 128, k: 3, up: 2 },
+            Deconv2d { c_in: 128, c_out: 128, k: 3, up: 2 },
+        ],
+    }
+}
+
+/// A reduced-extent SECOND used by tests and the quickstart example
+/// (identical layer topology, smaller grid so rulebooks build fast).
+pub fn second_small() -> NetworkSpec {
+    let mut net = second();
+    net.name = "SECOND-small";
+    net.extent = Extent3::new(176, 200, 10);
+    net
+}
+
+/// The paper's low-resolution map-search setting (Fig. 9a).
+pub const LOW_RES: Extent3 = Extent3::new(352, 400, 10);
+/// The paper's high-resolution map-search setting (Fig. 9b).
+pub const HIGH_RES: Extent3 = Extent3::new(1408, 1600, 41);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_is_consistent() {
+        let net = second();
+        net.validate().unwrap();
+        assert_eq!(net.task, TaskKind::Detection);
+        assert_eq!(net.n_sparse_layers(), 11);
+        // subm pairs share searches: (2 subm) (g) (2 subm) (g) (2 subm)
+        // (g) (2 subm) -> 1+1+1+1+1+1+1 = 7 map searches.
+        assert_eq!(net.n_map_searches(), 7);
+    }
+
+    #[test]
+    fn small_variant_same_topology() {
+        let a = second();
+        let b = second_small();
+        assert_eq!(a.layers, b.layers);
+        assert!(b.extent.volume() < a.extent.volume());
+    }
+}

@@ -1,0 +1,15 @@
+//! Point-cloud substrate: synthetic LiDAR scene generation, voxelization,
+//! and voxel-feature extraction (VFE).
+//!
+//! This replaces KITTI / SemanticKITTI (DESIGN.md §3): the map-search and
+//! workload-balance results of the paper depend only on the *spatial
+//! statistics* of the occupied voxels, which the generator controls
+//! directly (resolution, sparsity, local density).
+
+pub mod scene;
+pub mod vfe;
+pub mod voxelize;
+
+pub use scene::{Point, SceneConfig, SceneKind};
+pub use vfe::{Vfe, VfeKind};
+pub use voxelize::{VoxelGrid, Voxelizer};

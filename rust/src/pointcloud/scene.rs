@@ -1,0 +1,314 @@
+//! Synthetic LiDAR scene generator.
+//!
+//! Substitutes for KITTI / SemanticKITTI frames. A scene is produced by a
+//! simplified 64-beam spinning LiDAR model over geometric primitives:
+//!
+//! * a ground plane (slightly undulating),
+//! * cuboid "vehicles" parked at random poses near the sensor,
+//! * vertical "walls"/building faces at the scene boundary,
+//! * thin vertical "poles/pedestrians" clutter,
+//!
+//! plus two stress modes used by the paper's map-search sweeps:
+//!
+//! * [`SceneKind::Uniform`] — voxels occupied i.i.d. at a target sparsity
+//!   (the paper's simulator setting: "random voxel data with varying space
+//!   resolution and sparsity"),
+//! * [`SceneKind::Clustered`] — Gaussian dense clusters over a sparse
+//!   background, reproducing the "dense distributions in some partial
+//!   regions" of Fig. 2(b).
+//!
+//! All generation is deterministic in the seed.
+
+use crate::util::rng::Pcg64;
+
+/// One LiDAR return: metric position + reflectance.
+#[derive(Clone, Copy, Debug)]
+pub struct Point {
+    pub x: f32,
+    pub y: f32,
+    pub z: f32,
+    pub reflectance: f32,
+}
+
+/// What kind of scene to synthesize.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SceneKind {
+    /// LiDAR-like urban frame (detection benchmarks).
+    Urban,
+    /// i.i.d. occupied voxels at `sparsity` (map-search sweeps).
+    Uniform,
+    /// Sparse background + dense Gaussian clusters (Fig. 2b stress case).
+    Clustered,
+}
+
+impl SceneKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "urban" => Some(Self::Urban),
+            "uniform" => Some(Self::Uniform),
+            "clustered" => Some(Self::Clustered),
+            _ => None,
+        }
+    }
+}
+
+/// Scene generation parameters.
+#[derive(Clone, Debug)]
+pub struct SceneConfig {
+    pub kind: SceneKind,
+    /// Metric extent of the scene: x ∈ [0, range_x), etc.
+    pub range_x: f32,
+    pub range_y: f32,
+    pub range_z: f32,
+    /// Target number of points (Urban) or target voxel sparsity
+    /// (Uniform/Clustered; fraction of the voxel grid occupied).
+    pub num_points: usize,
+    pub sparsity: f64,
+    /// Number of Gaussian clusters for `Clustered`.
+    pub clusters: usize,
+    /// Fraction of points placed inside clusters (vs background).
+    pub cluster_fraction: f64,
+    pub seed: u64,
+}
+
+impl Default for SceneConfig {
+    fn default() -> Self {
+        // Matches the paper's KITTI detection range (SECOND: x 0..70.4 m,
+        // y -40..40 m → shifted to [0, 80), z -3..1 → [0, 4)).
+        Self {
+            kind: SceneKind::Urban,
+            range_x: 70.4,
+            range_y: 80.0,
+            range_z: 4.0,
+            num_points: 20_000,
+            sparsity: 0.005,
+            clusters: 6,
+            cluster_fraction: 0.5,
+            seed: 0xC1A0,
+        }
+    }
+}
+
+impl SceneConfig {
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_points(mut self, n: usize) -> Self {
+        self.num_points = n;
+        self
+    }
+
+    /// Generate the point cloud.
+    pub fn generate(&self) -> Vec<Point> {
+        let mut rng = Pcg64::new(self.seed);
+        match self.kind {
+            SceneKind::Urban => self.gen_urban(&mut rng),
+            SceneKind::Uniform => self.gen_uniform(&mut rng),
+            SceneKind::Clustered => self.gen_clustered(&mut rng),
+        }
+    }
+
+    fn push(&self, pts: &mut Vec<Point>, x: f32, y: f32, z: f32, r: f32) {
+        if x >= 0.0
+            && x < self.range_x
+            && y >= 0.0
+            && y < self.range_y
+            && z >= 0.0
+            && z < self.range_z
+        {
+            pts.push(Point {
+                x,
+                y,
+                z,
+                reflectance: r,
+            });
+        }
+    }
+
+    fn gen_urban(&self, rng: &mut Pcg64) -> Vec<Point> {
+        let mut pts = Vec::with_capacity(self.num_points);
+        let n = self.num_points;
+        // Budget split ground/vehicles/walls/poles: LiDAR frames are
+        // surface-dominated; ground takes the biggest share.
+        let n_ground = n * 45 / 100;
+        let n_vehicle = n * 30 / 100;
+        let n_wall = n * 15 / 100;
+        let n_pole = n - n_ground - n_vehicle - n_wall;
+        let sensor = (2.0f32, self.range_y / 2.0);
+
+        // Ground: radial density falloff like a spinning scanner (~1/r).
+        for _ in 0..n_ground {
+            let ang = rng.uniform(-1.1, 1.1); // ±~63° forward fan
+            let r = 3.0 + 67.0 * rng.next_f64().powi(2); // near-dense
+            let x = sensor.0 + (r * ang.cos()) as f32;
+            let y = sensor.1 + (r * ang.sin()) as f32;
+            let z = 0.15 + 0.1 * rng.normal() as f32 + 0.05 * (x * 0.1).sin();
+            self.push(&mut pts, x, y, z.max(0.0), rng.next_f64() as f32);
+        }
+        // Vehicles: ~1.8 x 4.2 x 1.6 m cuboid shells.
+        let n_cars = 12;
+        let mut car_budget = n_vehicle;
+        for c in 0..n_cars {
+            let cx = rng.uniform(8.0, self.range_x as f64 - 6.0) as f32;
+            let cy = rng.uniform(4.0, self.range_y as f64 - 4.0) as f32;
+            let yaw = rng.uniform(0.0, std::f64::consts::PI) as f32;
+            let take = if c == n_cars - 1 {
+                car_budget
+            } else {
+                car_budget / (n_cars - c)
+            };
+            car_budget -= take;
+            for _ in 0..take {
+                // Sample a point on the cuboid surface facing the sensor.
+                let (l, w, h) = (4.2f32, 1.8f32, 1.6f32);
+                let face = rng.range(0, 3);
+                let (ux, uy, uz) = match face {
+                    0 => (rng.uniform(-0.5, 0.5) as f32 * l, -w / 2.0, rng.uniform(0.0, 1.0) as f32 * h),
+                    1 => (-l / 2.0, rng.uniform(-0.5, 0.5) as f32 * w, rng.uniform(0.0, 1.0) as f32 * h),
+                    _ => (rng.uniform(-0.5, 0.5) as f32 * l, rng.uniform(-0.5, 0.5) as f32 * w, h),
+                };
+                let x = cx + ux * yaw.cos() - uy * yaw.sin();
+                let y = cy + ux * yaw.sin() + uy * yaw.cos();
+                self.push(&mut pts, x, y, uz + 0.2, 0.8);
+            }
+        }
+        // Walls: vertical planes near the y extremes.
+        for _ in 0..n_wall {
+            let side = if rng.chance(0.5) { 1.5 } else { self.range_y - 1.5 };
+            let x = rng.uniform(0.0, self.range_x as f64) as f32;
+            let z = rng.uniform(0.0, self.range_z as f64 * 0.9) as f32;
+            self.push(&mut pts, x, side + 0.3 * rng.normal() as f32, z, 0.4);
+        }
+        // Poles / pedestrians: thin vertical clusters.
+        let n_poles = 20;
+        for p in 0..n_poles {
+            let px = rng.uniform(5.0, self.range_x as f64 - 2.0) as f32;
+            let py = rng.uniform(2.0, self.range_y as f64 - 2.0) as f32;
+            let take = n_pole / n_poles + usize::from(p < n_pole % n_poles);
+            for _ in 0..take {
+                let z = rng.uniform(0.0, 1.9) as f32;
+                self.push(
+                    &mut pts,
+                    px + 0.1 * rng.normal() as f32,
+                    py + 0.1 * rng.normal() as f32,
+                    z,
+                    0.6,
+                );
+            }
+        }
+        pts
+    }
+
+    fn gen_uniform(&self, rng: &mut Pcg64) -> Vec<Point> {
+        // One point per sampled metric location; the voxelizer will merge.
+        let mut pts = Vec::with_capacity(self.num_points);
+        for _ in 0..self.num_points {
+            let x = rng.uniform(0.0, self.range_x as f64) as f32;
+            let y = rng.uniform(0.0, self.range_y as f64) as f32;
+            let z = rng.uniform(0.0, self.range_z as f64) as f32;
+            self.push(&mut pts, x, y, z, rng.next_f64() as f32);
+        }
+        pts
+    }
+
+    fn gen_clustered(&self, rng: &mut Pcg64) -> Vec<Point> {
+        let mut pts = Vec::with_capacity(self.num_points);
+        let n_clustered = (self.num_points as f64 * self.cluster_fraction) as usize;
+        let n_bg = self.num_points - n_clustered;
+        // Background: uniform.
+        for _ in 0..n_bg {
+            let x = rng.uniform(0.0, self.range_x as f64) as f32;
+            let y = rng.uniform(0.0, self.range_y as f64) as f32;
+            let z = rng.uniform(0.0, self.range_z as f64) as f32;
+            self.push(&mut pts, x, y, z, 0.5);
+        }
+        // Clusters: tight Gaussians (σ a small fraction of the range).
+        for c in 0..self.clusters.max(1) {
+            let cx = rng.uniform(0.1, 0.9) * self.range_x as f64;
+            let cy = rng.uniform(0.1, 0.9) * self.range_y as f64;
+            let cz = rng.uniform(0.2, 0.8) * self.range_z as f64;
+            let sigma = (self.range_x as f64) * 0.015;
+            let take = n_clustered / self.clusters.max(1)
+                + usize::from(c < n_clustered % self.clusters.max(1));
+            for _ in 0..take {
+                let x = (cx + sigma * rng.normal()) as f32;
+                let y = (cy + sigma * rng.normal()) as f32;
+                let z = (cz + sigma * 0.5 * rng.normal()) as f32;
+                self.push(&mut pts, x, y, z, 0.9);
+            }
+        }
+        pts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn urban_deterministic_and_in_bounds() {
+        let cfg = SceneConfig::default();
+        let a = cfg.generate();
+        let b = cfg.generate();
+        assert_eq!(a.len(), b.len());
+        assert!(a.len() > 15_000, "only {} points survived", a.len());
+        for (pa, pb) in a.iter().zip(&b) {
+            assert_eq!(pa.x, pb.x);
+            assert_eq!(pa.y, pb.y);
+        }
+        for p in &a {
+            assert!(p.x >= 0.0 && p.x < cfg.range_x);
+            assert!(p.y >= 0.0 && p.y < cfg.range_y);
+            assert!(p.z >= 0.0 && p.z < cfg.range_z);
+        }
+    }
+
+    #[test]
+    fn seeds_change_scene() {
+        let a = SceneConfig::default().with_seed(1).generate();
+        let b = SceneConfig::default().with_seed(2).generate();
+        assert!(a.iter().zip(&b).any(|(p, q)| p.x != q.x));
+    }
+
+    #[test]
+    fn clustered_has_local_density() {
+        let cfg = SceneConfig {
+            kind: SceneKind::Clustered,
+            num_points: 10_000,
+            ..Default::default()
+        };
+        let pts = cfg.generate();
+        // Split the scene into a coarse 8x8 grid; clustered scenes must
+        // have a much denser max cell than the uniform average.
+        let mut cells = [0usize; 64];
+        for p in &pts {
+            let cx = ((p.x / cfg.range_x) * 8.0) as usize;
+            let cy = ((p.y / cfg.range_y) * 8.0) as usize;
+            cells[(cy.min(7)) * 8 + cx.min(7)] += 1;
+        }
+        let max = *cells.iter().max().unwrap();
+        let mean = pts.len() / 64;
+        assert!(max > mean * 4, "max={max} mean={mean}");
+    }
+
+    #[test]
+    fn uniform_is_spread_out() {
+        let cfg = SceneConfig {
+            kind: SceneKind::Uniform,
+            num_points: 20_000,
+            ..Default::default()
+        };
+        let pts = cfg.generate();
+        let mut cells = [0usize; 64];
+        for p in &pts {
+            let cx = ((p.x / cfg.range_x) * 8.0) as usize;
+            let cy = ((p.y / cfg.range_y) * 8.0) as usize;
+            cells[(cy.min(7)) * 8 + cx.min(7)] += 1;
+        }
+        let max = *cells.iter().max().unwrap() as f64;
+        let mean = pts.len() as f64 / 64.0;
+        assert!(max < mean * 1.5, "max={max} mean={mean}");
+    }
+}

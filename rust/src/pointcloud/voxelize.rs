@@ -1,0 +1,292 @@
+//! Voxelization unit (Fig. 7, bottom-left): partition the metric point
+//! cloud into a quantized voxel grid, keeping up to `max_points_per_voxel`
+//! returns per voxel (the rest are dropped, as in SECOND's preprocessing).
+
+use std::collections::HashMap;
+
+use crate::geom::{Coord3, Extent3};
+use crate::pointcloud::scene::Point;
+
+/// One occupied voxel: coordinate + the raw points that landed in it.
+#[derive(Clone, Debug)]
+pub struct Voxel {
+    pub coord: Coord3,
+    pub points: Vec<Point>,
+}
+
+/// The voxelized frame, sorted depth-major (z, y, x) — the storage order
+/// the DOMS depth-encoding table indexes into.
+#[derive(Clone, Debug)]
+pub struct VoxelGrid {
+    pub extent: Extent3,
+    pub voxels: Vec<Voxel>,
+}
+
+impl VoxelGrid {
+    pub fn len(&self) -> usize {
+        self.voxels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.voxels.is_empty()
+    }
+
+    pub fn coords(&self) -> Vec<Coord3> {
+        self.voxels.iter().map(|v| v.coord).collect()
+    }
+
+    /// Occupancy: fraction of the grid that is non-empty.
+    pub fn sparsity(&self) -> f64 {
+        self.voxels.len() as f64 / self.extent.volume() as f64
+    }
+}
+
+/// Voxelizer configuration: voxel grid resolution over a metric range.
+#[derive(Clone, Debug)]
+pub struct Voxelizer {
+    pub extent: Extent3,
+    /// Metric size of one voxel on each axis.
+    pub voxel_size: (f32, f32, f32),
+    pub max_points_per_voxel: usize,
+}
+
+impl Voxelizer {
+    /// Build from a metric range and a target grid extent.
+    pub fn new(range: (f32, f32, f32), extent: Extent3, max_points_per_voxel: usize) -> Self {
+        Self {
+            extent,
+            voxel_size: (
+                range.0 / extent.x as f32,
+                range.1 / extent.y as f32,
+                range.2 / extent.z as f32,
+            ),
+            max_points_per_voxel,
+        }
+    }
+
+    /// The paper's low-resolution KITTI setting: 352 x 400 x 10.
+    pub fn kitti_low(range: (f32, f32, f32)) -> Self {
+        Self::new(range, Extent3::new(352, 400, 10), 32)
+    }
+
+    /// The paper's high-resolution setting: 1408 x 1600 x 41.
+    pub fn kitti_high(range: (f32, f32, f32)) -> Self {
+        Self::new(range, Extent3::new(1408, 1600, 41), 32)
+    }
+
+    /// Quantize one point; `None` if outside the grid.
+    #[inline]
+    pub fn quantize(&self, p: &Point) -> Option<Coord3> {
+        let c = Coord3::new(
+            (p.x / self.voxel_size.0) as i32,
+            (p.y / self.voxel_size.1) as i32,
+            (p.z / self.voxel_size.2) as i32,
+        );
+        c.in_bounds(self.extent).then_some(c)
+    }
+
+    /// Voxelize a frame. Output is sorted depth-major and deduplicated.
+    pub fn voxelize(&self, points: &[Point]) -> VoxelGrid {
+        let mut map: HashMap<Coord3, Vec<Point>> = HashMap::new();
+        for p in points {
+            if let Some(c) = self.quantize(p) {
+                let bucket = map.entry(c).or_default();
+                if bucket.len() < self.max_points_per_voxel {
+                    bucket.push(*p);
+                }
+            }
+        }
+        let mut voxels: Vec<Voxel> = map
+            .into_iter()
+            .map(|(coord, points)| Voxel { coord, points })
+            .collect();
+        voxels.sort_by_key(|v| v.coord);
+        VoxelGrid {
+            extent: self.extent,
+            voxels,
+        }
+    }
+
+    /// Directly synthesize an occupied-voxel set at an i.i.d. `sparsity`
+    /// (bypasses metric points — used by the map-search sweeps, where only
+    /// coordinates matter). Deterministic in `seed`.
+    pub fn synth_occupancy(
+        extent: Extent3,
+        sparsity: f64,
+        seed: u64,
+    ) -> VoxelGrid {
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::new(seed);
+        let target = ((extent.volume() as f64) * sparsity).round() as usize;
+        // Sample distinct flat indices via a hash set (target << volume).
+        let mut taken = std::collections::HashSet::with_capacity(target * 2);
+        let vol = extent.volume() as u64;
+        while taken.len() < target.min(extent.volume()) {
+            taken.insert(rng.next_below(vol));
+        }
+        let mut voxels: Vec<Voxel> = taken
+            .into_iter()
+            .map(|flat| {
+                let f = flat as usize;
+                let x = (f % extent.x) as i32;
+                let y = ((f / extent.x) % extent.y) as i32;
+                let z = (f / (extent.x * extent.y)) as i32;
+                Voxel {
+                    coord: Coord3::new(x, y, z),
+                    points: Vec::new(),
+                }
+            })
+            .collect();
+        voxels.sort_by_key(|v| v.coord);
+        VoxelGrid { extent, voxels }
+    }
+
+    /// Synthesize a clustered occupancy: `bg_fraction` of the voxels are
+    /// i.i.d., the rest packed into dense Gaussian blobs (Fig. 2b).
+    pub fn synth_clustered(
+        extent: Extent3,
+        sparsity: f64,
+        clusters: usize,
+        bg_fraction: f64,
+        seed: u64,
+    ) -> VoxelGrid {
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::new(seed);
+        let target = ((extent.volume() as f64) * sparsity).round() as usize;
+        let n_bg = (target as f64 * bg_fraction) as usize;
+        let mut taken = std::collections::HashSet::with_capacity(target * 2);
+        let vol = extent.volume() as u64;
+        while taken.len() < n_bg.min(extent.volume()) {
+            taken.insert(rng.next_below(vol));
+        }
+        let mut coords: std::collections::HashSet<Coord3> = taken
+            .into_iter()
+            .map(|flat| {
+                let f = flat as usize;
+                Coord3::new(
+                    (f % extent.x) as i32,
+                    ((f / extent.x) % extent.y) as i32,
+                    (f / (extent.x * extent.y)) as i32,
+                )
+            })
+            .collect();
+        let n_cluster = target.saturating_sub(coords.len());
+        let per = n_cluster / clusters.max(1);
+        for _ in 0..clusters {
+            let cx = rng.uniform(0.1, 0.9) * extent.x as f64;
+            let cy = rng.uniform(0.1, 0.9) * extent.y as f64;
+            let cz = rng.uniform(0.1, 0.9) * extent.z as f64;
+            // σ sized so the cluster is genuinely dense (~30% fill of its
+            // core): σ³ ∝ per.
+            let sigma = ((per as f64).cbrt() * 0.8).max(1.0);
+            let mut added = 0;
+            let mut attempts = 0;
+            while added < per && attempts < per * 20 {
+                attempts += 1;
+                let c = Coord3::new(
+                    (cx + sigma * rng.normal()).round() as i32,
+                    (cy + sigma * rng.normal()).round() as i32,
+                    (cz + sigma * 0.5 * rng.normal()).round() as i32,
+                );
+                if c.in_bounds(extent) && coords.insert(c) {
+                    added += 1;
+                }
+            }
+        }
+        let mut voxels: Vec<Voxel> = coords
+            .into_iter()
+            .map(|coord| Voxel {
+                coord,
+                points: Vec::new(),
+            })
+            .collect();
+        voxels.sort_by_key(|v| v.coord);
+        VoxelGrid { extent, voxels }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pointcloud::scene::{SceneConfig, SceneKind};
+    use crate::testing::prop::check;
+
+    fn small_voxelizer() -> Voxelizer {
+        Voxelizer::new((70.4, 80.0, 4.0), Extent3::new(352, 400, 10), 8)
+    }
+
+    #[test]
+    fn voxelize_sorted_and_dedup() {
+        let pts = SceneConfig::default().generate();
+        let grid = small_voxelizer().voxelize(&pts);
+        assert!(!grid.is_empty());
+        for w in grid.voxels.windows(2) {
+            assert!(w[0].coord < w[1].coord, "not strictly sorted");
+        }
+    }
+
+    #[test]
+    fn all_points_land_in_their_voxel() {
+        let vx = small_voxelizer();
+        let pts = SceneConfig::default().with_points(2000).generate();
+        let grid = vx.voxelize(&pts);
+        for v in &grid.voxels {
+            for p in &v.points {
+                assert_eq!(vx.quantize(p), Some(v.coord));
+            }
+        }
+    }
+
+    #[test]
+    fn max_points_cap_respected() {
+        let vx = small_voxelizer();
+        let pts = SceneConfig {
+            kind: SceneKind::Clustered,
+            num_points: 30_000,
+            ..Default::default()
+        }
+        .generate();
+        let grid = vx.voxelize(&pts);
+        assert!(grid.voxels.iter().all(|v| v.points.len() <= 8));
+    }
+
+    #[test]
+    fn synth_occupancy_hits_target_sparsity() {
+        let e = Extent3::new(100, 100, 10);
+        let g = Voxelizer::synth_occupancy(e, 0.01, 7);
+        let got = g.sparsity();
+        assert!((got - 0.01).abs() < 0.001, "sparsity {got}");
+        for w in g.voxels.windows(2) {
+            assert!(w[0].coord < w[1].coord);
+        }
+    }
+
+    #[test]
+    fn synth_occupancy_prop_bounds_and_unique() {
+        check("synth occupancy valid", 20, |g| {
+            let e = Extent3::new(g.usize(4, 64), g.usize(4, 64), g.usize(2, 16));
+            let sparsity = g.f64(0.001, 0.2);
+            let grid = Voxelizer::synth_occupancy(e, sparsity, g.usize(0, 1000) as u64);
+            let mut seen = std::collections::HashSet::new();
+            for v in &grid.voxels {
+                assert!(v.coord.in_bounds(e));
+                assert!(seen.insert(v.coord), "duplicate {:?}", v.coord);
+            }
+        });
+    }
+
+    #[test]
+    fn synth_clustered_denser_locally() {
+        let e = Extent3::new(200, 200, 20);
+        let g = Voxelizer::synth_clustered(e, 0.005, 4, 0.4, 9);
+        // Count occupancy in 10x10x20 super-cells; clusters must create a
+        // cell far above the mean.
+        let mut cells = std::collections::HashMap::new();
+        for v in &g.voxels {
+            *cells.entry((v.coord.x / 20, v.coord.y / 20)).or_insert(0usize) += 1;
+        }
+        let max = *cells.values().max().unwrap() as f64;
+        let mean = g.voxels.len() as f64 / 100.0;
+        assert!(max > mean * 3.0, "max={max} mean={mean}");
+    }
+}

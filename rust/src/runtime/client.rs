@@ -1,0 +1,197 @@
+//! Artifact manifest parsing and PJRT executable loading.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+/// What an artifact computes (mirrors `aot.py::build_entries`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// `[b, c1] i8 x [c1, c2] i8 -> [b, c2] i32` bit-serial CIM GEMM.
+    Gemm { b: usize, c1: usize, c2: usize },
+    /// `[k3, b, c1] x [k3, c1, c2] -> [k3, b, c2]` fused offsets wave.
+    GemmFused { k3: usize, b: usize, c1: usize, c2: usize },
+    /// Fused 3x3 SAME conv `[1, h, w, c1] x [3,3,c1,c2] -> i32 NHWC`.
+    Conv3x3 { h: usize, w: usize, c1: usize, c2: usize },
+    /// `[b, c] i32 psum -> i8` dequant-relu-requant epilogue.
+    Epilogue { b: usize, c: usize },
+    /// `[v, p, f] f32 points + [v] i32 counts -> [v, f] mean`.
+    VfeMean { v: usize, p: usize, f: usize },
+}
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: ArtifactKind,
+}
+
+/// Parsed `artifacts/manifest.txt`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    pub fn parse(dir: &Path, text: &str) -> crate::Result<Self> {
+        let mut artifacts = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut name = None;
+            let mut kv: HashMap<&str, &str> = HashMap::new();
+            for (i, tok) in line.split_whitespace().enumerate() {
+                if i == 0 {
+                    name = Some(tok.to_string());
+                } else {
+                    let (k, v) = tok
+                        .split_once('=')
+                        .with_context(|| format!("bad manifest token {tok:?}"))?;
+                    kv.insert(k, v);
+                }
+            }
+            let name = name.context("empty manifest line")?;
+            let file = dir.join(kv.get("file").context("missing file=")?);
+            let get = |k: &str| -> crate::Result<usize> {
+                kv.get(k)
+                    .with_context(|| format!("{name}: missing {k}="))?
+                    .parse()
+                    .with_context(|| format!("{name}: bad {k}"))
+            };
+            let kind = match *kv.get("kind").context("missing kind=")? {
+                "gemm" => ArtifactKind::Gemm {
+                    b: get("b")?,
+                    c1: get("c1")?,
+                    c2: get("c2")?,
+                },
+                "gemm_fused" => ArtifactKind::GemmFused {
+                    k3: get("k3")?,
+                    b: get("b")?,
+                    c1: get("c1")?,
+                    c2: get("c2")?,
+                },
+                "conv3x3" => ArtifactKind::Conv3x3 {
+                    h: get("h")?,
+                    w: get("w")?,
+                    c1: get("c1")?,
+                    c2: get("c2")?,
+                },
+                "epilogue" => ArtifactKind::Epilogue {
+                    b: get("b")?,
+                    c: get("c")?,
+                },
+                "vfe_mean" => ArtifactKind::VfeMean {
+                    v: get("v")?,
+                    p: get("p")?,
+                    f: get("f")?,
+                },
+                other => bail!("unknown artifact kind {other:?}"),
+            };
+            artifacts.push(Artifact { name, file, kind });
+        }
+        Ok(Self { artifacts })
+    }
+
+    pub fn load(dir: &Path) -> crate::Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}; run `make artifacts` first", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// All plain-GEMM batch sizes available, ascending.
+    pub fn gemm_batches(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter_map(|a| match a.kind {
+                ArtifactKind::Gemm { b, .. } => Some(b),
+                _ => None,
+            })
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// Runtime configuration.
+#[derive(Clone, Debug)]
+pub struct RuntimeConfig {
+    pub artifacts_dir: PathBuf,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+impl RuntimeConfig {
+    /// Resolve the artifacts dir relative to the repo root (walks up from
+    /// cwd looking for `artifacts/manifest.txt`).
+    pub fn discover() -> Self {
+        let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        for _ in 0..4 {
+            let cand = dir.join("artifacts");
+            if cand.join("manifest.txt").exists() {
+                return Self {
+                    artifacts_dir: cand,
+                };
+            }
+            if !dir.pop() {
+                break;
+            }
+        }
+        Self::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment line
+cim_gemm_b64 file=cim_gemm_b64.hlo.txt kind=gemm b=64 c1=64 c2=64
+epilogue_b64 file=epilogue_b64.hlo.txt kind=epilogue b=64 c=64
+vfe_mean_v512 file=vfe_mean_v512.hlo.txt kind=vfe_mean v=512 p=32 f=4
+";
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(
+            m.artifacts[0].kind,
+            ArtifactKind::Gemm { b: 64, c1: 64, c2: 64 }
+        );
+        assert_eq!(m.artifacts[0].file, Path::new("/tmp/a/cim_gemm_b64.hlo.txt"));
+        assert_eq!(m.gemm_batches(), vec![64]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse(Path::new("."), "x file=y kind=nope").is_err());
+        assert!(Manifest::parse(Path::new("."), "x kind=gemm").is_err());
+        assert!(Manifest::parse(Path::new("."), "x file=y kind=gemm b=?").is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_built() {
+        // Soft test: only runs when `make artifacts` has been executed.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.gemm_batches().contains(&64));
+            for a in &m.artifacts {
+                assert!(a.file.exists(), "{} missing", a.file.display());
+            }
+        }
+    }
+}

@@ -1,0 +1,335 @@
+//! The request-path runtime: compiled PJRT executables dispatched as a
+//! [`GemmEngine`].
+//!
+//! Shapes are fixed at AOT time (the CIM sub-matrix tile, `c1 = c2 = 64`,
+//! batch variants 64/256/1024), so the dispatcher pads each wave to the
+//! smallest artifact batch that fits and slices the result back out.
+//! Padding rows/columns are zero, which the bit-serial datapath maps to
+//! zero partial sums — bit-exact with the unpadded computation (tested in
+//! `tests/runtime_equivalence.rs`).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context};
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::runtime::client::{ArtifactKind, Manifest, RuntimeConfig};
+use crate::spconv::layer::{GemmEngine, TILE_C};
+
+/// Compiled-executable registry + PJRT client.
+pub struct Runtime {
+    client: PjRtClient,
+    /// Plain GEMM executables by batch size.
+    gemms: HashMap<usize, PjRtLoadedExecutable>,
+    /// Epilogue executables by batch size.
+    epilogues: HashMap<usize, PjRtLoadedExecutable>,
+    /// Fused-offsets executable (k3, b) if present.
+    fused: Option<(usize, usize, PjRtLoadedExecutable)>,
+    /// VFE mean executable (v, p, f) if present.
+    vfe: Option<(usize, usize, usize, PjRtLoadedExecutable)>,
+    pub tile_c: usize,
+    /// Dispatch counter (request-path observability).
+    pub gemm_dispatches: std::cell::Cell<u64>,
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("gemm_batches", &self.gemm_batches())
+            .field("tile_c", &self.tile_c)
+            .finish()
+    }
+}
+
+fn compile(client: &PjRtClient, path: &Path) -> crate::Result<PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("non-utf8 artifact path")?,
+    )
+    .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    let comp = XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {}", path.display()))
+}
+
+fn i8_literal(data: &[i8], dims: &[usize]) -> crate::Result<Literal> {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::S8,
+        dims,
+        bytes,
+    )?)
+}
+
+fn i32_literal(data: &[i32], dims: &[usize]) -> crate::Result<Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::S32,
+        dims,
+        bytes,
+    )?)
+}
+
+fn f32_literal(data: &[f32], dims: &[usize]) -> crate::Result<Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::F32,
+        dims,
+        bytes,
+    )?)
+}
+
+impl Runtime {
+    /// Load and compile every artifact in the manifest.
+    pub fn load(cfg: &RuntimeConfig) -> crate::Result<Self> {
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut rt = Self {
+            client,
+            gemms: HashMap::new(),
+            epilogues: HashMap::new(),
+            fused: None,
+            vfe: None,
+            tile_c: TILE_C,
+            gemm_dispatches: std::cell::Cell::new(0),
+        };
+        for a in &manifest.artifacts {
+            match a.kind {
+                ArtifactKind::Gemm { b, c1, c2 } => {
+                    if c1 != TILE_C || c2 != TILE_C {
+                        bail!("{}: GEMM tile {c1}x{c2} != {TILE_C}", a.name);
+                    }
+                    rt.gemms.insert(b, compile(&rt.client, &a.file)?);
+                }
+                ArtifactKind::Epilogue { b, c } => {
+                    if c != TILE_C {
+                        bail!("{}: epilogue c={c} != {TILE_C}", a.name);
+                    }
+                    rt.epilogues.insert(b, compile(&rt.client, &a.file)?);
+                }
+                ArtifactKind::GemmFused { k3, b, .. } => {
+                    rt.fused = Some((k3, b, compile(&rt.client, &a.file)?));
+                }
+                ArtifactKind::VfeMean { v, p, f } => {
+                    rt.vfe = Some((v, p, f, compile(&rt.client, &a.file)?));
+                }
+                ArtifactKind::Conv3x3 { .. } => {
+                    // The RPN path routes through the shared GEMM tiles by
+                    // default; the fused conv artifact is exercised by the
+                    // python tests and kept for TPU targets.
+                }
+            }
+        }
+        if rt.gemms.is_empty() {
+            bail!("no GEMM artifacts in manifest");
+        }
+        Ok(rt)
+    }
+
+    /// Convenience: discover `artifacts/` upward from the cwd.
+    pub fn discover() -> crate::Result<Self> {
+        Self::load(&RuntimeConfig::discover())
+    }
+
+    pub fn gemm_batches(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.gemms.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Smallest artifact batch >= `b` (or the largest available, for
+    /// multi-dispatch chunking).
+    fn pick_batch(&self, b: usize) -> usize {
+        let batches = self.gemm_batches();
+        for &cand in &batches {
+            if cand >= b {
+                return cand;
+            }
+        }
+        *batches.last().expect("non-empty")
+    }
+
+    /// One padded GEMM dispatch: `b <= artifact batch`.
+    fn dispatch_gemm(
+        &self,
+        exe_b: usize,
+        acts: &[i8],
+        weights: &[i8],
+        b: usize,
+        c1: usize,
+        c2: usize,
+    ) -> crate::Result<Vec<i32>> {
+        let exe = &self.gemms[&exe_b];
+        // Pad activations [b, c1] -> [exe_b, TILE_C].
+        let mut a_pad = vec![0i8; exe_b * TILE_C];
+        for r in 0..b {
+            a_pad[r * TILE_C..r * TILE_C + c1]
+                .copy_from_slice(&acts[r * c1..(r + 1) * c1]);
+        }
+        // Pad weights [c1, c2] -> [TILE_C, TILE_C].
+        let mut w_pad = vec![0i8; TILE_C * TILE_C];
+        for r in 0..c1 {
+            w_pad[r * TILE_C..r * TILE_C + c2]
+                .copy_from_slice(&weights[r * c2..(r + 1) * c2]);
+        }
+        let a_lit = i8_literal(&a_pad, &[exe_b, TILE_C])?;
+        let w_lit = i8_literal(&w_pad, &[TILE_C, TILE_C])?;
+        let result = exe.execute::<Literal>(&[a_lit, w_lit])?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?;
+        let full: Vec<i32> = result.to_vec()?;
+        self.gemm_dispatches.set(self.gemm_dispatches.get() + 1);
+        // Slice out [b, c2].
+        let mut out = vec![0i32; b * c2];
+        for r in 0..b {
+            out[r * c2..(r + 1) * c2]
+                .copy_from_slice(&full[r * TILE_C..r * TILE_C + c2]);
+        }
+        Ok(out)
+    }
+
+    /// Epilogue through the compiled artifact: `[b, c]` psums + scales.
+    pub fn epilogue(
+        &self,
+        psum: &[i32],
+        scale: &[f32],
+        zero: &[f32],
+        b: usize,
+        c: usize,
+    ) -> crate::Result<Vec<i8>> {
+        assert!(c <= TILE_C);
+        let batches: Vec<usize> = {
+            let mut v: Vec<usize> = self.epilogues.keys().copied().collect();
+            v.sort_unstable();
+            v
+        };
+        if batches.is_empty() {
+            bail!("no epilogue artifacts loaded");
+        }
+        let mut out = Vec::with_capacity(b * c);
+        let mut row = 0usize;
+        while row < b {
+            let remaining = b - row;
+            let exe_b = *batches
+                .iter()
+                .find(|&&cand| cand >= remaining)
+                .unwrap_or_else(|| batches.last().unwrap());
+            let take = remaining.min(exe_b);
+            let exe = &self.epilogues[&exe_b];
+            let mut p_pad = vec![0i32; exe_b * TILE_C];
+            for r in 0..take {
+                p_pad[r * TILE_C..r * TILE_C + c]
+                    .copy_from_slice(&psum[(row + r) * c..(row + r + 1) * c]);
+            }
+            let mut s_pad = vec![1.0f32; TILE_C];
+            s_pad[..c].copy_from_slice(scale);
+            let mut z_pad = vec![0.0f32; TILE_C];
+            z_pad[..c].copy_from_slice(zero);
+            let result = exe
+                .execute::<Literal>(&[
+                    i32_literal(&p_pad, &[exe_b, TILE_C])?,
+                    f32_literal(&s_pad, &[TILE_C])?,
+                    f32_literal(&z_pad, &[TILE_C])?,
+                ])?[0][0]
+                .to_literal_sync()?
+                .to_tuple1()?;
+            let full: Vec<i8> = result.to_vec()?;
+            for r in 0..take {
+                out.extend_from_slice(&full[r * TILE_C..r * TILE_C + c]);
+            }
+            row += take;
+        }
+        Ok(out)
+    }
+
+    /// Mean-VFE through the compiled artifact: `[v, p, f]` padded points.
+    pub fn vfe_mean(
+        &self,
+        points: &[f32],
+        counts: &[i32],
+        v: usize,
+        p: usize,
+        f: usize,
+    ) -> crate::Result<Vec<f32>> {
+        let (av, ap, af, exe) = match &self.vfe {
+            Some((av, ap, af, exe)) => (*av, *ap, *af, exe),
+            None => bail!("no vfe_mean artifact loaded"),
+        };
+        if p > ap || f != af {
+            bail!("vfe shape ({v},{p},{f}) incompatible with artifact ({av},{ap},{af})");
+        }
+        let mut out = Vec::with_capacity(v * f);
+        let mut row = 0usize;
+        while row < v {
+            let take = (v - row).min(av);
+            let mut pts = vec![0f32; av * ap * af];
+            let mut cnt = vec![1i32; av];
+            for r in 0..take {
+                for pp in 0..p {
+                    let src = ((row + r) * p + pp) * f;
+                    let dst = (r * ap + pp) * af;
+                    pts[dst..dst + f].copy_from_slice(&points[src..src + f]);
+                }
+                cnt[r] = counts[row + r].max(1);
+            }
+            let result = exe
+                .execute::<Literal>(&[
+                    f32_literal(&pts, &[av, ap, af])?,
+                    i32_literal(&cnt, &[av])?,
+                ])?[0][0]
+                .to_literal_sync()?
+                .to_tuple1()?;
+            let full: Vec<f32> = result.to_vec()?;
+            out.extend_from_slice(&full[..take * f]);
+            row += take;
+        }
+        Ok(out)
+    }
+}
+
+impl GemmEngine for Runtime {
+    fn gemm_i8(
+        &mut self,
+        acts: &[i8],
+        weights: &[i8],
+        b: usize,
+        c1: usize,
+        c2: usize,
+    ) -> crate::Result<Vec<i32>> {
+        assert!(c1 <= TILE_C && c2 <= TILE_C, "tile {c1}x{c2} exceeds {TILE_C}");
+        assert_eq!(acts.len(), b * c1);
+        assert_eq!(weights.len(), c1 * c2);
+        let max_b = *self.gemm_batches().last().unwrap();
+        if b <= max_b {
+            let exe_b = self.pick_batch(b);
+            return self.dispatch_gemm(exe_b, acts, weights, b, c1, c2);
+        }
+        // Chunk oversized waves across the largest artifact.
+        let mut out = Vec::with_capacity(b * c2);
+        let mut row = 0usize;
+        while row < b {
+            let take = (b - row).min(max_b);
+            let chunk = self.dispatch_gemm(
+                self.pick_batch(take),
+                &acts[row * c1..(row + take) * c1],
+                weights,
+                take,
+                c1,
+                c2,
+            )?;
+            out.extend_from_slice(&chunk);
+            row += take;
+        }
+        Ok(out)
+    }
+
+    fn dispatches(&self) -> u64 {
+        self.gemm_dispatches.get()
+    }
+}

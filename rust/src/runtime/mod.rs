@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! Python never runs here — the artifacts are compiled once at startup
+//! (`PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile`)
+//! and then dispatched per GEMM wave. `NativeEngine`
+//! (`spconv::layer`) provides the bit-exact fallback used when
+//! `artifacts/` has not been built.
+
+pub mod client;
+pub mod gemm;
+
+pub use client::{Artifact, ArtifactKind, Manifest, RuntimeConfig};
+pub use gemm::Runtime;

@@ -1,0 +1,56 @@
+//! Off-chip memory model: HBM2 at 250 GB/s (Table 2), 12-byte voxel
+//! coordinates and int8 feature rows.
+
+/// Bytes per stored voxel coordinate (three i32s, as the merge sorter
+/// compares three coordinates in parallel).
+pub const COORD_BYTES: u64 = 12;
+
+#[derive(Clone, Copy, Debug)]
+pub struct DramModel {
+    /// Sustained bandwidth, bytes/second.
+    pub bandwidth: f64,
+}
+
+impl Default for DramModel {
+    fn default() -> Self {
+        Self {
+            bandwidth: 250.0e9, // HBM2, Table 2
+        }
+    }
+}
+
+impl DramModel {
+    /// SpOctA-style DDR4 config (Table 2), for baseline what-ifs.
+    pub fn ddr4() -> Self {
+        Self { bandwidth: 16.0e9 }
+    }
+
+    /// Transfer time for `bytes`.
+    pub fn seconds(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.bandwidth
+    }
+
+    /// Time to stream `voxels` coordinates.
+    pub fn coord_seconds(&self, voxels: u64) -> f64 {
+        self.seconds(voxels * COORD_BYTES)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_math() {
+        let d = DramModel::default();
+        assert!((d.seconds(250_000_000_000) - 1.0).abs() < 1e-9);
+        // 1M voxels = 12 MB -> 48 us at 250 GB/s.
+        let t = d.coord_seconds(1_000_000);
+        assert!((t - 48e-6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ddr4_much_slower() {
+        assert!(DramModel::ddr4().seconds(1 << 30) > 10.0 * DramModel::default().seconds(1 << 30));
+    }
+}

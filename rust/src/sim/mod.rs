@@ -1,0 +1,11 @@
+//! Whole-chip performance/energy simulation: DRAM model, the Voxel-CIM
+//! accelerator estimator (map-search core + CIM computing core + hybrid
+//! pipeline), and the published-spec baseline chips of Table 2.
+
+pub mod accelerator;
+pub mod baselines;
+pub mod dram;
+
+pub use accelerator::{Accelerator, SimOptions, SimReport};
+pub use baselines::{BaselineChip, BASELINES, GPU_DET_FPS, GPU_SEG_FPS};
+pub use dram::DramModel;

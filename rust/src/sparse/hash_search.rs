@@ -1,0 +1,372 @@
+//! Table-aided (hash) map search — the golden oracle.
+//!
+//! This is the classic GPU/table-aided strategy (§1 challenge 1): build a
+//! hash table over all input coordinates, then for each output probe its
+//! K³ neighbors. O(1) per probe but the table itself is large — the cost
+//! the paper's table-free DOMS avoids. Every `mapsearch::*` implementation
+//! is property-tested to produce exactly this rulebook.
+
+use std::collections::HashMap;
+
+use crate::geom::{Coord3, Extent3, KernelOffsets};
+use crate::sparse::rulebook::{ConvKind, Rulebook, RulePair};
+use crate::sparse::tensor::SparseTensor;
+
+/// Build the rulebook for `kind` over `input` with a hash table.
+pub fn hash_map_search(input: &SparseTensor, kind: ConvKind) -> Rulebook {
+    match kind {
+        ConvKind::Submanifold { k } => subm(input, k),
+        ConvKind::Generalized { k, stride } => gconv(input, k, stride),
+        ConvKind::Transposed { k, stride } => tconv(input, k, stride),
+    }
+}
+
+fn index_table(coords: &[Coord3]) -> HashMap<Coord3, u32> {
+    coords
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| (c, i as u32))
+        .collect()
+}
+
+fn subm(input: &SparseTensor, k: usize) -> Rulebook {
+    let table = index_table(&input.coords);
+    let offs = KernelOffsets::centered(k);
+    let mut pairs = Vec::new();
+    // Submanifold: outputs are exactly the inputs.
+    for (o, &q) in input.coords.iter().enumerate() {
+        for (d, &delta) in offs.offsets.iter().enumerate() {
+            let p = q.offset(delta);
+            if !p.in_bounds(input.extent) {
+                continue;
+            }
+            if let Some(&i) = table.get(&p) {
+                pairs.push(RulePair {
+                    offset: d as u16,
+                    input: i,
+                    output: o as u32,
+                });
+            }
+        }
+    }
+    let mut rb = Rulebook {
+        kind: ConvKind::Submanifold { k },
+        pairs,
+        out_coords: input.coords.clone(),
+        out_extent: input.extent,
+    };
+    rb.canonicalize();
+    rb
+}
+
+fn gconv(input: &SparseTensor, k: usize, stride: usize) -> Rulebook {
+    let offs = KernelOffsets::downsample(k);
+    let out_extent = Extent3::new(
+        input.extent.x.div_ceil(stride),
+        input.extent.y.div_ceil(stride),
+        input.extent.z.div_ceil(stride),
+    );
+    // Output active iff any input within its receptive field: for each
+    // input P, the output Q = floor(P / s) when K == s (non-overlapping
+    // windows); general K >= s handled by iterating candidate Qs.
+    let mut out_set: Vec<Coord3> = input
+        .coords
+        .iter()
+        .map(|&p| p.downsample(stride as i32))
+        .collect();
+    out_set.sort();
+    out_set.dedup();
+    let out_index: HashMap<Coord3, u32> = out_set
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| (c, i as u32))
+        .collect();
+    let in_table = index_table(&input.coords);
+    let mut pairs = Vec::new();
+    for (&q, &o) in &out_index {
+        for (d, &delta) in offs.offsets.iter().enumerate() {
+            let p = Coord3::new(
+                q.x * stride as i32 + delta.dx as i32,
+                q.y * stride as i32 + delta.dy as i32,
+                q.z * stride as i32 + delta.dz as i32,
+            );
+            if !p.in_bounds(input.extent) {
+                continue;
+            }
+            if let Some(&i) = in_table.get(&p) {
+                pairs.push(RulePair {
+                    offset: d as u16,
+                    input: i,
+                    output: o,
+                });
+            }
+        }
+    }
+    let mut rb = Rulebook {
+        kind: ConvKind::Generalized { k, stride },
+        pairs,
+        out_coords: out_set,
+        out_extent,
+    };
+    rb.canonicalize();
+    rb
+}
+
+fn tconv(input: &SparseTensor, k: usize, stride: usize) -> Rulebook {
+    let offs = KernelOffsets::downsample(k);
+    let out_extent = Extent3::new(
+        input.extent.x * stride,
+        input.extent.y * stride,
+        input.extent.z * stride,
+    );
+    // Transposed: every input spawns K³ candidate outputs Q = s*P + δ.
+    let mut out_set: Vec<Coord3> = Vec::with_capacity(input.len() * offs.len());
+    for &p in &input.coords {
+        for &delta in &offs.offsets {
+            let q = Coord3::new(
+                p.x * stride as i32 + delta.dx as i32,
+                p.y * stride as i32 + delta.dy as i32,
+                p.z * stride as i32 + delta.dz as i32,
+            );
+            if q.in_bounds(out_extent) {
+                out_set.push(q);
+            }
+        }
+    }
+    out_set.sort();
+    out_set.dedup();
+    let out_index: HashMap<Coord3, u32> = out_set
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| (c, i as u32))
+        .collect();
+    let mut pairs = Vec::new();
+    for (i, &p) in input.coords.iter().enumerate() {
+        for (d, &delta) in offs.offsets.iter().enumerate() {
+            let q = Coord3::new(
+                p.x * stride as i32 + delta.dx as i32,
+                p.y * stride as i32 + delta.dy as i32,
+                p.z * stride as i32 + delta.dz as i32,
+            );
+            if let Some(&o) = out_index.get(&q) {
+                pairs.push(RulePair {
+                    offset: d as u16,
+                    input: i as u32,
+                    output: o,
+                });
+            }
+        }
+    }
+    let mut rb = Rulebook {
+        kind: ConvKind::Transposed { k, stride },
+        pairs,
+        out_coords: out_set,
+        out_extent,
+    };
+    rb.canonicalize();
+    rb
+}
+
+/// Transposed conv with UNet skip-connection pruning: outputs are
+/// restricted to `target` (the matching encoder stage's coordinate set),
+/// exactly how MinkUNet's decoder works — without pruning the coordinate
+/// set would dilate 8x per upsampling stage.
+pub fn tconv_pruned(
+    input: &SparseTensor,
+    k: usize,
+    stride: usize,
+    out_extent: Extent3,
+    target: &[Coord3],
+) -> Rulebook {
+    debug_assert!(target.windows(2).all(|w| w[0] < w[1]), "target must be sorted");
+    let offs = KernelOffsets::downsample(k);
+    let mut pairs = Vec::new();
+    for (i, &p) in input.coords.iter().enumerate() {
+        for (d, &delta) in offs.offsets.iter().enumerate() {
+            let q = Coord3::new(
+                p.x * stride as i32 + delta.dx as i32,
+                p.y * stride as i32 + delta.dy as i32,
+                p.z * stride as i32 + delta.dz as i32,
+            );
+            if let Ok(o) = target.binary_search(&q) {
+                pairs.push(RulePair {
+                    offset: d as u16,
+                    input: i as u32,
+                    output: o as u32,
+                });
+            }
+        }
+    }
+    let mut rb = Rulebook {
+        kind: ConvKind::Transposed { k, stride },
+        pairs,
+        out_coords: target.to_vec(),
+        out_extent,
+    };
+    rb.canonicalize();
+    rb
+}
+
+/// Storage cost of the table-aided approach in bytes (the ">100 MB" the
+/// paper's intro cites): a dense bucket array over the voxel space with a
+/// 4-byte index per cell.
+pub fn hash_table_bytes(extent: Extent3) -> u64 {
+    extent.volume() as u64 * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pointcloud::voxelize::Voxelizer;
+    use crate::testing::prop::check;
+
+    fn tensor(extent: Extent3, sparsity: f64, seed: u64) -> SparseTensor {
+        let g = Voxelizer::synth_occupancy(extent, sparsity, seed);
+        SparseTensor::from_coords(extent, g.coords(), 1)
+    }
+
+    #[test]
+    fn subm_center_pairs_everyone() {
+        let t = tensor(Extent3::new(16, 16, 4), 0.05, 1);
+        let rb = hash_map_search(&t, ConvKind::subm3());
+        rb.validate(&t).unwrap();
+        // Center offset (index 13) pairs each voxel with itself.
+        let center: Vec<_> = rb.pairs.iter().filter(|p| p.offset == 13).collect();
+        assert_eq!(center.len(), t.len());
+        assert!(center.iter().all(|p| p.input == p.output));
+    }
+
+    #[test]
+    fn subm_symmetry() {
+        // If (i, o, δ) exists then (o, i, -δ) exists (Fig. 2a).
+        let t = tensor(Extent3::new(12, 12, 6), 0.08, 2);
+        let rb = hash_map_search(&t, ConvKind::subm3());
+        let offs = KernelOffsets::centered(3);
+        let set: std::collections::HashSet<(u16, u32, u32)> =
+            rb.pairs.iter().map(|p| (p.offset, p.input, p.output)).collect();
+        for p in &rb.pairs {
+            let neg = offs.offsets[p.offset as usize].negate();
+            let nd = offs.index_of(neg).unwrap() as u16;
+            assert!(
+                set.contains(&(nd, p.output, p.input)),
+                "missing reverse of {p:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn isolated_voxel_only_center() {
+        let e = Extent3::new(9, 9, 9);
+        let t = SparseTensor::from_coords(e, vec![Coord3::new(4, 4, 4)], 1);
+        let rb = hash_map_search(&t, ConvKind::subm3());
+        assert_eq!(rb.len(), 1);
+        assert_eq!(rb.pairs[0].offset, 13);
+    }
+
+    #[test]
+    fn gconv_downsamples() {
+        let e = Extent3::new(8, 8, 8);
+        let t = SparseTensor::from_coords(
+            e,
+            vec![
+                Coord3::new(0, 0, 0),
+                Coord3::new(1, 1, 1), // same 2x2x2 window
+                Coord3::new(6, 6, 6),
+            ],
+            1,
+        );
+        let rb = hash_map_search(&t, ConvKind::gconv2());
+        rb.validate(&t).unwrap();
+        assert_eq!(rb.out_coords.len(), 2);
+        assert_eq!(rb.len(), 3); // every input pairs exactly once for K=s=2
+    }
+
+    #[test]
+    fn tconv_reverses_gconv_pairs() {
+        let e = Extent3::new(8, 8, 8);
+        let t = tensor(e, 0.05, 3);
+        let g = hash_map_search(&t, ConvKind::gconv2());
+        // Take the downsampled outputs as a new tensor and transpose-conv.
+        let down = SparseTensor::from_coords(
+            Extent3::new(4, 4, 4),
+            g.out_coords.clone(),
+            1,
+        );
+        let up = hash_map_search(&down, ConvKind::tconv2());
+        up.validate(&down).unwrap();
+        // Every gconv pair (i_fine, o_coarse, δ) has a mirror tconv pair
+        // (o_coarse, q_fine=coords[i_fine], δ).
+        for p in &g.pairs {
+            let fine = t.coords[p.input as usize];
+            let coarse = g.out_coords[p.output as usize];
+            let ci = down.find(coarse).unwrap() as u32;
+            let qo = up.out_coords.binary_search(&fine);
+            assert!(qo.is_ok(), "fine coord {fine:?} missing from tconv outputs");
+            let qo = qo.unwrap() as u32;
+            assert!(
+                up.pairs
+                    .iter()
+                    .any(|u| u.input == ci && u.output == qo && u.offset == p.offset),
+                "missing mirror of {p:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn tconv_pruned_is_tconv_restricted_to_target() {
+        let e = Extent3::new(8, 8, 8);
+        let t = tensor(e, 0.08, 5);
+        let full = hash_map_search(&t, ConvKind::tconv2());
+        // Prune to every other output of the full tconv.
+        let target: Vec<Coord3> = full
+            .out_coords
+            .iter()
+            .copied()
+            .step_by(2)
+            .collect();
+        let pruned = tconv_pruned(&t, 2, 2, full.out_extent, &target);
+        pruned
+            .validate(&t)
+            .unwrap();
+        assert_eq!(pruned.out_coords, target);
+        // Every pruned pair exists in the full rulebook (modulo output
+        // re-indexing), and pair count matches the restriction.
+        let full_set: std::collections::HashSet<(u16, u32, Coord3)> = full
+            .pairs
+            .iter()
+            .map(|p| (p.offset, p.input, full.out_coords[p.output as usize]))
+            .collect();
+        for p in &pruned.pairs {
+            assert!(full_set
+                .contains(&(p.offset, p.input, pruned.out_coords[p.output as usize])));
+        }
+        let want = full
+            .pairs
+            .iter()
+            .filter(|p| target.binary_search(&full.out_coords[p.output as usize]).is_ok())
+            .count();
+        assert_eq!(pruned.len(), want);
+    }
+
+    #[test]
+    fn pair_count_prop_matches_brute_force() {
+        check("hash search matches brute force subm3", 10, |g| {
+            let e = Extent3::new(g.usize(3, 10), g.usize(3, 10), g.usize(3, 6));
+            let t = tensor(e, g.f64(0.02, 0.3), g.usize(0, 1 << 30) as u64);
+            let rb = hash_map_search(&t, ConvKind::subm3());
+            rb.validate(&t).unwrap();
+            // Brute force count.
+            let offs = KernelOffsets::centered(3);
+            let mut want = 0usize;
+            for &q in &t.coords {
+                for &d in &offs.offsets {
+                    let p = q.offset(d);
+                    if p.in_bounds(e) && t.find(p).is_some() {
+                        want += 1;
+                    }
+                }
+            }
+            assert_eq!(rb.len(), want);
+        });
+    }
+}

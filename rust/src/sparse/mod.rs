@@ -1,0 +1,12 @@
+//! Sparse-tensor substrate: coordinates + features, the IN-OUT map
+//! ("rulebook") that drives sparse convolution, and a hash-table map
+//! search that serves as the golden oracle for every searcher in
+//! [`crate::mapsearch`].
+
+pub mod hash_search;
+pub mod rulebook;
+pub mod tensor;
+
+pub use hash_search::hash_map_search;
+pub use rulebook::{ConvKind, Rulebook, RulePair};
+pub use tensor::SparseTensor;

@@ -1,0 +1,210 @@
+//! The IN-OUT map ("rulebook"): the paper's `M(j) = {(P_i, Q_j, W_δ)}`.
+//!
+//! Every map-search implementation produces a [`Rulebook`]; canonical form
+//! (sorted pairs) makes cross-implementation equality testable, and the
+//! per-offset grouping is exactly what the weight-stationary CIM dataflow
+//! consumes (gather all inputs of offset δ, MAC against sub-matrix W_δ,
+//! scatter to outputs).
+
+use crate::geom::{Coord3, Extent3, KernelOffsets, Offset3};
+use crate::sparse::tensor::SparseTensor;
+
+/// One IN-OUT pair: input voxel index, output voxel index, offset index.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub struct RulePair {
+    pub offset: u16,
+    pub input: u32,
+    pub output: u32,
+}
+
+/// Which of the three Spconv3D flavors a rulebook describes (§2B).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ConvKind {
+    /// Submanifold: outputs = inputs (subm3: K=3, stride 1).
+    Submanifold { k: usize },
+    /// Generalized: output valid if any input in kernel range (gconv2:
+    /// K=2, stride 2).
+    Generalized { k: usize, stride: usize },
+    /// Transposed: reverse of generalized (upsampling).
+    Transposed { k: usize, stride: usize },
+}
+
+impl ConvKind {
+    pub fn subm3() -> Self {
+        ConvKind::Submanifold { k: 3 }
+    }
+    pub fn gconv2() -> Self {
+        ConvKind::Generalized { k: 2, stride: 2 }
+    }
+    pub fn tconv2() -> Self {
+        ConvKind::Transposed { k: 2, stride: 2 }
+    }
+
+    pub fn kernel_volume(&self) -> usize {
+        match self {
+            ConvKind::Submanifold { k } => k * k * k,
+            ConvKind::Generalized { k, .. } | ConvKind::Transposed { k, .. } => k * k * k,
+        }
+    }
+}
+
+/// The rulebook plus the output coordinate set it maps onto.
+#[derive(Clone, Debug)]
+pub struct Rulebook {
+    pub kind: ConvKind,
+    pub pairs: Vec<RulePair>,
+    /// Output coordinates, sorted depth-major; `RulePair::output` indexes
+    /// into this.
+    pub out_coords: Vec<Coord3>,
+    pub out_extent: Extent3,
+}
+
+impl Rulebook {
+    /// Canonicalize: sort pairs (offset-major, then output, then input).
+    pub fn canonicalize(&mut self) {
+        // Unstable sort: RulePair is Copy and duplicates are removed, so
+        // stability buys nothing; this is on the map-search hot path.
+        self.pairs.sort_unstable();
+        self.pairs.dedup();
+    }
+
+    pub fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+
+    /// Pair count per offset index — the W2B workload histogram
+    /// (Fig. 6a).
+    pub fn workload_per_offset(&self) -> Vec<u64> {
+        let mut w = vec![0u64; self.kind.kernel_volume()];
+        for p in &self.pairs {
+            w[p.offset as usize] += 1;
+        }
+        w
+    }
+
+    /// Group pair indices by offset (weight-stationary gather order).
+    pub fn pairs_by_offset(&self) -> Vec<Vec<RulePair>> {
+        let mut groups = vec![Vec::new(); self.kind.kernel_volume()];
+        for p in &self.pairs {
+            groups[p.offset as usize].push(*p);
+        }
+        groups
+    }
+
+    /// Check structural invariants against the input tensor (used by the
+    /// property tests): indices in range, offsets consistent with the
+    /// geometry.
+    pub fn validate(&self, input: &SparseTensor) -> Result<(), String> {
+        let offs = match self.kind {
+            ConvKind::Submanifold { k } => KernelOffsets::centered(k).offsets,
+            ConvKind::Generalized { k, .. } | ConvKind::Transposed { k, .. } => {
+                KernelOffsets::downsample(k).offsets
+            }
+        };
+        for p in &self.pairs {
+            let (i, o, d) = (p.input as usize, p.output as usize, p.offset as usize);
+            if i >= input.len() {
+                return Err(format!("input index {i} out of range"));
+            }
+            if o >= self.out_coords.len() {
+                return Err(format!("output index {o} out of range"));
+            }
+            if d >= offs.len() {
+                return Err(format!("offset index {d} out of range"));
+            }
+            let pin = input.coords[i];
+            let qout = self.out_coords[o];
+            let delta: Offset3 = offs[d];
+            let ok = match self.kind {
+                // Submanifold: P = Q + δ.
+                ConvKind::Submanifold { .. } => qout.offset(delta) == pin,
+                // Generalized stride-s: P = s*Q + δ.
+                ConvKind::Generalized { stride, .. } => {
+                    Coord3::new(
+                        qout.x * stride as i32 + delta.dx as i32,
+                        qout.y * stride as i32 + delta.dy as i32,
+                        qout.z * stride as i32 + delta.dz as i32,
+                    ) == pin
+                }
+                // Transposed stride-s: Q = s*P + δ ... reversed roles.
+                ConvKind::Transposed { stride, .. } => {
+                    Coord3::new(
+                        pin.x * stride as i32 + delta.dx as i32,
+                        pin.y * stride as i32 + delta.dy as i32,
+                        pin.z * stride as i32 + delta.dz as i32,
+                    ) == qout
+                }
+            };
+            if !ok {
+                return Err(format!(
+                    "geometry violated: in={pin:?} out={qout:?} δ={delta:?} kind={:?}",
+                    self.kind
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_histogram_counts() {
+        let rb = Rulebook {
+            kind: ConvKind::subm3(),
+            pairs: vec![
+                RulePair { offset: 13, input: 0, output: 0 },
+                RulePair { offset: 13, input: 1, output: 1 },
+                RulePair { offset: 0, input: 1, output: 0 },
+            ],
+            out_coords: vec![Coord3::new(0, 0, 0), Coord3::new(1, 0, 0)],
+            out_extent: Extent3::new(2, 1, 1),
+        };
+        let w = rb.workload_per_offset();
+        assert_eq!(w.len(), 27);
+        assert_eq!(w[13], 2);
+        assert_eq!(w[0], 1);
+        assert_eq!(w.iter().sum::<u64>(), 3);
+    }
+
+    #[test]
+    fn canonicalize_sorts_and_dedups() {
+        let mut rb = Rulebook {
+            kind: ConvKind::subm3(),
+            pairs: vec![
+                RulePair { offset: 5, input: 1, output: 1 },
+                RulePair { offset: 1, input: 0, output: 0 },
+                RulePair { offset: 5, input: 1, output: 1 },
+            ],
+            out_coords: vec![Coord3::new(0, 0, 0), Coord3::new(1, 0, 0)],
+            out_extent: Extent3::new(2, 1, 1),
+        };
+        rb.canonicalize();
+        assert_eq!(rb.len(), 2);
+        assert!(rb.pairs[0] < rb.pairs[1]);
+    }
+
+    #[test]
+    fn validate_catches_bad_geometry() {
+        let e = Extent3::new(4, 4, 4);
+        let t = SparseTensor::from_coords(
+            e,
+            vec![Coord3::new(0, 0, 0), Coord3::new(1, 0, 0)],
+            1,
+        );
+        let rb = Rulebook {
+            kind: ConvKind::subm3(),
+            // offset index 13 is the center: requires in == out coord.
+            pairs: vec![RulePair { offset: 13, input: 0, output: 1 }],
+            out_coords: t.coords.clone(),
+            out_extent: e,
+        };
+        assert!(rb.validate(&t).is_err());
+    }
+}

@@ -1,0 +1,182 @@
+//! Sparse tensor: the paper's Eq. (1) — a coordinate list `P` (depth-major
+//! sorted) plus a dense feature matrix `F` of shape `[N, C]` (int8 on the
+//! request path).
+
+use crate::geom::{Coord3, Extent3};
+
+/// A sparse voxel tensor. Coordinates are unique and sorted depth-major
+/// (z, y, x); `features` is row-major `[len, channels]`.
+#[derive(Clone, Debug)]
+pub struct SparseTensor {
+    pub extent: Extent3,
+    pub coords: Vec<Coord3>,
+    pub features: Vec<i8>,
+    pub channels: usize,
+}
+
+impl SparseTensor {
+    /// Build from unsorted, possibly duplicated coordinates. Duplicate
+    /// coordinates keep the first occurrence's features.
+    pub fn new(
+        extent: Extent3,
+        mut pairs: Vec<(Coord3, Vec<i8>)>,
+        channels: usize,
+    ) -> Self {
+        pairs.sort_by_key(|(c, _)| *c);
+        pairs.dedup_by_key(|(c, _)| *c);
+        let mut coords = Vec::with_capacity(pairs.len());
+        let mut features = Vec::with_capacity(pairs.len() * channels);
+        for (c, f) in pairs {
+            assert_eq!(f.len(), channels, "feature width mismatch at {c:?}");
+            coords.push(c);
+            features.extend_from_slice(&f);
+        }
+        Self {
+            extent,
+            coords,
+            features,
+            channels,
+        }
+    }
+
+    /// Coordinates-only constructor (features zeroed) — used by map-search
+    /// sweeps where only geometry matters.
+    pub fn from_coords(extent: Extent3, mut coords: Vec<Coord3>, channels: usize) -> Self {
+        coords.sort();
+        coords.dedup();
+        let features = vec![0i8; coords.len() * channels];
+        Self {
+            extent,
+            coords,
+            features,
+            channels,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.coords.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.coords.is_empty()
+    }
+
+    /// Feature row of voxel `i`.
+    #[inline]
+    pub fn feature(&self, i: usize) -> &[i8] {
+        &self.features[i * self.channels..(i + 1) * self.channels]
+    }
+
+    #[inline]
+    pub fn feature_mut(&mut self, i: usize) -> &mut [i8] {
+        &mut self.features[i * self.channels..(i + 1) * self.channels]
+    }
+
+    /// Binary search for a coordinate (valid because coords are sorted).
+    #[inline]
+    pub fn find(&self, c: Coord3) -> Option<usize> {
+        self.coords.binary_search(&c).ok()
+    }
+
+    /// Start index of each depth (z value) in `coords` — the off-chip
+    /// layout the DOMS depth-encoding table points into. Returned vec has
+    /// `extent.z + 1` entries; depth z occupies `coords[v[z]..v[z+1]]`.
+    pub fn depth_starts(&self) -> Vec<usize> {
+        let mut starts = vec![0usize; self.extent.z + 1];
+        let mut zi = 0usize;
+        for (i, c) in self.coords.iter().enumerate() {
+            while zi <= c.z as usize {
+                starts[zi] = i;
+                zi += 1;
+            }
+        }
+        while zi <= self.extent.z {
+            starts[zi] = self.coords.len();
+            zi += 1;
+        }
+        starts
+    }
+
+    /// Verify sortedness/uniqueness (used by tests and debug assertions).
+    pub fn check_canonical(&self) -> bool {
+        self.coords.windows(2).all(|w| w[0] < w[1])
+            && self.features.len() == self.coords.len() * self.channels
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::check;
+
+    #[test]
+    fn new_sorts_and_dedups() {
+        let e = Extent3::new(4, 4, 4);
+        let t = SparseTensor::new(
+            e,
+            vec![
+                (Coord3::new(3, 3, 3), vec![1, 1]),
+                (Coord3::new(0, 0, 0), vec![2, 2]),
+                (Coord3::new(3, 3, 3), vec![9, 9]),
+            ],
+            2,
+        );
+        assert_eq!(t.len(), 2);
+        assert!(t.check_canonical());
+        assert_eq!(t.coords[0], Coord3::new(0, 0, 0));
+        assert_eq!(t.feature(1), &[1, 1]); // first occurrence wins
+    }
+
+    #[test]
+    fn find_works() {
+        let e = Extent3::new(8, 8, 8);
+        let t = SparseTensor::from_coords(
+            e,
+            vec![Coord3::new(1, 2, 3), Coord3::new(4, 5, 6)],
+            1,
+        );
+        assert_eq!(t.find(Coord3::new(1, 2, 3)), Some(0));
+        assert_eq!(t.find(Coord3::new(4, 5, 6)), Some(1));
+        assert_eq!(t.find(Coord3::new(0, 0, 0)), None);
+    }
+
+    #[test]
+    fn depth_starts_partition() {
+        let e = Extent3::new(4, 4, 3);
+        let t = SparseTensor::from_coords(
+            e,
+            vec![
+                Coord3::new(0, 0, 0),
+                Coord3::new(1, 0, 0),
+                Coord3::new(0, 0, 2),
+            ],
+            1,
+        );
+        let s = t.depth_starts();
+        assert_eq!(s, vec![0, 2, 2, 3]);
+        // depth 0 -> [0,2), depth 1 -> [2,2) empty, depth 2 -> [2,3)
+    }
+
+    #[test]
+    fn depth_starts_prop() {
+        check("depth starts partition coords", 50, |g| {
+            let e = Extent3::new(8, 8, g.usize(1, 8));
+            let coords = g.vec(0, 64, |g| {
+                Coord3::new(
+                    g.i32(0, 8),
+                    g.i32(0, 8),
+                    g.i32(0, e.z as i32),
+                )
+            });
+            let t = SparseTensor::from_coords(e, coords, 1);
+            let s = t.depth_starts();
+            assert_eq!(s.len(), e.z + 1);
+            assert_eq!(*s.last().unwrap(), t.len());
+            for z in 0..e.z {
+                for i in s[z]..s[z + 1] {
+                    assert_eq!(t.coords[i].z as usize, z);
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,225 @@
+//! Dense Conv2D path for the RPN (§3.2A, Fig. 5c): im2col gathering with
+//! the K×K sub-matrix schedule, dispatched to the same [`GemmEngine`] as
+//! Spconv3D — one GEMM per kernel offset per batch wave, with the input
+//! rows of sub-matrix (ky, kx) reused by the horizontally adjacent
+//! sub-matrix on the next cycle.
+
+use crate::spconv::layer::{GemmEngine, TILE_C};
+
+/// A dense NHWC int8 feature map (N = 1 in our pipelines).
+#[derive(Clone, Debug)]
+pub struct DenseMap {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<i8>,
+}
+
+impl DenseMap {
+    pub fn zeros(h: usize, w: usize, c: usize) -> Self {
+        Self {
+            h,
+            w,
+            c,
+            data: vec![0; h * w * c],
+        }
+    }
+
+    #[inline]
+    pub fn pixel(&self, y: usize, x: usize) -> &[i8] {
+        let base = (y * self.w + x) * self.c;
+        &self.data[base..base + self.c]
+    }
+
+    #[inline]
+    pub fn pixel_mut(&mut self, y: usize, x: usize) -> &mut [i8] {
+        let base = (y * self.w + x) * self.c;
+        &mut self.data[base..base + self.c]
+    }
+}
+
+/// SAME-padded KxK stride-s conv over a dense map. Weights are
+/// `[k*k][c_in][c_out]` (offset-major like Spconv3D). Returns int32 psums
+/// `[h_out * w_out * c_out]`.
+pub fn conv2d_im2col<E: GemmEngine>(
+    x: &DenseMap,
+    weights: &[i8],
+    k: usize,
+    stride: usize,
+    c_out: usize,
+    engine: &mut E,
+) -> crate::Result<(Vec<i32>, usize, usize)> {
+    let c_in = x.c;
+    assert_eq!(weights.len(), k * k * c_in * c_out);
+    let h_out = x.h.div_ceil(stride);
+    let w_out = x.w.div_ceil(stride);
+    let n_out = h_out * w_out;
+    let pad = (k / 2) as isize;
+    let mut psums = vec![0i32; n_out * c_out];
+
+    // Per kernel offset: gather the strided input rows, GEMM, accumulate.
+    let c1_tiles = tile_ranges(c_in);
+    let c2_tiles = tile_ranges(c_out);
+    let mut acts: Vec<i8> = Vec::with_capacity(n_out * TILE_C);
+    for ky in 0..k {
+        for kx in 0..k {
+            let woff =
+                &weights[(ky * k + kx) * c_in * c_out..(ky * k + kx + 1) * c_in * c_out];
+            // Valid output pixels for this offset (SAME padding: missing
+            // taps contribute zero — we simply skip them).
+            let mut rows: Vec<usize> = Vec::with_capacity(n_out);
+            let mut coords: Vec<(usize, usize)> = Vec::with_capacity(n_out);
+            for oy in 0..h_out {
+                let iy = (oy * stride) as isize + ky as isize - pad;
+                if iy < 0 || iy >= x.h as isize {
+                    continue;
+                }
+                for ox in 0..w_out {
+                    let ix = (ox * stride) as isize + kx as isize - pad;
+                    if ix < 0 || ix >= x.w as isize {
+                        continue;
+                    }
+                    rows.push((iy as usize) * x.w + ix as usize);
+                    coords.push((oy, ox));
+                }
+            }
+            if rows.is_empty() {
+                continue;
+            }
+            for &(c1_lo, c1_len) in &c1_tiles {
+                acts.clear();
+                for &r in &rows {
+                    let px = &x.data[r * c_in..(r + 1) * c_in];
+                    acts.extend_from_slice(&px[c1_lo..c1_lo + c1_len]);
+                }
+                for &(c2_lo, c2_len) in &c2_tiles {
+                    let mut wtile = Vec::with_capacity(c1_len * c2_len);
+                    for r in 0..c1_len {
+                        let row = &woff[(c1_lo + r) * c_out..(c1_lo + r) * c_out + c_out];
+                        wtile.extend_from_slice(&row[c2_lo..c2_lo + c2_len]);
+                    }
+                    let out = engine.gemm_i8(&acts, &wtile, rows.len(), c1_len, c2_len)?;
+                    for (ri, &(oy, ox)) in coords.iter().enumerate() {
+                        let dst_base = (oy * w_out + ox) * c_out + c2_lo;
+                        let dst = &mut psums[dst_base..dst_base + c2_len];
+                        let src = &out[ri * c2_len..(ri + 1) * c2_len];
+                        for (d, &s) in dst.iter_mut().zip(src) {
+                            *d += s;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok((psums, h_out, w_out))
+}
+
+fn tile_ranges(c: usize) -> Vec<(usize, usize)> {
+    let mut v = Vec::new();
+    let mut lo = 0;
+    while lo < c {
+        let len = TILE_C.min(c - lo);
+        v.push((lo, len));
+        lo += len;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spconv::layer::NativeEngine;
+    use crate::testing::prop::check;
+    use crate::util::rng::Pcg64;
+
+    /// Direct dense conv reference (exact math, small magnitudes).
+    fn brute_conv(
+        x: &DenseMap,
+        w: &[i8],
+        k: usize,
+        stride: usize,
+        c_out: usize,
+    ) -> Vec<i32> {
+        let h_out = x.h.div_ceil(stride);
+        let w_out = x.w.div_ceil(stride);
+        let pad = (k / 2) as isize;
+        let mut out = vec![0i32; h_out * w_out * c_out];
+        for oy in 0..h_out {
+            for ox in 0..w_out {
+                for ky in 0..k {
+                    for kx in 0..k {
+                        let iy = (oy * stride) as isize + ky as isize - pad;
+                        let ix = (ox * stride) as isize + kx as isize - pad;
+                        if iy < 0 || ix < 0 || iy >= x.h as isize || ix >= x.w as isize {
+                            continue;
+                        }
+                        let px = x.pixel(iy as usize, ix as usize);
+                        let woff = &w[(ky * k + kx) * x.c * c_out..];
+                        for (ci, &a) in px.iter().enumerate() {
+                            for co in 0..c_out {
+                                out[(oy * w_out + ox) * c_out + co] +=
+                                    a as i32 * woff[ci * c_out + co] as i32;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn random_map(h: usize, w: usize, c: usize, seed: u64) -> DenseMap {
+        let mut rng = Pcg64::new(seed);
+        let mut m = DenseMap::zeros(h, w, c);
+        for v in m.data.iter_mut() {
+            *v = rng.next_i8(-3, 4);
+        }
+        m
+    }
+
+    #[test]
+    fn matches_brute_force_stride1() {
+        let x = random_map(6, 7, 8, 71);
+        let mut rng = Pcg64::new(72);
+        let w: Vec<i8> = (0..9 * 8 * 8).map(|_| rng.next_i8(-2, 3)).collect();
+        let (got, ho, wo) =
+            conv2d_im2col(&x, &w, 3, 1, 8, &mut NativeEngine::default()).unwrap();
+        assert_eq!((ho, wo), (6, 7));
+        assert_eq!(got, brute_conv(&x, &w, 3, 1, 8));
+    }
+
+    #[test]
+    fn matches_brute_force_stride2() {
+        let x = random_map(8, 8, 4, 73);
+        let mut rng = Pcg64::new(74);
+        let w: Vec<i8> = (0..9 * 4 * 4).map(|_| rng.next_i8(-2, 3)).collect();
+        let (got, ho, wo) =
+            conv2d_im2col(&x, &w, 3, 2, 4, &mut NativeEngine::default()).unwrap();
+        assert_eq!((ho, wo), (4, 4));
+        assert_eq!(got, brute_conv(&x, &w, 3, 2, 4));
+    }
+
+    #[test]
+    fn prop_shapes_and_values() {
+        check("conv2d im2col == brute force", 8, |g| {
+            let x = random_map(g.usize(2, 9), g.usize(2, 9), 4, g.usize(0, 1 << 30) as u64);
+            let mut rng = Pcg64::new(g.usize(0, 1 << 30) as u64);
+            let w: Vec<i8> = (0..9 * 4 * 4).map(|_| rng.next_i8(-2, 3)).collect();
+            let stride = *g.choose(&[1usize, 2]);
+            let (got, _, _) =
+                conv2d_im2col(&x, &w, 3, stride, 4, &mut NativeEngine::default()).unwrap();
+            assert_eq!(got, brute_conv(&x, &w, 3, stride, 4));
+        });
+    }
+
+    #[test]
+    fn k1_conv_is_per_pixel_gemm() {
+        let x = random_map(4, 4, 8, 75);
+        let mut rng = Pcg64::new(76);
+        let w: Vec<i8> = (0..8 * 16).map(|_| rng.next_i8(-2, 3)).collect();
+        let (got, ho, wo) =
+            conv2d_im2col(&x, &w, 1, 1, 16, &mut NativeEngine::default()).unwrap();
+        assert_eq!((ho, wo), (4, 4));
+        assert_eq!(got, brute_conv(&x, &w, 1, 1, 16));
+    }
+}

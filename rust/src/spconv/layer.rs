@@ -1,0 +1,357 @@
+//! Spconv3D layer execution: gather → per-offset sub-matrix GEMM →
+//! scatter-add → epilogue.
+//!
+//! Channel tiling follows the CIM sub-matrix granularity (`TILE_C` = 64):
+//! a C1×C2 weight slice larger than one sub-matrix is split into 64-row
+//! contraction tiles, **each bit-serial-clamped independently and summed
+//! digitally** — the physically accurate semantics of multiple CIM
+//! sub-arrays sharing one logical weight slice. The [`GemmEngine`] below
+//! is the seam between this engine and the compiled PJRT artifacts (or
+//! the native fallback).
+
+use crate::sparse::rulebook::Rulebook;
+use crate::sparse::tensor::SparseTensor;
+use crate::spconv::gather::gather_batches;
+use crate::spconv::quant;
+
+/// CIM sub-matrix tile edge (must match `python/compile/aot.py::TILE_C`).
+pub const TILE_C: usize = 64;
+
+/// The compute seam: one sub-matrix GEMM, `acts [b, c1] x w [c1, c2]`,
+/// `c1, c2 <= TILE_C`, bit-serial CIM semantics.
+pub trait GemmEngine {
+    fn gemm_i8(
+        &mut self,
+        acts: &[i8],
+        weights: &[i8],
+        b: usize,
+        c1: usize,
+        c2: usize,
+    ) -> crate::Result<Vec<i32>>;
+
+    /// Number of GEMM dispatches issued (for pipeline accounting).
+    fn dispatches(&self) -> u64 {
+        0
+    }
+}
+
+/// Pure-rust engine with the exact artifact semantics — used by tests and
+/// as the fallback when `artifacts/` is absent.
+#[derive(Debug, Default)]
+pub struct NativeEngine {
+    pub calls: u64,
+}
+
+impl GemmEngine for NativeEngine {
+    fn gemm_i8(
+        &mut self,
+        acts: &[i8],
+        weights: &[i8],
+        b: usize,
+        c1: usize,
+        c2: usize,
+    ) -> crate::Result<Vec<i32>> {
+        self.calls += 1;
+        Ok(quant::cim_gemm_ref(
+            acts,
+            weights,
+            b,
+            c1,
+            c2,
+            quant::INPUT_BITS,
+            quant::ADC_BITS,
+        ))
+    }
+
+    fn dispatches(&self) -> u64 {
+        self.calls
+    }
+}
+
+/// Layer weights: `[k_volume][c_in][c_out]` int8, row-major per offset.
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub k_volume: usize,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub data: Vec<i8>,
+}
+
+impl LayerWeights {
+    pub fn random(k_volume: usize, c_in: usize, c_out: usize, seed: u64) -> Self {
+        let mut rng = crate::util::rng::Pcg64::new(seed);
+        let data = (0..k_volume * c_in * c_out)
+            .map(|_| rng.next_i8(-16, 16))
+            .collect();
+        Self {
+            k_volume,
+            c_in,
+            c_out,
+            data,
+        }
+    }
+
+    /// Weight slice of one offset: `[c_in, c_out]` row-major.
+    pub fn offset_slice(&self, d: usize) -> &[i8] {
+        let sz = self.c_in * self.c_out;
+        &self.data[d * sz..(d + 1) * sz]
+    }
+}
+
+/// One executed Spconv3D layer.
+#[derive(Clone, Debug)]
+pub struct SpconvLayer {
+    pub weights: LayerWeights,
+    /// Per-channel requant scale/bias for the epilogue.
+    pub scale: Vec<f32>,
+    pub zero: Vec<f32>,
+    /// GEMM wave batch size.
+    pub batch: usize,
+}
+
+/// Result of executing a layer: the output tensor plus execution stats.
+#[derive(Clone, Debug)]
+pub struct SpconvOutput {
+    pub tensor: SparseTensor,
+    /// Raw int32 partial sums (pre-epilogue), `[n_out, c_out]`.
+    pub psums: Vec<i32>,
+    pub gemm_calls: u64,
+    pub gathered_rows: u64,
+}
+
+impl SpconvLayer {
+    pub fn new(weights: LayerWeights, batch: usize) -> Self {
+        let c_out = weights.c_out;
+        Self {
+            weights,
+            scale: vec![0.05; c_out],
+            zero: vec![0.0; c_out],
+            batch,
+        }
+    }
+
+    /// Execute over a prebuilt rulebook.
+    pub fn execute<E: GemmEngine>(
+        &self,
+        input: &SparseTensor,
+        rb: &Rulebook,
+        engine: &mut E,
+    ) -> crate::Result<SpconvOutput> {
+        assert_eq!(input.channels, self.weights.c_in, "channel mismatch");
+        assert_eq!(rb.kind.kernel_volume(), self.weights.k_volume);
+        let (c1, c2) = (self.weights.c_in, self.weights.c_out);
+        let n_out = rb.out_coords.len();
+        let mut psums = vec![0i32; n_out * c2];
+        let (waves, _) = gather_batches(rb, self.batch);
+        let mut gemm_calls = 0u64;
+        let mut gathered_rows = 0u64;
+
+        // Contraction/output tiling in TILE_C chunks (independent ADC
+        // clamping per contraction tile — see module docs).
+        let c1_tiles: Vec<(usize, usize)> = tile_ranges(c1);
+        let c2_tiles: Vec<(usize, usize)> = tile_ranges(c2);
+
+        // Pre-slice every (offset, c1-tile, c2-tile) weight sub-matrix
+        // once per layer — it's resident in the CIM array anyway, and
+        // re-slicing per wave was a measurable share of the hot loop
+        // (EXPERIMENTS.md §Perf L3 iteration 2).
+        let k_vol = self.weights.k_volume;
+        let mut wtiles: Vec<Vec<i8>> =
+            Vec::with_capacity(k_vol * c1_tiles.len() * c2_tiles.len());
+        for d in 0..k_vol {
+            let wslice = self.weights.offset_slice(d);
+            for &(c1_lo, c1_len) in &c1_tiles {
+                for &(c2_lo, c2_len) in &c2_tiles {
+                    let mut wtile = Vec::with_capacity(c1_len * c2_len);
+                    for r in 0..c1_len {
+                        let row = &wslice[(c1_lo + r) * c2..(c1_lo + r) * c2 + c2];
+                        wtile.extend_from_slice(&row[c2_lo..c2_lo + c2_len]);
+                    }
+                    wtiles.push(wtile);
+                }
+            }
+        }
+        let tile_of = |d: usize, i1: usize, i2: usize| -> &Vec<i8> {
+            &wtiles[(d * c1_tiles.len() + i1) * c2_tiles.len() + i2]
+        };
+
+        let mut acts_tile: Vec<i8> = Vec::new();
+        for wave in &waves {
+            let b = wave.pairs.len();
+            gathered_rows += b as u64;
+            for (i1, &(c1_lo, c1_len)) in c1_tiles.iter().enumerate() {
+                // Gather the activation tile for this wave.
+                acts_tile.clear();
+                acts_tile.reserve(b * c1_len);
+                for &(i, _) in &wave.pairs {
+                    let row = input.feature(i as usize);
+                    acts_tile.extend_from_slice(&row[c1_lo..c1_lo + c1_len]);
+                }
+                for (i2, &(c2_lo, c2_len)) in c2_tiles.iter().enumerate() {
+                    let wtile = tile_of(wave.offset as usize, i1, i2);
+                    let out = engine.gemm_i8(&acts_tile, wtile, b, c1_len, c2_len)?;
+                    gemm_calls += 1;
+                    // Scatter-add into the output psum tensor.
+                    for (row, &(_, o)) in wave.pairs.iter().enumerate() {
+                        let dst =
+                            &mut psums[o as usize * c2 + c2_lo..o as usize * c2 + c2_lo + c2_len];
+                        let src = &out[row * c2_len..(row + 1) * c2_len];
+                        for (d, &s) in dst.iter_mut().zip(src) {
+                            *d += s;
+                        }
+                    }
+                }
+            }
+        }
+
+        let features = quant::dequant_relu_quant(&psums, &self.scale, &self.zero, c2);
+        let tensor = SparseTensor {
+            extent: rb.out_extent,
+            coords: rb.out_coords.clone(),
+            features,
+            channels: c2,
+        };
+        Ok(SpconvOutput {
+            tensor,
+            psums,
+            gemm_calls,
+            gathered_rows,
+        })
+    }
+}
+
+/// Split a channel dim into `TILE_C`-sized `(start, len)` ranges.
+fn tile_ranges(c: usize) -> Vec<(usize, usize)> {
+    let mut v = Vec::new();
+    let mut lo = 0;
+    while lo < c {
+        let len = TILE_C.min(c - lo);
+        v.push((lo, len));
+        lo += len;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::Extent3;
+    use crate::pointcloud::voxelize::Voxelizer;
+    use crate::sparse::rulebook::ConvKind;
+    use crate::sparse::hash_map_search;
+    use crate::testing::prop::check;
+    use crate::util::rng::Pcg64;
+
+    fn tensor_with_features(n: usize, c: usize, seed: u64) -> SparseTensor {
+        let e = Extent3::new(20, 20, 8);
+        let g = Voxelizer::synth_occupancy(e, n as f64 / e.volume() as f64, seed);
+        let mut t = SparseTensor::from_coords(e, g.coords(), c);
+        let mut rng = Pcg64::new(seed ^ 0xfeed);
+        for v in t.features.iter_mut() {
+            *v = rng.next_i8(-8, 8);
+        }
+        t
+    }
+
+    /// Dense reference: brute-force spconv with exact (unclamped) math on
+    /// small magnitudes, where CIM == exact.
+    fn brute_force_psums(
+        input: &SparseTensor,
+        rb: &Rulebook,
+        w: &LayerWeights,
+    ) -> Vec<i32> {
+        let mut out = vec![0i32; rb.out_coords.len() * w.c_out];
+        for p in &rb.pairs {
+            let f = input.feature(p.input as usize);
+            let ws = w.offset_slice(p.offset as usize);
+            let dst = &mut out[p.output as usize * w.c_out..(p.output as usize + 1) * w.c_out];
+            for (k, &a) in f.iter().enumerate() {
+                for j in 0..w.c_out {
+                    dst[j] += a as i32 * ws[k * w.c_out + j] as i32;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_brute_force_small_magnitudes() {
+        let t = tensor_with_features(200, 8, 61);
+        let rb = hash_map_search(&t, ConvKind::subm3());
+        let mut w = LayerWeights::random(27, 8, 8, 62);
+        // Keep magnitudes small so ADC clamping never bites.
+        for v in w.data.iter_mut() {
+            *v = *v % 3;
+        }
+        let layer = SpconvLayer::new(w.clone(), 64);
+        let out = layer
+            .execute(&t, &rb, &mut NativeEngine::default())
+            .unwrap();
+        assert_eq!(out.psums, brute_force_psums(&t, &rb, &w));
+    }
+
+    #[test]
+    fn wide_channels_tile_correctly() {
+        // c_in = c_out = 96 -> 2x2 tiles; small magnitudes keep CIM exact
+        // so the tiled result equals brute force.
+        let t = {
+            let mut t = tensor_with_features(80, 96, 63);
+            for v in t.features.iter_mut() {
+                *v = *v % 2;
+            }
+            t
+        };
+        let rb = hash_map_search(&t, ConvKind::subm3());
+        let mut w = LayerWeights::random(27, 96, 96, 64);
+        for v in w.data.iter_mut() {
+            *v = *v % 2;
+        }
+        let layer = SpconvLayer::new(w.clone(), 32);
+        let out = layer
+            .execute(&t, &rb, &mut NativeEngine::default())
+            .unwrap();
+        assert_eq!(out.psums, brute_force_psums(&t, &rb, &w));
+        assert!(out.gemm_calls >= 27 * 4);
+    }
+
+    #[test]
+    fn batch_size_invariance() {
+        check("spconv output independent of wave batch size", 6, |g| {
+            let t = tensor_with_features(g.usize(20, 150), 16, g.usize(0, 1 << 30) as u64);
+            let rb = hash_map_search(&t, ConvKind::subm3());
+            let w = LayerWeights::random(27, 16, 16, 99);
+            let a = SpconvLayer::new(w.clone(), g.usize(1, 32))
+                .execute(&t, &rb, &mut NativeEngine::default())
+                .unwrap();
+            let b = SpconvLayer::new(w, 1024)
+                .execute(&t, &rb, &mut NativeEngine::default())
+                .unwrap();
+            assert_eq!(a.psums, b.psums);
+        });
+    }
+
+    #[test]
+    fn epilogue_output_is_int8_nonneg() {
+        let t = tensor_with_features(100, 8, 65);
+        let rb = hash_map_search(&t, ConvKind::subm3());
+        let layer = SpconvLayer::new(LayerWeights::random(27, 8, 8, 66), 64);
+        let out = layer
+            .execute(&t, &rb, &mut NativeEngine::default())
+            .unwrap();
+        assert_eq!(out.tensor.channels, 8);
+        assert!(out.tensor.features.iter().all(|&v| v >= 0));
+        assert!(out.tensor.check_canonical());
+    }
+
+    #[test]
+    fn gconv_downsamples_extent() {
+        let t = tensor_with_features(150, 8, 67);
+        let rb = hash_map_search(&t, ConvKind::gconv2());
+        let layer = SpconvLayer::new(LayerWeights::random(8, 8, 16, 68), 64);
+        let out = layer
+            .execute(&t, &rb, &mut NativeEngine::default())
+            .unwrap();
+        assert_eq!(out.tensor.extent, Extent3::new(10, 10, 4));
+        assert_eq!(out.tensor.channels, 16);
+    }
+}

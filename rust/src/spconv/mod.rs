@@ -1,0 +1,12 @@
+//! Sparse-convolution execution engine: gather → sub-matrix GEMM →
+//! scatter-add, exactly the weight-stationary dataflow of §3.2A, plus the
+//! dense Conv2D path used by the RPN.
+
+pub mod conv2d;
+pub mod gather;
+pub mod layer;
+pub mod quant;
+
+pub use conv2d::{conv2d_im2col, DenseMap};
+pub use gather::{gather_batches, GatherBatch};
+pub use layer::{SpconvLayer, SpconvOutput};

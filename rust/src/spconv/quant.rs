@@ -1,0 +1,163 @@
+//! Int8 quantization helpers (the paper quantizes all weights to 8 bits,
+//! following SpOctA's setting) and the bit-serial reference GEMM — the
+//! rust twin of `python/compile/kernels/ref.py::cim_gemm_ref`, used by the
+//! native fallback engine and the runtime equivalence tests.
+
+/// Bit width of activations fed to the CIM array.
+pub const INPUT_BITS: u32 = 8;
+/// ADC resolution (see `cim::pe::PeConfig`).
+pub const ADC_BITS: u32 = 8;
+
+/// Symmetric per-tensor quantization of f32 features to int8.
+/// Returns `(values, scale)` with `value ≈ f / scale`.
+pub fn quantize_features(f: &[f32]) -> (Vec<i8>, f32) {
+    let max = f.iter().fold(0f32, |m, &x| m.max(x.abs()));
+    let scale = if max == 0.0 { 1.0 } else { max / 127.0 };
+    let q = f
+        .iter()
+        .map(|&x| (x / scale).round().clamp(-128.0, 127.0) as i8)
+        .collect();
+    (q, scale)
+}
+
+/// The CIM PE datapath over one GEMM: bit-serial activations, per-bitplane
+/// ADC clamp, shift-add recombination. `acts` is `[b, c1]` row-major,
+/// `weights` is `[c1, c2]` row-major; returns `[b, c2]` i32.
+///
+/// Must match `ref.cim_gemm_ref` bit-for-bit (tested against the PJRT
+/// artifact in `tests/runtime_equivalence.rs`).
+pub fn cim_gemm_ref(
+    acts: &[i8],
+    weights: &[i8],
+    b: usize,
+    c1: usize,
+    c2: usize,
+    input_bits: u32,
+    adc_bits: u32,
+) -> Vec<i32> {
+    assert_eq!(acts.len(), b * c1);
+    assert_eq!(weights.len(), c1 * c2);
+    let lo = -(1i32 << (adc_bits - 1));
+    let hi = (1i32 << (adc_bits - 1)) - 1;
+    let mut acc = vec![0i32; b * c2];
+    let mut psum = vec![0i32; c2];
+    for row in 0..b {
+        let a_row = &acts[row * c1..(row + 1) * c1];
+        let out = &mut acc[row * c2..(row + 1) * c2];
+        for bit in 0..input_bits {
+            psum.iter_mut().for_each(|p| *p = 0);
+            for (k, &a) in a_row.iter().enumerate() {
+                if (a as i32 >> bit) & 1 == 1 {
+                    let wrow = &weights[k * c2..(k + 1) * c2];
+                    for (p, &w) in psum.iter_mut().zip(wrow) {
+                        *p += w as i32;
+                    }
+                }
+            }
+            let sign = if bit == input_bits - 1 { -1 } else { 1 };
+            for (o, &p) in out.iter_mut().zip(&psum) {
+                *o += sign * (p.clamp(lo, hi) << bit);
+            }
+        }
+    }
+    acc
+}
+
+/// Ideal (unclamped) int GEMM — what a digital MAC array would compute.
+pub fn gemm_exact(acts: &[i8], weights: &[i8], b: usize, c1: usize, c2: usize) -> Vec<i32> {
+    let mut out = vec![0i32; b * c2];
+    for row in 0..b {
+        for k in 0..c1 {
+            let a = acts[row * c1 + k] as i32;
+            if a == 0 {
+                continue;
+            }
+            let wrow = &weights[k * c2..(k + 1) * c2];
+            let orow = &mut out[row * c2..(row + 1) * c2];
+            for (o, &w) in orow.iter_mut().zip(wrow) {
+                *o += a * w as i32;
+            }
+        }
+    }
+    out
+}
+
+/// Inter-layer epilogue: dequant → ReLU → requant to int8 (the rust twin
+/// of `model.dequant_relu_quant`).
+pub fn dequant_relu_quant(psum: &[i32], scale: &[f32], zero: &[f32], c: usize) -> Vec<i8> {
+    assert_eq!(psum.len() % c, 0);
+    psum.chunks(c)
+        .flat_map(|row| {
+            row.iter().enumerate().map(|(j, &p)| {
+                let y = p as f32 * scale[j] + zero[j];
+                (y.max(0.0).round()).clamp(-128.0, 127.0) as i8
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::check;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn quantize_roundtrip_error_bounded() {
+        let f: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) * 0.37).collect();
+        let (q, s) = quantize_features(&f);
+        for (x, v) in f.iter().zip(&q) {
+            assert!((x - *v as f32 * s).abs() <= s * 0.5 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn quantize_zeros() {
+        let (q, s) = quantize_features(&[0.0; 8]);
+        assert_eq!(q, vec![0; 8]);
+        assert_eq!(s, 1.0);
+    }
+
+    #[test]
+    fn cim_matches_exact_when_unsaturated() {
+        check("cim_gemm == exact in small-magnitude regime", 25, |g| {
+            let (b, c1, c2) = (g.usize(1, 8), g.usize(1, 16), g.usize(1, 8));
+            let mut rng = Pcg64::new(g.usize(0, 1 << 30) as u64);
+            let acts: Vec<i8> = (0..b * c1).map(|_| rng.next_i8(0, 4)).collect();
+            let w: Vec<i8> = (0..c1 * c2).map(|_| rng.next_i8(-2, 3)).collect();
+            let got = cim_gemm_ref(&acts, &w, b, c1, c2, INPUT_BITS, ADC_BITS);
+            let want = gemm_exact(&acts, &w, b, c1, c2);
+            assert_eq!(got, want);
+        });
+    }
+
+    #[test]
+    fn cim_saturates_like_python_oracle() {
+        // All-127 x all-127 over c1=64: each bit-plane psum = 64*127 =
+        // 8128, clamped to 127; acc = 127 * (sum_{b=0..6} 2^b - 2^7)
+        //     = 127 * (127 - 256 + 128)  ... compute directly:
+        let b = 1;
+        let (c1, c2) = (64, 1);
+        let acts = vec![127i8; c1];
+        let w = vec![127i8; c1];
+        let got = cim_gemm_ref(&acts, &w, b, c1, c2, 8, 8);
+        // bits 0..6 set for 127: psum 8128 -> clamp 127, weight 2^bit.
+        let expect: i32 = (0..7).map(|bit| 127 << bit).sum();
+        assert_eq!(got[0], expect);
+        // And differs from the exact product.
+        assert_ne!(got[0], 64 * 127 * 127);
+    }
+
+    #[test]
+    fn negative_activations_twos_complement() {
+        // -1 has all 8 bits set: acc = sum(2^0..2^6) - 2^7 = 127-128 = -1.
+        let got = cim_gemm_ref(&[-1i8], &[1i8], 1, 1, 1, 8, 8);
+        assert_eq!(got[0], -1);
+    }
+
+    #[test]
+    fn epilogue_relu_and_clamp() {
+        let out = dequant_relu_quant(&[-50, 300, 100_000], &[1.0, 1.0, 1.0], &[0.0; 3], 3);
+        assert_eq!(out, vec![0, 127, 127]);
+    }
+}

@@ -1,0 +1,3 @@
+//! Test-support substrates.
+
+pub mod prop;

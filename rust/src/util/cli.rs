@@ -1,0 +1,231 @@
+//! Minimal declarative CLI flag parser (the vendored registry has no clap).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, and auto-generated `--help`. Enough for the `voxel-cim`
+//! binary, the examples, and the bench harness.
+
+use std::collections::BTreeMap;
+
+/// One declared option.
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_bool: bool,
+}
+
+/// Declarative argument parser.
+#[derive(Debug, Default)]
+pub struct Args {
+    bin: String,
+    about: &'static str,
+    specs: Vec<OptSpec>,
+    values: BTreeMap<&'static str, String>,
+    bools: BTreeMap<&'static str, bool>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(about: &'static str) -> Self {
+        Self {
+            about,
+            ..Default::default()
+        }
+    }
+
+    /// Declare a string/number option with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.specs.push(OptSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Declare a boolean switch (off by default).
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_bool: true,
+        });
+        self
+    }
+
+    /// Parse from an iterator (first element = argv[0] is NOT expected).
+    pub fn parse_from<I: IntoIterator<Item = String>>(
+        mut self,
+        args: I,
+    ) -> Result<Self, String> {
+        for spec in &self.specs {
+            if spec.is_bool {
+                self.bools.insert(spec.name, false);
+            } else if let Some(d) = &spec.default {
+                self.values.insert(spec.name, d.clone());
+            }
+        }
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}\n{}", self.usage()))?
+                    .clone();
+                if spec.is_bool {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} takes no value"));
+                    }
+                    self.bools.insert(spec.name, true);
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{name} requires a value"))?,
+                    };
+                    self.values.insert(spec.name, v);
+                }
+            } else {
+                self.positional.push(arg);
+            }
+        }
+        Ok(self)
+    }
+
+    /// Parse from `std::env::args()` and exit(2) with usage on error.
+    pub fn parse(mut self) -> Self {
+        let mut env = std::env::args();
+        self.bin = env.next().unwrap_or_else(|| "voxel-cim".into());
+        match self.parse_from(env) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{}\n\nOptions:\n", self.about);
+        for spec in &self.specs {
+            let d = match (&spec.default, spec.is_bool) {
+                (_, true) => " (switch)".to_string(),
+                (Some(d), _) => format!(" (default: {d})"),
+                _ => String::new(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", spec.name, spec.help, d));
+        }
+        s
+    }
+
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|e| panic!("--{name}: not an integer ({e})"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|e| panic!("--{name}: not an integer ({e})"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|e| panic!("--{name}: not a number ({e})"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        *self
+            .bools
+            .get(name)
+            .unwrap_or_else(|| panic!("switch --{name} not declared"))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::new("t")
+            .opt("n", "5", "count")
+            .switch("verbose", "talk")
+            .parse_from(argv(""))
+            .unwrap();
+        assert_eq!(a.get_usize("n"), 5);
+        assert!(!a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = Args::new("t")
+            .opt("n", "5", "count")
+            .opt("name", "x", "label")
+            .parse_from(argv("--n 9 --name=abc"))
+            .unwrap();
+        assert_eq!(a.get_usize("n"), 9);
+        assert_eq!(a.get("name"), "abc");
+    }
+
+    #[test]
+    fn switches_and_positionals() {
+        let a = Args::new("t")
+            .switch("fast", "go fast")
+            .parse_from(argv("--fast cmd arg1"))
+            .unwrap();
+        assert!(a.get_bool("fast"));
+        assert_eq!(a.positional(), &["cmd".to_string(), "arg1".to_string()]);
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        let r = Args::new("t").parse_from(argv("--bogus 1"));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let r = Args::new("t").opt("n", "5", "count").parse_from(argv("--n"));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn help_yields_usage() {
+        let r = Args::new("about-text")
+            .opt("n", "5", "count")
+            .parse_from(argv("--help"));
+        let msg = r.unwrap_err();
+        assert!(msg.contains("about-text"));
+        assert!(msg.contains("--n"));
+    }
+}

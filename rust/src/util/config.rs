@@ -1,0 +1,230 @@
+//! Minimal TOML-subset config parser (no serde/toml in the vendored
+//! registry). Supports exactly what run configs need:
+//!
+//! ```toml
+//! # comment
+//! [section]
+//! key = "string"
+//! count = 42
+//! ratio = 0.5
+//! flag = true
+//! dims = [352, 400, 10]
+//! ```
+//!
+//! Values are stored as typed [`Value`]s keyed by `"section.key"`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context};
+
+/// A parsed config value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    IntList(Vec<i64>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_int_list(&self) -> Option<&[i64]> {
+        match self {
+            Value::IntList(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Flat `section.key -> Value` config map.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    map: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> crate::Result<Self> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected `key = value`", lineno + 1))?;
+            let full_key = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            let value = parse_value(val.trim())
+                .with_context(|| format!("line {}: bad value {val:?}", lineno + 1))?;
+            if map.insert(full_key.clone(), value).is_some() {
+                bail!("duplicate key {full_key:?}");
+            }
+        }
+        Ok(Self { map })
+    }
+
+    pub fn load(path: &str) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(String::as_str)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> crate::Result<Value> {
+    if let Some(inner) = s.strip_prefix('"').and_then(|t| t.strip_suffix('"')) {
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[').and_then(|t| t.strip_suffix(']')) {
+        let items: Result<Vec<i64>, _> = inner
+            .split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(str::parse)
+            .collect();
+        return Ok(Value::IntList(items?));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("unparseable value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# global
+seed = 42
+[scene]
+kind = "urban"     # synthetic scene type
+sparsity = 0.005
+dims = [352, 400, 10]
+dense = false
+"#;
+
+    #[test]
+    fn parses_all_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.int_or("seed", 0), 42);
+        assert_eq!(c.str_or("scene.kind", ""), "urban");
+        assert!((c.float_or("scene.sparsity", 0.0) - 0.005).abs() < 1e-12);
+        assert!(!c.bool_or("scene.dense", true));
+        assert_eq!(
+            c.get("scene.dims").unwrap().as_int_list().unwrap(),
+            &[352, 400, 10]
+        );
+    }
+
+    #[test]
+    fn defaults_for_missing() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.int_or("nope", 7), 7);
+        assert_eq!(c.str_or("nope", "d"), "d");
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(Config::parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let c = Config::parse("s = \"a#b\"").unwrap();
+        assert_eq!(c.str_or("s", ""), "a#b");
+    }
+
+    #[test]
+    fn bad_line_errors() {
+        assert!(Config::parse("not a kv line").is_err());
+        assert!(Config::parse("x = @@").is_err());
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let c = Config::parse("i = 3\nf = 3.5").unwrap();
+        assert_eq!(c.get("i").unwrap().as_int(), Some(3));
+        assert_eq!(c.get("f").unwrap().as_int(), None);
+        assert_eq!(c.get("i").unwrap().as_float(), Some(3.0));
+    }
+}

@@ -1,0 +1,104 @@
+//! Integration: whole-network frames through the coordinator with both
+//! engines; PJRT (when artifacts exist) must agree with native exactly,
+//! since both implement the same bit-serial CIM semantics.
+
+use voxel_cim::coordinator::scheduler::{NetworkRunner, RunnerConfig};
+use voxel_cim::geom::Extent3;
+use voxel_cim::model::layer::{LayerSpec, NetworkSpec, TaskKind};
+use voxel_cim::pointcloud::voxelize::Voxelizer;
+use voxel_cim::runtime::{Runtime, RuntimeConfig};
+use voxel_cim::sparse::tensor::SparseTensor;
+use voxel_cim::spconv::layer::NativeEngine;
+use voxel_cim::util::rng::Pcg64;
+
+fn tiny_net() -> NetworkSpec {
+    use LayerSpec::*;
+    NetworkSpec {
+        name: "tiny",
+        task: TaskKind::Detection,
+        extent: Extent3::new(24, 24, 8),
+        vfe_channels: 4,
+        layers: vec![
+            Subm3 { c_in: 4, c_out: 16 },
+            Subm3 { c_in: 16, c_out: 16 },
+            GConv2 { c_in: 16, c_out: 32 },
+            Subm3 { c_in: 32, c_out: 32 },
+            ToBev,
+            Conv2d { c_in: 128, c_out: 32, k: 3, stride: 1 },
+            Conv2d { c_in: 32, c_out: 32, k: 3, stride: 2 },
+        ],
+    }
+}
+
+fn frame(extent: Extent3, n: usize, seed: u64) -> SparseTensor {
+    let g = Voxelizer::synth_occupancy(extent, n as f64 / extent.volume() as f64, seed);
+    let mut t = SparseTensor::from_coords(extent, g.coords(), 4);
+    let mut rng = Pcg64::new(seed ^ 0xabc);
+    for v in t.features.iter_mut() {
+        *v = rng.next_i8(0, 16);
+    }
+    t
+}
+
+#[test]
+fn native_run_is_deterministic() {
+    let net = tiny_net();
+    let input = frame(net.extent, 250, 201);
+    let runner = NetworkRunner::new(net, RunnerConfig { batch: 64, workers: 2, seed: 5 });
+    let a = runner
+        .run_frame(input.clone(), &mut NativeEngine::default())
+        .unwrap();
+    let b = runner
+        .run_frame(input, &mut NativeEngine::default())
+        .unwrap();
+    assert_eq!(a.total_pairs(), b.total_pairs());
+    assert_eq!(a.head_shape, b.head_shape);
+    let last_a = &a.records.last().unwrap();
+    let last_b = &b.records.last().unwrap();
+    assert_eq!(last_a.out_voxels, last_b.out_voxels);
+}
+
+#[test]
+fn pjrt_and_native_agree_end_to_end() {
+    let Ok(mut rt) = Runtime::load(&RuntimeConfig::discover()) else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    let net = tiny_net();
+    let input = frame(net.extent, 200, 202);
+    let runner = NetworkRunner::new(net, RunnerConfig { batch: 64, workers: 2, seed: 6 });
+    let native = runner
+        .run_frame(input.clone(), &mut NativeEngine::default())
+        .unwrap();
+    let pjrt = runner.run_frame(input, &mut rt).unwrap();
+    assert_eq!(native.head_shape, pjrt.head_shape);
+    assert_eq!(native.total_pairs(), pjrt.total_pairs());
+    // The per-layer output voxel counts and pair counts must agree
+    // exactly (the numerics are bit-identical, so coordinates and
+    // sparsity patterns match).
+    for (a, b) in native.records.iter().zip(&pjrt.records) {
+        assert_eq!(a.pairs, b.pairs, "{}", a.name);
+        assert_eq!(a.out_voxels, b.out_voxels, "{}", a.name);
+    }
+    assert!(rt.gemm_dispatches.get() > 0, "PJRT was never dispatched");
+}
+
+#[test]
+fn batch_size_does_not_change_results() {
+    let net = tiny_net();
+    let input = frame(net.extent, 220, 203);
+    for batch in [16, 64, 1024] {
+        let runner = NetworkRunner::new(
+            tiny_net(),
+            RunnerConfig { batch, workers: 1, seed: 6 },
+        );
+        let res = runner
+            .run_frame(input.clone(), &mut NativeEngine::default())
+            .unwrap();
+        // Head shape and pair totals are invariant under wave batching.
+        // 24x24 voxel grid -> gconv2 -> 12x12 BEV -> stride-2 RPN -> 6x6.
+        assert_eq!(res.head_shape, Some((6, 6, 32)));
+        assert!(res.total_pairs() > 0);
+    }
+    let _ = net;
+}

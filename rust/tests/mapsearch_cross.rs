@@ -1,0 +1,110 @@
+//! Integration: cross-searcher equivalence and ordering properties on
+//! scenes larger and more varied than the unit tests use.
+
+use voxel_cim::geom::Extent3;
+use voxel_cim::mapsearch::{BlockDoms, Doms, MapSearch, OutputMajor, WeightMajor};
+use voxel_cim::pointcloud::voxelize::Voxelizer;
+use voxel_cim::sparse::rulebook::ConvKind;
+use voxel_cim::sparse::{hash_map_search, SparseTensor};
+use voxel_cim::testing::prop::check;
+
+fn searchers() -> Vec<Box<dyn MapSearch>> {
+    vec![
+        Box::new(WeightMajor::default()),
+        Box::new(OutputMajor::default()),
+        Box::new(Doms::default()),
+        Box::new(BlockDoms::default()),
+        Box::new(BlockDoms::with_partition(3, 5)),
+    ]
+}
+
+#[test]
+fn all_searchers_equal_oracle_on_urban_frame() {
+    // A realistic LiDAR-like frame rather than i.i.d. noise.
+    let pts = voxel_cim::pointcloud::scene::SceneConfig::default()
+        .with_points(20_000)
+        .generate();
+    let vx = Voxelizer::new((70.4, 80.0, 4.0), Extent3::new(352, 400, 10), 4);
+    let grid = vx.voxelize(&pts);
+    let t = SparseTensor::from_coords(grid.extent, grid.coords(), 1);
+    let want = hash_map_search(&t, ConvKind::subm3());
+    for s in searchers() {
+        let (rb, stats) = s.search_subm(&t, 3);
+        assert_eq!(rb.pairs, want.pairs, "{} diverged from oracle", s.name());
+        assert!(stats.voxel_reads > 0, "{} reported no traffic", s.name());
+    }
+}
+
+#[test]
+fn all_searchers_equal_oracle_prop() {
+    check("all searchers == oracle", 8, |g| {
+        let e = Extent3::new(g.usize(6, 48), g.usize(6, 48), g.usize(2, 12));
+        let n = g.usize(1, 600);
+        let grid = Voxelizer::synth_clustered(
+            e,
+            (n as f64 / e.volume() as f64).min(0.5),
+            g.usize(1, 6),
+            0.4,
+            g.usize(0, 1 << 30) as u64,
+        );
+        let t = SparseTensor::from_coords(e, grid.coords(), 1);
+        let want = hash_map_search(&t, ConvKind::subm3());
+        for s in searchers() {
+            let (rb, _) = s.search_subm(&t, 3);
+            assert_eq!(rb.pairs, want.pairs, "{} diverged", s.name());
+        }
+    });
+}
+
+#[test]
+fn access_volume_ordering_holds_in_stress_regime() {
+    // The paper's qualitative ordering in the high-res dense regime:
+    // block-DOMS <= DOMS << MARS, and PointAcc pays ~K^3.
+    let e = Extent3::new(512, 512, 16);
+    let n = (512.0f64 * 512.0 * 0.01) as usize; // 2.5D sparsity 0.01
+    let grid = Voxelizer::synth_occupancy(e, n as f64 / e.volume() as f64, 77);
+    let t = SparseTensor::from_coords(e, grid.coords(), 1);
+    let nv = t.len();
+    let (_, wm) = WeightMajor::default().search_subm(&t, 3);
+    let (_, om) = OutputMajor::default().search_subm(&t, 3);
+    let (_, d) = Doms::default().search_subm(&t, 3);
+    let (_, bd) = BlockDoms::with_partition(4, 8).search_subm(&t, 3);
+    let (wm, om, d, bd) = (
+        wm.normalized(nv),
+        om.normalized(nv),
+        d.normalized(nv),
+        bd.normalized(nv),
+    );
+    assert!((wm - 27.0).abs() < 0.5, "weight-major {wm}");
+    assert!(om > d, "MARS {om} should exceed DOMS {d} here");
+    assert!(d <= 2.3, "DOMS {d}");
+    assert!(bd <= d + 0.2, "block-DOMS {bd} vs DOMS {d}");
+}
+
+#[test]
+fn gconv_and_tconv_geometry_roundtrip() {
+    check("gconv/tconv roundtrip via searchers", 6, |g| {
+        let e = Extent3::new(16, 16, 8);
+        let grid = Voxelizer::synth_occupancy(
+            e,
+            g.f64(0.01, 0.2),
+            g.usize(0, 1 << 30) as u64,
+        );
+        let t = SparseTensor::from_coords(e, grid.coords(), 1);
+        let doms = Doms::default();
+        let (down, _) = doms.search(&t, ConvKind::gconv2());
+        // Every output of gconv2 comes from at least one input.
+        assert!(down.out_coords.len() <= t.len());
+        assert!(down.len() >= down.out_coords.len());
+        let dt = SparseTensor::from_coords(down.out_extent, down.out_coords.clone(), 1);
+        let (up, _) = doms.search(&dt, ConvKind::tconv2());
+        // Upsampling recovers at least all original occupied coords that
+        // fed the downsample.
+        for &c in &t.coords {
+            assert!(
+                up.out_coords.binary_search(&c).is_ok(),
+                "lost {c:?} in down-up roundtrip"
+            );
+        }
+    });
+}

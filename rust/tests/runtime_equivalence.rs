@@ -1,0 +1,116 @@
+//! Integration: the PJRT runtime (AOT Pallas kernel artifacts) must be
+//! bit-exact with the native rust reference on the request path.
+//!
+//! Requires `make artifacts`; tests are skipped (with a notice) when the
+//! manifest is absent so `cargo test` works on a fresh checkout.
+
+use voxel_cim::runtime::{Runtime, RuntimeConfig};
+use voxel_cim::spconv::layer::{GemmEngine, NativeEngine};
+use voxel_cim::spconv::quant;
+use voxel_cim::util::rng::Pcg64;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::load(&RuntimeConfig::discover()) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+fn rand_i8(rng: &mut Pcg64, n: usize, lo: i8, hi: i8) -> Vec<i8> {
+    (0..n).map(|_| rng.next_i8(lo, hi)).collect()
+}
+
+#[test]
+fn gemm_bit_exact_full_range() {
+    let Some(mut rt) = runtime() else { return };
+    let mut rng = Pcg64::new(101);
+    for &(b, c1, c2) in &[(64usize, 64usize, 64usize), (17, 64, 64), (64, 32, 48), (1, 1, 1)] {
+        let acts = rand_i8(&mut rng, b * c1, -128, 127);
+        let w = rand_i8(&mut rng, c1 * c2, -128, 127);
+        let got = rt.gemm_i8(&acts, &w, b, c1, c2).unwrap();
+        let want = quant::cim_gemm_ref(&acts, &w, b, c1, c2, 8, 8);
+        assert_eq!(got, want, "mismatch at b={b} c1={c1} c2={c2}");
+    }
+}
+
+#[test]
+fn gemm_matches_native_engine_on_many_shapes() {
+    let Some(mut rt) = runtime() else { return };
+    let mut native = NativeEngine::default();
+    let mut rng = Pcg64::new(102);
+    for trial in 0..12 {
+        let b = rng.range(1, 300);
+        let c1 = rng.range(1, 65);
+        let c2 = rng.range(1, 65);
+        let acts = rand_i8(&mut rng, b * c1, -128, 127);
+        let w = rand_i8(&mut rng, c1 * c2, -128, 127);
+        let got = rt.gemm_i8(&acts, &w, b, c1, c2).unwrap();
+        let want = native.gemm_i8(&acts, &w, b, c1, c2).unwrap();
+        assert_eq!(got, want, "trial {trial}: b={b} c1={c1} c2={c2}");
+    }
+}
+
+#[test]
+fn oversized_batch_chunks_across_largest_artifact() {
+    let Some(mut rt) = runtime() else { return };
+    let mut rng = Pcg64::new(103);
+    let b = 2500; // > the 1024 artifact
+    let (c1, c2) = (64, 64);
+    let acts = rand_i8(&mut rng, b * c1, -128, 127);
+    let w = rand_i8(&mut rng, c1 * c2, -128, 127);
+    let got = rt.gemm_i8(&acts, &w, b, c1, c2).unwrap();
+    let want = quant::cim_gemm_ref(&acts, &w, b, c1, c2, 8, 8);
+    assert_eq!(got, want);
+}
+
+#[test]
+fn epilogue_bit_exact() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg64::new(104);
+    for &(b, c) in &[(64usize, 64usize), (10, 32), (300, 64)] {
+        let psum: Vec<i32> = (0..b * c)
+            .map(|_| (rng.next_below(1 << 20) as i32) - (1 << 19))
+            .collect();
+        let scale: Vec<f32> = (0..c).map(|_| rng.uniform(0.001, 0.1) as f32).collect();
+        let zero: Vec<f32> = (0..c).map(|_| rng.uniform(-2.0, 2.0) as f32).collect();
+        let got = rt.epilogue(&psum, &scale, &zero, b, c).unwrap();
+        let want = quant::dequant_relu_quant(&psum, &scale, &zero, c);
+        assert_eq!(got, want, "epilogue mismatch at b={b} c={c}");
+    }
+}
+
+#[test]
+fn vfe_mean_matches_reference() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg64::new(105);
+    let (v, p, f) = (700usize, 16usize, 4usize); // v > artifact batch 512
+    let mut points = vec![0f32; v * p * f];
+    let mut counts = vec![0i32; v];
+    for i in 0..v {
+        let c = rng.range(1, p + 1);
+        counts[i] = c as i32;
+        for j in 0..c {
+            for k in 0..f {
+                points[(i * p + j) * f + k] = rng.uniform(-5.0, 5.0) as f32;
+            }
+        }
+    }
+    let got = rt.vfe_mean(&points, &counts, v, p, f).unwrap();
+    for i in 0..v {
+        for k in 0..f {
+            let mut s = 0f32;
+            for j in 0..p {
+                s += points[(i * p + j) * f + k];
+            }
+            let want = s / counts[i] as f32;
+            let g = got[i * f + k];
+            assert!(
+                (g - want).abs() < 1e-4,
+                "voxel {i} ch {k}: {g} vs {want}"
+            );
+        }
+    }
+}
