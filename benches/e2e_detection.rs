@@ -4,7 +4,7 @@
 
 use voxel_cim::bench_util::bench;
 use voxel_cim::coordinator::scheduler::{NetworkRunner, RunnerConfig};
-use voxel_cim::mapsearch::Doms;
+use voxel_cim::mapsearch::SearcherKind;
 use voxel_cim::model::second;
 use voxel_cim::pointcloud::voxelize::Voxelizer;
 use voxel_cim::sim::accelerator::{Accelerator, SimOptions};
@@ -15,6 +15,8 @@ use voxel_cim::util::rng::Pcg64;
 
 fn main() {
     println!("# e2e_detection — SECOND / KITTI-like (Table 2 Det row, Fig. 11)");
+    // The engine layer's configured dataflow (paper default: DOMS).
+    let searcher = SearcherKind::Doms.build();
     // Accelerator-model simulation at full resolution.
     let net = second::second();
     let g = Voxelizer::synth_clustered(net.extent, 6.0e-4, 10, 0.35, 31);
@@ -22,9 +24,9 @@ fn main() {
     let acc = Accelerator::default();
     println!("input: {} voxels at {:?}", input.len(), net.extent);
     bench("detection/accel_sim_full", 0, 5, || {
-        acc.simulate(&net, &input, &Doms::default(), &SimOptions::default())
+        acc.simulate(&net, &input, searcher.as_ref(), &SimOptions::default())
     });
-    let rep = acc.simulate(&net, &input, &Doms::default(), &SimOptions::default());
+    let rep = acc.simulate(&net, &input, searcher.as_ref(), &SimOptions::default());
     println!(
         "model: {:.1} fps | {:.2} mJ/frame | paper 106 fps | GPU {:.1} fps | best accel {:.1} fps",
         rep.fps(),

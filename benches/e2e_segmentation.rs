@@ -4,7 +4,7 @@
 
 use voxel_cim::bench_util::bench;
 use voxel_cim::coordinator::scheduler::{NetworkRunner, RunnerConfig};
-use voxel_cim::mapsearch::Doms;
+use voxel_cim::mapsearch::SearcherKind;
 use voxel_cim::model::minkunet;
 use voxel_cim::pointcloud::voxelize::Voxelizer;
 use voxel_cim::sim::accelerator::{Accelerator, SimOptions};
@@ -15,19 +15,21 @@ use voxel_cim::util::rng::Pcg64;
 
 fn main() {
     println!("# e2e_segmentation — MinkUNet / SemanticKITTI-like (Table 2 Seg row)");
+    // The engine layer's configured dataflow (paper default: DOMS).
+    let searcher = SearcherKind::Doms.build();
     let net = minkunet::minkunet();
     let g = Voxelizer::synth_clustered(net.extent, 2.3e-4, 14, 0.3, 41);
     let input = SparseTensor::from_coords(net.extent, g.coords(), 1);
     let acc = Accelerator::default();
     println!("input: {} voxels at {:?}", input.len(), net.extent);
     bench("segmentation/accel_sim_full", 0, 3, || {
-        acc.simulate(&net, &input, &Doms::default(), &SimOptions::default())
+        acc.simulate(&net, &input, searcher.as_ref(), &SimOptions::default())
     });
-    let with = acc.simulate(&net, &input, &Doms::default(), &SimOptions::default());
+    let with = acc.simulate(&net, &input, searcher.as_ref(), &SimOptions::default());
     let without = acc.simulate(
         &net,
         &input,
-        &Doms::default(),
+        searcher.as_ref(),
         &SimOptions { w2b: false, ..Default::default() },
     );
     println!(

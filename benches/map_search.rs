@@ -4,7 +4,7 @@
 
 use voxel_cim::bench_util::bench;
 use voxel_cim::experiments::{sweep_tensor, HIGH_RES, LOW_RES};
-use voxel_cim::mapsearch::{BlockDoms, Doms, MapSearch, OutputMajor, WeightMajor};
+use voxel_cim::mapsearch::{MapSearch, SearcherKind};
 
 fn main() {
     println!("# map_search — Fig. 2(d) / Fig. 9 regimes");
@@ -19,13 +19,10 @@ fn main() {
             voxel_cim::sparse::hash_map_search(&t, voxel_cim::sparse::rulebook::ConvKind::subm3())
         });
         r.print_throughput(n, "voxels");
-        for (name, searcher) in [
-            ("weight_major", Box::new(WeightMajor::default()) as Box<dyn MapSearch>),
-            ("output_major", Box::new(OutputMajor::default())),
-            ("doms", Box::new(Doms::default())),
-            ("block_doms_2x8", Box::new(BlockDoms::default())),
-        ] {
-            let r = bench(&format!("map_search/{name}/{label}"), 1, 10, || {
+        // Every selectable dataflow through the engine layer's dispatch.
+        for kind in SearcherKind::ALL {
+            let searcher = kind.build();
+            let r = bench(&format!("map_search/{kind}/{label}"), 1, 10, || {
                 searcher.search_subm(&t, 3)
             });
             r.print_throughput(n, "voxels");

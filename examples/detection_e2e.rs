@@ -11,7 +11,7 @@
 use std::time::Instant;
 
 use voxel_cim::coordinator::scheduler::{NetworkRunner, RunnerConfig};
-use voxel_cim::mapsearch::Doms;
+use voxel_cim::mapsearch::SearcherKind;
 use voxel_cim::model::second;
 use voxel_cim::pointcloud::scene::SceneConfig;
 use voxel_cim::pointcloud::vfe::{Vfe, VfeKind};
@@ -27,12 +27,24 @@ fn main() -> voxel_cim::Result<()> {
         .opt("frames", "2", "number of frames to stream")
         .opt("points", "18000", "LiDAR returns per frame")
         .opt("seed", "7", "scene seed")
+        .opt(
+            "searcher",
+            "doms",
+            "map-search engine: hash|weight-major|output-major|octree|doms|block-doms",
+        )
         .switch("native", "skip PJRT, use the native engine")
         .parse();
 
+    let searcher: SearcherKind = args.get("searcher").parse().expect("--searcher");
     let net = second::second_small();
-    println!("=== {} | extent {:?} ===", net.name, net.extent);
-    let runner = NetworkRunner::new(net.clone(), RunnerConfig::default());
+    println!("=== {} | extent {:?} | searcher {searcher} ===", net.name, net.extent);
+    let runner = NetworkRunner::new(
+        net.clone(),
+        RunnerConfig {
+            searcher,
+            ..Default::default()
+        },
+    );
     let vx = Voxelizer::new((70.4, 80.0, 4.0), net.extent, 32);
     let vfe = Vfe::new(VfeKind::Simple);
 
@@ -104,7 +116,8 @@ fn main() -> voxel_cim::Result<()> {
     );
     let full_in = SparseTensor::from_coords(full.extent, gd.coords(), 1);
     let acc = Accelerator::default();
-    let rep = acc.simulate(&full, &full_in, &Doms::default(), &SimOptions::default());
+    let sim_searcher = searcher.build();
+    let rep = acc.simulate(&full, &full_in, sim_searcher.as_ref(), &SimOptions::default());
     println!(
         "accelerator model (full-res SECOND, {} voxels): {:.1} fps | {:.2} mJ/frame | paper: 106 fps",
         full_in.len(),

@@ -10,7 +10,7 @@
 
 use voxel_cim::experiments::{sweep_tensor, sweep_tensor_clustered};
 use voxel_cim::geom::Extent3;
-use voxel_cim::mapsearch::{BlockDoms, Doms, MapSearch, OutputMajor, WeightMajor};
+use voxel_cim::mapsearch::{BlockDoms, Doms, MapSearch, OutputMajor, SearcherKind};
 use voxel_cim::sparse::hash_search::hash_table_bytes;
 use voxel_cim::util::cli::Args;
 
@@ -62,9 +62,17 @@ fn main() {
         );
     };
 
-    run("weight-major (PointAcc)", WeightMajor::default().search_subm(&t, 3));
+    // Every selectable dataflow at its paper-default parameters, built
+    // through the same SearcherKind dispatch the serving path uses.
+    for kind in SearcherKind::ALL {
+        let s = kind.build();
+        run(kind.key(), s.search_subm(&t, 3));
+    }
+
+    // Tuned variants under the CLI's buffer / partition knobs.
+    println!("\ntuned (--fifo {fifo}, --bx/--by):");
     run(
-        "output-major (MARS)",
+        "output-major (tuned)",
         OutputMajor {
             buffer_voxels: fifo,
             sorter_len: 64,
@@ -72,7 +80,7 @@ fn main() {
         .search_subm(&t, 3),
     );
     run(
-        "DOMS",
+        "doms (tuned)",
         Doms {
             fifo_voxels: fifo,
             sorter_len: 64,
@@ -86,7 +94,7 @@ fn main() {
         sorter_len: 64,
     };
     run(
-        &format!("block-DOMS ({},{})", bd.bx, bd.by),
+        &format!("block-doms ({},{})", bd.bx, bd.by),
         bd.search_subm(&t, 3),
     );
 }

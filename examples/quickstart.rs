@@ -1,16 +1,17 @@
 //! Quickstart: the whole stack in ~60 lines.
 //!
 //! Generates a synthetic LiDAR frame, voxelizes it, builds the IN-OUT map
-//! with DOMS, and runs one subm3 sparse convolution through the compiled
-//! PJRT artifact (falling back to the native engine when `make artifacts`
-//! hasn't been run).
+//! with the searcher named in `examples/configs/default.toml` (DOMS by
+//! default — edit `searcher = "..."` to swap the dataflow), and runs one
+//! subm3 sparse convolution through the compiled PJRT artifact (falling
+//! back to the native engine when `make artifacts` hasn't been run).
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
 use voxel_cim::geom::Extent3;
-use voxel_cim::mapsearch::{Doms, MapSearch};
+use voxel_cim::mapsearch::{MapSearch, SearcherKind};
 use voxel_cim::pointcloud::scene::SceneConfig;
 use voxel_cim::pointcloud::vfe::{Vfe, VfeKind};
 use voxel_cim::pointcloud::voxelize::Voxelizer;
@@ -44,10 +45,23 @@ fn main() -> voxel_cim::Result<()> {
         4,
     );
 
-    // 3. Map search with DOMS: the paper's O(N) searcher.
-    let (rulebook, stats) = Doms::default().search(&input, voxel_cim::sparse::rulebook::ConvKind::subm3());
+    // 3. Map search through the engine layer's pluggable searcher — any
+    // kind from the run config builds a bit-identical rulebook. Only a
+    // *missing* config falls back to defaults; a config that fails to
+    // parse (or names an unknown searcher) is a real error.
+    let cfg_path = "examples/configs/default.toml";
+    let cfg = if std::path::Path::new(cfg_path).exists() {
+        voxel_cim::util::config::Config::load(cfg_path)?
+    } else {
+        voxel_cim::util::config::Config::default()
+    };
+    let kind = cfg.parsed_or("runner.searcher", SearcherKind::Doms)?;
+    let searcher = kind.build();
+    let (rulebook, stats) =
+        searcher.search(&input, voxel_cim::sparse::rulebook::ConvKind::subm3());
     println!(
-        "DOMS: {} IN-OUT pairs | off-chip access {:.2}x N | {} sorter passes | table {} B",
+        "{}: {} IN-OUT pairs | off-chip access {:.2}x N | {} sorter passes | table {} B",
+        searcher.name(),
         rulebook.len(),
         stats.normalized(input.len()),
         stats.sorter_passes,

@@ -9,7 +9,7 @@
 //! ```
 
 use voxel_cim::coordinator::scheduler::{NetworkRunner, RunnerConfig};
-use voxel_cim::mapsearch::Doms;
+use voxel_cim::mapsearch::SearcherKind;
 use voxel_cim::model::minkunet;
 use voxel_cim::pointcloud::scene::{SceneConfig, SceneKind};
 use voxel_cim::pointcloud::vfe::{Vfe, VfeKind};
@@ -24,11 +24,17 @@ fn main() -> voxel_cim::Result<()> {
     let args = Args::new("MinkUNet end-to-end segmentation on a synthetic frame")
         .opt("points", "15000", "LiDAR returns")
         .opt("seed", "11", "scene seed")
+        .opt(
+            "searcher",
+            "doms",
+            "map-search engine: hash|weight-major|output-major|octree|doms|block-doms",
+        )
         .switch("native", "skip PJRT, use the native engine")
         .parse();
 
+    let searcher: SearcherKind = args.get("searcher").parse().expect("--searcher");
     let net = minkunet::minkunet_small();
-    println!("=== {} | extent {:?} ===", net.name, net.extent);
+    println!("=== {} | extent {:?} | searcher {searcher} ===", net.name, net.extent);
 
     // Clustered scene: segmentation frames have strong local density.
     let pts = SceneConfig {
@@ -52,7 +58,13 @@ fn main() -> voxel_cim::Result<()> {
         4,
     );
 
-    let runner = NetworkRunner::new(net.clone(), RunnerConfig::default());
+    let runner = NetworkRunner::new(
+        net.clone(),
+        RunnerConfig {
+            searcher,
+            ..Default::default()
+        },
+    );
     let res = if args.get_bool("native") {
         runner.run_frame(input, &mut NativeEngine::default())?
     } else {
@@ -94,11 +106,12 @@ fn main() -> voxel_cim::Result<()> {
     let gs = Voxelizer::synth_clustered(full.extent, 2.3e-4, 14, 0.3, args.get_u64("seed"));
     let full_in = SparseTensor::from_coords(full.extent, gs.coords(), 1);
     let acc = Accelerator::default();
-    let with = acc.simulate(&full, &full_in, &Doms::default(), &SimOptions::default());
+    let sim_searcher = searcher.build();
+    let with = acc.simulate(&full, &full_in, sim_searcher.as_ref(), &SimOptions::default());
     let without = acc.simulate(
         &full,
         &full_in,
-        &Doms::default(),
+        sim_searcher.as_ref(),
         &SimOptions { w2b: false, ..Default::default() },
     );
     println!(

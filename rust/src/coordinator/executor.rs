@@ -72,6 +72,11 @@ impl WorkerPool {
         }
     }
 
+    /// Number of worker threads (used by callers to size work chunks).
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
     /// Submit a job; the closure runs on a worker thread.
     pub fn submit<T, F>(&self, f: F) -> JobHandle<T>
     where

@@ -57,31 +57,56 @@ impl PipelineSchedule {
     }
 }
 
+/// Rolling occupancy of the two cores while scheduling.
+#[derive(Clone, Copy, Debug, Default)]
+struct CoreState {
+    /// When the MS core is next available.
+    ms_free: f64,
+    /// When the compute core is free.
+    compute_free: f64,
+}
+
 impl HybridPipeline {
+    fn step(&self, state: &mut CoreState, l: &PhaseTiming) -> (f64, f64, f64, f64) {
+        let ms_start = state.ms_free;
+        let ms_end = ms_start + l.ms;
+        state.ms_free = ms_end;
+        // Compute may start once the fill threshold of *this* layer's
+        // search is done and the compute core is free.
+        let gate = ms_start + l.ms * self.fill_threshold.clamp(0.0, 1.0);
+        let compute_start = gate.max(state.compute_free);
+        // A layer's compute cannot finish before its own MS finishes
+        // delivering pairs; model: compute runs at full rate but its
+        // completion is at least ms_end (pairs arrive throughout MS).
+        let compute_end = (compute_start + l.compute).max(ms_end);
+        state.compute_free = compute_end;
+        (ms_start, ms_end, compute_start, compute_end)
+    }
+
     /// Schedule a frame. `layers[i]` is the timing of layer i; a layer
     /// with `ms == 0` shares the previous search (consecutive subm3).
     pub fn schedule(&self, layers: &[PhaseTiming]) -> PipelineSchedule {
-        let mut spans = Vec::with_capacity(layers.len());
-        let mut ms_free = 0.0f64; // when the MS core is next available
-        let mut compute_free = 0.0f64; // when the compute core is free
+        self.schedule_stream(std::slice::from_ref(&layers))
+    }
+
+    /// Schedule a stream of consecutive frames through the same two
+    /// cores: frame i+1's first map search starts as soon as the MS core
+    /// drains frame i, while frame i still computes — the Fig. 8 pipeline
+    /// extended across frame boundaries, which is what [`StreamServer`]
+    /// realizes with its in-flight frame window.
+    ///
+    /// [`StreamServer`]: crate::coordinator::stream::StreamServer
+    pub fn schedule_stream<L: AsRef<[PhaseTiming]>>(&self, frames: &[L]) -> PipelineSchedule {
+        let mut spans = Vec::new();
+        let mut state = CoreState::default();
         let mut serial = 0.0f64;
-        for l in layers {
-            serial += l.ms + l.compute;
-            let ms_start = ms_free;
-            let ms_end = ms_start + l.ms;
-            ms_free = ms_end;
-            // Compute may start once the fill threshold of *this* layer's
-            // search is done and the compute core is free.
-            let gate = ms_start + l.ms * self.fill_threshold.clamp(0.0, 1.0);
-            let compute_start = gate.max(compute_free);
-            // A layer's compute cannot finish before its own MS finishes
-            // delivering pairs; model: compute runs at full rate but its
-            // completion is at least ms_end (pairs arrive throughout MS).
-            let compute_end = (compute_start + l.compute).max(ms_end);
-            compute_free = compute_end;
-            spans.push((ms_start, ms_end, compute_start, compute_end));
+        for frame in frames {
+            for l in frame.as_ref() {
+                serial += l.ms + l.compute;
+                spans.push(self.step(&mut state, l));
+            }
         }
-        let total = spans.last().map(|s| s.3).unwrap_or(0.0);
+        let total = spans.iter().map(|s| s.3).fold(0.0f64, f64::max);
         PipelineSchedule {
             spans,
             total,
@@ -130,6 +155,36 @@ mod tests {
             PhaseTiming { ms: 0.0, compute: 2.0 }, // shares rulebook
         ]);
         assert!((s.total - 4.1).abs() < 1e-9, "total {}", s.total);
+    }
+
+    #[test]
+    fn stream_schedule_overlaps_frames_on_both_cores() {
+        let frame = vec![
+            PhaseTiming { ms: 1.0, compute: 1.0 },
+            PhaseTiming { ms: 1.0, compute: 1.0 },
+        ];
+        let pipe = HybridPipeline::default();
+        let one = pipe.schedule(&frame);
+        let four = pipe.schedule_stream(&[frame.clone(), frame.clone(), frame.clone(), frame]);
+        // Back-to-back frames keep both cores busy: the stream finishes
+        // well before 4x a single frame's pipelined latency.
+        assert!(four.total < 4.0 * one.total - 1e-9, "{} vs {}", four.total, one.total);
+        // ...but never beats the busy-core lower bound (8 units of MS).
+        assert!(four.total >= 8.0 - 1e-9);
+        assert_eq!(four.spans.len(), 8);
+    }
+
+    #[test]
+    fn stream_of_one_equals_schedule() {
+        let frame = vec![
+            PhaseTiming { ms: 0.7, compute: 1.3 },
+            PhaseTiming { ms: 0.0, compute: 0.4 },
+        ];
+        let pipe = HybridPipeline::default();
+        let a = pipe.schedule(&frame);
+        let b = pipe.schedule_stream(std::slice::from_ref(&frame));
+        assert_eq!(a.spans, b.spans);
+        assert!((a.total - b.total).abs() < 1e-12);
     }
 
     #[test]

@@ -1,7 +1,14 @@
-//! The network scheduler: drives one frame through the full request path
-//! — map search (on the worker pool, MS-wise pipelined) → gather / GEMM /
-//! scatter via a [`GemmEngine`] → BEV flatten → RPN — and reports
-//! per-layer statistics.
+//! The network scheduler: drives frames through the full request path —
+//! map search (on the worker pool, MS-wise pipelined, through whichever
+//! [`SearcherKind`] the config selects) → gather / GEMM / scatter via a
+//! [`GemmEngine`] → BEV flatten → RPN — and reports per-layer statistics.
+//!
+//! Frames run in *lockstep*: [`NetworkRunner::run_frames`] advances every
+//! in-flight frame through the same layer together, searching all frames'
+//! rulebooks in parallel on the pool and packing their rule pairs into
+//! shared GEMM waves (`SpconvLayer::execute_batch`), so PJRT dispatch
+//! overhead amortizes across the stream. A single frame takes the same
+//! path with pooled per-offset gather/GEMM/scatter instead.
 //!
 //! This is the leader loop of the system: pure rust, artifacts already
 //! compiled, no python anywhere.
@@ -10,22 +17,32 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::executor::WorkerPool;
-use crate::geom::Extent3;
-use crate::mapsearch::{AccessStats, Doms, MapSearch};
+use crate::geom::{Coord3, Extent3};
+use crate::mapsearch::{AccessStats, MapSearch, SearcherKind};
 use crate::model::layer::{LayerSpec, NetworkSpec};
 use crate::sparse::rulebook::{ConvKind, Rulebook};
 use crate::sparse::tensor::SparseTensor;
 use crate::spconv::conv2d::{conv2d_im2col, DenseMap};
-use crate::spconv::layer::{GemmEngine, LayerWeights, SpconvLayer};
+use crate::spconv::layer::{GemmEngine, LayerWeights, SpconvLayer, SpconvOutput};
 use crate::spconv::quant;
+use crate::util::config::Config;
 
-/// Scheduler configuration.
-#[derive(Clone, Debug)]
+/// Scheduler configuration — the knobs of the engine layer.
+#[derive(Clone, Copy, Debug)]
 pub struct RunnerConfig {
     /// GEMM wave batch size.
     pub batch: usize,
     /// Worker threads for map search.
     pub workers: usize,
+    /// Worker threads for the compute core's gather/GEMM/scatter (1 =
+    /// serial; only engines that can fork shard — see
+    /// [`GemmEngine::fork`]).
+    pub compute_workers: usize,
+    /// Frames the stream server keeps in flight and packs into shared
+    /// GEMM waves (1 = classic frame-at-a-time serving).
+    pub inflight: usize,
+    /// Which map-search dataflow builds the rulebooks.
+    pub searcher: SearcherKind,
     /// Weight seed (weights are random — hardware cost is value-free).
     pub seed: u64,
 }
@@ -35,8 +52,35 @@ impl Default for RunnerConfig {
         Self {
             batch: 256,
             workers: 2,
+            compute_workers: 2,
+            inflight: 1,
+            searcher: SearcherKind::Doms,
             seed: 0x5EC0,
         }
+    }
+}
+
+impl RunnerConfig {
+    /// Read the `[runner]` section of a run config, falling back to the
+    /// defaults for missing keys. Unknown searcher names and negative
+    /// counts are errors rather than silent wraparound.
+    pub fn from_config(cfg: &Config) -> crate::Result<Self> {
+        let d = Self::default();
+        let non_neg = |key: &str, default: usize| -> crate::Result<usize> {
+            let v = cfg.int_or(key, default as i64);
+            anyhow::ensure!(v >= 0, "{key} must be >= 0, got {v}");
+            Ok(v as usize)
+        };
+        let batch = non_neg("runner.batch", d.batch)?;
+        anyhow::ensure!(batch >= 1, "runner.batch must be >= 1, got {batch}");
+        Ok(Self {
+            batch,
+            workers: non_neg("runner.workers", d.workers)?,
+            compute_workers: non_neg("runner.compute_workers", d.compute_workers)?,
+            inflight: non_neg("runner.inflight", d.inflight)?,
+            searcher: cfg.parsed_or("runner.searcher", d.searcher)?,
+            seed: cfg.int_or("runner.seed", d.seed as i64) as u64,
+        })
     }
 }
 
@@ -62,6 +106,16 @@ pub struct FrameResult {
     pub out_voxels: u64,
     /// Dense head output (detection): (h, w, c).
     pub head_shape: Option<(usize, usize, usize)>,
+    /// FNV-1a over the final output features (head map for detection,
+    /// voxel features for segmentation) — the bit-identity witness the
+    /// engine-layer tests compare across searcher kinds, wave batching,
+    /// and compute pooling.
+    pub checksum: u64,
+    /// Wall-clock of the run that produced this frame. In a lockstep
+    /// [`NetworkRunner::run_frames`] group the frames complete together,
+    /// so every frame of the group reports the *group's* makespan — do
+    /// not sum this across a group; per-frame compute attribution lives
+    /// in `records[..].compute_seconds`.
     pub total_seconds: f64,
 }
 
@@ -77,17 +131,89 @@ impl FrameResult {
     }
 }
 
+/// FNV-1a over raw bytes — the frame checksum.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+fn i8_bytes(v: &[i8]) -> &[u8] {
+    // i8 and u8 share layout; the checksum only needs stable bytes.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len()) }
+}
+
+/// Rolling state of one in-flight frame while the lockstep loop advances
+/// the whole group layer by layer. The tensor sits behind an `Arc` so
+/// pooled layer execution shares it with worker threads without copying.
+struct FrameState {
+    cur: Arc<SparseTensor>,
+    bev: Option<DenseMap>,
+    /// Rulebook shared by consecutive subm3 layers on the same geometry.
+    shared_rb: Option<Arc<Rulebook>>,
+    /// UNet skip connections: gconv2 pushes its input coordinate set;
+    /// tconv2 pops it and prunes its outputs to that set (MinkUNet's
+    /// decoder semantics — without this, coordinates dilate 8x per
+    /// upsampling stage).
+    skip_stack: Vec<(Extent3, Vec<Coord3>)>,
+    records: Vec<LayerRecord>,
+}
+
+/// How one frame obtains its rulebook for a sparse layer.
+enum RbPlan {
+    /// Reuse the previous subm3 search (zero MS time).
+    Reuse(Arc<Rulebook>),
+    /// Computed inline (pruned transposed conv), with stats and seconds.
+    Inline(Arc<Rulebook>, AccessStats, f64),
+    /// Searched on the worker pool; resolved after the join.
+    Pooled,
+}
+
 /// The network runner.
 pub struct NetworkRunner {
     pub net: NetworkSpec,
     pub cfg: RunnerConfig,
+    searcher: Arc<dyn MapSearch + Send + Sync>,
     pool: WorkerPool,
+    compute_pool: Option<WorkerPool>,
 }
 
 impl NetworkRunner {
+    /// Build a runner with the searcher named by `cfg.searcher`.
     pub fn new(net: NetworkSpec, cfg: RunnerConfig) -> Self {
+        let searcher: Arc<dyn MapSearch + Send + Sync> = Arc::from(cfg.searcher.build());
+        Self::with_searcher(net, cfg, searcher)
+    }
+
+    /// Build a runner around a custom searcher instance (non-default
+    /// FIFO/partition parameters, experimental dataflows, ...). The
+    /// `cfg.searcher` kind is ignored in favor of the instance.
+    pub fn with_searcher(
+        net: NetworkSpec,
+        cfg: RunnerConfig,
+        searcher: Arc<dyn MapSearch + Send + Sync>,
+    ) -> Self {
         let pool = WorkerPool::new(cfg.workers.max(1));
-        Self { net, cfg, pool }
+        let compute_pool = if cfg.compute_workers >= 2 {
+            Some(WorkerPool::new(cfg.compute_workers))
+        } else {
+            None
+        };
+        Self {
+            net,
+            cfg,
+            searcher,
+            pool,
+            compute_pool,
+        }
+    }
+
+    /// The active map-search engine.
+    pub fn searcher(&self) -> &dyn MapSearch {
+        self.searcher.as_ref()
     }
 
     /// Run one frame through the network.
@@ -96,162 +222,262 @@ impl NetworkRunner {
         input: SparseTensor,
         engine: &mut E,
     ) -> crate::Result<FrameResult> {
+        Ok(self
+            .run_frames(vec![input], engine)?
+            .pop()
+            .expect("one frame in, one result out"))
+    }
+
+    /// Run a group of in-flight frames through the network in lockstep,
+    /// packing every sparse layer's rule pairs from all frames into
+    /// shared GEMM waves. Per-frame results are bit-identical to running
+    /// each frame alone (GEMM rows are independent, scatter-adds
+    /// commute); only dispatch counts and wall-clock change.
+    pub fn run_frames<E: GemmEngine>(
+        &self,
+        inputs: Vec<SparseTensor>,
+        engine: &mut E,
+    ) -> crate::Result<Vec<FrameResult>> {
+        let nf = inputs.len();
+        if nf == 0 {
+            return Ok(Vec::new());
+        }
         let t0 = Instant::now();
-        let mut records = Vec::new();
-        let mut cur = input;
-        let mut bev: Option<DenseMap> = None;
+        let mut frames: Vec<FrameState> = inputs
+            .into_iter()
+            .map(|cur| FrameState {
+                cur: Arc::new(cur),
+                bev: None,
+                shared_rb: None,
+                skip_stack: Vec::new(),
+                records: Vec::new(),
+            })
+            .collect();
         let mut weight_seed = self.cfg.seed;
 
-        // MS-wise pipelining: the *next* sparse layer's map search runs on
-        // the worker pool while the current layer computes. `pending`
-        // holds the handle for the upcoming layer when its geometry is
-        // already determined (consecutive subm3 share geometry).
-        let mut shared_rb: Option<Arc<Rulebook>> = None;
-        // UNet skip connections: gconv2 pushes its input coordinate set;
-        // tconv2 pops it and prunes its outputs to that set (MinkUNet's
-        // decoder semantics — without this, coordinates dilate 8x per
-        // upsampling stage).
-        let mut skip_stack: Vec<(Extent3, Vec<crate::geom::Coord3>)> = Vec::new();
-
-        let mut i = 0usize;
-        let layers = self.net.layers.clone();
-        while i < layers.len() {
-            let spec = layers[i];
+        for (li, &spec) in self.net.layers.iter().enumerate() {
             match spec {
                 LayerSpec::Subm3 { .. } | LayerSpec::GConv2 { .. } | LayerSpec::TConv2 { .. } => {
                     let kind = spec.conv_kind().unwrap();
                     let (c_in_decl, c_out) = spec.channels();
-                    let c_in = cur.channels;
-                    debug_assert!(
-                        c_in == c_in_decl || i == 0,
-                        "channel drift at layer {i}: {c_in} vs {c_in_decl}"
-                    );
-                    // Map search (shared for consecutive subm3).
-                    if matches!(kind, ConvKind::Generalized { .. }) {
-                        skip_stack.push((cur.extent, cur.coords.clone()));
-                    }
-                    let reuse = matches!(kind, ConvKind::Submanifold { .. })
-                        && shared_rb
-                            .as_ref()
-                            .map(|rb| rb.out_coords == cur.coords)
-                            .unwrap_or(false);
-                    let skip_target = match kind {
-                        ConvKind::Transposed { .. } => skip_stack.pop(),
-                        _ => None,
-                    };
-                    let (rb, access, ms_secs) = if reuse {
-                        (shared_rb.clone().unwrap(), AccessStats::default(), 0.0)
-                    } else if let (ConvKind::Transposed { k, stride }, Some((ext, target))) =
-                        (kind, skip_target)
-                    {
-                        // Pruned transposed conv (UNet decoder): outputs
-                        // restricted to the matching encoder stage.
-                        let t = Instant::now();
-                        let rb = crate::sparse::hash_search::tconv_pruned(
-                            &cur, k, stride, ext, &target,
+                    // Per-frame map search: resolve reuse / pruned-tconv
+                    // inline, fan fresh searches out over the pool (the
+                    // MS-wise side of the Fig. 8 pipeline, now across
+                    // frames as well as layers).
+                    let mut plans: Vec<RbPlan> = Vec::with_capacity(nf);
+                    let mut handles = Vec::new();
+                    for f in frames.iter_mut() {
+                        let c_in = f.cur.channels;
+                        debug_assert!(
+                            c_in == c_in_decl || li == 0,
+                            "channel drift at layer {li}: {c_in} vs {c_in_decl}"
                         );
-                        let access = AccessStats {
-                            voxel_reads: cur.len() as u64 + target.len() as u64,
-                            ..Default::default()
-                        };
-                        shared_rb = None;
-                        (Arc::new(rb), access, t.elapsed().as_secs_f64())
-                    } else {
-                        let coords_tensor =
-                            SparseTensor::from_coords(cur.extent, cur.coords.clone(), 1);
-                        let handle = self.pool.submit(move || {
-                            let t = Instant::now();
-                            let (rb, st) = Doms::default().search(&coords_tensor, kind);
-                            (rb, st, t.elapsed().as_secs_f64())
-                        });
-                        let (rb, st, secs) = handle.join();
-                        let rb = Arc::new(rb);
-                        if matches!(kind, ConvKind::Submanifold { .. }) {
-                            shared_rb = Some(rb.clone());
-                        } else {
-                            shared_rb = None;
+                        if matches!(kind, ConvKind::Generalized { .. }) {
+                            f.skip_stack.push((f.cur.extent, f.cur.coords.clone()));
                         }
-                        (rb, st, secs)
-                    };
+                        let reuse = matches!(kind, ConvKind::Submanifold { .. })
+                            && f.shared_rb
+                                .as_ref()
+                                .map(|rb| rb.out_coords == f.cur.coords)
+                                .unwrap_or(false);
+                        let skip_target = match kind {
+                            ConvKind::Transposed { .. } => f.skip_stack.pop(),
+                            _ => None,
+                        };
+                        if reuse {
+                            plans.push(RbPlan::Reuse(f.shared_rb.clone().unwrap()));
+                        } else if let (
+                            ConvKind::Transposed { k, stride },
+                            Some((ext, target)),
+                        ) = (kind, skip_target)
+                        {
+                            // Pruned transposed conv (UNet decoder):
+                            // outputs restricted to the matching encoder
+                            // stage. Geometry comes from the skip target,
+                            // so this path is searcher-independent.
+                            let t = Instant::now();
+                            let rb = crate::sparse::hash_search::tconv_pruned(
+                                &f.cur, k, stride, ext, &target,
+                            );
+                            let access = AccessStats {
+                                voxel_reads: f.cur.len() as u64 + target.len() as u64,
+                                ..Default::default()
+                            };
+                            f.shared_rb = None;
+                            plans.push(RbPlan::Inline(
+                                Arc::new(rb),
+                                access,
+                                t.elapsed().as_secs_f64(),
+                            ));
+                        } else {
+                            let coords_tensor = SparseTensor::from_coords(
+                                f.cur.extent,
+                                f.cur.coords.clone(),
+                                1,
+                            );
+                            let searcher = Arc::clone(&self.searcher);
+                            handles.push((plans.len(), self.pool.submit(move || {
+                                let t = Instant::now();
+                                let (rb, st) = searcher.search(&coords_tensor, kind);
+                                (rb, st, t.elapsed().as_secs_f64())
+                            })));
+                            plans.push(RbPlan::Pooled);
+                        }
+                    }
+                    let mut searched = handles
+                        .into_iter()
+                        .map(|(idx, h)| (idx, h.join()))
+                        .collect::<Vec<_>>()
+                        .into_iter();
 
+                    // Resolve plans into per-frame (rulebook, stats, ms).
+                    let mut rbs: Vec<(Arc<Rulebook>, AccessStats, f64)> =
+                        Vec::with_capacity(nf);
+                    for (fi, plan) in plans.into_iter().enumerate() {
+                        match plan {
+                            RbPlan::Reuse(rb) => {
+                                rbs.push((rb, AccessStats::default(), 0.0));
+                            }
+                            RbPlan::Inline(rb, st, secs) => rbs.push((rb, st, secs)),
+                            RbPlan::Pooled => {
+                                let (idx, (rb, st, secs)) =
+                                    searched.next().expect("one search per pooled plan");
+                                debug_assert_eq!(idx, fi);
+                                let rb = Arc::new(rb);
+                                frames[fi].shared_rb =
+                                    matches!(kind, ConvKind::Submanifold { .. })
+                                        .then(|| rb.clone());
+                                rbs.push((rb, st, secs));
+                            }
+                        }
+                    }
+
+                    let c_in = frames[0].cur.channels;
                     let weights =
                         LayerWeights::random(spec.kernel_volume(), c_in, c_out, weight_seed);
                     weight_seed = weight_seed.wrapping_add(1);
                     let layer = SpconvLayer::new(weights, self.cfg.batch);
                     let tc = Instant::now();
-                    let out = layer.execute(&cur, &rb, engine)?;
-                    let compute_seconds = tc.elapsed().as_secs_f64();
-                    records.push(LayerRecord {
-                        name: format!("{spec:?}"),
-                        pairs: rb.len() as u64,
-                        out_voxels: rb.out_coords.len() as u64,
-                        gemm_calls: out.gemm_calls,
-                        ms_seconds: ms_secs,
-                        compute_seconds,
-                        access,
-                        workload: rb.workload_per_offset(),
-                    });
-                    cur = out.tensor;
+                    // Single frames and lockstep groups share one path:
+                    // shared GEMM waves, sharded over the compute pool
+                    // when the engine can fork.
+                    let group: Vec<(Arc<SparseTensor>, Arc<Rulebook>)> = frames
+                        .iter()
+                        .zip(&rbs)
+                        .map(|(f, (rb, _, _))| (Arc::clone(&f.cur), Arc::clone(rb)))
+                        .collect();
+                    let outs: Vec<SpconvOutput> =
+                        layer.execute_batch_pooled(&group, engine, self.compute_pool.as_ref())?;
+                    let layer_secs = tc.elapsed().as_secs_f64();
+                    // Attribute the shared compute wall time to frames in
+                    // proportion to their pair counts.
+                    let total_pairs: u64 =
+                        rbs.iter().map(|(rb, _, _)| rb.len() as u64).sum();
+                    for ((f, (rb, access, ms_secs)), out) in
+                        frames.iter_mut().zip(rbs).zip(outs)
+                    {
+                        let share = if total_pairs == 0 {
+                            layer_secs / nf as f64
+                        } else {
+                            layer_secs * rb.len() as f64 / total_pairs as f64
+                        };
+                        f.records.push(LayerRecord {
+                            name: format!("{spec:?}"),
+                            pairs: rb.len() as u64,
+                            out_voxels: rb.out_coords.len() as u64,
+                            gemm_calls: out.gemm_calls,
+                            ms_seconds: ms_secs,
+                            compute_seconds: share,
+                            access,
+                            workload: rb.workload_per_offset(),
+                        });
+                        f.cur = Arc::new(out.tensor);
+                    }
                 }
                 LayerSpec::ToBev => {
-                    bev = Some(to_bev(&cur));
-                    records.push(LayerRecord {
-                        name: "ToBev".into(),
-                        pairs: 0,
-                        out_voxels: cur.len() as u64,
-                        gemm_calls: 0,
-                        ms_seconds: 0.0,
-                        compute_seconds: 0.0,
-                        access: AccessStats::default(),
-                        workload: Vec::new(),
-                    });
+                    for f in frames.iter_mut() {
+                        f.bev = Some(to_bev(&f.cur));
+                        f.records.push(LayerRecord {
+                            name: "ToBev".into(),
+                            pairs: 0,
+                            out_voxels: f.cur.len() as u64,
+                            gemm_calls: 0,
+                            ms_seconds: 0.0,
+                            compute_seconds: 0.0,
+                            access: AccessStats::default(),
+                            workload: Vec::new(),
+                        });
+                    }
                 }
                 LayerSpec::Conv2d { c_out, k, stride, .. } => {
-                    let x = bev.take().expect("Conv2d before ToBev");
-                    let tc = Instant::now();
-                    let (y, secs) =
-                        run_conv2d(&x, c_out, k, stride, 1, weight_seed, engine)?;
+                    let w = conv2d_weights(
+                        frames[0].bev.as_ref().expect("Conv2d before ToBev").c,
+                        c_out,
+                        k,
+                        weight_seed,
+                    );
                     weight_seed = weight_seed.wrapping_add(1);
-                    let _ = tc;
-                    records.push(LayerRecord {
-                        name: format!("{spec:?}"),
-                        pairs: (y.h * y.w) as u64 * (k * k) as u64,
-                        out_voxels: (y.h * y.w) as u64,
-                        gemm_calls: 0,
-                        ms_seconds: 0.0,
-                        compute_seconds: secs,
-                        access: AccessStats::default(),
-                        workload: Vec::new(),
-                    });
-                    bev = Some(y);
+                    for f in frames.iter_mut() {
+                        let x = f.bev.take().expect("Conv2d before ToBev");
+                        let (y, secs) = run_conv2d(&x, &w, c_out, k, stride, 1, engine)?;
+                        f.records.push(LayerRecord {
+                            name: format!("{spec:?}"),
+                            pairs: (y.h * y.w) as u64 * (k * k) as u64,
+                            out_voxels: (y.h * y.w) as u64,
+                            gemm_calls: 0,
+                            ms_seconds: 0.0,
+                            compute_seconds: secs,
+                            access: AccessStats::default(),
+                            workload: Vec::new(),
+                        });
+                        f.bev = Some(y);
+                    }
                 }
                 LayerSpec::Deconv2d { c_out, k, up, .. } => {
-                    let x = bev.take().expect("Deconv2d before ToBev");
-                    let (y, secs) = run_conv2d(&x, c_out, k, 1, up, weight_seed, engine)?;
+                    let w = conv2d_weights(
+                        frames[0].bev.as_ref().expect("Deconv2d before ToBev").c,
+                        c_out,
+                        k,
+                        weight_seed,
+                    );
                     weight_seed = weight_seed.wrapping_add(1);
-                    records.push(LayerRecord {
-                        name: format!("{spec:?}"),
-                        pairs: (y.h * y.w) as u64 * (k * k) as u64,
-                        out_voxels: (y.h * y.w) as u64,
-                        gemm_calls: 0,
-                        ms_seconds: 0.0,
-                        compute_seconds: secs,
-                        access: AccessStats::default(),
-                        workload: Vec::new(),
-                    });
-                    bev = Some(y);
+                    for f in frames.iter_mut() {
+                        let x = f.bev.take().expect("Deconv2d before ToBev");
+                        let (y, secs) = run_conv2d(&x, &w, c_out, k, 1, up, engine)?;
+                        f.records.push(LayerRecord {
+                            name: format!("{spec:?}"),
+                            pairs: (y.h * y.w) as u64 * (k * k) as u64,
+                            out_voxels: (y.h * y.w) as u64,
+                            gemm_calls: 0,
+                            ms_seconds: 0.0,
+                            compute_seconds: secs,
+                            access: AccessStats::default(),
+                            workload: Vec::new(),
+                        });
+                        f.bev = Some(y);
+                    }
                 }
             }
-            i += 1;
         }
 
-        let head_shape = bev.as_ref().map(|b| (b.h, b.w, b.c));
-        Ok(FrameResult {
-            out_voxels: cur.len() as u64,
-            records,
-            head_shape,
-            total_seconds: t0.elapsed().as_secs_f64(),
-        })
+        let total = t0.elapsed().as_secs_f64();
+        Ok(frames
+            .into_iter()
+            .map(|f| {
+                let head_shape = f.bev.as_ref().map(|b| (b.h, b.w, b.c));
+                let checksum = match &f.bev {
+                    Some(b) => fnv1a(i8_bytes(&b.data)),
+                    None => fnv1a(i8_bytes(&f.cur.features)),
+                };
+                FrameResult {
+                    out_voxels: f.cur.len() as u64,
+                    records: f.records,
+                    head_shape,
+                    checksum,
+                    total_seconds: total,
+                }
+            })
+            .collect())
     }
 }
 
@@ -283,20 +509,25 @@ fn upsample(x: &DenseMap, up: usize) -> DenseMap {
     y
 }
 
+/// RPN weights for one dense layer, generated once per layer and shared
+/// by every in-flight frame (matching the single-frame seed sequence).
+fn conv2d_weights(c_in: usize, c_out: usize, k: usize, seed: u64) -> Vec<i8> {
+    let mut rng = crate::util::rng::Pcg64::new(seed);
+    (0..k * k * c_in * c_out).map(|_| rng.next_i8(-16, 16)).collect()
+}
+
 fn run_conv2d<E: GemmEngine>(
     x: &DenseMap,
+    w: &[i8],
     c_out: usize,
     k: usize,
     stride: usize,
     up: usize,
-    seed: u64,
     engine: &mut E,
 ) -> crate::Result<(DenseMap, f64)> {
     let t = Instant::now();
     let x = upsample(x, up);
-    let mut rng = crate::util::rng::Pcg64::new(seed);
-    let w: Vec<i8> = (0..k * k * x.c * c_out).map(|_| rng.next_i8(-16, 16)).collect();
-    let (psums, ho, wo) = conv2d_im2col(&x, &w, k, stride, c_out, engine)?;
+    let (psums, ho, wo) = conv2d_im2col(&x, w, k, stride, c_out, engine)?;
     let scale = vec![0.03f32; c_out];
     let zero = vec![0f32; c_out];
     let feats = quant::dequant_relu_quant(&psums, &scale, &zero, c_out);
@@ -352,6 +583,7 @@ mod tests {
             batch: 128,
             workers: 2,
             seed: 7,
+            ..Default::default()
         });
         let input = frame(Extent3::new(176, 200, 10), 1500, 4, 71);
         let res = runner.run_frame(input, &mut NativeEngine::default()).unwrap();
@@ -377,6 +609,7 @@ mod tests {
             batch: 128,
             workers: 2,
             seed: 8,
+            ..Default::default()
         });
         let input = frame(Extent3::new(128, 128, 16), 1200, 4, 72);
         let res = runner.run_frame(input, &mut NativeEngine::default()).unwrap();
@@ -384,5 +617,79 @@ mod tests {
         assert!(res.out_voxels > 0);
         // UNet output voxel count >= input (upsampled back + dilation).
         assert!(res.records.last().unwrap().out_voxels >= 1000);
+    }
+
+    #[test]
+    fn lockstep_group_matches_single_frame_results() {
+        let net = second::second_small();
+        let cfg = RunnerConfig {
+            batch: 96,
+            workers: 2,
+            seed: 9,
+            ..Default::default()
+        };
+        let runner = NetworkRunner::new(net, cfg);
+        let inputs: Vec<SparseTensor> = (0..3)
+            .map(|i| frame(Extent3::new(176, 200, 10), 900 + 150 * i, 4, 80 + i as u64))
+            .collect();
+        let batched = runner
+            .run_frames(inputs.clone(), &mut NativeEngine::default())
+            .unwrap();
+        for (input, got) in inputs.into_iter().zip(&batched) {
+            let want = runner
+                .run_frame(input, &mut NativeEngine::default())
+                .unwrap();
+            assert_eq!(want.checksum, got.checksum, "frame outputs diverged");
+            assert_eq!(want.head_shape, got.head_shape);
+            assert_eq!(want.total_pairs(), got.total_pairs());
+            for (a, b) in want.records.iter().zip(&got.records) {
+                assert_eq!(a.pairs, b.pairs, "{}", a.name);
+                assert_eq!(a.out_voxels, b.out_voxels, "{}", a.name);
+            }
+        }
+    }
+
+    #[test]
+    fn every_searcher_kind_yields_identical_frame_checksums() {
+        let net = minkunet::minkunet_small();
+        let input = frame(Extent3::new(128, 128, 16), 800, 4, 91);
+        let mut checksums = Vec::new();
+        for kind in SearcherKind::ALL {
+            let runner = NetworkRunner::new(
+                net.clone(),
+                RunnerConfig {
+                    searcher: kind,
+                    seed: 10,
+                    ..Default::default()
+                },
+            );
+            let res = runner
+                .run_frame(input.clone(), &mut NativeEngine::default())
+                .unwrap();
+            checksums.push((kind, res.checksum));
+        }
+        let want = checksums[0].1;
+        for (kind, got) in checksums {
+            assert_eq!(got, want, "{kind} changed the frame output");
+        }
+    }
+
+    #[test]
+    fn runner_config_parses_from_run_config() {
+        let cfg = Config::parse(
+            "[runner]\nbatch = 128\nworkers = 3\ncompute_workers = 4\ninflight = 2\nsearcher = \"octree\"\nseed = 99",
+        )
+        .unwrap();
+        let rc = RunnerConfig::from_config(&cfg).unwrap();
+        assert_eq!(rc.batch, 128);
+        assert_eq!(rc.workers, 3);
+        assert_eq!(rc.compute_workers, 4);
+        assert_eq!(rc.inflight, 2);
+        assert_eq!(rc.searcher, SearcherKind::Octree);
+        assert_eq!(rc.seed, 99);
+        // Missing section -> defaults.
+        let rc = RunnerConfig::from_config(&Config::parse("").unwrap()).unwrap();
+        assert_eq!(rc.searcher, SearcherKind::Doms);
+        assert_eq!(rc.batch, 256);
     }
 }

@@ -3,9 +3,9 @@
 //! on/off, and the octree table-aided alternative — each isolating one
 //! knob of the Voxel-CIM design.
 
-use crate::experiments::{print_table, sweep_tensor, HIGH_RES};
+use crate::experiments::{print_table, sweep_tensor, HIGH_RES, LOW_RES};
 use crate::cim::w2b::w2b_allocate;
-use crate::mapsearch::{Doms, MapSearch, OctreeSearch};
+use crate::mapsearch::{Doms, MapSearch, OctreeSearch, SearcherKind};
 use crate::model::{minkunet, second};
 use crate::pointcloud::voxelize::Voxelizer;
 use crate::sim::accelerator::{Accelerator, SimOptions};
@@ -84,6 +84,30 @@ pub fn octree_vs_doms(seed: u64) -> Vec<(String, f64, u64, u64)> {
     rows
 }
 
+/// Ablation E: every searcher the engine layer can serve with, at both
+/// paper resolutions — normalized access volume and table state, all
+/// through the same [`SearcherKind`] dispatch the request path uses.
+/// (The rulebooks are bit-identical by the engine-layer property test;
+/// this sweep quantifies what the *choice* costs.)
+pub fn searcher_sweep(seed: u64) -> Vec<(SearcherKind, f64, f64, u64)> {
+    let low = sweep_tensor(LOW_RES, 0.005, seed);
+    let high = sweep_tensor(HIGH_RES, 0.005, seed);
+    SearcherKind::ALL
+        .iter()
+        .map(|&kind| {
+            let s = kind.build();
+            let (_, sl) = s.search_subm(&low, 3);
+            let (_, sh) = s.search_subm(&high, 3);
+            (
+                kind,
+                sl.normalized(low.len()),
+                sh.normalized(high.len()),
+                sh.table_bytes,
+            )
+        })
+        .collect()
+}
+
 pub fn print_all(seed: u64) {
     print_table(
         "Ablation A — DOMS FIFO capacity (high res, s=0.005)",
@@ -130,6 +154,21 @@ pub fn print_all(seed: u64) {
             })
             .collect::<Vec<_>>(),
     );
+    print_table(
+        "Ablation E — engine-layer searcher sweep (s=0.005)",
+        &["searcher", "low-res access", "high-res access", "table built"],
+        &searcher_sweep(seed)
+            .iter()
+            .map(|(k, lo, hi, t)| {
+                vec![
+                    k.key().to_string(),
+                    format!("{lo:.2}x"),
+                    format!("{hi:.2}x"),
+                    crate::util::human_bytes(*t),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
 }
 
 #[cfg(test)]
@@ -165,6 +204,21 @@ mod tests {
             assert!(pipelined <= serial + 1e-9, "{net}");
             assert!(gain >= 1.0);
         }
+    }
+
+    #[test]
+    fn searcher_sweep_reproduces_the_paper_ordering() {
+        let rows = searcher_sweep(75);
+        assert_eq!(rows.len(), SearcherKind::ALL.len());
+        let get = |k: SearcherKind| rows.iter().find(|r| r.0 == k).unwrap();
+        let wm = get(SearcherKind::WeightMajor);
+        let om = get(SearcherKind::OutputMajor);
+        let doms = get(SearcherKind::Doms);
+        // PointAcc pays ~K^3 at both resolutions; MARS deteriorates at
+        // high resolution while DOMS stays stable O(2N).
+        assert!((wm.1 - 27.0).abs() < 0.5 && (wm.2 - 27.0).abs() < 0.5);
+        assert!(om.2 > doms.2, "MARS {:.2} should exceed DOMS {:.2}", om.2, doms.2);
+        assert!(doms.2 <= 2.3);
     }
 
     #[test]

@@ -22,7 +22,9 @@
 //! once to HLO text in `artifacts/`, and [`runtime`] loads + executes them
 //! through the PJRT CPU client (`xla` crate).
 //!
-//! See `DESIGN.md` for the full module map and experiment index.
+//! See `DESIGN.md` (repo root) for the full module map and experiment
+//! index, and `examples/configs/default.toml` for the engine-layer run
+//! config (`[runner] searcher = ...`, wave batching, worker counts).
 
 pub mod cim;
 pub mod coordinator;
@@ -47,9 +49,10 @@ pub type Result<T> = anyhow::Result<T>;
 pub mod prelude {
     pub use crate::cim::{CimConfig, EnergyModel, W2bAllocation};
     pub use crate::geom::{Coord3, KernelOffsets};
-    pub use crate::coordinator::{NetworkRunner, RunnerConfig, StreamServer};
+    pub use crate::coordinator::{NetworkRunner, RunnerConfig, StreamReport, StreamServer};
     pub use crate::mapsearch::{
-        AccessStats, BlockDoms, Doms, MapSearch, OctreeSearch, OutputMajor, WeightMajor,
+        AccessStats, BlockDoms, Doms, HashSearch, MapSearch, OctreeSearch, OutputMajor,
+        SearcherKind, WeightMajor,
     };
     pub use crate::model::{minkunet, second, LayerSpec, NetworkSpec};
     pub use crate::pointcloud::{SceneConfig, SceneKind, Voxelizer};

@@ -27,6 +27,12 @@ fn main() -> voxel_cim::Result<()> {
     .opt("points", "20000", "LiDAR points per synthetic frame")
     .opt("extent", "small", "grid for run-*: small|full")
     .opt("config", "", "TOML run config (see examples/configs/)")
+    .opt(
+        "searcher",
+        "",
+        "map-search engine: hash|weight-major|output-major|octree|doms|block-doms \
+         (overrides the config; default doms)",
+    )
     .switch("native", "use the native GEMM engine instead of PJRT artifacts")
     .parse();
 
@@ -130,11 +136,15 @@ fn run_net(detection: bool, args: &Args) -> voxel_cim::Result<()> {
         4,
     );
 
-    let runner_cfg = RunnerConfig {
-        batch: cfg.int_or("runner.batch", 256) as usize,
-        workers: cfg.int_or("runner.workers", 2) as usize,
-        ..Default::default()
-    };
+    let mut runner_cfg = RunnerConfig::from_config(&cfg)?;
+    match args.get("searcher") {
+        "" => {}
+        s => runner_cfg.searcher = s.parse().map_err(anyhow::Error::msg)?,
+    }
+    println!(
+        "engine layer: searcher={} batch={} workers={} compute_workers={}",
+        runner_cfg.searcher, runner_cfg.batch, runner_cfg.workers, runner_cfg.compute_workers
+    );
     let runner = NetworkRunner::new(net, runner_cfg);
     let res = if args.get_bool("native") {
         let mut engine = NativeEngine::default();
@@ -182,6 +192,11 @@ fn info() -> voxel_cim::Result<()> {
     println!("  weight capacity: {} int8", cim.weight_capacity());
     println!("  peak throughput: {:.1} TOPS @ {:.0} MHz", cim.peak_tops(), cim.freq_hz / 1e6);
     println!("  peak efficiency: {:.2} TOPS/W", em.peak_tops_per_watt(&cim));
+    let searchers: Vec<&str> = voxel_cim::mapsearch::SearcherKind::ALL
+        .iter()
+        .map(|k| k.key())
+        .collect();
+    println!("  searchers: {}", searchers.join(", "));
     match Runtime::load(&RuntimeConfig::discover()) {
         Ok(rt) => println!("  artifacts: loaded (GEMM batches {:?})", rt.gemm_batches()),
         Err(e) => println!("  artifacts: NOT loaded ({e:#}) — run `make artifacts`"),

@@ -32,6 +32,7 @@ pub use octree::OctreeSearch;
 pub use output_major::OutputMajor;
 pub use weight_major::WeightMajor;
 
+use crate::sparse::hash_search::{hash_map_search, hash_table_bytes};
 use crate::sparse::rulebook::{ConvKind, Rulebook};
 use crate::sparse::tensor::SparseTensor;
 
@@ -103,6 +104,110 @@ pub trait MapSearch {
     }
 }
 
+/// The table-aided oracle as a [`MapSearch`] engine: O(N) streaming reads
+/// against an off-chip-resident hash table sized for the whole grid — the
+/// ">100 MB table" baseline of Fig. 2(d). Rulebooks are bit-identical to
+/// every other searcher by construction (it *is* the oracle).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HashSearch;
+
+impl MapSearch for HashSearch {
+    fn name(&self) -> &'static str {
+        "hash table-aided (oracle)"
+    }
+
+    fn search_subm(&self, input: &SparseTensor, k: usize) -> (Rulebook, AccessStats) {
+        let rb = hash_map_search(input, ConvKind::Submanifold { k });
+        let stats = AccessStats {
+            voxel_reads: input.len() as u64,
+            table_bytes: hash_table_bytes(input.extent),
+            ..Default::default()
+        };
+        (rb, stats)
+    }
+}
+
+/// The configurable searcher selector of the engine layer: every
+/// interchangeable map-search dataflow, nameable from a run config or CLI
+/// flag and constructible as a boxed [`MapSearch`] trait object.
+///
+/// This is what `RunnerConfig.searcher` stores and what the coordinator
+/// dispatches through — no call site hardcodes a concrete searcher.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SearcherKind {
+    /// Table-aided oracle (O(N) access, grid-sized table).
+    Hash,
+    /// PointAcc-style weight-major (O(K³·N)).
+    WeightMajor,
+    /// MARS-style output-major (buffer-sensitive).
+    OutputMajor,
+    /// SpOctA-class octree-encoding table-aided.
+    Octree,
+    /// The paper's depth-encoding searcher (default).
+    #[default]
+    Doms,
+    /// Block-partitioned DOMS at the paper's (2, 8) partition.
+    BlockDoms,
+}
+
+impl SearcherKind {
+    /// Every selectable searcher, in ablation-table order.
+    pub const ALL: [SearcherKind; 6] = [
+        SearcherKind::Hash,
+        SearcherKind::WeightMajor,
+        SearcherKind::OutputMajor,
+        SearcherKind::Octree,
+        SearcherKind::Doms,
+        SearcherKind::BlockDoms,
+    ];
+
+    /// The config/CLI spelling (`searcher = "doms"` etc.).
+    pub fn key(&self) -> &'static str {
+        match self {
+            SearcherKind::Hash => "hash",
+            SearcherKind::WeightMajor => "weight-major",
+            SearcherKind::OutputMajor => "output-major",
+            SearcherKind::Octree => "octree",
+            SearcherKind::Doms => "doms",
+            SearcherKind::BlockDoms => "block-doms",
+        }
+    }
+
+    /// Parse a config/CLI spelling (accepts `-` and `_` separators).
+    pub fn parse(s: &str) -> Option<SearcherKind> {
+        let norm = s.trim().to_ascii_lowercase().replace('_', "-");
+        Self::ALL.iter().copied().find(|k| k.key() == norm)
+    }
+
+    /// Construct the searcher with its paper-default parameters.
+    pub fn build(&self) -> Box<dyn MapSearch + Send + Sync> {
+        match self {
+            SearcherKind::Hash => Box::new(HashSearch),
+            SearcherKind::WeightMajor => Box::new(WeightMajor::default()),
+            SearcherKind::OutputMajor => Box::new(OutputMajor::default()),
+            SearcherKind::Octree => Box::new(OctreeSearch::default()),
+            SearcherKind::Doms => Box::new(Doms::default()),
+            SearcherKind::BlockDoms => Box::new(BlockDoms::default()),
+        }
+    }
+}
+
+impl std::str::FromStr for SearcherKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Self::parse(s).ok_or_else(|| {
+            let names: Vec<&str> = Self::ALL.iter().map(|k| k.key()).collect();
+            format!("unknown searcher {s:?} (expected one of {})", names.join(", "))
+        })
+    }
+}
+
+impl std::fmt::Display for SearcherKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.key())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -132,5 +237,32 @@ mod tests {
         });
         assert_eq!(a.voxel_reads, 15);
         assert_eq!(a.table_bytes, 100);
+    }
+
+    #[test]
+    fn kind_roundtrips_through_key() {
+        for k in SearcherKind::ALL {
+            assert_eq!(SearcherKind::parse(k.key()), Some(k));
+            assert_eq!(k.key().parse::<SearcherKind>().unwrap(), k);
+        }
+        assert_eq!(SearcherKind::parse("BLOCK_DOMS"), Some(SearcherKind::BlockDoms));
+        assert_eq!(SearcherKind::parse("nope"), None);
+        assert!("nope".parse::<SearcherKind>().is_err());
+        assert_eq!(SearcherKind::default(), SearcherKind::Doms);
+    }
+
+    #[test]
+    fn built_searchers_are_dispatchable_objects() {
+        use crate::geom::Extent3;
+        use crate::pointcloud::voxelize::Voxelizer;
+        let e = Extent3::new(12, 12, 4);
+        let g = Voxelizer::synth_occupancy(e, 0.1, 9);
+        let t = SparseTensor::from_coords(e, g.coords(), 1);
+        let want = hash_map_search(&t, ConvKind::subm3());
+        for kind in SearcherKind::ALL {
+            let s: Box<dyn MapSearch + Send + Sync> = kind.build();
+            let (rb, _) = s.search_subm(&t, 3);
+            assert_eq!(rb.pairs, want.pairs, "{kind} diverged from oracle");
+        }
     }
 }

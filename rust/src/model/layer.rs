@@ -43,6 +43,12 @@ impl LayerSpec {
         }
     }
 
+    /// Whether this layer runs on the sparse Spconv3D path (map search +
+    /// gather/GEMM/scatter) as opposed to the dense BEV/RPN path.
+    pub fn is_sparse(&self) -> bool {
+        self.conv_kind().is_some()
+    }
+
     pub fn channels(&self) -> (usize, usize) {
         match *self {
             LayerSpec::Subm3 { c_in, c_out }

@@ -8,7 +8,18 @@
 //! `artifacts/` has not been built.
 
 pub mod client;
+
+#[cfg(feature = "pjrt")]
 pub mod gemm;
 
+// Without the `pjrt` feature the `xla` crate is not linked; a stub
+// `Runtime` with the same API keeps every caller compiling and reports
+// at `load()` time that artifacts need the feature. `NativeEngine`
+// remains the execution fallback either way.
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use self::stub as gemm;
+
 pub use client::{Artifact, ArtifactKind, Manifest, RuntimeConfig};
-pub use gemm::Runtime;
+pub use self::gemm::Runtime;

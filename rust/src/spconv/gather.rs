@@ -81,6 +81,49 @@ pub fn gather_batches(rb: &Rulebook, batch: usize) -> (Vec<GatherBatch>, GatherS
     (out, stats)
 }
 
+/// One shared GEMM wave spanning several in-flight frames: all rows MAC
+/// against the same offset's resident sub-matrix, so the engine sees one
+/// dispatch regardless of how many frames contributed rows.
+#[derive(Clone, Debug)]
+pub struct MultiGatherBatch {
+    pub offset: u16,
+    /// `(frame, input, output)` — input/output index into that frame's
+    /// tensor / rulebook output set.
+    pub rows: Vec<(u32, u32, u32)>,
+}
+
+/// Pack the rule pairs of several frames' rulebooks (same layer, same
+/// kernel) into shared waves of up to `batch` rows per dispatch. Frames
+/// are concatenated per offset in frame order, so every row of every
+/// frame is covered exactly once and partial per-frame waves merge into
+/// full shared dispatches — the stream-level amortization of PJRT
+/// dispatch overhead.
+pub fn gather_batches_multi(rbs: &[&Rulebook], batch: usize) -> Vec<MultiGatherBatch> {
+    assert!(batch > 0);
+    assert!(!rbs.is_empty());
+    let k_vol = rbs[0].kind.kernel_volume();
+    assert!(
+        rbs.iter().all(|rb| rb.kind.kernel_volume() == k_vol),
+        "rulebooks of one wave group must share the kernel"
+    );
+    let per_frame: Vec<Vec<Vec<crate::sparse::rulebook::RulePair>>> =
+        rbs.iter().map(|rb| rb.pairs_by_offset()).collect();
+    let mut out = Vec::new();
+    for d in 0..k_vol {
+        let mut rows: Vec<(u32, u32, u32)> = Vec::new();
+        for (f, groups) in per_frame.iter().enumerate() {
+            rows.extend(groups[d].iter().map(|p| (f as u32, p.input, p.output)));
+        }
+        for chunk in rows.chunks(batch) {
+            out.push(MultiGatherBatch {
+                offset: d as u16,
+                rows: chunk.to_vec(),
+            });
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,6 +173,46 @@ mod tests {
             stats.reuse_fraction() > 0.3,
             "reuse {:.3} too low",
             stats.reuse_fraction()
+        );
+    }
+
+    #[test]
+    fn multi_frame_waves_cover_every_frame_exactly_once() {
+        let (_, rb1) = rulebook(250, 54);
+        let (_, rb2) = rulebook(90, 55);
+        let waves = gather_batches_multi(&[&rb1, &rb2], 48);
+        assert!(waves.iter().all(|w| !w.rows.is_empty() && w.rows.len() <= 48));
+        for (f, rb) in [(0u32, &rb1), (1u32, &rb2)] {
+            let mut got: Vec<(u16, u32, u32)> = waves
+                .iter()
+                .flat_map(|w| {
+                    w.rows
+                        .iter()
+                        .filter(|r| r.0 == f)
+                        .map(move |&(_, i, o)| (w.offset, i, o))
+                })
+                .collect();
+            got.sort_unstable();
+            let mut want: Vec<(u16, u32, u32)> =
+                rb.pairs.iter().map(|p| (p.offset, p.input, p.output)).collect();
+            want.sort_unstable();
+            assert_eq!(got, want, "frame {f} coverage");
+        }
+    }
+
+    #[test]
+    fn multi_frame_waves_need_fewer_dispatches_than_per_frame() {
+        // Two frames whose per-offset groups only part-fill a wave merge
+        // into shared dispatches.
+        let (_, rb1) = rulebook(300, 56);
+        let (_, rb2) = rulebook(300, 57);
+        let batch = 256;
+        let solo: usize =
+            gather_batches(&rb1, batch).0.len() + gather_batches(&rb2, batch).0.len();
+        let merged = gather_batches_multi(&[&rb1, &rb2], batch).len();
+        assert!(
+            merged < solo,
+            "expected shared waves to amortize dispatches: {merged} vs {solo}"
         );
     }
 

@@ -9,9 +9,12 @@
 //! is the seam between this engine and the compiled PJRT artifacts (or
 //! the native fallback).
 
+use std::sync::Arc;
+
+use crate::coordinator::executor::WorkerPool;
 use crate::sparse::rulebook::Rulebook;
 use crate::sparse::tensor::SparseTensor;
-use crate::spconv::gather::gather_batches;
+use crate::spconv::gather::{gather_batches, gather_batches_multi};
 use crate::spconv::quant;
 
 /// CIM sub-matrix tile edge (must match `python/compile/aot.py::TILE_C`).
@@ -32,6 +35,16 @@ pub trait GemmEngine {
     /// Number of GEMM dispatches issued (for pipeline accounting).
     fn dispatches(&self) -> u64 {
         0
+    }
+
+    /// Fork a worker-thread clone of this engine, if the backend can be
+    /// sharded. The native reference can (it is pure math); a PJRT client
+    /// or a single physical CIM array cannot, and returns `None`, which
+    /// keeps execution on the caller thread. Forks carry fresh dispatch
+    /// counters — the per-layer stats in [`SpconvOutput`] stay
+    /// authoritative.
+    fn fork(&self) -> Option<Box<dyn GemmEngine + Send>> {
+        None
     }
 }
 
@@ -65,6 +78,10 @@ impl GemmEngine for NativeEngine {
 
     fn dispatches(&self) -> u64 {
         self.calls
+    }
+
+    fn fork(&self) -> Option<Box<dyn GemmEngine + Send>> {
+        Some(Box::new(NativeEngine::default()))
     }
 }
 
@@ -119,6 +136,54 @@ pub struct SpconvOutput {
     pub gathered_rows: u64,
 }
 
+/// The per-layer weight sub-matrices, pre-sliced once per layer into
+/// every `(offset, c1-tile, c2-tile)` combination — they are resident in
+/// the CIM array anyway, and re-slicing per wave was a measurable share
+/// of the hot loop (EXPERIMENTS.md §Perf L3 iteration 2). Shared across
+/// worker threads via `Arc` when the layer executes pooled.
+#[derive(Debug)]
+pub struct TiledWeights {
+    pub c1_tiles: Vec<(usize, usize)>,
+    pub c2_tiles: Vec<(usize, usize)>,
+    tiles: Vec<Vec<i8>>,
+}
+
+impl TiledWeights {
+    pub fn new(w: &LayerWeights) -> Self {
+        let c1_tiles = tile_ranges(w.c_in);
+        let c2_tiles = tile_ranges(w.c_out);
+        let c2 = w.c_out;
+        let mut tiles: Vec<Vec<i8>> =
+            Vec::with_capacity(w.k_volume * c1_tiles.len() * c2_tiles.len());
+        for d in 0..w.k_volume {
+            let wslice = w.offset_slice(d);
+            for &(c1_lo, c1_len) in &c1_tiles {
+                for &(c2_lo, c2_len) in &c2_tiles {
+                    let mut wtile = Vec::with_capacity(c1_len * c2_len);
+                    for r in 0..c1_len {
+                        let row = &wslice[(c1_lo + r) * c2..(c1_lo + r) * c2 + c2];
+                        wtile.extend_from_slice(&row[c2_lo..c2_lo + c2_len]);
+                    }
+                    tiles.push(wtile);
+                }
+            }
+        }
+        Self {
+            c1_tiles,
+            c2_tiles,
+            tiles,
+        }
+    }
+
+    pub fn get(&self, d: usize, i1: usize, i2: usize) -> &[i8] {
+        &self.tiles[(d * self.c1_tiles.len() + i1) * self.c2_tiles.len() + i2]
+    }
+}
+
+/// One GEMM-tile result awaiting scatter: `(wave, c1-tile, c2-tile,
+/// psums)`.
+type TileResult = (usize, usize, usize, Vec<i32>);
+
 impl SpconvLayer {
     pub fn new(weights: LayerWeights, batch: usize) -> Self {
         let c_out = weights.c_out;
@@ -130,8 +195,45 @@ impl SpconvLayer {
         }
     }
 
-    /// Execute over a prebuilt rulebook.
+    /// Execute over a prebuilt rulebook, single-threaded (the historical
+    /// entry point; tests and the sim harness use it directly).
     pub fn execute<E: GemmEngine>(
+        &self,
+        input: &SparseTensor,
+        rb: &Rulebook,
+        engine: &mut E,
+    ) -> crate::Result<SpconvOutput> {
+        self.execute_serial(input, rb, engine)
+    }
+
+    /// Execute over a prebuilt rulebook, sharding gather/GEMM/scatter
+    /// across `pool` when one is given and the engine can fork (see
+    /// [`GemmEngine::fork`]). Results are bit-identical to the serial
+    /// path: every GEMM row is independent and the i32 scatter-add
+    /// commutes, so only wall-clock changes.
+    ///
+    /// Convenience wrapper: it clones `input`/`rb` into `Arc`s to meet
+    /// the pool's `'static` bound. The scheduler, which already holds
+    /// tensors and rulebooks in `Arc`s, calls
+    /// [`Self::execute_batch_pooled`] directly and pays no copy.
+    pub fn execute_pooled<E: GemmEngine>(
+        &self,
+        input: &SparseTensor,
+        rb: &Rulebook,
+        engine: &mut E,
+        pool: Option<&WorkerPool>,
+    ) -> crate::Result<SpconvOutput> {
+        match pool {
+            Some(p) if p.size() >= 2 => {
+                let group = [(Arc::new(input.clone()), Arc::new(rb.clone()))];
+                let mut outs = self.execute_batch_pooled(&group, engine, pool)?;
+                Ok(outs.pop().expect("one frame in, one out"))
+            }
+            _ => self.execute_serial(input, rb, engine),
+        }
+    }
+
+    fn execute_serial<E: GemmEngine>(
         &self,
         input: &SparseTensor,
         rb: &Rulebook,
@@ -139,7 +241,7 @@ impl SpconvLayer {
     ) -> crate::Result<SpconvOutput> {
         assert_eq!(input.channels, self.weights.c_in, "channel mismatch");
         assert_eq!(rb.kind.kernel_volume(), self.weights.k_volume);
-        let (c1, c2) = (self.weights.c_in, self.weights.c_out);
+        let c2 = self.weights.c_out;
         let n_out = rb.out_coords.len();
         let mut psums = vec![0i32; n_out * c2];
         let (waves, _) = gather_batches(rb, self.batch);
@@ -148,38 +250,13 @@ impl SpconvLayer {
 
         // Contraction/output tiling in TILE_C chunks (independent ADC
         // clamping per contraction tile — see module docs).
-        let c1_tiles: Vec<(usize, usize)> = tile_ranges(c1);
-        let c2_tiles: Vec<(usize, usize)> = tile_ranges(c2);
-
-        // Pre-slice every (offset, c1-tile, c2-tile) weight sub-matrix
-        // once per layer — it's resident in the CIM array anyway, and
-        // re-slicing per wave was a measurable share of the hot loop
-        // (EXPERIMENTS.md §Perf L3 iteration 2).
-        let k_vol = self.weights.k_volume;
-        let mut wtiles: Vec<Vec<i8>> =
-            Vec::with_capacity(k_vol * c1_tiles.len() * c2_tiles.len());
-        for d in 0..k_vol {
-            let wslice = self.weights.offset_slice(d);
-            for &(c1_lo, c1_len) in &c1_tiles {
-                for &(c2_lo, c2_len) in &c2_tiles {
-                    let mut wtile = Vec::with_capacity(c1_len * c2_len);
-                    for r in 0..c1_len {
-                        let row = &wslice[(c1_lo + r) * c2..(c1_lo + r) * c2 + c2];
-                        wtile.extend_from_slice(&row[c2_lo..c2_lo + c2_len]);
-                    }
-                    wtiles.push(wtile);
-                }
-            }
-        }
-        let tile_of = |d: usize, i1: usize, i2: usize| -> &Vec<i8> {
-            &wtiles[(d * c1_tiles.len() + i1) * c2_tiles.len() + i2]
-        };
+        let tw = TiledWeights::new(&self.weights);
 
         let mut acts_tile: Vec<i8> = Vec::new();
         for wave in &waves {
             let b = wave.pairs.len();
             gathered_rows += b as u64;
-            for (i1, &(c1_lo, c1_len)) in c1_tiles.iter().enumerate() {
+            for (i1, &(c1_lo, c1_len)) in tw.c1_tiles.iter().enumerate() {
                 // Gather the activation tile for this wave.
                 acts_tile.clear();
                 acts_tile.reserve(b * c1_len);
@@ -187,19 +264,18 @@ impl SpconvLayer {
                     let row = input.feature(i as usize);
                     acts_tile.extend_from_slice(&row[c1_lo..c1_lo + c1_len]);
                 }
-                for (i2, &(c2_lo, c2_len)) in c2_tiles.iter().enumerate() {
-                    let wtile = tile_of(wave.offset as usize, i1, i2);
+                for (i2, &(c2_lo, c2_len)) in tw.c2_tiles.iter().enumerate() {
+                    let wtile = tw.get(wave.offset as usize, i1, i2);
                     let out = engine.gemm_i8(&acts_tile, wtile, b, c1_len, c2_len)?;
                     gemm_calls += 1;
-                    // Scatter-add into the output psum tensor.
-                    for (row, &(_, o)) in wave.pairs.iter().enumerate() {
-                        let dst =
-                            &mut psums[o as usize * c2 + c2_lo..o as usize * c2 + c2_lo + c2_len];
-                        let src = &out[row * c2_len..(row + 1) * c2_len];
-                        for (d, &s) in dst.iter_mut().zip(src) {
-                            *d += s;
-                        }
-                    }
+                    scatter_add(
+                        &mut psums,
+                        c2,
+                        c2_lo,
+                        c2_len,
+                        &out,
+                        wave.pairs.iter().map(|&(_, o)| o),
+                    );
                 }
             }
         }
@@ -217,6 +293,259 @@ impl SpconvLayer {
             gemm_calls,
             gathered_rows,
         })
+    }
+
+    /// Execute one layer for several in-flight frames at once, packing
+    /// rule pairs from all frames into shared GEMM waves (one engine
+    /// dispatch per wave) and scattering partial sums back per frame.
+    ///
+    /// Per-frame outputs are bit-identical to running [`Self::execute`]
+    /// on each frame alone: GEMM rows are independent and the i32
+    /// scatter-add commutes, so wave composition only changes the
+    /// dispatch count, never the numerics. `gemm_calls` in each frame's
+    /// output counts the shared dispatches that frame participated in
+    /// (their sum over frames can exceed the engine's dispatch total —
+    /// that is the amortization).
+    pub fn execute_batch<E: GemmEngine>(
+        &self,
+        inputs: &[(&SparseTensor, &Rulebook)],
+        engine: &mut E,
+    ) -> crate::Result<Vec<SpconvOutput>> {
+        let c2 = self.weights.c_out;
+        for (t, rb) in inputs {
+            assert_eq!(t.channels, self.weights.c_in, "channel mismatch");
+            assert_eq!(rb.kind.kernel_volume(), self.weights.k_volume);
+        }
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let tw = TiledWeights::new(&self.weights);
+        let rbs: Vec<&Rulebook> = inputs.iter().map(|&(_, rb)| rb).collect();
+        let waves = gather_batches_multi(&rbs, self.batch);
+        let mut psums: Vec<Vec<i32>> = inputs
+            .iter()
+            .map(|&(_, rb)| vec![0i32; rb.out_coords.len() * c2])
+            .collect();
+        let mut gemm_calls = vec![0u64; inputs.len()];
+        let mut gathered_rows = vec![0u64; inputs.len()];
+
+        let mut acts_tile: Vec<i8> = Vec::new();
+        let mut frames_in_wave: Vec<u32> = Vec::new();
+        for wave in &waves {
+            let b = wave.rows.len();
+            frames_in_wave.clear();
+            for &(f, _, _) in &wave.rows {
+                gathered_rows[f as usize] += 1;
+                if frames_in_wave.last() != Some(&f) {
+                    frames_in_wave.push(f);
+                }
+            }
+            for (i1, &(c1_lo, c1_len)) in tw.c1_tiles.iter().enumerate() {
+                acts_tile.clear();
+                acts_tile.reserve(b * c1_len);
+                for &(f, i, _) in &wave.rows {
+                    let row = inputs[f as usize].0.feature(i as usize);
+                    acts_tile.extend_from_slice(&row[c1_lo..c1_lo + c1_len]);
+                }
+                for (i2, &(c2_lo, c2_len)) in tw.c2_tiles.iter().enumerate() {
+                    let wtile = tw.get(wave.offset as usize, i1, i2);
+                    let out = engine.gemm_i8(&acts_tile, wtile, b, c1_len, c2_len)?;
+                    for &f in &frames_in_wave {
+                        gemm_calls[f as usize] += 1;
+                    }
+                    scatter_add_multi(&mut psums, c2, c2_lo, c2_len, &out, &wave.rows);
+                }
+            }
+        }
+
+        Ok(self.finish_batch(&rbs, psums, &gemm_calls, &gathered_rows))
+    }
+
+    /// [`Self::execute_batch`] with the gather/GEMM work sharded across
+    /// `pool` via forked engines (see [`GemmEngine::fork`]). Inputs come
+    /// as `Arc`s so worker closures share the frames without copying —
+    /// this is the entry point the scheduler uses for both single frames
+    /// and lockstep groups. Falls back to the serial batch path when no
+    /// pool is given, the pool is too small, or the engine cannot fork.
+    /// Results are bit-identical in every case.
+    pub fn execute_batch_pooled<E: GemmEngine>(
+        &self,
+        inputs: &[(Arc<SparseTensor>, Arc<Rulebook>)],
+        engine: &mut E,
+        pool: Option<&WorkerPool>,
+    ) -> crate::Result<Vec<SpconvOutput>> {
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let c2 = self.weights.c_out;
+        for (t, rb) in inputs {
+            assert_eq!(t.channels, self.weights.c_in, "channel mismatch");
+            assert_eq!(rb.kind.kernel_volume(), self.weights.k_volume);
+        }
+        let rbs: Vec<&Rulebook> = inputs.iter().map(|(_, rb)| rb.as_ref()).collect();
+        let waves = gather_batches_multi(&rbs, self.batch);
+
+        // Pool eligibility. The probe fork is kept and handed to the
+        // first worker rather than discarded.
+        let first_fork = match pool {
+            Some(p) if p.size() >= 2 && waves.len() >= 2 => engine.fork(),
+            _ => None,
+        };
+        let (Some(pool), Some(first_fork)) = (pool, first_fork) else {
+            let borrowed: Vec<(&SparseTensor, &Rulebook)> = inputs
+                .iter()
+                .map(|(t, rb)| (t.as_ref(), rb.as_ref()))
+                .collect();
+            return self.execute_batch(&borrowed, engine);
+        };
+
+        let tw = Arc::new(TiledWeights::new(&self.weights));
+        let waves = Arc::new(waves);
+        let tensors: Vec<Arc<SparseTensor>> =
+            inputs.iter().map(|(t, _)| Arc::clone(t)).collect();
+        let mut psums: Vec<Vec<i32>> = rbs
+            .iter()
+            .map(|rb| vec![0i32; rb.out_coords.len() * c2])
+            .collect();
+
+        // Contiguous wave chunks fan out over the pool; the caller joins
+        // in chunk order and scatters, so the accumulation schedule is
+        // deterministic.
+        let n_chunks = (pool.size() * 2).min(waves.len());
+        let mut next_engine = Some(first_fork);
+        let mut handles = Vec::with_capacity(n_chunks);
+        for chunk in 0..n_chunks {
+            let lo = chunk * waves.len() / n_chunks;
+            let hi = (chunk + 1) * waves.len() / n_chunks;
+            if lo == hi {
+                continue;
+            }
+            let mut eng = match next_engine.take() {
+                Some(e) => e,
+                None => engine.fork().expect("engine forked once already"),
+            };
+            let (waves, tw) = (Arc::clone(&waves), Arc::clone(&tw));
+            let tensors = tensors.clone();
+            handles.push(pool.submit(move || -> crate::Result<Vec<TileResult>> {
+                let mut outs = Vec::new();
+                let mut acts_tile: Vec<i8> = Vec::new();
+                for wi in lo..hi {
+                    let wave = &waves[wi];
+                    let b = wave.rows.len();
+                    for (i1, &(c1_lo, c1_len)) in tw.c1_tiles.iter().enumerate() {
+                        acts_tile.clear();
+                        acts_tile.reserve(b * c1_len);
+                        for &(f, i, _) in &wave.rows {
+                            let row = tensors[f as usize].feature(i as usize);
+                            acts_tile.extend_from_slice(&row[c1_lo..c1_lo + c1_len]);
+                        }
+                        for (i2, &(_, c2_len)) in tw.c2_tiles.iter().enumerate() {
+                            let wtile = tw.get(wave.offset as usize, i1, i2);
+                            let out = eng.gemm_i8(&acts_tile, wtile, b, c1_len, c2_len)?;
+                            outs.push((wi, i1, i2, out));
+                        }
+                    }
+                }
+                Ok(outs)
+            }));
+        }
+
+        // Per-frame stats on the caller side, matching the serial batch
+        // path exactly: every row gathered once; every (wave, c1, c2)
+        // dispatch attributed to each participating frame.
+        let tiles_per_wave = (tw.c1_tiles.len() * tw.c2_tiles.len()) as u64;
+        let mut gemm_calls = vec![0u64; inputs.len()];
+        let mut gathered_rows = vec![0u64; inputs.len()];
+        for wave in waves.iter() {
+            let mut last = None;
+            for &(f, _, _) in &wave.rows {
+                gathered_rows[f as usize] += 1;
+                if last != Some(f) {
+                    gemm_calls[f as usize] += tiles_per_wave;
+                    last = Some(f);
+                }
+            }
+        }
+
+        for h in handles {
+            for (wi, _i1, i2, out) in h.join()? {
+                let wave = &waves[wi];
+                let (c2_lo, c2_len) = tw.c2_tiles[i2];
+                scatter_add_multi(&mut psums, c2, c2_lo, c2_len, &out, &wave.rows);
+            }
+        }
+
+        Ok(self.finish_batch(&rbs, psums, &gemm_calls, &gathered_rows))
+    }
+
+    /// Shared epilogue of the batch paths: per-frame dequant/ReLU/requant
+    /// and output assembly.
+    fn finish_batch(
+        &self,
+        rbs: &[&Rulebook],
+        psums: Vec<Vec<i32>>,
+        gemm_calls: &[u64],
+        gathered_rows: &[u64],
+    ) -> Vec<SpconvOutput> {
+        let c2 = self.weights.c_out;
+        rbs.iter()
+            .zip(psums)
+            .zip(gemm_calls.iter().zip(gathered_rows))
+            .map(|((rb, psums), (&gemm_calls, &gathered_rows))| {
+                let features =
+                    quant::dequant_relu_quant(&psums, &self.scale, &self.zero, c2);
+                SpconvOutput {
+                    tensor: SparseTensor {
+                        extent: rb.out_extent,
+                        coords: rb.out_coords.clone(),
+                        features,
+                        channels: c2,
+                    },
+                    psums,
+                    gemm_calls,
+                    gathered_rows,
+                }
+            })
+            .collect()
+    }
+}
+
+/// Scatter one GEMM tile's rows into the psum tensor (`outputs` yields
+/// the destination output index of each row, in row order).
+fn scatter_add(
+    psums: &mut [i32],
+    c2: usize,
+    c2_lo: usize,
+    c2_len: usize,
+    out: &[i32],
+    outputs: impl Iterator<Item = u32>,
+) {
+    for (row, o) in outputs.enumerate() {
+        let dst = &mut psums[o as usize * c2 + c2_lo..o as usize * c2 + c2_lo + c2_len];
+        let src = &out[row * c2_len..(row + 1) * c2_len];
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d += s;
+        }
+    }
+}
+
+/// Scatter one shared multi-frame GEMM tile into the per-frame psum
+/// tensors (`rows` carries each row's `(frame, input, output)`).
+fn scatter_add_multi(
+    psums: &mut [Vec<i32>],
+    c2: usize,
+    c2_lo: usize,
+    c2_len: usize,
+    out: &[i32],
+    rows: &[(u32, u32, u32)],
+) {
+    for (row, &(f, _, o)) in rows.iter().enumerate() {
+        let dst = &mut psums[f as usize]
+            [o as usize * c2 + c2_lo..o as usize * c2 + c2_lo + c2_len];
+        let src = &out[row * c2_len..(row + 1) * c2_len];
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d += s;
+        }
     }
 }
 
@@ -328,6 +657,85 @@ mod tests {
                 .unwrap();
             assert_eq!(a.psums, b.psums);
         });
+    }
+
+    #[test]
+    fn pooled_execution_is_bit_identical_to_serial() {
+        let pool = WorkerPool::new(3);
+        check("pooled spconv == serial spconv", 5, |g| {
+            let t = tensor_with_features(g.usize(20, 160), 16, g.usize(0, 1 << 30) as u64);
+            let rb = hash_map_search(&t, ConvKind::subm3());
+            let w = LayerWeights::random(27, 16, 16, 123);
+            let layer = SpconvLayer::new(w, g.usize(1, 64));
+            let serial = layer.execute(&t, &rb, &mut NativeEngine::default()).unwrap();
+            let pooled = layer
+                .execute_pooled(&t, &rb, &mut NativeEngine::default(), Some(&pool))
+                .unwrap();
+            assert_eq!(serial.psums, pooled.psums);
+            assert_eq!(serial.tensor.features, pooled.tensor.features);
+            assert_eq!(serial.gemm_calls, pooled.gemm_calls);
+            assert_eq!(serial.gathered_rows, pooled.gathered_rows);
+        });
+    }
+
+    #[test]
+    fn pooled_execution_falls_back_when_engine_cannot_fork() {
+        struct NoFork(NativeEngine);
+        impl GemmEngine for NoFork {
+            fn gemm_i8(
+                &mut self,
+                acts: &[i8],
+                weights: &[i8],
+                b: usize,
+                c1: usize,
+                c2: usize,
+            ) -> crate::Result<Vec<i32>> {
+                self.0.gemm_i8(acts, weights, b, c1, c2)
+            }
+        }
+        let pool = WorkerPool::new(2);
+        let t = tensor_with_features(120, 8, 71);
+        let rb = hash_map_search(&t, ConvKind::subm3());
+        let layer = SpconvLayer::new(LayerWeights::random(27, 8, 8, 72), 32);
+        let want = layer.execute(&t, &rb, &mut NativeEngine::default()).unwrap();
+        let got = layer
+            .execute_pooled(&t, &rb, &mut NoFork(NativeEngine::default()), Some(&pool))
+            .unwrap();
+        assert_eq!(want.psums, got.psums);
+    }
+
+    #[test]
+    fn batched_frames_match_single_frame_execution() {
+        let w = LayerWeights::random(27, 8, 16, 81);
+        let layer = SpconvLayer::new(w, 64);
+        let frames: Vec<SparseTensor> = (0..3)
+            .map(|i| tensor_with_features(60 + i * 50, 8, 82 + i as u64))
+            .collect();
+        let rbs: Vec<Rulebook> = frames
+            .iter()
+            .map(|t| hash_map_search(t, ConvKind::subm3()))
+            .collect();
+        let inputs: Vec<(&SparseTensor, &Rulebook)> =
+            frames.iter().zip(&rbs).collect();
+        let mut shared = NativeEngine::default();
+        let batched = layer.execute_batch(&inputs, &mut shared).unwrap();
+        let mut solo_calls = 0u64;
+        for ((t, rb), got) in inputs.iter().zip(&batched) {
+            let mut eng = NativeEngine::default();
+            let want = layer.execute(t, rb, &mut eng).unwrap();
+            solo_calls += eng.calls;
+            assert_eq!(want.psums, got.psums);
+            assert_eq!(want.tensor.features, got.tensor.features);
+            assert_eq!(want.gathered_rows, got.gathered_rows);
+        }
+        // Shared waves amortize dispatches: the engine saw no more (and
+        // normally fewer) dispatches than the per-frame runs combined.
+        assert!(
+            shared.calls <= solo_calls,
+            "batched {} vs solo {}",
+            shared.calls,
+            solo_calls
+        );
     }
 
     #[test]

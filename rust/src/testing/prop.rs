@@ -77,6 +77,35 @@ impl Gen {
         let n = self.usize(min_len, max_len);
         (0..n).map(|_| f(self)).collect()
     }
+
+    /// A randomized sparse voxel scene: random extent up to
+    /// `max_side`×`max_side`×`max_depth`, up to `max_n` occupied voxels,
+    /// drawn from either the i.i.d. or the clustered (LiDAR-like)
+    /// distribution — the scene generator the engine-layer equivalence
+    /// properties sweep over.
+    pub fn sparse_scene(
+        &mut self,
+        max_side: usize,
+        max_depth: usize,
+        max_n: usize,
+    ) -> crate::sparse::SparseTensor {
+        use crate::geom::Extent3;
+        use crate::pointcloud::voxelize::Voxelizer;
+        let e = Extent3::new(
+            self.usize(4, max_side.max(5)),
+            self.usize(4, max_side.max(5)),
+            self.usize(2, max_depth.max(3)),
+        );
+        let n = self.usize(1, max_n.max(2));
+        let sparsity = (n as f64 / e.volume() as f64).min(0.5);
+        let seed = self.usize(0, 1 << 30) as u64;
+        let grid = if self.bool() {
+            Voxelizer::synth_clustered(e, sparsity, self.usize(1, 6), 0.4, seed)
+        } else {
+            Voxelizer::synth_occupancy(e, sparsity, seed)
+        };
+        crate::sparse::SparseTensor::from_coords(e, grid.coords(), 1)
+    }
 }
 
 fn name_seed(name: &str) -> u64 {
@@ -152,6 +181,21 @@ mod tests {
         };
         assert!(msg.contains("seed"), "{msg}");
         assert!(msg.contains("usize[0,100)"), "{msg}");
+    }
+
+    #[test]
+    fn sparse_scene_is_canonical_and_bounded() {
+        check("sparse_scene generator invariants", 20, |g| {
+            let t = g.sparse_scene(32, 8, 300);
+            assert!(t.extent.x >= 4 && t.extent.x < 32);
+            assert!(t.extent.z >= 2 && t.extent.z < 8);
+            assert!(t.check_canonical(), "non-canonical scene");
+            for c in &t.coords {
+                assert!((c.x as usize) < t.extent.x);
+                assert!((c.y as usize) < t.extent.y);
+                assert!((c.z as usize) < t.extent.z);
+            }
+        });
     }
 
     #[test]

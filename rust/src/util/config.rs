@@ -126,6 +126,23 @@ impl Config {
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.map.keys().map(String::as_str)
     }
+
+    /// Parse a string-valued key into any `FromStr` type (enum-valued
+    /// config keys like the engine layer's `[runner] searcher`). Missing
+    /// key yields `default`; a present-but-invalid value (unparseable
+    /// string or non-string) is an error rather than a silent fallback.
+    pub fn parsed_or<T: std::str::FromStr>(&self, key: &str, default: T) -> crate::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(Value::Str(s)) => {
+                s.parse().map_err(|e| anyhow::anyhow!("{key}: {e}"))
+            }
+            Some(v) => bail!("{key} must be a quoted string, got {v:?}"),
+        }
+    }
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -218,6 +235,25 @@ dense = false
     fn bad_line_errors() {
         assert!(Config::parse("not a kv line").is_err());
         assert!(Config::parse("x = @@").is_err());
+    }
+
+    #[test]
+    fn parsed_keys_have_strict_errors() {
+        use crate::mapsearch::SearcherKind;
+        let c = Config::parse("[runner]\nsearcher = \"block-doms\"").unwrap();
+        assert_eq!(
+            c.parsed_or("runner.searcher", SearcherKind::Doms).unwrap(),
+            SearcherKind::BlockDoms
+        );
+        assert_eq!(
+            c.parsed_or("runner.missing", SearcherKind::Doms).unwrap(),
+            SearcherKind::Doms
+        );
+        let bad = Config::parse("[runner]\nsearcher = \"bogus\"").unwrap();
+        assert!(bad.parsed_or("runner.searcher", SearcherKind::Doms).is_err());
+        // Present but not a string is an error, not a silent default.
+        let not_str = Config::parse("[runner]\nsearcher = 3").unwrap();
+        assert!(not_str.parsed_or("runner.searcher", SearcherKind::Doms).is_err());
     }
 
     #[test]

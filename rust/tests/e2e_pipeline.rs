@@ -44,7 +44,7 @@ fn frame(extent: Extent3, n: usize, seed: u64) -> SparseTensor {
 fn native_run_is_deterministic() {
     let net = tiny_net();
     let input = frame(net.extent, 250, 201);
-    let runner = NetworkRunner::new(net, RunnerConfig { batch: 64, workers: 2, seed: 5 });
+    let runner = NetworkRunner::new(net, RunnerConfig { batch: 64, workers: 2, seed: 5, ..Default::default() });
     let a = runner
         .run_frame(input.clone(), &mut NativeEngine::default())
         .unwrap();
@@ -66,7 +66,7 @@ fn pjrt_and_native_agree_end_to_end() {
     };
     let net = tiny_net();
     let input = frame(net.extent, 200, 202);
-    let runner = NetworkRunner::new(net, RunnerConfig { batch: 64, workers: 2, seed: 6 });
+    let runner = NetworkRunner::new(net, RunnerConfig { batch: 64, workers: 2, seed: 6, ..Default::default() });
     let native = runner
         .run_frame(input.clone(), &mut NativeEngine::default())
         .unwrap();
@@ -90,7 +90,7 @@ fn batch_size_does_not_change_results() {
     for batch in [16, 64, 1024] {
         let runner = NetworkRunner::new(
             tiny_net(),
-            RunnerConfig { batch, workers: 1, seed: 6 },
+            RunnerConfig { batch, workers: 1, seed: 6, ..Default::default() },
         );
         let res = runner
             .run_frame(input.clone(), &mut NativeEngine::default())

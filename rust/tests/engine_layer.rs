@@ -1,0 +1,157 @@
+//! Integration: the configurable engine layer. Every `SearcherKind` must
+//! build bit-identical rulebooks vs the hash oracle across randomized
+//! scenes, any searcher must be acceptable on the runner/stream request
+//! path, and batched multi-frame GEMM waves must reproduce the
+//! single-frame path bit for bit while issuing no more engine dispatches.
+
+use voxel_cim::coordinator::scheduler::{NetworkRunner, RunnerConfig};
+use voxel_cim::coordinator::stream::StreamServer;
+use voxel_cim::geom::Extent3;
+use voxel_cim::mapsearch::SearcherKind;
+use voxel_cim::model::layer::{LayerSpec, NetworkSpec, TaskKind};
+use voxel_cim::pointcloud::voxelize::Voxelizer;
+use voxel_cim::sparse::rulebook::ConvKind;
+use voxel_cim::sparse::{hash_map_search, SparseTensor};
+use voxel_cim::spconv::layer::NativeEngine;
+use voxel_cim::testing::prop::check;
+
+#[test]
+fn every_searcher_kind_matches_the_hash_oracle_on_random_scenes() {
+    check("all SearcherKind == hash oracle", 12, |g| {
+        let t = g.sparse_scene(48, 12, 600);
+        let want = hash_map_search(&t, ConvKind::subm3());
+        for kind in SearcherKind::ALL {
+            let s = kind.build();
+            let (rb, _) = s.search_subm(&t, 3);
+            assert_eq!(
+                rb.pairs, want.pairs,
+                "{kind} diverged from the oracle on {} voxels at {:?}",
+                t.len(),
+                t.extent
+            );
+            assert_eq!(rb.out_coords, want.out_coords, "{kind} output set");
+            rb.validate(&t).unwrap_or_else(|e| panic!("{kind}: {e}"));
+        }
+    });
+}
+
+fn tiny_net() -> NetworkSpec {
+    NetworkSpec {
+        name: "engine-layer-tiny",
+        task: TaskKind::Segmentation,
+        extent: Extent3::new(32, 32, 8),
+        vfe_channels: 4,
+        layers: vec![
+            LayerSpec::Subm3 { c_in: 4, c_out: 16 },
+            LayerSpec::Subm3 { c_in: 16, c_out: 16 },
+            LayerSpec::GConv2 { c_in: 16, c_out: 32 },
+            LayerSpec::Subm3 { c_in: 32, c_out: 32 },
+        ],
+    }
+}
+
+fn make_frame(id: u64) -> SparseTensor {
+    let e = Extent3::new(32, 32, 8);
+    let g = Voxelizer::synth_clustered(e, 0.04, 4, 0.35, 900 + id);
+    let mut t = SparseTensor::from_coords(e, g.coords(), 4);
+    for (i, v) in t.features.iter_mut().enumerate() {
+        *v = ((i as u64 + 5 * id) % 9) as i8;
+    }
+    t
+}
+
+#[test]
+fn runner_accepts_every_searcher_kind_with_identical_outputs() {
+    let mut checksums = Vec::new();
+    for kind in SearcherKind::ALL {
+        let runner = NetworkRunner::new(
+            tiny_net(),
+            RunnerConfig {
+                searcher: kind,
+                seed: 21,
+                ..Default::default()
+            },
+        );
+        let res = runner
+            .run_frame(make_frame(0), &mut NativeEngine::default())
+            .unwrap();
+        assert!(res.total_pairs() > 0);
+        // One record per layer; every sparse layer actually searched.
+        let net = tiny_net();
+        assert_eq!(res.records.len(), net.layers.len());
+        for (spec, record) in net.layers.iter().zip(&res.records) {
+            assert_eq!(spec.is_sparse(), record.pairs > 0, "{}", record.name);
+        }
+        checksums.push((kind, res.checksum));
+    }
+    let want = checksums[0].1;
+    for (kind, got) in checksums {
+        assert_eq!(got, want, "searcher {kind} changed the frame bits");
+    }
+}
+
+#[test]
+fn batched_waves_are_bit_identical_and_amortize_dispatches() {
+    let runner = NetworkRunner::new(
+        tiny_net(),
+        RunnerConfig {
+            batch: 64,
+            seed: 22,
+            // Serial compute so the NativeEngine dispatch counter sees
+            // every GEMM (forked engines keep their own counters).
+            compute_workers: 1,
+            ..Default::default()
+        },
+    );
+    let frames: Vec<SparseTensor> = (0..4).map(make_frame).collect();
+
+    let mut solo_engine = NativeEngine::default();
+    let mut solo = Vec::new();
+    for f in &frames {
+        solo.push(runner.run_frame(f.clone(), &mut solo_engine).unwrap());
+    }
+
+    let mut wave_engine = NativeEngine::default();
+    let batched = runner
+        .run_frames(frames, &mut wave_engine)
+        .unwrap();
+
+    assert_eq!(solo.len(), batched.len());
+    for (a, b) in solo.iter().zip(&batched) {
+        assert_eq!(a.checksum, b.checksum, "frame bits diverged under batching");
+        assert_eq!(a.total_pairs(), b.total_pairs());
+        assert_eq!(a.out_voxels, b.out_voxels);
+        for (ra, rb) in a.records.iter().zip(&b.records) {
+            assert_eq!(ra.pairs, rb.pairs, "{}", ra.name);
+            assert_eq!(ra.out_voxels, rb.out_voxels, "{}", ra.name);
+            assert_eq!(ra.workload, rb.workload, "{}", ra.name);
+        }
+    }
+    assert!(
+        wave_engine.calls < solo_engine.calls,
+        "shared waves should amortize dispatches: {} vs {}",
+        wave_engine.calls,
+        solo_engine.calls
+    );
+}
+
+#[test]
+fn stream_server_accepts_configured_searchers() {
+    for kind in [SearcherKind::Hash, SearcherKind::BlockDoms, SearcherKind::Octree] {
+        let srv = StreamServer::new(
+            tiny_net(),
+            RunnerConfig {
+                searcher: kind,
+                inflight: 2,
+                ..Default::default()
+            },
+            4,
+        );
+        let report = srv
+            .serve(4, make_frame, &mut NativeEngine::default())
+            .unwrap();
+        assert_eq!(report.completions.len(), 4, "{kind}");
+        let ids: Vec<u64> = report.completions.iter().map(|c| c.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3], "{kind}");
+    }
+}
