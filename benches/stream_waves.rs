@@ -6,12 +6,17 @@
 //! throughput for both (the dispatch delta is what a PJRT engine
 //! amortizes).
 //!
+//! A second sweep serves oversized scenes at shard grids 1 / 2x2 / 4x4
+//! (with W2B-aware wave packing) and emits the latency-vs-throughput
+//! curve of the shard scheduler, asserting bit-identity across grids.
+//!
 //! ```sh
 //! cargo bench --bench stream_waves
 //! ```
 
 use voxel_cim::bench_util::bench;
 use voxel_cim::coordinator::scheduler::RunnerConfig;
+use voxel_cim::coordinator::shard::ShardConfig;
 use voxel_cim::coordinator::stream::StreamServer;
 use voxel_cim::geom::Extent3;
 use voxel_cim::model::layer::{LayerSpec, NetworkSpec, TaskKind};
@@ -90,4 +95,71 @@ fn main() {
         "\nper-frame results bit-identical; shared waves used {} dispatches vs {} frame-at-a-time",
         packed_calls, solo_calls
     );
+
+    shard_sweep();
+}
+
+/// Shard-count sweep: one oversized scene per frame, served at 1 / 2x2 /
+/// 4x4 block-shard grids — the latency-vs-throughput curve of the shard
+/// scheduler (ROADMAP's SLO item), with bit-identity asserted across
+/// every grid.
+fn shard_sweep() {
+    const FRAMES: u64 = 3;
+    let extent = Extent3::new(192, 192, 10);
+    let net = NetworkSpec {
+        name: "shard-bench",
+        task: TaskKind::Segmentation,
+        extent,
+        vfe_channels: 8,
+        layers: vec![
+            LayerSpec::Subm3 { c_in: 8, c_out: 16 },
+            LayerSpec::Subm3 { c_in: 16, c_out: 16 },
+            LayerSpec::GConv2 { c_in: 16, c_out: 32 },
+            LayerSpec::Subm3 { c_in: 32, c_out: 32 },
+        ],
+    };
+    let make_big = move |id: u64| {
+        let g = Voxelizer::synth_clustered(extent, 0.012, 10, 0.3, 7000 + id);
+        let mut t = SparseTensor::from_coords(extent, g.coords(), 8);
+        for (i, v) in t.features.iter_mut().enumerate() {
+            *v = ((i as u64 + 7 * id) % 13) as i8;
+        }
+        t
+    };
+
+    println!("\n# shard sweep — block-partitioned pseudo-frames (w2b 2x)");
+    let mut baseline: Option<voxel_cim::coordinator::stream::StreamReport> = None;
+    for (bx, by) in [(1usize, 1usize), (2, 2), (4, 4)] {
+        let cfg = RunnerConfig {
+            shard: ShardConfig::grid(bx, by).unwrap(),
+            w2b_factor: 2,
+            compute_workers: 1,
+            ..Default::default()
+        };
+        let srv = StreamServer::new(net.clone(), cfg, 4);
+        let mut engine = NativeEngine::default();
+        let report = srv.serve(FRAMES, make_big, &mut engine).unwrap();
+        let shards: u32 = report.completions.iter().map(|c| c.result.shards).sum();
+        println!(
+            "shards {bx}x{by}: {:.2} fps | p50 {:.1} ms | p95 {:.1} ms | {} pseudo-frames | {} dispatches",
+            report.throughput_fps(),
+            report.latency_p50() * 1e3,
+            report.latency_p95() * 1e3,
+            shards,
+            engine.calls,
+        );
+        match &baseline {
+            None => baseline = Some(report),
+            Some(base) => {
+                for (a, b) in base.completions.iter().zip(&report.completions) {
+                    assert_eq!(
+                        a.result.checksum, b.result.checksum,
+                        "frame {} diverged under {bx}x{by} sharding",
+                        a.id
+                    );
+                }
+            }
+        }
+    }
+    println!("shard grids bit-identical across the sweep");
 }

@@ -13,4 +13,4 @@ pub use energy::EnergyModel;
 pub use mapping::{MappingStrategy, SubMatrixPlan};
 pub use pe::PeConfig;
 pub use tile::CimConfig;
-pub use w2b::{w2b_allocate, W2bAllocation};
+pub use w2b::{copies_for_factor, w2b_allocate, W2bAllocation};

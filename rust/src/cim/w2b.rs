@@ -111,6 +111,16 @@ pub fn w2b_allocate(workload: &[u64], budget: u32) -> W2bAllocation {
     }
 }
 
+/// Copies per offset at a replication budget of `factor` x the kernel
+/// volume — the paper's "2x" detection setting, generalized. This is the
+/// vector the scheduler feeds to the W2B-aware wave packer
+/// (`spconv::gather::gather_batches_multi_w2b`); `factor <= 1` yields
+/// the identity allocation (one copy per offset, FCFS-equivalent).
+pub fn copies_for_factor(workload: &[u64], factor: u32) -> Vec<u32> {
+    let k = workload.len() as u32;
+    w2b_allocate(workload, k.saturating_mul(factor.max(1))).copies
+}
+
 /// Budget from the core's capacity for a given sub-matrix size, capped at
 /// `max_factor` copies of the kernel volume (the paper replicates
 /// centrally-loaded weights a few times, not unboundedly).
@@ -194,6 +204,17 @@ mod tests {
             assert!(a1.copies.iter().all(|&c| c >= 1));
             assert_eq!(a1.copies.iter().sum::<u32>(), b1);
         });
+    }
+
+    #[test]
+    fn copies_for_factor_scales_the_kernel_volume() {
+        let mut w = vec![5u64; 27];
+        w[13] = 200;
+        assert_eq!(copies_for_factor(&w, 1), vec![1u32; 27]);
+        assert_eq!(copies_for_factor(&w, 0), vec![1u32; 27]); // clamped to identity
+        let c2 = copies_for_factor(&w, 2);
+        assert_eq!(c2.iter().sum::<u32>(), 54);
+        assert!(c2[13] >= 2, "hot center not replicated: {c2:?}");
     }
 
     #[test]

@@ -6,9 +6,11 @@
 pub mod executor;
 pub mod pipeline;
 pub mod scheduler;
+pub mod shard;
 pub mod stream;
 
 pub use executor::WorkerPool;
 pub use pipeline::{HybridPipeline, PhaseTiming};
 pub use scheduler::{FrameResult, NetworkRunner, RunnerConfig};
+pub use shard::{ShardConfig, ShardPlan};
 pub use stream::{StreamReport, StreamServer};

@@ -16,7 +16,9 @@
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::cim::w2b::copies_for_factor;
 use crate::coordinator::executor::WorkerPool;
+use crate::coordinator::shard::{ShardConfig, ShardPlan};
 use crate::geom::{Coord3, Extent3};
 use crate::mapsearch::{AccessStats, MapSearch, SearcherKind};
 use crate::model::layer::{LayerSpec, NetworkSpec};
@@ -43,6 +45,15 @@ pub struct RunnerConfig {
     pub inflight: usize,
     /// Which map-search dataflow builds the rulebooks.
     pub searcher: SearcherKind,
+    /// W2B replication budget as a multiple of the kernel volume, fed to
+    /// the wave packer: hot offsets get extra sub-matrix copies and their
+    /// waves split across the replica tiles (0 = first-come-first-served
+    /// packing; the paper's detection setting is 2). Numerics never
+    /// change — only wave→tile placement.
+    pub w2b_factor: u32,
+    /// Block-shard scheduling of oversized scenes (`1x1` grid = off);
+    /// see [`crate::coordinator::shard`].
+    pub shard: ShardConfig,
     /// Weight seed (weights are random — hardware cost is value-free).
     pub seed: u64,
 }
@@ -55,30 +66,31 @@ impl Default for RunnerConfig {
             compute_workers: 2,
             inflight: 1,
             searcher: SearcherKind::Doms,
+            w2b_factor: 0,
+            shard: ShardConfig::default(),
             seed: 0x5EC0,
         }
     }
 }
 
 impl RunnerConfig {
-    /// Read the `[runner]` section of a run config, falling back to the
-    /// defaults for missing keys. Unknown searcher names and negative
-    /// counts are errors rather than silent wraparound.
+    /// Read the `[runner]` and `[shard]` sections of a run config,
+    /// falling back to the defaults for missing keys. Unknown searcher
+    /// names, zero-sized shard grids, and negative counts are errors
+    /// rather than silent wraparound.
     pub fn from_config(cfg: &Config) -> crate::Result<Self> {
         let d = Self::default();
-        let non_neg = |key: &str, default: usize| -> crate::Result<usize> {
-            let v = cfg.int_or(key, default as i64);
-            anyhow::ensure!(v >= 0, "{key} must be >= 0, got {v}");
-            Ok(v as usize)
-        };
-        let batch = non_neg("runner.batch", d.batch)?;
+        let batch = cfg.usize_or("runner.batch", d.batch)?;
         anyhow::ensure!(batch >= 1, "runner.batch must be >= 1, got {batch}");
         Ok(Self {
             batch,
-            workers: non_neg("runner.workers", d.workers)?,
-            compute_workers: non_neg("runner.compute_workers", d.compute_workers)?,
-            inflight: non_neg("runner.inflight", d.inflight)?,
+            workers: cfg.usize_or("runner.workers", d.workers)?,
+            compute_workers: cfg.usize_or("runner.compute_workers", d.compute_workers)?,
+            inflight: cfg.usize_or("runner.inflight", d.inflight)?,
             searcher: cfg.parsed_or("runner.searcher", d.searcher)?,
+            w2b_factor: u32::try_from(cfg.usize_or("runner.w2b_factor", d.w2b_factor as usize)?)
+                .map_err(|_| anyhow::anyhow!("runner.w2b_factor out of u32 range"))?,
+            shard: ShardConfig::from_config(cfg)?,
             seed: cfg.int_or("runner.seed", d.seed as i64) as u64,
         })
     }
@@ -109,8 +121,12 @@ pub struct FrameResult {
     /// FNV-1a over the final output features (head map for detection,
     /// voxel features for segmentation) — the bit-identity witness the
     /// engine-layer tests compare across searcher kinds, wave batching,
-    /// and compute pooling.
+    /// compute pooling, and shard scheduling.
     pub checksum: u64,
+    /// Pseudo-frames this frame was executed as: 1 on the plain path,
+    /// the shard count when [`NetworkRunner::run_frame_sharded`] split
+    /// the scene.
+    pub shards: u32,
     /// Wall-clock of the run that produced this frame. In a lockstep
     /// [`NetworkRunner::run_frames`] group the frames complete together,
     /// so every frame of the group reports the *group's* makespan — do
@@ -146,6 +162,13 @@ fn i8_bytes(v: &[i8]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len()) }
 }
 
+/// The [`FrameResult::checksum`] function over a feature buffer —
+/// public so shard merges (and tests) can witness bit-identity against
+/// a tensor they assembled themselves.
+pub fn checksum_features(features: &[i8]) -> u64 {
+    fnv1a(i8_bytes(features))
+}
+
 /// Rolling state of one in-flight frame while the lockstep loop advances
 /// the whole group layer by layer. The tensor sits behind an `Arc` so
 /// pooled layer execution shares it with worker threads without copying.
@@ -160,6 +183,14 @@ struct FrameState {
     /// upsampling stage).
     skip_stack: Vec<(Extent3, Vec<Coord3>)>,
     records: Vec<LayerRecord>,
+}
+
+/// One frame's rolling output from a [`NetworkRunner::run_group`] pass:
+/// per-layer records plus whatever the last executed layer produced.
+struct GroupRun {
+    records: Vec<LayerRecord>,
+    cur: Arc<SparseTensor>,
+    bev: Option<DenseMap>,
 }
 
 /// How one frame obtains its rulebook for a sparse layer.
@@ -238,11 +269,32 @@ impl NetworkRunner {
         inputs: Vec<SparseTensor>,
         engine: &mut E,
     ) -> crate::Result<Vec<FrameResult>> {
+        let t0 = Instant::now();
+        let runs = self.run_group(&self.net.layers, inputs, engine, self.cfg.seed)?;
+        let total = t0.elapsed().as_secs_f64();
+        Ok(runs
+            .into_iter()
+            .map(|r| finalize_frame(r, 1, total))
+            .collect())
+    }
+
+    /// The lockstep layer loop over an explicit layer slice, starting
+    /// the per-layer weight seed sequence at `seed0`. `run_frames` runs
+    /// the whole network from `cfg.seed`; the shard path runs the sparse
+    /// prefix on shard pseudo-frames and then the dense suffix on the
+    /// merged scene with `seed0` advanced past the prefix's weights, so
+    /// every layer sees exactly the weights the unsharded run would.
+    fn run_group<E: GemmEngine>(
+        &self,
+        layers: &[LayerSpec],
+        inputs: Vec<SparseTensor>,
+        engine: &mut E,
+        seed0: u64,
+    ) -> crate::Result<Vec<GroupRun>> {
         let nf = inputs.len();
         if nf == 0 {
             return Ok(Vec::new());
         }
-        let t0 = Instant::now();
         let mut frames: Vec<FrameState> = inputs
             .into_iter()
             .map(|cur| FrameState {
@@ -253,9 +305,9 @@ impl NetworkRunner {
                 records: Vec::new(),
             })
             .collect();
-        let mut weight_seed = self.cfg.seed;
+        let mut weight_seed = seed0;
 
-        for (li, &spec) in self.net.layers.iter().enumerate() {
+        for (li, &spec) in layers.iter().enumerate() {
             match spec {
                 LayerSpec::Subm3 { .. } | LayerSpec::GConv2 { .. } | LayerSpec::TConv2 { .. } => {
                     let kind = spec.conv_kind().unwrap();
@@ -356,7 +408,20 @@ impl NetworkRunner {
                     let weights =
                         LayerWeights::random(spec.kernel_volume(), c_in, c_out, weight_seed);
                     weight_seed = weight_seed.wrapping_add(1);
-                    let layer = SpconvLayer::new(weights, self.cfg.batch);
+                    let mut layer = SpconvLayer::new(weights, self.cfg.batch);
+                    if self.cfg.w2b_factor > 0 {
+                        // W2B-aware wave packing: replica copies from the
+                        // group's combined per-offset workload, so hot
+                        // offsets' waves split across parallel tiles
+                        // (numerics unchanged; placement only).
+                        let workload = Rulebook::combined_workload(
+                            rbs.iter().map(|(rb, _, _)| rb.as_ref()),
+                        );
+                        if !workload.is_empty() {
+                            layer = layer
+                                .with_w2b(copies_for_factor(&workload, self.cfg.w2b_factor));
+                        }
+                    }
                     let tc = Instant::now();
                     // Single frames and lockstep groups share one path:
                     // shared GEMM waves, sharded over the compute pool
@@ -460,25 +525,135 @@ impl NetworkRunner {
             }
         }
 
-        let total = t0.elapsed().as_secs_f64();
         Ok(frames
             .into_iter()
-            .map(|f| {
-                let head_shape = f.bev.as_ref().map(|b| (b.h, b.w, b.c));
-                let checksum = match &f.bev {
-                    Some(b) => fnv1a(i8_bytes(&b.data)),
-                    None => fnv1a(i8_bytes(&f.cur.features)),
-                };
-                FrameResult {
-                    out_voxels: f.cur.len() as u64,
-                    records: f.records,
-                    head_shape,
-                    checksum,
-                    total_seconds: total,
-                }
+            .map(|f| GroupRun {
+                records: f.records,
+                cur: f.cur,
+                bev: f.bev,
             })
             .collect())
     }
+
+    /// Run one frame with shard-level scheduling: when `cfg.shard` is
+    /// active for this scene, split it along the block-DOMS partition
+    /// into halo-padded block shards, run the shards as lockstep
+    /// pseudo-frames through the sparse prefix (sharing GEMM waves like
+    /// any in-flight group), merge the per-shard outputs back by block
+    /// ownership, and finish the dense head (if any) on the merged
+    /// scene. The result is bit-identical to [`Self::run_frame`]: the
+    /// halo covers the prefix's receptive field, so every owned output's
+    /// dependency cone — including rule pairs that cross shard edges —
+    /// is complete inside its shard (checksum-verified in
+    /// `tests/shard_scheduler.rs`). Falls back to the unsharded path
+    /// when sharding is off, the scene is below the auto threshold, or
+    /// the plan collapses to at most one non-empty shard.
+    pub fn run_frame_sharded<E: GemmEngine>(
+        &self,
+        input: SparseTensor,
+        engine: &mut E,
+    ) -> crate::Result<FrameResult> {
+        let sc = self.cfg.shard;
+        if !sc.active_for(input.len()) {
+            return self.run_frame(input, engine);
+        }
+        let n_layers = self.net.layers.len();
+        let split = self.net.layers.iter().position(|l| !l.is_sparse()).unwrap_or(n_layers);
+        let (prefix, suffix) = self.net.layers.split_at(split);
+        if prefix.is_empty() {
+            return self.run_frame(input, engine);
+        }
+        let t0 = Instant::now();
+        let plan = ShardPlan::plan(prefix, &input, sc.blocks_x, sc.blocks_y)?;
+        if plan.shards.len() <= 1 {
+            return self.run_frame(input, engine);
+        }
+        let n_shards = plan.shards.len() as u32;
+        let inputs: Vec<SparseTensor> = plan.shards.iter().map(|s| s.tensor.clone()).collect();
+        let runs = self.run_group(prefix, inputs, engine, self.cfg.seed)?;
+        // Per-layer records aggregate across shards. Halo voxels are
+        // processed by every shard whose ring they fall in, so summed
+        // pairs exceed the unsharded run's — that surplus is the
+        // replication cost of sharding, reported rather than hidden.
+        let mut records = merge_records(runs.iter().map(|r| &r.records));
+        let merged = plan.merge(runs.iter().map(|r| r.cur.as_ref()))?;
+        let run = if suffix.is_empty() {
+            GroupRun {
+                records,
+                cur: Arc::new(merged),
+                bev: None,
+            }
+        } else {
+            // Dense head on the merged scene; the weight-seed sequence
+            // continues exactly where the prefix left off.
+            let seed = self.cfg.seed.wrapping_add(prefix.len() as u64);
+            let mut tail = self.run_group(suffix, vec![merged], engine, seed)?;
+            let t = tail.pop().expect("one merged frame in, one out");
+            records.extend(t.records);
+            GroupRun {
+                records,
+                cur: t.cur,
+                bev: t.bev,
+            }
+        };
+        Ok(finalize_frame(run, n_shards, t0.elapsed().as_secs_f64()))
+    }
+
+    /// Pseudo-frames a scene of `n_voxels` will occupy in a lockstep
+    /// window: the shard-grid size when sharding triggers, else 1. The
+    /// stream server's queue accounting charges sharded scenes a whole
+    /// window with this.
+    pub fn planned_shards(&self, n_voxels: usize) -> usize {
+        if self.cfg.shard.active_for(n_voxels) {
+            self.cfg.shard.num_blocks()
+        } else {
+            1
+        }
+    }
+}
+
+/// Assemble a [`FrameResult`] from a finished [`GroupRun`].
+fn finalize_frame(run: GroupRun, shards: u32, total_seconds: f64) -> FrameResult {
+    let head_shape = run.bev.as_ref().map(|b| (b.h, b.w, b.c));
+    let checksum = match &run.bev {
+        Some(b) => checksum_features(&b.data),
+        None => checksum_features(&run.cur.features),
+    };
+    FrameResult {
+        out_voxels: run.cur.len() as u64,
+        records: run.records,
+        head_shape,
+        checksum,
+        shards,
+        total_seconds,
+    }
+}
+
+/// Element-wise aggregation of per-shard layer records (same layer
+/// stack): counts and times sum, access stats accumulate, per-offset
+/// workloads add up.
+fn merge_records<'a>(mut shards: impl Iterator<Item = &'a Vec<LayerRecord>>) -> Vec<LayerRecord> {
+    let Some(first) = shards.next() else {
+        return Vec::new();
+    };
+    let mut acc = first.clone();
+    for recs in shards {
+        debug_assert_eq!(acc.len(), recs.len(), "shards ran different layer stacks");
+        for (a, r) in acc.iter_mut().zip(recs) {
+            a.pairs += r.pairs;
+            a.out_voxels += r.out_voxels;
+            a.gemm_calls += r.gemm_calls;
+            a.ms_seconds += r.ms_seconds;
+            a.compute_seconds += r.compute_seconds;
+            a.access.add(&r.access);
+            if a.workload.len() == r.workload.len() {
+                for (x, y) in a.workload.iter_mut().zip(&r.workload) {
+                    *x += y;
+                }
+            }
+        }
+    }
+    acc
 }
 
 /// Flatten a sparse 3D tensor to a dense BEV map: z folds into channels.
@@ -691,5 +866,37 @@ mod tests {
         let rc = RunnerConfig::from_config(&Config::parse("").unwrap()).unwrap();
         assert_eq!(rc.searcher, SearcherKind::Doms);
         assert_eq!(rc.batch, 256);
+        assert_eq!(rc.w2b_factor, 0);
+        assert_eq!(rc.shard, ShardConfig::default());
+    }
+
+    #[test]
+    fn shard_and_w2b_config_keys_parse_strictly() {
+        let cfg = Config::parse(
+            "[runner]\nw2b_factor = 2\n[shard]\nblocks_x = 2\nblocks_y = 8\nauto_threshold = 5000",
+        )
+        .unwrap();
+        let rc = RunnerConfig::from_config(&cfg).unwrap();
+        assert_eq!(rc.w2b_factor, 2);
+        assert_eq!(
+            rc.shard,
+            ShardConfig {
+                blocks_x: 2,
+                blocks_y: 8,
+                auto_threshold: 5000
+            }
+        );
+        // Strict `[shard]` keys: zero-sized grids, negative counts, and
+        // non-integer values are config errors, never silent fallbacks.
+        for bad in [
+            "[shard]\nblocks_x = 0",
+            "[shard]\nblocks_y = 0",
+            "[shard]\nblocks_x = \"two\"",
+            "[shard]\nauto_threshold = -1",
+            "[runner]\nw2b_factor = -2",
+        ] {
+            let cfg = Config::parse(bad).unwrap();
+            assert!(RunnerConfig::from_config(&cfg).is_err(), "{bad}");
+        }
     }
 }

@@ -1,0 +1,391 @@
+//! Shard-level scheduling: one oversized scene becomes a lockstep group
+//! of block-partitioned *pseudo-frames*.
+//!
+//! The engine layer already runs any group of in-flight frames through
+//! [`crate::coordinator::NetworkRunner::run_frames`] with shared GEMM
+//! waves; this module makes a single huge scene *be* such a group. The
+//! scene is split along the block-DOMS `(bx, by)` grid
+//! ([`BlockDoms::partition_for`] — the same partition §3.1D uses to
+//! downsize depths), each shard is padded with a halo wide enough to
+//! cover the sparse prefix's receptive field, and per-shard outputs are
+//! merged back by block ownership.
+//!
+//! ```text
+//!            scene                     pseudo-frames (lockstep group)
+//!   ┌───────────┬───────────┐      ┌────────────┐┌────────────┐
+//!   │  block    │  block    │      │ (0,0)+halo ││ (1,0)+halo │ ...
+//!   │  (0,0)    │  (1,0)    │  →   └────────────┘└────────────┘
+//!   ├───────────┼───────────┤            │  run_frames (shared waves)
+//!   │  (0,1)    │  (1,1)    │            ▼
+//!   └───────────┴───────────┘      merge by block ownership → one frame
+//! ```
+//!
+//! Because the halo closes every owned output's dependency cone, the
+//! merged result is bit-identical to the unsharded run: rule pairs that
+//! cross a shard edge are recovered inside the neighbors' halos — the
+//! cross-block story of Alg. 1 lifted from map search to the whole
+//! schedule (checksum-verified in `tests/shard_scheduler.rs`).
+
+use crate::geom::Coord3;
+use crate::mapsearch::table::BlockPartition;
+use crate::mapsearch::BlockDoms;
+use crate::model::layer::LayerSpec;
+use crate::sparse::tensor::SparseTensor;
+use crate::util::config::Config;
+
+/// The `[shard]` section of a run config: block-shard scheduling of
+/// oversized scenes (`1x1` = off).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardConfig {
+    pub blocks_x: usize,
+    pub blocks_y: usize,
+    /// Scenes below this voxel count run unsharded (0 = always shard
+    /// when the grid is larger than 1x1).
+    pub auto_threshold: usize,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        Self {
+            blocks_x: 1,
+            blocks_y: 1,
+            auto_threshold: 0,
+        }
+    }
+}
+
+impl ShardConfig {
+    /// A validated `bx x by` grid (auto threshold 0: always shard).
+    pub fn grid(bx: usize, by: usize) -> crate::Result<Self> {
+        // Zero-sized grids are config errors, reported through the same
+        // validation the block-DOMS searcher applies.
+        BlockDoms::with_partition(bx, by)?;
+        Ok(Self {
+            blocks_x: bx,
+            blocks_y: by,
+            auto_threshold: 0,
+        })
+    }
+
+    /// Read the `[shard]` keys of a run config. Strict: zero-sized grids
+    /// and non-integer / negative values are errors, never silent
+    /// fallbacks.
+    pub fn from_config(cfg: &Config) -> crate::Result<Self> {
+        let d = Self::default();
+        let s = Self {
+            blocks_x: cfg.usize_or("shard.blocks_x", d.blocks_x)?,
+            blocks_y: cfg.usize_or("shard.blocks_y", d.blocks_y)?,
+            auto_threshold: cfg.usize_or("shard.auto_threshold", d.auto_threshold)?,
+        };
+        BlockDoms::with_partition(s.blocks_x, s.blocks_y)?;
+        Ok(s)
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.blocks_x * self.blocks_y
+    }
+
+    /// Whether a scene of `n_voxels` gets sharded under this config.
+    pub fn active_for(&self, n_voxels: usize) -> bool {
+        self.num_blocks() > 1 && n_voxels >= self.auto_threshold
+    }
+}
+
+/// Halo width (in input voxels, x/y Chebyshev distance) and final
+/// coordinate scale of a sparse prefix.
+///
+/// Every output coordinate `c` of the prefix has a fine-grid *anchor*
+/// `c * scale` (scale = cumulative stride). Walking the layers forward,
+/// each layer's kernel support moves the anchor of a dependency by at
+/// most one voxel at that layer's input resolution, so the sum of those
+/// step sizes bounds the whole receptive cone: every input voxel an
+/// output depends on (transitively, including coordinate *existence* for
+/// downsampling layers) lies within `halo` of its anchor. A shard that
+/// carries `halo` extra voxels around its owned block therefore computes
+/// its owned outputs bit-identically to the full scene.
+pub fn prefix_halo(layers: &[LayerSpec]) -> crate::Result<(usize, usize)> {
+    let mut halo = 0usize;
+    let mut scale = 1usize;
+    for l in layers {
+        match l {
+            // subm3: inputs at c ± 1 (same resolution).
+            LayerSpec::Subm3 { .. } => halo += scale,
+            // gconv2: inputs at 2c + {0, 1}, one step at the *input*
+            // resolution, then the anchor scale doubles.
+            LayerSpec::GConv2 { .. } => {
+                halo += scale;
+                scale *= 2;
+            }
+            // tconv2 (k = s = 2): the unique parent is floor(c / 2) — at
+            // most one step at the *output* resolution.
+            LayerSpec::TConv2 { .. } => {
+                anyhow::ensure!(
+                    scale >= 2,
+                    "shard scheduling needs every TConv2 preceded by a matching \
+                     GConv2 (the net would upsample past input resolution)"
+                );
+                scale /= 2;
+                halo += scale;
+            }
+            other => anyhow::bail!("dense layer {other:?} inside the sparse prefix"),
+        }
+    }
+    Ok((halo, scale))
+}
+
+/// One pseudo-frame: a block's owned voxels plus its halo ring, at the
+/// scene's global coordinates and full extent. Geometry is untouched —
+/// only membership shrinks — so every searcher treats a shard exactly
+/// like a small frame.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    /// Block id `(i, j)` in the partition grid.
+    pub block: (usize, usize),
+    pub tensor: SparseTensor,
+    /// Voxels this shard owns (the merge keeps only their outputs).
+    pub owned: usize,
+}
+
+/// A planned sharding of one scene.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    pub part: BlockPartition,
+    /// Halo width in input voxels (see [`prefix_halo`]).
+    pub halo: usize,
+    /// Cumulative stride of the prefix output — the merge's ownership
+    /// anchor scale.
+    pub scale: usize,
+    /// Non-empty shards. Blocks whose halo-padded region holds no voxels
+    /// are dropped: with an empty region there is no input inside any
+    /// owned output's receptive cone, so such a block cannot own outputs.
+    pub shards: Vec<Shard>,
+}
+
+impl ShardPlan {
+    /// Split `input` into halo-padded block shards for the given sparse
+    /// prefix (every layer before the first dense layer). Single pass
+    /// over the scene: each voxel is routed to the handful of blocks
+    /// whose halo-padded region covers it (at most
+    /// `(2*halo/block_w + 1) * (2*halo/block_h + 1)`), not rescanned per
+    /// block — this planner runs exactly on the oversized scenes the
+    /// shard path exists for.
+    pub fn plan(
+        prefix: &[LayerSpec],
+        input: &SparseTensor,
+        bx: usize,
+        by: usize,
+    ) -> crate::Result<ShardPlan> {
+        let part = BlockDoms::with_partition(bx, by)?.partition_for(input);
+        let (halo, scale) = prefix_halo(prefix)?;
+        let (bw, bh) = (part.block_w(), part.block_h());
+        // Does `v` fall in block `b`'s halo-padded region along one axis?
+        // Blocks past the extent (trailing blocks of a non-dividing grid)
+        // have an empty owned rect and accept nothing.
+        let in_region = |b: usize, bs: usize, ext: usize, v: usize| -> bool {
+            let lo = (b * bs).saturating_sub(halo);
+            let hi = (((b + 1) * bs).min(ext) + halo).min(ext);
+            b * bs < ext && v >= lo && v < hi
+        };
+        // Candidate window [v-halo, v+halo] in block units; every block
+        // whose region covers `v` lies inside it (checked precisely by
+        // `in_region`).
+        let window = |v: usize, bs: usize, n: usize| -> (usize, usize) {
+            (v.saturating_sub(halo) / bs, ((v + halo) / bs).min(n - 1))
+        };
+        let mut members: Vec<Vec<u32>> = vec![Vec::new(); part.num_blocks()];
+        let mut owned_counts = vec![0usize; part.num_blocks()];
+        for (vi, &c) in input.coords.iter().enumerate() {
+            let owner = part.block_of(c);
+            let (ix_lo, ix_hi) = window(c.x as usize, bw, bx);
+            let (iy_lo, iy_hi) = window(c.y as usize, bh, by);
+            for j in iy_lo..=iy_hi {
+                for i in ix_lo..=ix_hi {
+                    if in_region(i, bw, input.extent.x, c.x as usize)
+                        && in_region(j, bh, input.extent.y, c.y as usize)
+                    {
+                        members[j * bx + i].push(vi as u32);
+                        if (i, j) == owner {
+                            owned_counts[j * bx + i] += 1;
+                        }
+                    }
+                }
+            }
+        }
+        let mut shards = Vec::with_capacity(part.num_blocks());
+        for j in 0..by {
+            for i in 0..bx {
+                let m = &members[j * bx + i];
+                if m.is_empty() {
+                    continue;
+                }
+                let pairs: Vec<(Coord3, Vec<i8>)> = m
+                    .iter()
+                    .map(|&vi| (input.coords[vi as usize], input.feature(vi as usize).to_vec()))
+                    .collect();
+                shards.push(Shard {
+                    block: (i, j),
+                    tensor: SparseTensor::new(input.extent, pairs, input.channels),
+                    owned: owned_counts[j * bx + i],
+                });
+            }
+        }
+        Ok(ShardPlan {
+            part,
+            halo,
+            scale,
+            shards,
+        })
+    }
+
+    /// Merge per-shard prefix outputs into one scene tensor: each shard
+    /// keeps exactly the coordinates whose fine anchor `(c.x * scale,
+    /// c.y * scale)` falls in its own block. Ownership is a function of
+    /// the coordinate, so the kept sets partition the output set — the
+    /// union is complete and duplicate-free, and the features are the
+    /// unsharded run's bit for bit (the halo closed every owned cone).
+    /// `outs` must arrive in `self.shards` order.
+    pub fn merge<'a>(
+        &self,
+        outs: impl ExactSizeIterator<Item = &'a SparseTensor>,
+    ) -> crate::Result<SparseTensor> {
+        anyhow::ensure!(!self.shards.is_empty(), "merge of an empty shard plan");
+        anyhow::ensure!(
+            outs.len() == self.shards.len(),
+            "one output tensor per shard"
+        );
+        let s = self.scale as i32;
+        let mut pairs: Vec<(Coord3, Vec<i8>)> = Vec::new();
+        let mut channels = 0usize;
+        let mut extent = None;
+        for (shard, t) in self.shards.iter().zip(outs) {
+            channels = t.channels;
+            match extent {
+                None => extent = Some(t.extent),
+                Some(e) => anyhow::ensure!(e == t.extent, "shard output extents diverged"),
+            }
+            for (i, &c) in t.coords.iter().enumerate() {
+                let anchor = Coord3::new(c.x * s, c.y * s, c.z);
+                if self.part.block_of(anchor) == shard.block {
+                    pairs.push((c, t.feature(i).to_vec()));
+                }
+            }
+        }
+        let extent = extent.expect("at least one shard");
+        Ok(SparseTensor::new(extent, pairs, channels.max(1)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::Extent3;
+    use crate::pointcloud::voxelize::Voxelizer;
+
+    fn scene(e: Extent3, n: usize, seed: u64) -> SparseTensor {
+        let g = Voxelizer::synth_occupancy(e, n as f64 / e.volume() as f64, seed);
+        let mut t = SparseTensor::from_coords(e, g.coords(), 2);
+        let mut rng = crate::util::rng::Pcg64::new(seed ^ 0xabc);
+        for v in t.features.iter_mut() {
+            *v = rng.next_i8(-5, 6);
+        }
+        t
+    }
+
+    #[test]
+    fn halo_tracks_receptive_field_and_scale() {
+        use LayerSpec::*;
+        // Two subm3: radius 2 at scale 1.
+        let (h, s) = prefix_halo(&[
+            Subm3 { c_in: 4, c_out: 8 },
+            Subm3 { c_in: 8, c_out: 8 },
+        ])
+        .unwrap();
+        assert_eq!((h, s), (2, 1));
+        // subm3, gconv2, subm3: 1 + 1, then one coarse step = 2 fine.
+        let (h, s) = prefix_halo(&[
+            Subm3 { c_in: 4, c_out: 8 },
+            GConv2 { c_in: 8, c_out: 16 },
+            Subm3 { c_in: 16, c_out: 16 },
+        ])
+        .unwrap();
+        assert_eq!((h, s), (4, 2));
+        // Encoder-decoder returns to scale 1.
+        let (h, s) = prefix_halo(&[
+            GConv2 { c_in: 4, c_out: 8 },
+            TConv2 { c_in: 8, c_out: 8 },
+        ])
+        .unwrap();
+        assert_eq!(s, 1);
+        assert_eq!(h, 2);
+        // Upsampling past input resolution is unsupported.
+        assert!(prefix_halo(&[TConv2 { c_in: 4, c_out: 4 }]).is_err());
+        // Dense layers never belong to a sparse prefix.
+        assert!(prefix_halo(&[ToBev]).is_err());
+    }
+
+    #[test]
+    fn plan_with_zero_halo_partitions_the_scene() {
+        let t = scene(Extent3::new(32, 24, 6), 260, 9);
+        let plan = ShardPlan::plan(&[], &t, 4, 3).unwrap();
+        assert_eq!(plan.halo, 0);
+        assert_eq!(plan.scale, 1);
+        let owned_total: usize = plan.shards.iter().map(|s| s.owned).sum();
+        assert_eq!(owned_total, t.len());
+        // Zero halo => every shard tensor is exactly its owned set, and
+        // the merge reassembles the scene bit for bit.
+        let tensors: Vec<&SparseTensor> = plan.shards.iter().map(|s| &s.tensor).collect();
+        let merged = plan.merge(tensors.into_iter()).unwrap();
+        assert_eq!(merged.coords, t.coords);
+        assert_eq!(merged.features, t.features);
+    }
+
+    #[test]
+    fn halo_voxels_are_shared_between_neighbor_shards() {
+        let t = scene(Extent3::new(40, 40, 4), 400, 11);
+        let prefix = [LayerSpec::Subm3 { c_in: 2, c_out: 2 }];
+        let plan = ShardPlan::plan(&prefix, &t, 2, 2).unwrap();
+        assert_eq!(plan.halo, 1);
+        let shard_total: usize = plan.shards.iter().map(|s| s.tensor.len()).sum();
+        let owned_total: usize = plan.shards.iter().map(|s| s.owned).sum();
+        assert_eq!(owned_total, t.len());
+        assert!(
+            shard_total > t.len(),
+            "boundary voxels should be replicated into neighbor halos"
+        );
+        // Still a partition after merge.
+        let tensors: Vec<&SparseTensor> = plan.shards.iter().map(|s| &s.tensor).collect();
+        let merged = plan.merge(tensors.into_iter()).unwrap();
+        assert_eq!(merged.coords, t.coords);
+    }
+
+    #[test]
+    fn empty_blocks_are_dropped() {
+        // All voxels in the left half: the right-hand blocks (beyond
+        // halo reach) plan no shards.
+        let e = Extent3::new(64, 16, 4);
+        let coords: Vec<Coord3> = (0..12)
+            .map(|i| Coord3::new(i % 8, (i / 2) % 16, (i % 4) as i32))
+            .collect();
+        let t = SparseTensor::from_coords(e, coords, 1);
+        let plan = ShardPlan::plan(&[LayerSpec::Subm3 { c_in: 1, c_out: 1 }], &t, 8, 1).unwrap();
+        assert!(!plan.shards.is_empty());
+        assert!(plan.shards.len() < 8, "empty blocks must be dropped");
+        assert!(plan.shards.iter().all(|s| !s.tensor.is_empty()));
+    }
+
+    #[test]
+    fn shard_config_validation() {
+        assert!(ShardConfig::grid(0, 2).is_err());
+        assert!(ShardConfig::grid(2, 0).is_err());
+        let sc = ShardConfig::grid(2, 8).unwrap();
+        assert_eq!(sc.num_blocks(), 16);
+        assert!(sc.active_for(0));
+        assert!(!ShardConfig::default().active_for(1_000_000));
+        let gated = ShardConfig {
+            auto_threshold: 500,
+            ..ShardConfig::grid(2, 2).unwrap()
+        };
+        assert!(!gated.active_for(499));
+        assert!(gated.active_for(500));
+    }
+}

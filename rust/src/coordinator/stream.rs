@@ -30,7 +30,8 @@ pub struct FrameRequest {
     pub enqueued: Instant,
 }
 
-/// Completion record for one frame.
+/// Completion record for one frame. The pseudo-frame count of a
+/// block-sharded scene is carried by `result.shards`.
 #[derive(Debug)]
 pub struct FrameCompletion {
     pub id: u64,
@@ -110,6 +111,12 @@ impl StreamServer {
     /// runs them as one lockstep wave group (never waiting for frames
     /// that have not arrived — latency is not traded for batch size).
     /// Per-frame results are bit-identical either way.
+    ///
+    /// Queue accounting is shard-aware: a scene that `cfg.shard` splits
+    /// occupies a whole lockstep window by itself — its block shards are
+    /// the window's pseudo-frames — so it is never packed together with
+    /// other queued frames, and a frame pulled while filling a window is
+    /// carried over to the next iteration instead of being dropped.
     pub fn serve<E, P>(
         &self,
         n_frames: u64,
@@ -139,11 +146,36 @@ impl StreamServer {
         let inflight = self.runner.cfg.inflight.max(1);
         let t0 = Instant::now();
         let mut completions = Vec::with_capacity(n_frames as usize);
+        // A frame pulled while filling a lockstep window but too big to
+        // join it (it shards into its own window) waits here.
+        let mut carry: Option<FrameRequest> = None;
         while (completions.len() as u64) < n_frames {
-            let Ok(first) = rx.recv() else { break };
+            let first = match carry.take() {
+                Some(req) => req,
+                None => match rx.recv() {
+                    Ok(req) => req,
+                    Err(_) => break,
+                },
+            };
+            // Shard-aware queue accounting: a scene that shards fills
+            // its whole window with its own pseudo-frames.
+            if self.runner.planned_shards(first.tensor.len()) > 1 {
+                let (id, enqueued) = (first.id, first.enqueued);
+                let result = self.runner.run_frame_sharded(first.tensor, engine)?;
+                completions.push(FrameCompletion {
+                    id,
+                    latency: enqueued.elapsed().as_secs_f64(),
+                    result,
+                });
+                continue;
+            }
             let mut group = vec![first];
             while group.len() < inflight {
                 match rx.try_recv() {
+                    Ok(req) if self.runner.planned_shards(req.tensor.len()) > 1 => {
+                        carry = Some(req);
+                        break;
+                    }
                     Ok(req) => group.push(req),
                     Err(_) => break,
                 }
@@ -256,6 +288,42 @@ mod tests {
             assert_eq!(x.result.checksum, y.result.checksum, "frame {}", x.id);
             assert_eq!(x.result.total_pairs(), y.result.total_pairs());
         }
+    }
+
+    #[test]
+    fn sharded_stream_serves_bit_identical_frames_in_their_own_windows() {
+        use crate::coordinator::shard::ShardConfig;
+        let plain = StreamServer::new(tiny_net(), RunnerConfig::default(), 8);
+        let sharded = StreamServer::new(
+            tiny_net(),
+            RunnerConfig {
+                shard: ShardConfig::grid(2, 2).unwrap(),
+                inflight: 3,
+                ..Default::default()
+            },
+            8,
+        );
+        let a = plain
+            .serve(6, make_frame, &mut NativeEngine::default())
+            .unwrap();
+        let b = sharded
+            .serve(6, make_frame, &mut NativeEngine::default())
+            .unwrap();
+        assert_eq!(a.completions.len(), b.completions.len());
+        for (x, y) in a.completions.iter().zip(&b.completions) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(
+                x.result.checksum, y.result.checksum,
+                "frame {} diverged under shard scheduling",
+                x.id
+            );
+            assert_eq!(x.result.shards, 1);
+            assert!(y.result.shards >= 1);
+        }
+        assert!(
+            b.completions.iter().any(|c| c.result.shards > 1),
+            "no frame actually sharded"
+        );
     }
 
     #[test]

@@ -4,12 +4,14 @@
 //! knob of the Voxel-CIM design.
 
 use crate::experiments::{print_table, sweep_tensor, HIGH_RES, LOW_RES};
-use crate::cim::w2b::w2b_allocate;
+use crate::cim::w2b::{copies_for_factor, w2b_allocate};
 use crate::mapsearch::{Doms, MapSearch, OctreeSearch, SearcherKind};
 use crate::model::{minkunet, second};
 use crate::pointcloud::voxelize::Voxelizer;
 use crate::sim::accelerator::{Accelerator, SimOptions};
+use crate::sparse::rulebook::ConvKind;
 use crate::sparse::tensor::SparseTensor;
+use crate::spconv::gather::{gather_batches_multi_w2b, tile_makespan_rows};
 
 /// Ablation A: DOMS FIFO capacity vs access volume (how much buffer does
 /// stability actually need?).
@@ -108,6 +110,37 @@ pub fn searcher_sweep(seed: u64) -> Vec<(SearcherKind, f64, f64, u64)> {
         .collect()
 }
 
+/// Ablation F: W2B-aware wave packing on the *real* schedule — replica
+/// copies from `w2b_allocate` fed into `gather_batches_multi_w2b`,
+/// measuring the busiest `(offset, replica)` tile (the layer's makespan
+/// in rows) and how many replica tiles the hottest offset's waves
+/// actually land on. Row: `(factor, makespan_rows, hottest_offset_tiles,
+/// total_waves)`.
+pub fn w2b_packing_sweep(seed: u64) -> Vec<(u32, u64, usize, usize)> {
+    let t = sweep_tensor(LOW_RES, 0.005, seed);
+    let rb = crate::sparse::hash_map_search(&t, ConvKind::subm3());
+    let workload = rb.workload_per_offset();
+    let hottest = workload
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, &w)| w)
+        .map(|(d, _)| d as u16)
+        .unwrap_or(0);
+    [1u32, 2, 4, 8]
+        .iter()
+        .map(|&factor| {
+            let copies = copies_for_factor(&workload, factor);
+            let waves = gather_batches_multi_w2b(&[&rb], 256, &copies);
+            let replicas: std::collections::HashSet<u16> = waves
+                .iter()
+                .filter(|w| w.offset == hottest)
+                .map(|w| w.replica)
+                .collect();
+            (factor, tile_makespan_rows(&waves), replicas.len(), waves.len())
+        })
+        .collect()
+}
+
 pub fn print_all(seed: u64) {
     print_table(
         "Ablation A — DOMS FIFO capacity (high res, s=0.005)",
@@ -169,6 +202,16 @@ pub fn print_all(seed: u64) {
             })
             .collect::<Vec<_>>(),
     );
+    print_table(
+        "Ablation F — W2B-aware wave packing (low res, batch 256)",
+        &["factor", "makespan rows", "hot-offset tiles", "waves"],
+        &w2b_packing_sweep(seed)
+            .iter()
+            .map(|(f, m, r, w)| {
+                vec![format!("{f}x"), m.to_string(), r.to_string(), w.to_string()]
+            })
+            .collect::<Vec<_>>(),
+    );
 }
 
 #[cfg(test)]
@@ -204,6 +247,24 @@ mod tests {
             assert!(pipelined <= serial + 1e-9, "{net}");
             assert!(gain >= 1.0);
         }
+    }
+
+    #[test]
+    fn w2b_packing_splits_the_hottest_offset_across_replica_tiles() {
+        let rows = w2b_packing_sweep(76);
+        assert_eq!(rows.len(), 4);
+        // Factor 1 = identity allocation: one tile per offset.
+        assert_eq!(rows[0].0, 1);
+        assert_eq!(rows[0].2, 1);
+        // Replication never worsens the busiest tile.
+        for w in rows.windows(2) {
+            assert!(w[1].1 <= w[0].1, "makespan grew with budget: {rows:?}");
+        }
+        // The paper's 2x setting demonstrably splits the hottest offset's
+        // waves across >= 2 replica tiles and shrinks the makespan.
+        let f2 = rows.iter().find(|r| r.0 == 2).unwrap();
+        assert!(f2.2 >= 2, "hottest offset stayed on one tile: {rows:?}");
+        assert!(f2.1 < rows[0].1, "2x replication did not flatten: {rows:?}");
     }
 
     #[test]

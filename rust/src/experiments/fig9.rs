@@ -85,7 +85,7 @@ pub fn run_c(seed: u64) -> Vec<Fig9cRow> {
     partitions
         .iter()
         .map(|&(bx, by)| {
-            let bd = BlockDoms::with_partition(bx, by);
+            let bd = BlockDoms::with_partition(bx, by).expect("valid partition");
             let (_, st) = bd.search_subm(&t, 3);
             Fig9cRow {
                 partition: (bx, by),

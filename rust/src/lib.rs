@@ -49,7 +49,9 @@ pub type Result<T> = anyhow::Result<T>;
 pub mod prelude {
     pub use crate::cim::{CimConfig, EnergyModel, W2bAllocation};
     pub use crate::geom::{Coord3, KernelOffsets};
-    pub use crate::coordinator::{NetworkRunner, RunnerConfig, StreamReport, StreamServer};
+    pub use crate::coordinator::{
+        NetworkRunner, RunnerConfig, ShardConfig, ShardPlan, StreamReport, StreamServer,
+    };
     pub use crate::mapsearch::{
         AccessStats, BlockDoms, Doms, HashSearch, MapSearch, OctreeSearch, OutputMajor,
         SearcherKind, WeightMajor,

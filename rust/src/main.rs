@@ -33,6 +33,18 @@ fn main() -> voxel_cim::Result<()> {
         "map-search engine: hash|weight-major|output-major|octree|doms|block-doms \
          (overrides the config; default doms)",
     )
+    .opt(
+        "shards",
+        "",
+        "block-shard the scene into a BXxBY grid of lockstep pseudo-frames \
+         (e.g. 2x2, or N for NxN; overrides the [shard] config; bit-identical output)",
+    )
+    .opt(
+        "w2b",
+        "",
+        "W2B replication budget as a multiple of the kernel volume for wave \
+         packing (overrides [runner] w2b_factor; 0 = off)",
+    )
     .switch("native", "use the native GEMM engine instead of PJRT artifacts")
     .parse();
 
@@ -141,21 +153,45 @@ fn run_net(detection: bool, args: &Args) -> voxel_cim::Result<()> {
         "" => {}
         s => runner_cfg.searcher = s.parse().map_err(anyhow::Error::msg)?,
     }
+    match args.get("shards") {
+        "" => {}
+        s => {
+            let (bx, by) = voxel_cim::util::cli::parse_grid(s).map_err(anyhow::Error::msg)?;
+            runner_cfg.shard = voxel_cim::coordinator::shard::ShardConfig::grid(bx, by)?;
+        }
+    }
+    match args.get("w2b") {
+        "" => {}
+        s => {
+            runner_cfg.w2b_factor = s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--w2b: not an integer ({e})"))?
+        }
+    }
     println!(
-        "engine layer: searcher={} batch={} workers={} compute_workers={}",
-        runner_cfg.searcher, runner_cfg.batch, runner_cfg.workers, runner_cfg.compute_workers
+        "engine layer: searcher={} batch={} workers={} compute_workers={} w2b={} shards={}x{}",
+        runner_cfg.searcher,
+        runner_cfg.batch,
+        runner_cfg.workers,
+        runner_cfg.compute_workers,
+        runner_cfg.w2b_factor,
+        runner_cfg.shard.blocks_x,
+        runner_cfg.shard.blocks_y,
     );
     let runner = NetworkRunner::new(net, runner_cfg);
     let res = if args.get_bool("native") {
         let mut engine = NativeEngine::default();
-        runner.run_frame(input, &mut engine)?
+        runner.run_frame_sharded(input, &mut engine)?
     } else {
         let mut engine = Runtime::load(&RuntimeConfig::discover())?;
         println!("runtime: PJRT CPU, batches {:?}", engine.gemm_batches());
-        let r = runner.run_frame(input, &mut engine)?;
+        let r = runner.run_frame_sharded(input, &mut engine)?;
         println!("PJRT dispatches: {}", engine.dispatches());
         r
     };
+    if res.shards > 1 {
+        println!("shard scheduler: scene served as {} lockstep pseudo-frames", res.shards);
+    }
 
     println!("\nper-layer:");
     for r in &res.records {

@@ -64,12 +64,21 @@ struct BlockData {
 }
 
 impl BlockDoms {
-    pub fn with_partition(bx: usize, by: usize) -> Self {
-        Self {
+    /// Build a block-DOMS searcher over a `bx x by` partition. A zero-
+    /// sized grid is a configuration error (it would denote an empty
+    /// partition with no blocks to search), reported instead of asserted
+    /// so config-driven callers (`[shard]`, partition sweeps) surface it
+    /// to the user.
+    pub fn with_partition(bx: usize, by: usize) -> crate::Result<Self> {
+        anyhow::ensure!(
+            bx >= 1 && by >= 1,
+            "block partition must be at least 1x1, got {bx}x{by}"
+        );
+        Ok(Self {
             bx,
             by,
             ..Default::default()
-        }
+        })
     }
 
     pub fn partition_for(&self, input: &SparseTensor) -> BlockPartition {
@@ -271,7 +280,7 @@ mod tests {
         check("block-DOMS == hash oracle for any partition", 12, |g| {
             let e = Extent3::new(g.usize(8, 40), g.usize(8, 40), g.usize(2, 8));
             let t = tensor(e, g.usize(10, 800), g.usize(0, 1 << 30) as u64);
-            let bd = BlockDoms::with_partition(g.usize(1, 5), g.usize(1, 5));
+            let bd = BlockDoms::with_partition(g.usize(1, 5), g.usize(1, 5)).unwrap();
             let (rb, _) = bd.search_subm(&t, 3);
             let want = hash_map_search(&t, ConvKind::subm3());
             assert_eq!(rb.pairs, want.pairs);
@@ -285,7 +294,7 @@ mod tests {
         let e = Extent3::new(128, 128, 8);
         let t = tensor(e, 2400, 42);
         let (_, doms) = Doms::default().search_subm(&t, 3);
-        let (_, bdoms) = BlockDoms::with_partition(4, 8).search_subm(&t, 3);
+        let (_, bdoms) = BlockDoms::with_partition(4, 8).unwrap().search_subm(&t, 3);
         let dn = doms.normalized(t.len());
         let bn = bdoms.normalized(t.len());
         assert!(dn > 1.7, "DOMS should be ~2N here, got {dn}");
@@ -296,18 +305,26 @@ mod tests {
     fn replication_fraction_small() {
         let e = Extent3::new(352, 400, 10);
         let t = tensor(e, 7000, 43);
-        let bd = BlockDoms::with_partition(2, 8);
+        let bd = BlockDoms::with_partition(2, 8).unwrap();
         let (_, stats) = bd.search_subm(&t, 3);
         let frac = stats.voxel_writes as f64 / t.len() as f64;
         assert!(frac < 0.06, "replicated fraction {frac} >= 6%");
     }
 
     #[test]
+    fn zero_partition_is_a_config_error() {
+        assert!(BlockDoms::with_partition(0, 4).is_err());
+        assert!(BlockDoms::with_partition(4, 0).is_err());
+        assert!(BlockDoms::with_partition(0, 0).is_err());
+        assert!(BlockDoms::with_partition(1, 1).is_ok());
+    }
+
+    #[test]
     fn table_grows_with_blocks() {
         let e = Extent3::new(64, 64, 10);
         let t = tensor(e, 500, 44);
-        let (_, s1) = BlockDoms::with_partition(1, 1).search_subm(&t, 3);
-        let (_, s2) = BlockDoms::with_partition(4, 8).search_subm(&t, 3);
+        let (_, s1) = BlockDoms::with_partition(1, 1).unwrap().search_subm(&t, 3);
+        let (_, s2) = BlockDoms::with_partition(4, 8).unwrap().search_subm(&t, 3);
         assert_eq!(s1.table_bytes, 10 * 4);
         assert_eq!(s2.table_bytes, 32 * 10 * 4);
     }

@@ -86,6 +86,25 @@ impl Rulebook {
         w
     }
 
+    /// Element-wise sum of several rulebooks' per-offset workloads — the
+    /// group-level histogram the scheduler feeds to W2B allocation when
+    /// in-flight frames (or scene shards) share one GEMM wave schedule.
+    pub fn combined_workload<'a>(rbs: impl IntoIterator<Item = &'a Rulebook>) -> Vec<u64> {
+        let mut acc: Vec<u64> = Vec::new();
+        for rb in rbs {
+            let w = rb.workload_per_offset();
+            if acc.is_empty() {
+                acc = w;
+            } else {
+                debug_assert_eq!(acc.len(), w.len(), "mixed kernels in one group");
+                for (a, b) in acc.iter_mut().zip(w) {
+                    *a += b;
+                }
+            }
+        }
+        acc
+    }
+
     /// Group pair indices by offset (weight-stationary gather order).
     pub fn pairs_by_offset(&self) -> Vec<Vec<RulePair>> {
         let mut groups = vec![Vec::new(); self.kind.kernel_volume()];
@@ -171,6 +190,24 @@ mod tests {
         assert_eq!(w[13], 2);
         assert_eq!(w[0], 1);
         assert_eq!(w.iter().sum::<u64>(), 3);
+    }
+
+    #[test]
+    fn combined_workload_sums_across_frames() {
+        let rb = |n: u32| Rulebook {
+            kind: ConvKind::subm3(),
+            pairs: (0..n)
+                .map(|i| RulePair { offset: 13, input: i, output: i })
+                .collect(),
+            out_coords: (0..n as i32).map(|i| Coord3::new(i, 0, 0)).collect(),
+            out_extent: Extent3::new(64, 1, 1),
+        };
+        let (a, b) = (rb(3), rb(5));
+        let w = Rulebook::combined_workload([&a, &b]);
+        assert_eq!(w.len(), 27);
+        assert_eq!(w[13], 8);
+        assert_eq!(w.iter().sum::<u64>(), 8);
+        assert!(Rulebook::combined_workload(std::iter::empty::<&Rulebook>()).is_empty());
     }
 
     #[test]

@@ -87,6 +87,12 @@ pub fn gather_batches(rb: &Rulebook, batch: usize) -> (Vec<GatherBatch>, GatherS
 #[derive(Clone, Debug)]
 pub struct MultiGatherBatch {
     pub offset: u16,
+    /// W2B replica tile this wave runs on (0 when the offset has a single
+    /// resident sub-matrix copy). Waves with the same offset but distinct
+    /// replicas sit on different physical copies and therefore run in
+    /// parallel in the CIM schedule — the Fig. 10 balancing applied to
+    /// the real wave placement.
+    pub replica: u16,
     /// `(frame, input, output)` — input/output index into that frame's
     /// tensor / rulebook output set.
     pub rows: Vec<(u32, u32, u32)>,
@@ -97,14 +103,41 @@ pub struct MultiGatherBatch {
 /// are concatenated per offset in frame order, so every row of every
 /// frame is covered exactly once and partial per-frame waves merge into
 /// full shared dispatches — the stream-level amortization of PJRT
-/// dispatch overhead.
+/// dispatch overhead. First-come-first-served onto one tile per offset;
+/// see [`gather_batches_multi_w2b`] for the W2B-aware placement.
 pub fn gather_batches_multi(rbs: &[&Rulebook], batch: usize) -> Vec<MultiGatherBatch> {
+    gather_batches_multi_w2b(rbs, batch, &[])
+}
+
+/// W2B-aware wave packing: `copies[d]` replica tiles hold offset `d`'s
+/// sub-matrix (the `W2bAllocation::copies` of `w2b_allocate`), and that
+/// offset's rows are split into `copies[d]` contiguous runs — one per
+/// replica tile — before batching, so a hot offset's waves land on
+/// parallel tiles instead of serializing on one. Row coverage (and hence
+/// every numeric result) is identical to FCFS packing; only the
+/// wave→tile placement changes. An empty `copies` slice (or all-ones)
+/// reproduces [`gather_batches_multi`] exactly.
+///
+/// Degenerate inputs are tolerated rather than asserted away: an empty
+/// `rbs` slice, or rulebooks carrying zero pairs (empty scene shards),
+/// simply contribute no waves.
+pub fn gather_batches_multi_w2b(
+    rbs: &[&Rulebook],
+    batch: usize,
+    copies: &[u32],
+) -> Vec<MultiGatherBatch> {
     assert!(batch > 0);
-    assert!(!rbs.is_empty());
+    if rbs.is_empty() {
+        return Vec::new();
+    }
     let k_vol = rbs[0].kind.kernel_volume();
     assert!(
         rbs.iter().all(|rb| rb.kind.kernel_volume() == k_vol),
         "rulebooks of one wave group must share the kernel"
+    );
+    assert!(
+        copies.is_empty() || copies.len() == k_vol,
+        "copies must carry one entry per kernel offset"
     );
     let per_frame: Vec<Vec<Vec<crate::sparse::rulebook::RulePair>>> =
         rbs.iter().map(|rb| rb.pairs_by_offset()).collect();
@@ -114,14 +147,41 @@ pub fn gather_batches_multi(rbs: &[&Rulebook], batch: usize) -> Vec<MultiGatherB
         for (f, groups) in per_frame.iter().enumerate() {
             rows.extend(groups[d].iter().map(|p| (f as u32, p.input, p.output)));
         }
-        for chunk in rows.chunks(batch) {
-            out.push(MultiGatherBatch {
-                offset: d as u16,
-                rows: chunk.to_vec(),
-            });
+        if rows.is_empty() {
+            continue;
+        }
+        // At most one replica per row: a balanced contiguous split over
+        // `nrep <= rows.len()` tiles never produces an empty tile.
+        let nrep = copies
+            .get(d)
+            .map_or(1, |&c| (c as usize).max(1))
+            .min(rows.len());
+        for r in 0..nrep {
+            let lo = r * rows.len() / nrep;
+            let hi = (r + 1) * rows.len() / nrep;
+            for chunk in rows[lo..hi].chunks(batch) {
+                out.push(MultiGatherBatch {
+                    offset: d as u16,
+                    replica: r as u16,
+                    rows: chunk.to_vec(),
+                });
+            }
         }
     }
     out
+}
+
+/// Makespan of a wave schedule in rows: each `(offset, replica)` tile
+/// runs its waves serially while distinct tiles run in parallel, so a
+/// layer's compute time is bounded by the busiest tile — the quantity
+/// W2B replication flattens.
+pub fn tile_makespan_rows(waves: &[MultiGatherBatch]) -> u64 {
+    let mut per_tile: std::collections::HashMap<(u16, u16), u64> =
+        std::collections::HashMap::new();
+    for w in waves {
+        *per_tile.entry((w.offset, w.replica)).or_insert(0) += w.rows.len() as u64;
+    }
+    per_tile.values().copied().max().unwrap_or(0)
 }
 
 #[cfg(test)]
@@ -214,6 +274,66 @@ mod tests {
             merged < solo,
             "expected shared waves to amortize dispatches: {merged} vs {solo}"
         );
+    }
+
+    #[test]
+    fn empty_rulebook_slices_yield_no_waves() {
+        // No frames at all.
+        assert!(gather_batches_multi(&[], 64).is_empty());
+        // A shard group where some (or all) rulebooks carry zero pairs.
+        let (_, rb) = rulebook(120, 58);
+        let empty = Rulebook {
+            kind: rb.kind,
+            pairs: Vec::new(),
+            out_coords: Vec::new(),
+            out_extent: rb.out_extent,
+        };
+        assert!(gather_batches_multi(&[&empty, &empty], 64).is_empty());
+        let waves = gather_batches_multi(&[&empty, &rb, &empty], 64);
+        assert!(waves.iter().all(|w| !w.rows.is_empty()));
+        assert!(waves.iter().all(|w| w.rows.iter().all(|r| r.0 == 1)));
+        let total: usize = waves.iter().map(|w| w.rows.len()).sum();
+        assert_eq!(total, rb.len());
+    }
+
+    #[test]
+    fn w2b_packing_covers_rows_once_and_splits_hot_offsets() {
+        let (_, rb) = rulebook(400, 59);
+        let workload = rb.workload_per_offset();
+        let copies = crate::cim::w2b::w2b_allocate(&workload, 54).copies;
+        let batch = 256;
+        let fcfs = gather_batches_multi(&[&rb], batch);
+        let w2b = gather_batches_multi_w2b(&[&rb], batch, &copies);
+        // Identical row coverage regardless of tile placement.
+        let collect = |waves: &[MultiGatherBatch]| {
+            let mut v: Vec<(u16, u32, u32)> = waves
+                .iter()
+                .flat_map(|w| w.rows.iter().map(move |&(_, i, o)| (w.offset, i, o)))
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(collect(&fcfs), collect(&w2b));
+        // The hottest offset (the subm3 center) got >= 2 copies and its
+        // waves actually land on >= 2 replica tiles.
+        let hottest = workload
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &w)| w)
+            .unwrap()
+            .0 as u16;
+        assert!(copies[hottest as usize] >= 2, "copies {copies:?}");
+        let replicas: std::collections::HashSet<u16> = w2b
+            .iter()
+            .filter(|w| w.offset == hottest)
+            .map(|w| w.replica)
+            .collect();
+        assert!(replicas.len() >= 2, "hot offset stayed on one tile");
+        // Busiest tile shrinks: the allocator's makespan bound holds on
+        // the realized schedule.
+        assert!(tile_makespan_rows(&w2b) < tile_makespan_rows(&fcfs));
+        // FCFS via the same code path: all replica 0.
+        assert!(fcfs.iter().all(|w| w.replica == 0));
     }
 
     #[test]

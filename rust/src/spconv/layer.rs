@@ -14,7 +14,9 @@ use std::sync::Arc;
 use crate::coordinator::executor::WorkerPool;
 use crate::sparse::rulebook::Rulebook;
 use crate::sparse::tensor::SparseTensor;
-use crate::spconv::gather::{gather_batches, gather_batches_multi};
+use crate::spconv::gather::{
+    gather_batches, gather_batches_multi, gather_batches_multi_w2b, MultiGatherBatch,
+};
 use crate::spconv::quant;
 
 /// CIM sub-matrix tile edge (must match `python/compile/aot.py::TILE_C`).
@@ -124,6 +126,9 @@ pub struct SpconvLayer {
     pub zero: Vec<f32>,
     /// GEMM wave batch size.
     pub batch: usize,
+    /// W2B replica counts per offset (see [`Self::with_w2b`]); `None`
+    /// packs waves first-come-first-served onto one tile per offset.
+    pub w2b_copies: Option<Vec<u32>>,
 }
 
 /// Result of executing a layer: the output tensor plus execution stats.
@@ -192,6 +197,27 @@ impl SpconvLayer {
             scale: vec![0.05; c_out],
             zero: vec![0.0; c_out],
             batch,
+            w2b_copies: None,
+        }
+    }
+
+    /// Enable W2B-aware wave packing: `copies[d]` replica tiles hold
+    /// offset `d`'s sub-matrix (from `w2b_allocate`), and hot offsets'
+    /// waves split across them instead of serializing on one tile. The
+    /// numerics are unchanged — row coverage is identical, only the
+    /// wave→tile placement (and thus dispatch shape) differs.
+    pub fn with_w2b(mut self, copies: Vec<u32>) -> Self {
+        assert_eq!(copies.len(), self.weights.k_volume, "one copy count per offset");
+        self.w2b_copies = Some(copies);
+        self
+    }
+
+    /// The multi-frame wave schedule this layer executes: W2B-aware when
+    /// replica counts are set, FCFS otherwise.
+    fn waves_for(&self, rbs: &[&Rulebook]) -> Vec<MultiGatherBatch> {
+        match &self.w2b_copies {
+            Some(copies) => gather_batches_multi_w2b(rbs, self.batch, copies),
+            None => gather_batches_multi(rbs, self.batch),
         }
     }
 
@@ -321,7 +347,7 @@ impl SpconvLayer {
         }
         let tw = TiledWeights::new(&self.weights);
         let rbs: Vec<&Rulebook> = inputs.iter().map(|&(_, rb)| rb).collect();
-        let waves = gather_batches_multi(&rbs, self.batch);
+        let waves = self.waves_for(&rbs);
         let mut psums: Vec<Vec<i32>> = inputs
             .iter()
             .map(|&(_, rb)| vec![0i32; rb.out_coords.len() * c2])
@@ -383,7 +409,7 @@ impl SpconvLayer {
             assert_eq!(rb.kind.kernel_volume(), self.weights.k_volume);
         }
         let rbs: Vec<&Rulebook> = inputs.iter().map(|(_, rb)| rb.as_ref()).collect();
-        let waves = gather_batches_multi(&rbs, self.batch);
+        let waves = self.waves_for(&rbs);
 
         // Pool eligibility. The probe fork is kept and handed to the
         // first worker rather than discarded.
@@ -736,6 +762,24 @@ mod tests {
             shared.calls,
             solo_calls
         );
+    }
+
+    #[test]
+    fn w2b_packing_is_bit_identical_at_the_layer_level() {
+        let t = tensor_with_features(150, 8, 91);
+        let rb = hash_map_search(&t, ConvKind::subm3());
+        let w = LayerWeights::random(27, 8, 8, 92);
+        let plain = SpconvLayer::new(w.clone(), 48)
+            .execute_batch(&[(&t, &rb)], &mut NativeEngine::default())
+            .unwrap();
+        let copies = crate::cim::w2b::w2b_allocate(&rb.workload_per_offset(), 54).copies;
+        let packed = SpconvLayer::new(w, 48)
+            .with_w2b(copies)
+            .execute_batch(&[(&t, &rb)], &mut NativeEngine::default())
+            .unwrap();
+        assert_eq!(plain[0].psums, packed[0].psums);
+        assert_eq!(plain[0].tensor.features, packed[0].tensor.features);
+        assert_eq!(plain[0].gathered_rows, packed[0].gathered_rows);
     }
 
     #[test]

@@ -167,6 +167,24 @@ impl Args {
     }
 }
 
+/// Parse a `BXxBY` grid spec (`"2x8"`), accepting a bare `N` as the
+/// square grid `NxN` — the `--shards` flag's value format.
+pub fn parse_grid(s: &str) -> Result<(usize, usize), String> {
+    let s = s.trim();
+    let parse_dim = |d: &str| -> Result<usize, String> {
+        d.trim()
+            .parse::<usize>()
+            .map_err(|e| format!("bad grid dimension {d:?}: {e}"))
+    };
+    match s.split_once(['x', 'X']) {
+        Some((a, b)) => Ok((parse_dim(a)?, parse_dim(b)?)),
+        None => {
+            let n = parse_dim(s)?;
+            Ok((n, n))
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -217,6 +235,17 @@ mod tests {
     fn missing_value_errors() {
         let r = Args::new("t").opt("n", "5", "count").parse_from(argv("--n"));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn grid_specs_parse() {
+        assert_eq!(parse_grid("2x8"), Ok((2, 8)));
+        assert_eq!(parse_grid(" 4X4 "), Ok((4, 4)));
+        assert_eq!(parse_grid("3"), Ok((3, 3)));
+        assert!(parse_grid("x2").is_err());
+        assert!(parse_grid("2x").is_err());
+        assert!(parse_grid("axb").is_err());
+        assert!(parse_grid("").is_err());
     }
 
     #[test]

@@ -127,6 +127,21 @@ impl Config {
         self.map.keys().map(String::as_str)
     }
 
+    /// Strict non-negative integer key: missing yields `default`, but a
+    /// present value that is negative or not an integer is an error —
+    /// the contract config-driven counts (`[runner]`, `[shard]`) rely on
+    /// instead of silently falling back.
+    pub fn usize_or(&self, key: &str, default: usize) -> crate::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(Value::Int(i)) => {
+                anyhow::ensure!(*i >= 0, "{key} must be >= 0, got {i}");
+                Ok(*i as usize)
+            }
+            Some(v) => bail!("{key} must be an integer, got {v:?}"),
+        }
+    }
+
     /// Parse a string-valued key into any `FromStr` type (enum-valued
     /// config keys like the engine layer's `[runner] searcher`). Missing
     /// key yields `default`; a present-but-invalid value (unparseable
@@ -254,6 +269,15 @@ dense = false
         // Present but not a string is an error, not a silent default.
         let not_str = Config::parse("[runner]\nsearcher = 3").unwrap();
         assert!(not_str.parsed_or("runner.searcher", SearcherKind::Doms).is_err());
+    }
+
+    #[test]
+    fn usize_or_is_strict() {
+        let c = Config::parse("[shard]\nblocks_x = 2\nbad = -1\nkind = \"x\"").unwrap();
+        assert_eq!(c.usize_or("shard.blocks_x", 1).unwrap(), 2);
+        assert_eq!(c.usize_or("shard.missing", 7).unwrap(), 7);
+        assert!(c.usize_or("shard.bad", 1).is_err());
+        assert!(c.usize_or("shard.kind", 1).is_err());
     }
 
     #[test]

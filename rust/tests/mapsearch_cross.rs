@@ -14,7 +14,7 @@ fn searchers() -> Vec<Box<dyn MapSearch>> {
         Box::new(OutputMajor::default()),
         Box::new(Doms::default()),
         Box::new(BlockDoms::default()),
-        Box::new(BlockDoms::with_partition(3, 5)),
+        Box::new(BlockDoms::with_partition(3, 5).unwrap()),
     ]
 }
 
@@ -68,7 +68,7 @@ fn access_volume_ordering_holds_in_stress_regime() {
     let (_, wm) = WeightMajor::default().search_subm(&t, 3);
     let (_, om) = OutputMajor::default().search_subm(&t, 3);
     let (_, d) = Doms::default().search_subm(&t, 3);
-    let (_, bd) = BlockDoms::with_partition(4, 8).search_subm(&t, 3);
+    let (_, bd) = BlockDoms::with_partition(4, 8).unwrap().search_subm(&t, 3);
     let (wm, om, d, bd) = (
         wm.normalized(nv),
         om.normalized(nv),

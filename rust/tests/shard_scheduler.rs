@@ -1,0 +1,209 @@
+//! Integration: shard-level scheduling. A block-sharded run must be
+//! bit-identical to the unsharded path — same checksum, head shape, and
+//! output voxel count — for every `SearcherKind`, every partition, both
+//! task kinds (sparse-only segmentation and dense-head detection), and
+//! in composition with W2B-aware wave packing. The halo math is what
+//! makes this hold across shard edges; these tests are its witness.
+
+use voxel_cim::coordinator::scheduler::{NetworkRunner, RunnerConfig};
+use voxel_cim::coordinator::shard::ShardConfig;
+use voxel_cim::geom::Extent3;
+use voxel_cim::mapsearch::SearcherKind;
+use voxel_cim::model::layer::{LayerSpec, NetworkSpec, TaskKind};
+use voxel_cim::model::minkunet;
+use voxel_cim::sparse::SparseTensor;
+use voxel_cim::spconv::layer::NativeEngine;
+use voxel_cim::testing::prop::check;
+
+/// Shallow segmentation net: halo 5 at scale 2, small enough that a
+/// shard's halo ring does not swallow the whole scene — real cross-shard
+/// boundary pairs get exercised.
+fn seg_net(extent: Extent3) -> NetworkSpec {
+    NetworkSpec {
+        name: "shard-seg",
+        task: TaskKind::Segmentation,
+        extent,
+        vfe_channels: 4,
+        layers: vec![
+            LayerSpec::Subm3 { c_in: 4, c_out: 8 },
+            LayerSpec::Subm3 { c_in: 8, c_out: 8 },
+            LayerSpec::GConv2 { c_in: 8, c_out: 16 },
+            LayerSpec::Subm3 { c_in: 16, c_out: 16 },
+        ],
+    }
+}
+
+/// Detection-shaped net: sparse prefix, then BEV flatten and a dense RPN
+/// layer — exercises the merged-scene suffix run and its weight-seed
+/// continuation.
+fn det_net(extent: Extent3) -> NetworkSpec {
+    NetworkSpec {
+        name: "shard-det",
+        task: TaskKind::Detection,
+        extent,
+        vfe_channels: 4,
+        layers: vec![
+            LayerSpec::Subm3 { c_in: 4, c_out: 8 },
+            LayerSpec::GConv2 { c_in: 8, c_out: 16 },
+            LayerSpec::ToBev,
+            LayerSpec::Conv2d { c_in: 64, c_out: 32, k: 3, stride: 1 },
+        ],
+    }
+}
+
+fn featured(coords_only: SparseTensor, channels: usize, seed: u64) -> SparseTensor {
+    let mut t = SparseTensor::from_coords(coords_only.extent, coords_only.coords, channels);
+    let mut rng = voxel_cim::util::rng::Pcg64::new(seed);
+    for v in t.features.iter_mut() {
+        *v = rng.next_i8(0, 8);
+    }
+    t
+}
+
+fn scene(e: Extent3, n: usize, channels: usize, seed: u64) -> SparseTensor {
+    let g = voxel_cim::pointcloud::voxelize::Voxelizer::synth_clustered(
+        e,
+        n as f64 / e.volume() as f64,
+        4,
+        0.35,
+        seed,
+    );
+    featured(SparseTensor::from_coords(e, g.coords(), 1), channels, seed ^ 0x5eed)
+}
+
+fn runner_with(net: NetworkSpec, shard: ShardConfig, kind: SearcherKind, w2b: u32) -> NetworkRunner {
+    NetworkRunner::new(
+        net,
+        RunnerConfig {
+            searcher: kind,
+            shard,
+            w2b_factor: w2b,
+            batch: 64,
+            seed: 33,
+            ..Default::default()
+        },
+    )
+}
+
+#[test]
+fn sharded_runs_are_bit_identical_for_every_searcher_and_partition() {
+    check("sharded == unsharded for any searcher/partition", 6, |g| {
+        let coords = g.sparse_scene(48, 8, 320);
+        let e = coords.extent;
+        let t = featured(coords, 4, g.usize(0, 1 << 30) as u64);
+        let (bx, by) = (g.usize(1, 5), g.usize(1, 5));
+        for kind in SearcherKind::ALL {
+            let runner = runner_with(
+                seg_net(e),
+                ShardConfig::grid(bx, by).unwrap(),
+                kind,
+                0,
+            );
+            let want = runner
+                .run_frame(t.clone(), &mut NativeEngine::default())
+                .unwrap();
+            let got = runner
+                .run_frame_sharded(t.clone(), &mut NativeEngine::default())
+                .unwrap();
+            assert_eq!(
+                want.checksum, got.checksum,
+                "{kind} diverged at {bx}x{by} on {} voxels at {e:?}",
+                t.len()
+            );
+            assert_eq!(want.out_voxels, got.out_voxels, "{kind} {bx}x{by}");
+            assert_eq!(want.head_shape, got.head_shape);
+            assert_eq!(want.records.len(), got.records.len());
+        }
+    });
+}
+
+#[test]
+fn detection_head_runs_on_the_merged_scene() {
+    let e = Extent3::new(48, 48, 8);
+    let t = scene(e, 400, 4, 77);
+    let runner = runner_with(det_net(e), ShardConfig::grid(2, 2).unwrap(), SearcherKind::Doms, 0);
+    let want = runner.run_frame(t.clone(), &mut NativeEngine::default()).unwrap();
+    let got = runner
+        .run_frame_sharded(t, &mut NativeEngine::default())
+        .unwrap();
+    assert!(got.shards > 1, "scene should actually shard");
+    assert_eq!(want.checksum, got.checksum, "dense head bits diverged");
+    assert_eq!(want.head_shape, got.head_shape);
+    assert_eq!(want.head_shape.unwrap().2, 32);
+    // Full layer stack reported: prefix (aggregated) + suffix.
+    assert_eq!(got.records.len(), want.records.len());
+}
+
+#[test]
+fn minkunet_decoder_shards_bit_identically() {
+    // Encoder-decoder with pruned transposed convs: the deepest halo in
+    // the repo (each shard records and pops its own skip sets).
+    let net = minkunet::minkunet_small();
+    let e = net.extent;
+    let t = scene(e, 500, 4, 91);
+    let runner = runner_with(net, ShardConfig::grid(2, 2).unwrap(), SearcherKind::Doms, 0);
+    let want = runner.run_frame(t.clone(), &mut NativeEngine::default()).unwrap();
+    let got = runner
+        .run_frame_sharded(t, &mut NativeEngine::default())
+        .unwrap();
+    assert!(got.shards > 1);
+    assert_eq!(want.checksum, got.checksum, "UNet bits diverged under sharding");
+    assert_eq!(want.out_voxels, got.out_voxels);
+}
+
+#[test]
+fn empty_blocks_drop_without_losing_bits() {
+    // Scene confined to a corner of a wide grid: most blocks plan empty
+    // and are dropped; the survivors still reassemble the exact frame.
+    let e = Extent3::new(96, 96, 6);
+    let corner = voxel_cim::pointcloud::voxelize::Voxelizer::synth_occupancy(
+        Extent3::new(24, 96, 6),
+        0.08,
+        13,
+    );
+    let t = featured(SparseTensor::from_coords(e, corner.coords(), 1), 4, 14);
+    let runner = runner_with(seg_net(e), ShardConfig::grid(4, 2).unwrap(), SearcherKind::Doms, 0);
+    let want = runner.run_frame(t.clone(), &mut NativeEngine::default()).unwrap();
+    let got = runner
+        .run_frame_sharded(t, &mut NativeEngine::default())
+        .unwrap();
+    assert!(got.shards > 1, "expected several live shards");
+    assert!(got.shards < 8, "empty blocks should have been dropped");
+    assert_eq!(want.checksum, got.checksum);
+}
+
+#[test]
+fn auto_threshold_gates_sharding() {
+    let e = Extent3::new(32, 32, 6);
+    let t = scene(e, 200, 4, 55);
+    let gated = ShardConfig {
+        auto_threshold: 100_000,
+        ..ShardConfig::grid(2, 2).unwrap()
+    };
+    let runner = runner_with(seg_net(e), gated, SearcherKind::Doms, 0);
+    let plain = runner_with(seg_net(e), ShardConfig::default(), SearcherKind::Doms, 0);
+    let got = runner
+        .run_frame_sharded(t.clone(), &mut NativeEngine::default())
+        .unwrap();
+    let want = plain.run_frame(t, &mut NativeEngine::default()).unwrap();
+    assert_eq!(got.shards, 1, "below-threshold scene must not shard");
+    assert_eq!(got.checksum, want.checksum);
+}
+
+#[test]
+fn w2b_packing_composes_with_sharding_bit_identically() {
+    let e = Extent3::new(40, 40, 8);
+    let t = scene(e, 350, 4, 66);
+    let base = runner_with(seg_net(e), ShardConfig::default(), SearcherKind::Doms, 0);
+    let want = base.run_frame(t.clone(), &mut NativeEngine::default()).unwrap();
+    // W2B packing alone, then W2B + sharding: both bit-identical.
+    let w2b = runner_with(seg_net(e), ShardConfig::default(), SearcherKind::Doms, 2);
+    let got = w2b.run_frame(t.clone(), &mut NativeEngine::default()).unwrap();
+    assert_eq!(want.checksum, got.checksum, "W2B packing changed the bits");
+    let both = runner_with(seg_net(e), ShardConfig::grid(2, 2).unwrap(), SearcherKind::Doms, 2);
+    let got = both
+        .run_frame_sharded(t, &mut NativeEngine::default())
+        .unwrap();
+    assert!(got.shards > 1);
+    assert_eq!(want.checksum, got.checksum, "W2B + sharding changed the bits");
+}
