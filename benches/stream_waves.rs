@@ -1,23 +1,27 @@
 //! Bench: batched multi-frame GEMM waves on the stream path — the
 //! engine-layer feature that packs rule pairs from all in-flight frames
-//! into shared sub-matrix dispatches. Serves the same synthetic stream
-//! at inflight = 1 (classic frame-at-a-time) and inflight = 4, verifies
-//! per-frame results are bit-identical, and reports dispatch counts and
-//! throughput for both (the dispatch delta is what a PJRT engine
-//! amortizes).
+//! into shared sub-matrix dispatches. Three sweeps plus a CI smoke mode:
 //!
-//! A second sweep serves oversized scenes at shard grids 1 / 2x2 / 4x4
-//! (with W2B-aware wave packing) and emits the latency-vs-throughput
-//! curve of the shard scheduler, asserting bit-identity across grids.
+//! * **inflight sweep** (1/2/4/8): the latency-SLO trade-off curve — p50
+//!   and p95 latency vs throughput as more frames share each wave group,
+//!   with per-frame bit-identity asserted against inflight = 1 (the
+//!   dispatch delta is what a PJRT engine amortizes).
+//! * **shard sweep** (1 / 2x2 / 4x4 grids, W2B 2x): oversized scenes as
+//!   block-partitioned pseudo-frames, bit-identity across grids.
+//! * **profile sweep**: every scenario profile (urban / highway / indoor
+//!   / far-field) served through the prefetching dataset layer.
 //!
 //! ```sh
-//! cargo bench --bench stream_waves
+//! cargo bench --bench stream_waves             # full sweeps
+//! cargo bench --bench stream_waves -- --smoke  # CI: one tick over the
+//!                                              # checked-in KITTI fixture
 //! ```
 
 use voxel_cim::bench_util::bench;
 use voxel_cim::coordinator::scheduler::RunnerConfig;
 use voxel_cim::coordinator::shard::ShardConfig;
 use voxel_cim::coordinator::stream::StreamServer;
+use voxel_cim::dataset::{KittiSource, PrefetchSource, ProfileSource, ScenarioProfile};
 use voxel_cim::geom::Extent3;
 use voxel_cim::model::layer::{LayerSpec, NetworkSpec, TaskKind};
 use voxel_cim::pointcloud::voxelize::Voxelizer;
@@ -50,11 +54,17 @@ fn make_frame(id: u64) -> SparseTensor {
 }
 
 fn main() {
+    if std::env::args().any(|a| a == "--smoke") {
+        smoke();
+        return;
+    }
     println!("# stream_waves — multi-frame GEMM wave batching");
     const FRAMES: u64 = 8;
 
+    // Inflight sweep: the p50/p95-vs-throughput curve of wave batching
+    // (ROADMAP's latency-SLO follow-on).
     let mut reports = Vec::new();
-    for inflight in [1usize, 4] {
+    for inflight in [1usize, 2, 4, 8] {
         let cfg = RunnerConfig {
             inflight,
             // Serial compute so the caller's NativeEngine counter sees
@@ -65,10 +75,10 @@ fn main() {
         let srv = StreamServer::new(net(), cfg, FRAMES as usize);
         let mut engine = NativeEngine::default();
         let r = bench(&format!("stream/serve8/inflight{inflight}"), 0, 3, || {
-            srv.serve(FRAMES, make_frame, &mut engine).unwrap()
+            srv.serve_closure(FRAMES, make_frame, &mut engine).unwrap()
         });
         let mut engine = NativeEngine::default();
-        let report = srv.serve(FRAMES, make_frame, &mut engine).unwrap();
+        let report = srv.serve_closure(FRAMES, make_frame, &mut engine).unwrap();
         println!(
             "inflight {inflight}: {:.2} fps | p50 {:.1} ms | p95 {:.1} ms | {} engine dispatches | mean {:.1} ms",
             report.throughput_fps(),
@@ -80,29 +90,31 @@ fn main() {
         reports.push((inflight, engine.calls, report));
     }
 
-    // Bit-identity across wave packing: every frame's checksum matches.
+    // Bit-identity across wave packing: every inflight level's per-frame
+    // checksums match the frame-at-a-time baseline.
     let (_, solo_calls, solo) = &reports[0];
-    let (_, packed_calls, packed) = &reports[1];
-    for (a, b) in solo.completions.iter().zip(&packed.completions) {
-        assert_eq!(a.id, b.id);
-        assert_eq!(
-            a.result.checksum, b.result.checksum,
-            "frame {} diverged under wave batching",
-            a.id
+    for (inflight, calls, packed) in &reports[1..] {
+        for (a, b) in solo.completions.iter().zip(&packed.completions) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(
+                a.result.checksum, b.result.checksum,
+                "frame {} diverged at inflight {inflight}",
+                a.id
+            );
+        }
+        println!(
+            "inflight {inflight}: bit-identical; {} dispatches vs {} frame-at-a-time",
+            calls, solo_calls
         );
     }
-    println!(
-        "\nper-frame results bit-identical; shared waves used {} dispatches vs {} frame-at-a-time",
-        packed_calls, solo_calls
-    );
 
     shard_sweep();
+    profile_sweep();
 }
 
 /// Shard-count sweep: one oversized scene per frame, served at 1 / 2x2 /
 /// 4x4 block-shard grids — the latency-vs-throughput curve of the shard
-/// scheduler (ROADMAP's SLO item), with bit-identity asserted across
-/// every grid.
+/// scheduler, with bit-identity asserted across every grid.
 fn shard_sweep() {
     const FRAMES: u64 = 3;
     let extent = Extent3::new(192, 192, 10);
@@ -138,7 +150,7 @@ fn shard_sweep() {
         };
         let srv = StreamServer::new(net.clone(), cfg, 4);
         let mut engine = NativeEngine::default();
-        let report = srv.serve(FRAMES, make_big, &mut engine).unwrap();
+        let report = srv.serve_closure(FRAMES, make_big, &mut engine).unwrap();
         let shards: u32 = report.completions.iter().map(|c| c.result.shards).sum();
         println!(
             "shards {bx}x{by}: {:.2} fps | p50 {:.1} ms | p95 {:.1} ms | {} pseudo-frames | {} dispatches",
@@ -162,4 +174,77 @@ fn shard_sweep() {
         }
     }
     println!("shard grids bit-identical across the sweep");
+}
+
+/// Scenario-profile sweep: workload diversity through the prefetching
+/// dataset layer — same engine config, four density shapes.
+fn profile_sweep() {
+    const FRAMES: u64 = 6;
+    let extent = Extent3::new(64, 64, 12);
+    println!("\n# profile sweep — dataset ingestion (prefetch depth 2, inflight 2)");
+    for profile in ScenarioProfile::ALL {
+        let cfg = RunnerConfig {
+            inflight: 2,
+            compute_workers: 1,
+            ..Default::default()
+        };
+        let srv = StreamServer::new(net(), cfg, 4);
+        let inner = ProfileSource::new(profile, extent, 0.02, 0xA11).with_channels(8);
+        let mut source = PrefetchSource::spawn(Box::new(inner), 2);
+        let mut engine = NativeEngine::default();
+        let report = srv.serve(FRAMES, &mut source, &mut engine).unwrap();
+        let voxels: u64 = report.completions.iter().map(|c| c.result.out_voxels).sum();
+        println!(
+            "{:<10} {:.2} fps | p50 {:.1} ms | p95 {:.1} ms | {} out voxels | {} dispatches",
+            profile.key(),
+            report.throughput_fps(),
+            report.latency_p50() * 1e3,
+            report.latency_p95() * 1e3,
+            voxels,
+            engine.calls,
+        );
+        assert_eq!(report.completions.len(), FRAMES as usize, "{profile}");
+    }
+}
+
+/// CI smoke: one serving tick over the checked-in KITTI fixture — proves
+/// the on-disk reader → voxelizer → stream-server path end to end in a
+/// few hundred milliseconds.
+fn smoke() {
+    println!("# stream_waves --smoke — KITTI fixture, one tick");
+    let fixture = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/kitti");
+    let extent = Extent3::new(16, 16, 8);
+    let vx = Voxelizer::new((16.0, 16.0, 8.0), extent, 8);
+    let mut source = KittiSource::open(fixture, vx).expect("fixture dir");
+    let net = NetworkSpec {
+        name: "smoke",
+        task: TaskKind::Segmentation,
+        extent,
+        vfe_channels: 4,
+        layers: vec![
+            LayerSpec::Subm3 { c_in: 4, c_out: 8 },
+            LayerSpec::Subm3 { c_in: 8, c_out: 8 },
+        ],
+    };
+    let srv = StreamServer::new(
+        net,
+        RunnerConfig {
+            inflight: 2,
+            compute_workers: 1,
+            ..Default::default()
+        },
+        2,
+    );
+    let report = srv
+        .serve(8, &mut source, &mut NativeEngine::default())
+        .unwrap();
+    assert_eq!(report.completions.len(), 2, "fixture holds two frames");
+    for c in &report.completions {
+        assert!(c.result.out_voxels > 0, "frame {}", c.id);
+        println!(
+            "frame {}: {} out voxels | checksum {:#018x}",
+            c.id, c.result.out_voxels, c.result.checksum
+        );
+    }
+    println!("smoke ok: {} frames served", report.completions.len());
 }

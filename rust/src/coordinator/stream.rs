@@ -2,9 +2,11 @@
 //! and the computing core busy across *consecutive frames*, extending the
 //! Fig. 8 hybrid pipeline from layers to the frame stream.
 //!
-//! Frames arrive on a bounded queue (backpressure: the producer blocks
-//! when the accelerator falls behind). The server drains up to
-//! `RunnerConfig::inflight` queued frames at a time and runs them in
+//! Frames come from any [`FrameSource`] — KITTI sequences, scenario
+//! profiles, trace replay, or closure adapters, optionally behind a
+//! prefetching buffer (backpressure: a buffered producer blocks when
+//! the accelerator falls behind). The server pulls up to
+//! `RunnerConfig::inflight` ready frames at a time and runs them in
 //! lockstep through [`NetworkRunner::run_frames`]: all in-flight frames'
 //! map searches fan out over the worker pool and their rule pairs pack
 //! into shared GEMM waves, amortizing engine dispatch overhead across
@@ -12,23 +14,15 @@
 //! percentiles are reported per stream — the serving-style measurement
 //! the e2e benches record.
 
-use std::sync::mpsc;
 use std::time::Instant;
 
-use crate::coordinator::executor::WorkerPool;
 use crate::coordinator::pipeline::{HybridPipeline, PhaseTiming};
 use crate::coordinator::scheduler::{FrameResult, NetworkRunner, RunnerConfig};
+use crate::dataset::{ClosureSource, FramePoll, FrameSource, PrefetchSource, SourcedFrame};
 use crate::model::layer::NetworkSpec;
 use crate::sparse::tensor::SparseTensor;
 use crate::spconv::layer::GemmEngine;
 use crate::util::stats::percentile;
-
-/// One frame queued for processing.
-pub struct FrameRequest {
-    pub id: u64,
-    pub tensor: SparseTensor,
-    pub enqueued: Instant,
-}
 
 /// Completion record for one frame. The pseudo-frame count of a
 /// block-sharded scene is carried by `result.shards`.
@@ -101,23 +95,104 @@ impl StreamServer {
         }
     }
 
-    /// Serve a finite stream of frames produced by `producer` (called
-    /// `n_frames` times on a worker thread, simulating the sensor).
-    /// Processing runs on the caller thread with the engine; production
-    /// overlaps via the bounded channel.
+    /// Serve up to `n_frames` frames from any [`FrameSource`] — a KITTI
+    /// sequence, a scenario profile, a trace replay, a prefetched
+    /// wrapper, or a [`ClosureSource`] adapter. The stream ends early if
+    /// the source is exhausted. Processing runs on the caller thread
+    /// with the engine; production overlaps when the source buffers
+    /// (wrap it in a [`PrefetchSource`], or use [`Self::serve_closure`]).
     ///
     /// When `RunnerConfig::inflight > 1` the server opportunistically
-    /// drains up to that many already-queued frames per iteration and
-    /// runs them as one lockstep wave group (never waiting for frames
-    /// that have not arrived — latency is not traded for batch size).
-    /// Per-frame results are bit-identical either way.
+    /// pulls up to that many *ready* frames per iteration
+    /// ([`FrameSource::poll_frame`] — never waiting for a frame that has
+    /// not been produced yet, so latency is not traded for batch size)
+    /// and runs them as one lockstep wave group. Per-frame results are
+    /// bit-identical either way.
     ///
     /// Queue accounting is shard-aware: a scene that `cfg.shard` splits
     /// occupies a whole lockstep window by itself — its block shards are
     /// the window's pseudo-frames — so it is never packed together with
     /// other queued frames, and a frame pulled while filling a window is
     /// carried over to the next iteration instead of being dropped.
-    pub fn serve<E, P>(
+    pub fn serve<E: GemmEngine>(
+        &self,
+        n_frames: u64,
+        source: &mut dyn FrameSource,
+        engine: &mut E,
+    ) -> crate::Result<StreamReport> {
+        let inflight = self.runner.cfg.inflight.max(1);
+        let t0 = Instant::now();
+        let mut completions = Vec::with_capacity(n_frames as usize);
+        // Frames pulled from the source so far (bounds total pulls at
+        // `n_frames` even over endless sources).
+        let mut pulled: u64 = 0;
+        // A frame pulled while filling a lockstep window but too big to
+        // join it (it shards into its own window) waits here.
+        let mut carry: Option<SourcedFrame> = None;
+        while (completions.len() as u64) < n_frames {
+            let first = match carry.take() {
+                Some(frame) => frame,
+                None => match source.next_frame() {
+                    Some(frame) => {
+                        pulled += 1;
+                        frame
+                    }
+                    None => break, // source exhausted
+                },
+            };
+            // Shard-aware queue accounting: a scene that shards fills
+            // its whole window with its own pseudo-frames.
+            if self.runner.planned_shards(first.tensor.len()) > 1 {
+                let (id, produced) = (first.meta.id, first.produced);
+                let result = self.runner.run_frame_sharded(first.tensor, engine)?;
+                completions.push(FrameCompletion {
+                    id,
+                    latency: produced.elapsed().as_secs_f64(),
+                    result,
+                });
+                continue;
+            }
+            let mut group = vec![first];
+            let mut exhausted = false;
+            while group.len() < inflight && pulled < n_frames && !exhausted {
+                match source.poll_frame() {
+                    FramePoll::Ready(Some(frame)) => {
+                        pulled += 1;
+                        if self.runner.planned_shards(frame.tensor.len()) > 1 {
+                            carry = Some(frame);
+                            break;
+                        }
+                        group.push(frame);
+                    }
+                    FramePoll::Ready(None) => exhausted = true,
+                    FramePoll::Pending => break,
+                }
+            }
+            let metas: Vec<(u64, Instant)> =
+                group.iter().map(|f| (f.meta.id, f.produced)).collect();
+            let tensors: Vec<SparseTensor> =
+                group.into_iter().map(|f| f.tensor).collect();
+            let results = self.runner.run_frames(tensors, engine)?;
+            for ((id, produced), result) in metas.into_iter().zip(results) {
+                completions.push(FrameCompletion {
+                    id,
+                    latency: produced.elapsed().as_secs_f64(),
+                    result,
+                });
+            }
+        }
+        Ok(StreamReport {
+            completions,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// The historical closure API: `producer` runs on a background
+    /// prefetch thread feeding a bounded buffer of `queue_depth` frames
+    /// (backpressure: the producer blocks when the accelerator falls
+    /// behind), exactly the producer/consumer split `serve` used to
+    /// hard-code. Kept as the convenience path for synthetic streams.
+    pub fn serve_closure<E, P>(
         &self,
         n_frames: u64,
         producer: P,
@@ -127,76 +202,9 @@ impl StreamServer {
         E: GemmEngine,
         P: Fn(u64) -> SparseTensor + Send + 'static,
     {
-        let (tx, rx) = mpsc::sync_channel::<FrameRequest>(self.queue_depth);
-        let pool = WorkerPool::new(1);
-        let _producer_handle = pool.submit(move || {
-            for id in 0..n_frames {
-                let tensor = producer(id);
-                let req = FrameRequest {
-                    id,
-                    tensor,
-                    enqueued: Instant::now(),
-                };
-                if tx.send(req).is_err() {
-                    break; // consumer dropped
-                }
-            }
-        });
-
-        let inflight = self.runner.cfg.inflight.max(1);
-        let t0 = Instant::now();
-        let mut completions = Vec::with_capacity(n_frames as usize);
-        // A frame pulled while filling a lockstep window but too big to
-        // join it (it shards into its own window) waits here.
-        let mut carry: Option<FrameRequest> = None;
-        while (completions.len() as u64) < n_frames {
-            let first = match carry.take() {
-                Some(req) => req,
-                None => match rx.recv() {
-                    Ok(req) => req,
-                    Err(_) => break,
-                },
-            };
-            // Shard-aware queue accounting: a scene that shards fills
-            // its whole window with its own pseudo-frames.
-            if self.runner.planned_shards(first.tensor.len()) > 1 {
-                let (id, enqueued) = (first.id, first.enqueued);
-                let result = self.runner.run_frame_sharded(first.tensor, engine)?;
-                completions.push(FrameCompletion {
-                    id,
-                    latency: enqueued.elapsed().as_secs_f64(),
-                    result,
-                });
-                continue;
-            }
-            let mut group = vec![first];
-            while group.len() < inflight {
-                match rx.try_recv() {
-                    Ok(req) if self.runner.planned_shards(req.tensor.len()) > 1 => {
-                        carry = Some(req);
-                        break;
-                    }
-                    Ok(req) => group.push(req),
-                    Err(_) => break,
-                }
-            }
-            let metas: Vec<(u64, Instant)> =
-                group.iter().map(|r| (r.id, r.enqueued)).collect();
-            let tensors: Vec<SparseTensor> =
-                group.into_iter().map(|r| r.tensor).collect();
-            let results = self.runner.run_frames(tensors, engine)?;
-            for ((id, enqueued), result) in metas.into_iter().zip(results) {
-                completions.push(FrameCompletion {
-                    id,
-                    latency: enqueued.elapsed().as_secs_f64(),
-                    result,
-                });
-            }
-        }
-        Ok(StreamReport {
-            completions,
-            wall_seconds: t0.elapsed().as_secs_f64(),
-        })
+        let mut source =
+            PrefetchSource::spawn(Box::new(ClosureSource::new(producer)), self.queue_depth);
+        self.serve(n_frames, &mut source, engine)
     }
 }
 
@@ -235,7 +243,7 @@ mod tests {
     fn serves_all_frames_in_order() {
         let srv = StreamServer::new(tiny_net(), RunnerConfig::default(), 2);
         let report = srv
-            .serve(8, make_frame, &mut NativeEngine::default())
+            .serve_closure(8, make_frame, &mut NativeEngine::default())
             .unwrap();
         assert_eq!(report.completions.len(), 8);
         let ids: Vec<u64> = report.completions.iter().map(|c| c.id).collect();
@@ -245,10 +253,60 @@ mod tests {
     }
 
     #[test]
+    fn direct_source_matches_prefetched_closure_path() {
+        let srv = StreamServer::new(
+            tiny_net(),
+            RunnerConfig {
+                inflight: 3,
+                ..Default::default()
+            },
+            4,
+        );
+        let prefetched = srv
+            .serve_closure(6, make_frame, &mut NativeEngine::default())
+            .unwrap();
+        let mut direct = ClosureSource::new(make_frame);
+        let direct = srv
+            .serve(6, &mut direct, &mut NativeEngine::default())
+            .unwrap();
+        assert_eq!(prefetched.completions.len(), direct.completions.len());
+        for (a, b) in prefetched.completions.iter().zip(&direct.completions) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.result.checksum, b.result.checksum, "frame {}", a.id);
+        }
+    }
+
+    #[test]
+    fn finite_source_ends_the_stream_early() {
+        use crate::dataset::{ProfileSource, ScenarioProfile};
+        let srv = StreamServer::new(
+            tiny_net(),
+            RunnerConfig {
+                inflight: 2,
+                ..Default::default()
+            },
+            4,
+        );
+        let mut src = ProfileSource::new(
+            ScenarioProfile::Urban,
+            Extent3::new(16, 16, 8),
+            0.05,
+            3,
+        )
+        .with_frames(3);
+        // Ask for more frames than the source holds: serve returns what
+        // the source produced instead of hanging.
+        let report = srv.serve(10, &mut src, &mut NativeEngine::default()).unwrap();
+        assert_eq!(report.completions.len(), 3);
+        let ids: Vec<u64> = report.completions.iter().map(|c| c.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
     fn queue_depth_one_still_completes() {
         let srv = StreamServer::new(tiny_net(), RunnerConfig::default(), 1);
         let report = srv
-            .serve(4, make_frame, &mut NativeEngine::default())
+            .serve_closure(4, make_frame, &mut NativeEngine::default())
             .unwrap();
         assert_eq!(report.completions.len(), 4);
     }
@@ -256,8 +314,8 @@ mod tests {
     #[test]
     fn deterministic_results_across_streams() {
         let srv = StreamServer::new(tiny_net(), RunnerConfig::default(), 3);
-        let a = srv.serve(3, make_frame, &mut NativeEngine::default()).unwrap();
-        let b = srv.serve(3, make_frame, &mut NativeEngine::default()).unwrap();
+        let a = srv.serve_closure(3, make_frame, &mut NativeEngine::default()).unwrap();
+        let b = srv.serve_closure(3, make_frame, &mut NativeEngine::default()).unwrap();
         for (x, y) in a.completions.iter().zip(&b.completions) {
             assert_eq!(x.result.total_pairs(), y.result.total_pairs());
             assert_eq!(x.result.out_voxels, y.result.out_voxels);
@@ -277,10 +335,10 @@ mod tests {
             8,
         );
         let a = unbatched
-            .serve(8, make_frame, &mut NativeEngine::default())
+            .serve_closure(8, make_frame, &mut NativeEngine::default())
             .unwrap();
         let b = batched
-            .serve(8, make_frame, &mut NativeEngine::default())
+            .serve_closure(8, make_frame, &mut NativeEngine::default())
             .unwrap();
         assert_eq!(a.completions.len(), b.completions.len());
         for (x, y) in a.completions.iter().zip(&b.completions) {
@@ -304,10 +362,10 @@ mod tests {
             8,
         );
         let a = plain
-            .serve(6, make_frame, &mut NativeEngine::default())
+            .serve_closure(6, make_frame, &mut NativeEngine::default())
             .unwrap();
         let b = sharded
-            .serve(6, make_frame, &mut NativeEngine::default())
+            .serve_closure(6, make_frame, &mut NativeEngine::default())
             .unwrap();
         assert_eq!(a.completions.len(), b.completions.len());
         for (x, y) in a.completions.iter().zip(&b.completions) {
@@ -330,7 +388,7 @@ mod tests {
     fn modeled_stream_pipeline_is_bounded_by_serial_sum() {
         let srv = StreamServer::new(tiny_net(), RunnerConfig::default(), 4);
         let report = srv
-            .serve(4, make_frame, &mut NativeEngine::default())
+            .serve_closure(4, make_frame, &mut NativeEngine::default())
             .unwrap();
         let pipe = HybridPipeline::default();
         let modeled = report.modeled_pipeline_seconds(&pipe);

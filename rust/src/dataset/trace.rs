@@ -1,0 +1,263 @@
+//! Trace record/replay: capture a served frame stream once, replay it
+//! bit-identically forever — the reproducibility substrate for latency
+//! sweeps (the same frames hit every configuration under comparison, so
+//! p50/p95 deltas measure the engine, not the workload).
+//!
+//! The on-disk format is deliberately dependency-free (the vendored
+//! registry has no serde): a magic header, then per frame the id, raw
+//! point count, extent, channel count, coordinate triples (i32 LE,
+//! depth-major order preserved) and the int8 feature matrix.
+
+use std::io::{Read as _, Write as _};
+use std::path::Path;
+
+use anyhow::Context;
+
+use crate::dataset::{FrameSource, SourcedFrame};
+use crate::geom::{Coord3, Extent3};
+use crate::sparse::tensor::SparseTensor;
+
+const MAGIC: &[u8; 8] = b"VCIMTRC1";
+
+/// One recorded frame.
+#[derive(Clone, Debug)]
+pub struct TraceFrame {
+    pub id: u64,
+    pub points: usize,
+    pub tensor: SparseTensor,
+}
+
+/// A recorded frame stream.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub frames: Vec<TraceFrame>,
+}
+
+impl Trace {
+    /// Pull up to `max_frames` frames out of `source` and record them.
+    pub fn record(source: &mut dyn FrameSource, max_frames: usize) -> Self {
+        let mut frames = Vec::with_capacity(max_frames);
+        while frames.len() < max_frames {
+            let Some(f) = source.next_frame() else { break };
+            frames.push(TraceFrame {
+                id: f.meta.id,
+                points: f.meta.points,
+                tensor: f.tensor,
+            });
+        }
+        Self { frames }
+    }
+
+    /// A replaying [`FrameSource`] over this trace (clones the frames;
+    /// replay as many times as needed).
+    pub fn replay(&self) -> ReplaySource {
+        ReplaySource {
+            frames: self.frames.clone(),
+            next: 0,
+        }
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> crate::Result<()> {
+        let path = path.as_ref();
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(self.frames.len() as u64).to_le_bytes());
+        for f in &self.frames {
+            let t = &f.tensor;
+            out.extend_from_slice(&f.id.to_le_bytes());
+            out.extend_from_slice(&(f.points as u64).to_le_bytes());
+            for d in [t.extent.x, t.extent.y, t.extent.z, t.channels, t.len()] {
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            for c in &t.coords {
+                out.extend_from_slice(&c.x.to_le_bytes());
+                out.extend_from_slice(&c.y.to_le_bytes());
+                out.extend_from_slice(&c.z.to_le_bytes());
+            }
+            // i8 and u8 share layout.
+            out.extend(t.features.iter().map(|&v| v as u8));
+        }
+        let mut file = std::fs::File::create(path)
+            .with_context(|| format!("creating trace {}", path.display()))?;
+        file.write_all(&out)
+            .with_context(|| format!("writing trace {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> crate::Result<Self> {
+        let path = path.as_ref();
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)
+            .and_then(|mut f| f.read_to_end(&mut bytes))
+            .with_context(|| format!("reading trace {}", path.display()))?;
+        let mut r = Reader { bytes: &bytes, pos: 0 };
+        anyhow::ensure!(
+            r.take(MAGIC.len())? == MAGIC.as_slice(),
+            "{}: not a voxel-cim trace (bad magic)",
+            path.display()
+        );
+        let n_frames = r.u64()? as usize;
+        let mut frames = Vec::with_capacity(n_frames.min(1 << 20));
+        for _ in 0..n_frames {
+            let id = r.u64()?;
+            let points = r.u64()? as usize;
+            let (ex, ey, ez) = (r.u32()? as usize, r.u32()? as usize, r.u32()? as usize);
+            let channels = r.u32()? as usize;
+            let n = r.u32()? as usize;
+            // Validate the claimed sizes against the bytes actually
+            // present before allocating: a corrupt count must yield the
+            // truncation error below, not an abort inside with_capacity.
+            let remaining = bytes.len() - r.pos;
+            anyhow::ensure!(
+                n.saturating_mul(12 + channels) <= remaining,
+                "{}: frame {id} claims {n} voxels x {channels} channels but only \
+                 {remaining} bytes remain",
+                path.display()
+            );
+            let mut coords = Vec::with_capacity(n);
+            for _ in 0..n {
+                let (x, y, z) = (r.i32()?, r.i32()?, r.i32()?);
+                coords.push(Coord3::new(x, y, z));
+            }
+            let features: Vec<i8> =
+                r.take(n * channels)?.iter().map(|&b| b as i8).collect();
+            let tensor = SparseTensor {
+                extent: Extent3::new(ex, ey, ez),
+                coords,
+                features,
+                channels,
+            };
+            anyhow::ensure!(
+                tensor.check_canonical(),
+                "{}: frame {id} is not canonical (corrupt trace?)",
+                path.display()
+            );
+            frames.push(TraceFrame { id, points, tensor });
+        }
+        anyhow::ensure!(
+            r.pos == bytes.len(),
+            "{}: {} trailing bytes after {n_frames} frames",
+            path.display(),
+            bytes.len() - r.pos
+        );
+        Ok(Self { frames })
+    }
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> crate::Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.pos + n <= self.bytes.len(),
+            "truncated trace at byte {}",
+            self.pos
+        );
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u64(&mut self) -> crate::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> crate::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn i32(&mut self) -> crate::Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+/// Replays a [`Trace`] with the recorded ids and tensors.
+pub struct ReplaySource {
+    frames: Vec<TraceFrame>,
+    next: usize,
+}
+
+impl FrameSource for ReplaySource {
+    fn next_frame(&mut self) -> Option<SourcedFrame> {
+        let f = self.frames.get(self.next)?;
+        self.next += 1;
+        Some(SourcedFrame::new(f.id, f.points, f.tensor.clone()))
+    }
+
+    fn label(&self) -> String {
+        format!("replay({} frames)", self.frames.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::profiles::{ProfileSource, ScenarioProfile};
+
+    fn profile_source() -> ProfileSource {
+        ProfileSource::new(
+            ScenarioProfile::FarField,
+            Extent3::new(24, 24, 4),
+            0.03,
+            0x7AC3,
+        )
+    }
+
+    #[test]
+    fn replay_is_bit_identical_to_the_recorded_stream() {
+        let trace = Trace::record(&mut profile_source(), 4);
+        assert_eq!(trace.frames.len(), 4);
+        let mut replay = trace.replay();
+        let mut fresh = profile_source();
+        for _ in 0..4 {
+            let a = fresh.next_frame().unwrap();
+            let b = replay.next_frame().unwrap();
+            assert_eq!(a.meta.id, b.meta.id);
+            assert_eq!(a.tensor.coords, b.tensor.coords);
+            assert_eq!(a.tensor.features, b.tensor.features);
+        }
+        assert!(replay.next_frame().is_none());
+    }
+
+    #[test]
+    fn save_load_round_trips() {
+        let trace = Trace::record(&mut profile_source(), 3);
+        let path = std::env::temp_dir().join("voxel-cim-trace-roundtrip.vctr");
+        trace.save(&path).unwrap();
+        let loaded = Trace::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded.frames.len(), 3);
+        for (a, b) in trace.frames.iter().zip(&loaded.frames) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.points, b.points);
+            assert_eq!(a.tensor.extent, b.tensor.extent);
+            assert_eq!(a.tensor.coords, b.tensor.coords);
+            assert_eq!(a.tensor.features, b.tensor.features);
+        }
+    }
+
+    #[test]
+    fn corrupt_traces_are_rejected() {
+        let trace = Trace::record(&mut profile_source(), 2);
+        let path = std::env::temp_dir().join("voxel-cim-trace-corrupt.vctr");
+        trace.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(Trace::load(&path).is_err());
+        // Inflated voxel count (header bytes 48..52 are frame 0's count
+        // word): must return the truncation error, not abort inside an
+        // oversized allocation.
+        let mut huge = bytes.clone();
+        huge[48..52].copy_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&path, &huge).unwrap();
+        assert!(Trace::load(&path).is_err());
+        // Truncation mid-frame.
+        bytes.truncate(bytes.len() - 5);
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(Trace::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -28,6 +28,7 @@
 
 pub mod cim;
 pub mod coordinator;
+pub mod dataset;
 pub mod experiments;
 pub mod geom;
 pub mod mapsearch;
@@ -51,6 +52,10 @@ pub mod prelude {
     pub use crate::geom::{Coord3, KernelOffsets};
     pub use crate::coordinator::{
         NetworkRunner, RunnerConfig, ShardConfig, ShardPlan, StreamReport, StreamServer,
+    };
+    pub use crate::dataset::{
+        ClosureSource, DatasetConfig, FrameSource, KittiSource, PrefetchSource,
+        ProfileSource, ReplaySource, ScenarioProfile, SourcedFrame, Trace,
     };
     pub use crate::mapsearch::{
         AccessStats, BlockDoms, Doms, HashSearch, MapSearch, OctreeSearch, OutputMajor,

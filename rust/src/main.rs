@@ -4,10 +4,13 @@
 //! voxel-cim exp <fig2d|fig9a|fig9b|fig9c|fig6|fig10|fig11|table2|all>
 //! voxel-cim run-det [--points N] [--native]    end-to-end SECOND frame
 //! voxel-cim run-seg [--points N] [--native]    end-to-end MinkUNet frame
+//! voxel-cim stream [--dataset D] [--frames N]  serve a frame stream
 //! voxel-cim info                               config + artifact status
 //! ```
 
 use voxel_cim::coordinator::scheduler::{NetworkRunner, RunnerConfig};
+use voxel_cim::coordinator::stream::StreamServer;
+use voxel_cim::dataset::DatasetConfig;
 use voxel_cim::experiments as exp;
 use voxel_cim::model::{minkunet, second};
 use voxel_cim::pointcloud::scene::SceneConfig;
@@ -21,7 +24,7 @@ use voxel_cim::util::cli::Args;
 fn main() -> voxel_cim::Result<()> {
     let args = Args::new(
         "voxel-cim — Compute-in-Memory accelerator for voxel-based point cloud networks \
-         (ICCAD'24 reproduction)\n\nUsage: voxel-cim <exp|run-det|run-seg|info> [flags]",
+         (ICCAD'24 reproduction)\n\nUsage: voxel-cim <exp|run-det|run-seg|stream|info> [flags]",
     )
     .opt("seed", "42", "experiment seed")
     .opt("points", "20000", "LiDAR points per synthetic frame")
@@ -45,6 +48,17 @@ fn main() -> voxel_cim::Result<()> {
         "W2B replication budget as a multiple of the kernel volume for wave \
          packing (overrides [runner] w2b_factor; 0 = off)",
     )
+    .opt(
+        "dataset",
+        "",
+        "frame source: a KITTI velodyne directory or a scenario profile \
+         (urban|highway|indoor|far-field); overrides [dataset] source",
+    )
+    .opt(
+        "frames",
+        "",
+        "frames to serve with the `stream` command (overrides [dataset] frames)",
+    )
     .switch("native", "use the native GEMM engine instead of PJRT artifacts")
     .parse();
 
@@ -54,6 +68,7 @@ fn main() -> voxel_cim::Result<()> {
         Some("exp") => run_experiments(pos.get(1).map(String::as_str).unwrap_or("all"), seed),
         Some("run-det") => run_net(true, &args),
         Some("run-seg") => run_net(false, &args),
+        Some("stream") => run_stream(&args),
         Some("info") => info(),
         other => {
             eprintln!("unknown command {other:?}\n\n{}", args.usage());
@@ -114,60 +129,65 @@ fn run_net(detection: bool, args: &Args) -> voxel_cim::Result<()> {
         (false, false) => minkunet::minkunet_small(),
     };
     println!("network: {} | extent {:?}", net.name, net.extent);
-
-    // Synthetic frame -> voxelize -> VFE (the preprocessing path).
-    let mut scene = SceneConfig::default()
-        .with_points(cfg.int_or("scene.points", args.get_usize("points") as i64) as usize)
-        .with_seed(cfg.int_or("seed", args.get_u64("seed") as i64) as u64);
-    if let Some(kind) =
-        voxel_cim::pointcloud::scene::SceneKind::parse(cfg.str_or("scene.kind", "urban"))
-    {
-        scene.kind = kind;
-    }
-    let scene = scene;
-    let pts = scene.generate();
     let e = net.extent;
-    let vx = Voxelizer::new((70.4, 80.0, 4.0), e, 32);
-    let grid = vx.voxelize(&pts);
-    let vfe = Vfe::new(VfeKind::Simple);
-    let (feats, scale) = vfe.extract_i8(&grid);
-    println!(
-        "frame: {} points -> {} voxels (sparsity {:.5}, vfe scale {:.4})",
-        pts.len(),
-        grid.len(),
-        grid.sparsity(),
-        scale
-    );
-    let input = SparseTensor::new(
-        e,
-        grid.voxels
-            .iter()
-            .enumerate()
-            .map(|(i, v)| (v.coord, feats[i * 4..(i + 1) * 4].to_vec()))
-            .collect(),
-        4,
-    );
+
+    // Frame input: the `[dataset]` / `--dataset` ingestion subsystem when
+    // configured, else the classic synthetic scene -> voxelize -> VFE path.
+    let input = match dataset_config(&cfg, args)?.build(e)? {
+        Some(mut source) => {
+            let frame = source
+                .next_frame()
+                .ok_or_else(|| anyhow::anyhow!("dataset {:?} produced no frames", source.label()))?;
+            println!(
+                "frame (from {}): id {} | {} points -> {} voxels",
+                source.label(),
+                frame.meta.id,
+                frame.meta.points,
+                frame.tensor.len(),
+            );
+            anyhow::ensure!(
+                frame.meta.extent == e,
+                "dataset frame extent {:?} does not match network extent {e:?} \
+                 (set [dataset] dims to the network grid)",
+                frame.meta.extent
+            );
+            frame.tensor
+        }
+        None => {
+            let mut scene = SceneConfig::default()
+                .with_points(cfg.int_or("scene.points", args.get_usize("points") as i64) as usize)
+                .with_seed(cfg.int_or("seed", args.get_u64("seed") as i64) as u64);
+            if let Some(kind) =
+                voxel_cim::pointcloud::scene::SceneKind::parse(cfg.str_or("scene.kind", "urban"))
+            {
+                scene.kind = kind;
+            }
+            let pts = scene.generate();
+            let vx = Voxelizer::new((70.4, 80.0, 4.0), e, 32);
+            let grid = vx.voxelize(&pts);
+            let vfe = Vfe::new(VfeKind::Simple);
+            let (feats, scale) = vfe.extract_i8(&grid);
+            println!(
+                "frame: {} points -> {} voxels (sparsity {:.5}, vfe scale {:.4})",
+                pts.len(),
+                grid.len(),
+                grid.sparsity(),
+                scale
+            );
+            SparseTensor::new(
+                e,
+                grid.voxels
+                    .iter()
+                    .enumerate()
+                    .map(|(i, v)| (v.coord, feats[i * 4..(i + 1) * 4].to_vec()))
+                    .collect(),
+                4,
+            )
+        }
+    };
 
     let mut runner_cfg = RunnerConfig::from_config(&cfg)?;
-    match args.get("searcher") {
-        "" => {}
-        s => runner_cfg.searcher = s.parse().map_err(anyhow::Error::msg)?,
-    }
-    match args.get("shards") {
-        "" => {}
-        s => {
-            let (bx, by) = voxel_cim::util::cli::parse_grid(s).map_err(anyhow::Error::msg)?;
-            runner_cfg.shard = voxel_cim::coordinator::shard::ShardConfig::grid(bx, by)?;
-        }
-    }
-    match args.get("w2b") {
-        "" => {}
-        s => {
-            runner_cfg.w2b_factor = s
-                .parse()
-                .map_err(|e| anyhow::anyhow!("--w2b: not an integer ({e})"))?
-        }
-    }
+    apply_engine_overrides(&mut runner_cfg, args)?;
     println!(
         "engine layer: searcher={} batch={} workers={} compute_workers={} w2b={} shards={}x{}",
         runner_cfg.searcher,
@@ -216,6 +236,132 @@ fn run_net(detection: bool, args: &Args) -> voxel_cim::Result<()> {
     } else {
         println!("segmentation output voxels: {}", res.out_voxels);
     }
+    Ok(())
+}
+
+/// The `[dataset]` config with the `--dataset` CLI override applied.
+fn dataset_config(
+    cfg: &voxel_cim::util::config::Config,
+    args: &Args,
+) -> voxel_cim::Result<DatasetConfig> {
+    let mut ds = DatasetConfig::from_config(cfg)?;
+    match args.get("dataset") {
+        "" => {}
+        spec => ds.source = spec.to_string(),
+    }
+    match args.get("frames") {
+        "" => {}
+        n => {
+            ds.frames = n
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--frames: not an integer ({e})"))?
+        }
+    }
+    Ok(ds)
+}
+
+/// Apply the engine-layer CLI overrides (`--searcher`, `--shards`,
+/// `--w2b`) on top of a parsed `[runner]`/`[shard]` config.
+fn apply_engine_overrides(rc: &mut RunnerConfig, args: &Args) -> voxel_cim::Result<()> {
+    match args.get("searcher") {
+        "" => {}
+        s => rc.searcher = s.parse().map_err(anyhow::Error::msg)?,
+    }
+    match args.get("shards") {
+        "" => {}
+        s => {
+            let (bx, by) = voxel_cim::util::cli::parse_grid(s).map_err(anyhow::Error::msg)?;
+            rc.shard = voxel_cim::coordinator::shard::ShardConfig::grid(bx, by)?;
+        }
+    }
+    match args.get("w2b") {
+        "" => {}
+        s => {
+            rc.w2b_factor = s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--w2b: not an integer ({e})"))?
+        }
+    }
+    Ok(())
+}
+
+/// `voxel-cim stream` — serve a frame stream from the configured dataset
+/// source (KITTI directory, scenario profile, or trace) through the
+/// stream server and report serving-style latency/throughput.
+fn run_stream(args: &Args) -> voxel_cim::Result<()> {
+    use voxel_cim::model::layer::{LayerSpec, NetworkSpec, TaskKind};
+
+    let cfg = match args.get("config") {
+        "" => voxel_cim::util::config::Config::default(),
+        path => voxel_cim::util::config::Config::load(path)?,
+    };
+    let mut ds = dataset_config(&cfg, args)?;
+    if ds.source.is_empty() {
+        ds.source = "urban".into();
+    }
+    // Stream over a compact segmentation backbone sized to the source's
+    // grid (profiles default to a 64 x 64 x 12 grid unless `[dataset]
+    // dims` overrides it; KITTI directories use their voxelizer extent).
+    let extent = ds
+        .extent
+        .unwrap_or(voxel_cim::geom::Extent3::new(64, 64, 12));
+    let net = NetworkSpec {
+        name: "stream",
+        task: TaskKind::Segmentation,
+        extent,
+        vfe_channels: 4,
+        layers: vec![
+            LayerSpec::Subm3 { c_in: 4, c_out: 16 },
+            LayerSpec::Subm3 { c_in: 16, c_out: 16 },
+            LayerSpec::GConv2 { c_in: 16, c_out: 32 },
+            LayerSpec::Subm3 { c_in: 32, c_out: 32 },
+        ],
+    };
+    let mut runner_cfg = RunnerConfig::from_config(&cfg)?;
+    apply_engine_overrides(&mut runner_cfg, args)?;
+    let mut source = ds
+        .build(extent)?
+        .expect("source defaulted above, build returns Some");
+    println!(
+        "stream: {} frames from {} | inflight {} | searcher {} | shards {}x{}",
+        ds.frames,
+        source.label(),
+        runner_cfg.inflight,
+        runner_cfg.searcher,
+        runner_cfg.shard.blocks_x,
+        runner_cfg.shard.blocks_y,
+    );
+    // queue_depth only feeds serve_closure's internal prefetcher; this
+    // stream's buffering was already sized by `[dataset] prefetch`.
+    let srv = StreamServer::new(net, runner_cfg, 2);
+    let report = if args.get_bool("native") {
+        srv.serve(ds.frames, source.as_mut(), &mut NativeEngine::default())?
+    } else {
+        let mut engine = Runtime::load(&RuntimeConfig::discover())?;
+        println!("runtime: PJRT CPU, batches {:?}", engine.gemm_batches());
+        srv.serve(ds.frames, source.as_mut(), &mut engine)?
+    };
+    for c in &report.completions {
+        println!(
+            "  frame {:>4}: {:>8} out voxels | latency {:>7.2} ms{}",
+            c.id,
+            c.result.out_voxels,
+            c.latency * 1e3,
+            if c.result.shards > 1 {
+                format!(" | {} pseudo-frames", c.result.shards)
+            } else {
+                String::new()
+            }
+        );
+    }
+    println!(
+        "\nserved {} frames in {:.1} ms: {:.2} fps | p50 {:.2} ms | p95 {:.2} ms",
+        report.completions.len(),
+        report.wall_seconds * 1e3,
+        report.throughput_fps(),
+        report.latency_p50() * 1e3,
+        report.latency_p95() * 1e3,
+    );
     Ok(())
 }
 

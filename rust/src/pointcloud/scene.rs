@@ -30,6 +30,29 @@ pub struct Point {
     pub reflectance: f32,
 }
 
+impl Point {
+    /// Byte width of one KITTI velodyne return (4 little-endian f32).
+    pub const KITTI_BYTES: usize = 16;
+
+    /// Parse one KITTI velodyne return (little-endian f32 `x, y, z,
+    /// reflectance`). Returns `None` for corrupt returns — any
+    /// non-finite component — instead of letting a NaN flow into
+    /// quantization, where `NaN as i32 == 0` would fabricate a voxel at
+    /// the origin.
+    pub fn parse(bytes: &[u8; Self::KITTI_BYTES]) -> Option<Self> {
+        let field =
+            |i: usize| f32::from_le_bytes(bytes[i * 4..i * 4 + 4].try_into().unwrap());
+        let (x, y, z, reflectance) = (field(0), field(1), field(2), field(3));
+        (x.is_finite() && y.is_finite() && z.is_finite() && reflectance.is_finite())
+            .then_some(Self {
+                x,
+                y,
+                z,
+                reflectance,
+            })
+    }
+}
+
 /// What kind of scene to synthesize.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SceneKind {
@@ -262,6 +285,25 @@ mod tests {
             assert!(p.x >= 0.0 && p.x < cfg.range_x);
             assert!(p.y >= 0.0 && p.y < cfg.range_y);
             assert!(p.z >= 0.0 && p.z < cfg.range_z);
+        }
+    }
+
+    #[test]
+    fn point_parse_reads_le_floats_and_drops_non_finite() {
+        let mut bytes = [0u8; Point::KITTI_BYTES];
+        bytes[0..4].copy_from_slice(&1.5f32.to_le_bytes());
+        bytes[4..8].copy_from_slice(&(-2.0f32).to_le_bytes());
+        bytes[8..12].copy_from_slice(&0.25f32.to_le_bytes());
+        bytes[12..16].copy_from_slice(&0.9f32.to_le_bytes());
+        let p = Point::parse(&bytes).unwrap();
+        assert_eq!((p.x, p.y, p.z, p.reflectance), (1.5, -2.0, 0.25, 0.9));
+        for (i, bad) in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, f32::NAN]
+            .iter()
+            .enumerate()
+        {
+            let mut b = bytes;
+            b[i * 4..i * 4 + 4].copy_from_slice(&bad.to_le_bytes());
+            assert!(Point::parse(&b).is_none(), "field {i} = {bad} accepted");
         }
     }
 

@@ -77,6 +77,16 @@ impl Voxelizer {
     /// Quantize one point; `None` if outside the grid.
     #[inline]
     pub fn quantize(&self, p: &Point) -> Option<Coord3> {
+        // Guard before the cast: `NaN as i32` saturates to 0 and a
+        // negative fraction truncates toward zero, either of which would
+        // fabricate an in-bounds voxel at a bin the point is not in.
+        if !(p.x.is_finite() && p.y.is_finite() && p.z.is_finite())
+            || p.x < 0.0
+            || p.y < 0.0
+            || p.z < 0.0
+        {
+            return None;
+        }
         let c = Coord3::new(
             (p.x / self.voxel_size.0) as i32,
             (p.y / self.voxel_size.1) as i32,
@@ -248,6 +258,30 @@ mod tests {
         .generate();
         let grid = vx.voxelize(&pts);
         assert!(grid.voxels.iter().all(|v| v.points.len() <= 8));
+    }
+
+    #[test]
+    fn bogus_points_are_dropped_not_misbinned() {
+        let vx = small_voxelizer();
+        let bad = [
+            Point { x: f32::NAN, y: 1.0, z: 1.0, reflectance: 0.5 },
+            Point { x: 1.0, y: f32::INFINITY, z: 1.0, reflectance: 0.5 },
+            Point { x: 1.0, y: 1.0, z: f32::NEG_INFINITY, reflectance: 0.5 },
+            // Negative fractions truncate toward zero: without the guard
+            // these would land in bin 0 despite lying outside the grid.
+            Point { x: -0.05, y: 1.0, z: 1.0, reflectance: 0.5 },
+            Point { x: 1.0, y: -0.01, z: 1.0, reflectance: 0.5 },
+            Point { x: 1e9, y: 1.0, z: 1.0, reflectance: 0.5 },
+        ];
+        for p in &bad {
+            assert_eq!(vx.quantize(p), None, "{p:?}");
+        }
+        let grid = vx.voxelize(&bad);
+        assert!(grid.is_empty(), "bogus points produced {} voxels", grid.len());
+        // A valid point in the same batch still lands.
+        let mut pts = bad.to_vec();
+        pts.push(Point { x: 1.0, y: 1.0, z: 1.0, reflectance: 0.5 });
+        assert_eq!(vx.voxelize(&pts).len(), 1);
     }
 
     #[test]

@@ -1,0 +1,285 @@
+//! Integration tests for the dataset & scenario ingestion subsystem:
+//! the KITTI fixture golden files, the `FrameSource` unification of the
+//! stream path, prefetched-vs-direct bit-identity across every searcher,
+//! scenario profiles through the shard scheduler, and trace replay.
+
+use std::path::{Path, PathBuf};
+
+use voxel_cim::coordinator::scheduler::{NetworkRunner, RunnerConfig};
+use voxel_cim::coordinator::shard::ShardConfig;
+use voxel_cim::coordinator::stream::StreamServer;
+use voxel_cim::dataset::{
+    kitti, KittiSource, PrefetchSource, ProfileSource, ScenarioProfile, Trace,
+};
+use voxel_cim::geom::Extent3;
+use voxel_cim::mapsearch::SearcherKind;
+use voxel_cim::model::layer::{LayerSpec, NetworkSpec, TaskKind};
+use voxel_cim::pointcloud::voxelize::Voxelizer;
+use voxel_cim::spconv::layer::NativeEngine;
+
+fn fixture_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/kitti")
+}
+
+/// The fixture's voxelizer: 1 m voxels over a 16 x 16 x 8 m box, so
+/// quantization is float-exact (see the fixture README).
+fn fixture_voxelizer() -> Voxelizer {
+    Voxelizer::new((16.0, 16.0, 8.0), Extent3::new(16, 16, 8), 8)
+}
+
+fn tiny_net(extent: Extent3) -> NetworkSpec {
+    NetworkSpec {
+        name: "dataset-tiny",
+        task: TaskKind::Segmentation,
+        extent,
+        vfe_channels: 4,
+        layers: vec![
+            LayerSpec::Subm3 { c_in: 4, c_out: 8 },
+            LayerSpec::Subm3 { c_in: 8, c_out: 8 },
+        ],
+    }
+}
+
+/// FNV-1a over depth-major coordinate triples (x, y, z as i32 LE) — the
+/// checksum `gen_fixture.py` prints as `coord_fnv`.
+fn coord_checksum(coords: &[voxel_cim::geom::Coord3]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for c in coords {
+        for v in [c.x, c.y, c.z] {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100_0000_01b3);
+            }
+        }
+    }
+    h
+}
+
+#[test]
+fn kitti_fixture_matches_golden_counts_and_checksums() {
+    // Golden constants from `tests/fixtures/kitti/gen_fixture.py`.
+    const GOLD: [(&str, usize, usize, usize, u64); 2] = [
+        ("000000.bin", 68, 4, 32, 0x48A2_071F_35B0_0EA5),
+        ("000001.bin", 40, 0, 40, 0x3F27_DBF8_F3AD_F285),
+    ];
+    let vx = fixture_voxelizer();
+    for (name, raw, dropped, voxels, checksum) in GOLD {
+        let bin = fixture_dir().join(name);
+        let frame = kitti::read_frame(&bin, None).unwrap();
+        assert_eq!(frame.points.len() + frame.dropped, raw, "{name}");
+        assert_eq!(frame.dropped, dropped, "{name}");
+        let grid = vx.voxelize(&frame.points);
+        assert_eq!(grid.len(), voxels, "{name}");
+        assert_eq!(coord_checksum(&grid.coords()), checksum, "{name}");
+    }
+}
+
+#[test]
+fn kitti_labels_pair_and_filter_in_lockstep_with_points() {
+    let bin = fixture_dir().join("000000.bin");
+    let label = fixture_dir().join("000000.label");
+    let raw_labels = kitti::read_labels(&label).unwrap();
+    assert_eq!(raw_labels.len(), 68);
+    let frame = kitti::read_frame(&bin, Some(&label)).unwrap();
+    let labels = frame.labels.unwrap();
+    assert_eq!(labels.len(), frame.points.len());
+    // The four corrupt returns carried class 99 and were dropped with
+    // their points; the four out-of-range returns survive parsing (the
+    // voxelizer drops them later), so exactly 4 of the 8 class-99 words
+    // remain.
+    let nines = labels.iter().filter(|&&l| kitti::semantic_class(l) == 99).count();
+    assert_eq!(nines, 4);
+    // The generator's class cycle: k % 4 -> 10/20/30/40, 15 each.
+    for class in [10u32, 20, 30, 40] {
+        let n = labels
+            .iter()
+            .filter(|&&l| kitti::semantic_class(l) == class)
+            .count();
+        assert_eq!(n, 15, "class {class}");
+    }
+    // Majority labels align with the voxel grid.
+    let vx = fixture_voxelizer();
+    let grid = vx.voxelize(&frame.points);
+    let per_voxel = kitti::voxel_majority_labels(&vx, &grid, &frame.points, &labels);
+    assert_eq!(per_voxel.len(), grid.len());
+    assert!(per_voxel.iter().all(|&l| [10, 20, 30, 40].contains(&l)));
+}
+
+#[test]
+fn kitti_fixture_serves_end_to_end_and_deterministically() {
+    let srv = StreamServer::new(
+        tiny_net(Extent3::new(16, 16, 8)),
+        RunnerConfig::default(),
+        2,
+    );
+    let serve_once = || {
+        let mut src = KittiSource::open(fixture_dir(), fixture_voxelizer()).unwrap();
+        assert_eq!(src.len(), 2);
+        srv.serve(8, &mut src, &mut NativeEngine::default()).unwrap()
+    };
+    let a = serve_once();
+    // Two frames on disk: the stream ends there even though we asked
+    // for 8.
+    assert_eq!(a.completions.len(), 2);
+    assert_eq!(a.completions[0].id, 0);
+    assert_eq!(a.completions[1].id, 1);
+    assert!(a.completions.iter().all(|c| c.result.out_voxels > 0));
+    let b = serve_once();
+    for (x, y) in a.completions.iter().zip(&b.completions) {
+        assert_eq!(x.result.checksum, y.result.checksum, "frame {}", x.id);
+    }
+}
+
+/// The acceptance property: for every `SearcherKind`, serving a profile
+/// stream through the double-buffered prefetching loader is bit-identical
+/// to direct iteration.
+#[test]
+fn prefetched_loading_is_bit_identical_to_direct_for_all_searchers() {
+    let extent = Extent3::new(24, 24, 8);
+    let profile = || {
+        ProfileSource::new(ScenarioProfile::Urban, extent, 0.04, 0x5EED).with_frames(4)
+    };
+    for kind in SearcherKind::ALL {
+        let srv = StreamServer::new(
+            tiny_net(extent),
+            RunnerConfig {
+                searcher: kind,
+                inflight: 2,
+                ..Default::default()
+            },
+            4,
+        );
+        let mut direct = profile();
+        let direct_report = srv
+            .serve(4, &mut direct, &mut NativeEngine::default())
+            .unwrap();
+        let mut prefetched = PrefetchSource::spawn(Box::new(profile()), 2);
+        let prefetched_report = srv
+            .serve(4, &mut prefetched, &mut NativeEngine::default())
+            .unwrap();
+        assert_eq!(direct_report.completions.len(), 4, "{kind}");
+        assert_eq!(prefetched_report.completions.len(), 4, "{kind}");
+        for (a, b) in direct_report
+            .completions
+            .iter()
+            .zip(&prefetched_report.completions)
+        {
+            assert_eq!(a.id, b.id, "{kind}");
+            assert_eq!(
+                a.result.checksum, b.result.checksum,
+                "{kind}: frame {} diverged under prefetching",
+                a.id
+            );
+            assert_eq!(a.result.total_pairs(), b.result.total_pairs(), "{kind}");
+        }
+    }
+}
+
+/// Every scenario profile serves end-to-end through `StreamServer::serve`.
+#[test]
+fn every_profile_serves_through_the_stream_server() {
+    let extent = Extent3::new(24, 24, 8);
+    let srv = StreamServer::new(
+        tiny_net(extent),
+        RunnerConfig {
+            inflight: 2,
+            ..Default::default()
+        },
+        3,
+    );
+    for profile in ScenarioProfile::ALL {
+        let mut src =
+            ProfileSource::new(profile, extent, 0.04, 0x90).with_frames(3);
+        let report = srv.serve(3, &mut src, &mut NativeEngine::default()).unwrap();
+        assert_eq!(report.completions.len(), 3, "{profile}");
+        assert!(
+            report.completions.iter().all(|c| c.result.out_voxels > 0),
+            "{profile}"
+        );
+    }
+}
+
+/// Every scenario profile runs through the shard scheduler and merges
+/// bit-identically to the unsharded path.
+#[test]
+fn scenario_profiles_run_sharded_bit_identically() {
+    let extent = Extent3::new(64, 64, 8);
+    let net = tiny_net(extent);
+    let plain = NetworkRunner::new(net.clone(), RunnerConfig::default());
+    let sharded = NetworkRunner::new(
+        net,
+        RunnerConfig {
+            shard: ShardConfig::grid(2, 2).unwrap(),
+            ..Default::default()
+        },
+    );
+    for profile in ScenarioProfile::ALL {
+        let frame = ProfileSource::new(profile, extent, 0.03, 0xCAFE).generate(1);
+        assert!(!frame.is_empty(), "{profile}");
+        let want = plain
+            .run_frame(frame.clone(), &mut NativeEngine::default())
+            .unwrap();
+        let got = sharded
+            .run_frame_sharded(frame, &mut NativeEngine::default())
+            .unwrap();
+        assert_eq!(
+            want.checksum, got.checksum,
+            "{profile} diverged under shard scheduling"
+        );
+        assert!(got.shards >= 1, "{profile}");
+    }
+}
+
+/// Trace record/replay closes the loop: a replayed stream yields the
+/// same `FrameResult` checksums as the live source it was recorded from.
+#[test]
+fn trace_replay_serves_bit_identically_to_the_live_source() {
+    let extent = Extent3::new(24, 24, 8);
+    let srv = StreamServer::new(tiny_net(extent), RunnerConfig::default(), 2);
+    let mut live =
+        ProfileSource::new(ScenarioProfile::FarField, extent, 0.04, 0x11).with_frames(3);
+    let live_report = srv.serve(3, &mut live, &mut NativeEngine::default()).unwrap();
+
+    let mut fresh =
+        ProfileSource::new(ScenarioProfile::FarField, extent, 0.04, 0x11).with_frames(3);
+    let trace = Trace::record(&mut fresh, 3);
+    let path = std::env::temp_dir().join("voxel-cim-dataset-ingestion.vctr");
+    trace.save(&path).unwrap();
+    let loaded = Trace::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let mut replay = loaded.replay();
+    let replay_report = srv
+        .serve(3, &mut replay, &mut NativeEngine::default())
+        .unwrap();
+    assert_eq!(live_report.completions.len(), replay_report.completions.len());
+    for (a, b) in live_report
+        .completions
+        .iter()
+        .zip(&replay_report.completions)
+    {
+        assert_eq!(a.id, b.id);
+        assert_eq!(
+            a.result.checksum, b.result.checksum,
+            "frame {} diverged under replay",
+            a.id
+        );
+    }
+}
+
+#[test]
+fn truncated_kitti_files_error_instead_of_silently_truncating() {
+    let tmp = std::env::temp_dir().join("voxel-cim-kitti-truncated");
+    std::fs::create_dir_all(&tmp).unwrap();
+    let bin = tmp.join("000000.bin");
+    let bytes = std::fs::read(fixture_dir().join("000000.bin")).unwrap();
+    std::fs::write(&bin, &bytes[..bytes.len() - 3]).unwrap();
+    assert!(kitti::read_frame(&bin, None).is_err());
+    let label = tmp.join("000000.label");
+    std::fs::write(&label, [1u8, 2, 3]).unwrap();
+    assert!(kitti::read_labels(&label).is_err());
+    // Label/point count mismatch is an error too.
+    std::fs::write(&bin, &bytes).unwrap();
+    std::fs::write(&label, [0u8; 12]).unwrap();
+    assert!(kitti::read_frame(&bin, Some(&label)).is_err());
+    std::fs::remove_dir_all(&tmp).ok();
+}

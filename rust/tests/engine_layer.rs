@@ -148,7 +148,7 @@ fn stream_server_accepts_configured_searchers() {
             4,
         );
         let report = srv
-            .serve(4, make_frame, &mut NativeEngine::default())
+            .serve_closure(4, make_frame, &mut NativeEngine::default())
             .unwrap();
         assert_eq!(report.completions.len(), 4, "{kind}");
         let ids: Vec<u64> = report.completions.iter().map(|c| c.id).collect();

@@ -1,0 +1,79 @@
+#!/usr/bin/env python3
+"""Regenerate the checked-in KITTI fixture and print the golden values.
+
+The fixture is two velodyne frames on a 16 x 16 x 8 grid with 1 m voxels
+(range (16, 16, 8)), so quantization is exact: a point at (i + 0.5) lands
+in bin i with no float ambiguity. Frame 000000 additionally carries
+corrupt returns (non-finite components -> dropped by Point::parse) and
+out-of-range returns (negative / beyond-range -> dropped by
+Voxelizer::quantize). Labels are SemanticKITTI-style u32 words: semantic
+class in the low 16 bits, instance id in the high 16.
+
+Run from this directory:  python3 gen_fixture.py
+"""
+import struct, os
+
+MASK = (1 << 64) - 1
+
+def fnv1a(data):
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) & MASK
+    return h
+
+def frame0():
+    pts, labels = [], []
+    for k in range(60):
+        x = (k * 7 + k // 16) % 16
+        y = (k * 5 + 3 * (k // 16)) % 16
+        z = (k * 3 + k // 16) % 8
+        pts.append((x + 0.5, y + 0.5, z + 0.5, (k % 10) / 10.0))
+        labels.append((10 + (k % 4) * 10) | ((k % 3) << 16))
+    nan, inf = float("nan"), float("inf")
+    corrupt = [(nan, 1.5, 1.5, 0.5), (1.5, inf, 1.5, 0.5),
+               (1.5, 1.5, -inf, 0.5), (1.5, 1.5, 1.5, nan)]
+    out_of_range = [(-0.5, 3.5, 2.5, 0.5), (3.5, -0.25, 1.0, 0.5),
+                    (20.5, 1.5, 1.5, 0.5), (1.5, 1.5, 9.5, 0.5)]
+    for p in corrupt + out_of_range:
+        pts.append(p)
+        labels.append(99)
+    return pts, labels
+
+def frame1():
+    pts, labels = [], []
+    for k in range(40):
+        x = (3 + k * 11 + k // 8) % 16
+        y = (k * 13 + 5 * (k // 8)) % 16
+        z = (1 + k * 5) % 8
+        pts.append((x + 0.5, y + 0.5, z + 0.5, ((k * 3) % 10) / 10.0))
+        labels.append(40 + (k % 2) * 4)
+    return pts, labels
+
+def is_finite(v):
+    return v == v and v not in (float("inf"), float("-inf"))
+
+def golden(pts):
+    survived = [p for p in pts if all(is_finite(c) for c in p)]
+    coords = set()
+    for x, y, z, _r in survived:
+        if x < 0 or y < 0 or z < 0:
+            continue
+        c = (int(x), int(y), int(z))   # truncation == Rust `as i32` for >= 0
+        if c[0] < 16 and c[1] < 16 and c[2] < 8:
+            coords.add(c)
+    ordered = sorted(coords, key=lambda c: (c[2], c[1], c[0]))  # depth-major
+    blob = b"".join(struct.pack("<iii", x, y, z) for x, y, z in ordered)
+    return len(survived), len(coords), fnv1a(blob)
+
+here = os.path.dirname(os.path.abspath(__file__))
+for name, (pts, labels) in (("000000", frame0()), ("000001", frame1())):
+    with open(os.path.join(here, name + ".bin"), "wb") as f:
+        for p in pts:
+            f.write(struct.pack("<4f", *p))
+    with open(os.path.join(here, name + ".label"), "wb") as f:
+        for l in labels:
+            f.write(struct.pack("<I", l))
+    parsed, voxels, csum = golden(pts)
+    print(f"{name}: raw={len(pts)} parsed={parsed} dropped={len(pts)-parsed} "
+          f"voxels={voxels} coord_fnv=0x{csum:016X}")
