@@ -1,6 +1,6 @@
 //! Bench: batched multi-frame GEMM waves on the stream path — the
 //! engine-layer feature that packs rule pairs from all in-flight frames
-//! into shared sub-matrix dispatches. Three sweeps plus a CI smoke mode:
+//! into shared sub-matrix dispatches. Four sweeps plus a CI smoke mode:
 //!
 //! * **inflight sweep** (1/2/4/8): the latency-SLO trade-off curve — p50
 //!   and p95 latency vs throughput as more frames share each wave group,
@@ -10,21 +10,34 @@
 //!   block-partitioned pseudo-frames, bit-identity across grids.
 //! * **profile sweep**: every scenario profile (urban / highway / indoor
 //!   / far-field) served through the prefetching dataset layer.
+//! * **serving sweep**: a mixed-profile sequence mux (dense urban scenes
+//!   that shard, sparse far-field frames that do not) served through
+//!   exclusive vs cross-scene lockstep windows — bit-identity and a
+//!   strict dispatch reduction asserted — then the SLO admission
+//!   frontier (drop-oldest / defer-sharding / reject-over-depth) over
+//!   the attributed-latency p95.
 //!
 //! ```sh
 //! cargo bench --bench stream_waves             # full sweeps
 //! cargo bench --bench stream_waves -- --smoke  # CI: one tick over the
 //!                                              # checked-in KITTI fixture
+//!                                              # + a mixed-profile
+//!                                              # serving tick
 //! ```
 
 use voxel_cim::bench_util::bench;
 use voxel_cim::coordinator::scheduler::RunnerConfig;
 use voxel_cim::coordinator::shard::ShardConfig;
-use voxel_cim::coordinator::stream::StreamServer;
-use voxel_cim::dataset::{KittiSource, PrefetchSource, ProfileSource, ScenarioProfile};
+use voxel_cim::coordinator::stream::{StreamReport, StreamServer};
+use voxel_cim::dataset::{
+    FrameSource, KittiSource, PrefetchSource, ProfileSource, ScenarioProfile,
+};
 use voxel_cim::geom::Extent3;
 use voxel_cim::model::layer::{LayerSpec, NetworkSpec, TaskKind};
 use voxel_cim::pointcloud::voxelize::Voxelizer;
+use voxel_cim::serving::{
+    AdmissionConfig, AdmissionPolicy, MuxPolicy, SequenceMux, WindowPolicy,
+};
 use voxel_cim::sparse::tensor::SparseTensor;
 use voxel_cim::spconv::layer::NativeEngine;
 
@@ -51,6 +64,14 @@ fn make_frame(id: u64) -> SparseTensor {
         *v = ((i as u64 + 3 * id) % 11) as i8;
     }
     t
+}
+
+/// The shared p50/p95 line every sweep prints (`util::stats::LatencySummary`).
+fn latency_line(report: &StreamReport) -> String {
+    report
+        .latency_summary()
+        .map(|s| s.format_ms())
+        .unwrap_or_else(|| "no completions".into())
 }
 
 fn main() {
@@ -80,10 +101,9 @@ fn main() {
         let mut engine = NativeEngine::default();
         let report = srv.serve_closure(FRAMES, make_frame, &mut engine).unwrap();
         println!(
-            "inflight {inflight}: {:.2} fps | p50 {:.1} ms | p95 {:.1} ms | {} engine dispatches | mean {:.1} ms",
+            "inflight {inflight}: {:.2} fps | {} | {} engine dispatches | mean {:.1} ms",
             report.throughput_fps(),
-            report.latency_p50() * 1e3,
-            report.latency_p95() * 1e3,
+            latency_line(&report),
             engine.calls,
             r.mean() * 1e3,
         );
@@ -110,6 +130,7 @@ fn main() {
 
     shard_sweep();
     profile_sweep();
+    serving_sweep();
 }
 
 /// Shard-count sweep: one oversized scene per frame, served at 1 / 2x2 /
@@ -140,7 +161,7 @@ fn shard_sweep() {
     };
 
     println!("\n# shard sweep — block-partitioned pseudo-frames (w2b 2x)");
-    let mut baseline: Option<voxel_cim::coordinator::stream::StreamReport> = None;
+    let mut baseline: Option<StreamReport> = None;
     for (bx, by) in [(1usize, 1usize), (2, 2), (4, 4)] {
         let cfg = RunnerConfig {
             shard: ShardConfig::grid(bx, by).unwrap(),
@@ -153,10 +174,9 @@ fn shard_sweep() {
         let report = srv.serve_closure(FRAMES, make_big, &mut engine).unwrap();
         let shards: u32 = report.completions.iter().map(|c| c.result.shards).sum();
         println!(
-            "shards {bx}x{by}: {:.2} fps | p50 {:.1} ms | p95 {:.1} ms | {} pseudo-frames | {} dispatches",
+            "shards {bx}x{by}: {:.2} fps | {} | {} pseudo-frames | {} dispatches",
             report.throughput_fps(),
-            report.latency_p50() * 1e3,
-            report.latency_p95() * 1e3,
+            latency_line(&report),
             shards,
             engine.calls,
         );
@@ -195,11 +215,10 @@ fn profile_sweep() {
         let report = srv.serve(FRAMES, &mut source, &mut engine).unwrap();
         let voxels: u64 = report.completions.iter().map(|c| c.result.out_voxels).sum();
         println!(
-            "{:<10} {:.2} fps | p50 {:.1} ms | p95 {:.1} ms | {} out voxels | {} dispatches",
+            "{:<10} {:.2} fps | {} | {} out voxels | {} dispatches",
             profile.key(),
             report.throughput_fps(),
-            report.latency_p50() * 1e3,
-            report.latency_p95() * 1e3,
+            latency_line(&report),
             voxels,
             engine.calls,
         );
@@ -207,9 +226,159 @@ fn profile_sweep() {
     }
 }
 
-/// CI smoke: one serving tick over the checked-in KITTI fixture — proves
-/// the on-disk reader → voxelizer → stream-server path end to end in a
-/// few hundred milliseconds.
+/// The serving sweep's mixed-profile mux: a dense urban sequence whose
+/// scenes shard on the 2x2 grid next to a sparse far-field sequence that
+/// never does. Synchronous (unprefetched) sources so the two window
+/// policies see the identical frame stream.
+fn mixed_mux(extent: Extent3) -> SequenceMux {
+    SequenceMux::new(
+        vec![
+            Box::new(
+                ProfileSource::new(ScenarioProfile::Urban, extent, 0.03, 0x5E1)
+                    .with_channels(8),
+            ),
+            Box::new(
+                ProfileSource::new(ScenarioProfile::FarField, extent, 0.008, 0x5E2)
+                    .with_channels(8),
+            ),
+        ],
+        MuxPolicy::RoundRobin,
+    )
+    .expect("two sequences")
+}
+
+fn serving_cfg(extent: Extent3) -> RunnerConfig {
+    // Urban frames at sparsity 0.03 carry ~3x the far-field voxel count:
+    // the threshold splits exactly the urban scenes.
+    let threshold = (extent.volume() as f64 * 0.018) as usize;
+    RunnerConfig {
+        shard: ShardConfig {
+            auto_threshold: threshold,
+            ..ShardConfig::grid(2, 2).unwrap()
+        },
+        inflight: 6,
+        compute_workers: 1,
+        // One wave per non-empty offset per window: the dispatch counter
+        // then directly measures window packing, not batch remainders.
+        batch: 4096,
+        ..Default::default()
+    }
+}
+
+/// Serving sweep: cross-scene lockstep windows + SLO admission over a
+/// mixed-profile sequence mux — the p95-vs-throughput frontier against
+/// the exclusive-window baseline.
+fn serving_sweep() {
+    const FRAMES: u64 = 8;
+    let extent = Extent3::new(64, 64, 12);
+    println!("\n# serving sweep — mixed-profile mux (urban shards next to far-field)");
+
+    // Window-policy comparison at equal frame count: bit-identity and a
+    // strict engine-dispatch reduction (the acceptance criterion).
+    let mut reports: Vec<(WindowPolicy, u64, StreamReport)> = Vec::new();
+    for window in [WindowPolicy::Exclusive, WindowPolicy::CrossScene] {
+        let srv = StreamServer::new(net(), serving_cfg(extent), 8).with_window(window);
+        let mut mux = mixed_mux(extent);
+        let mut engine = NativeEngine::default();
+        let report = srv.serve(FRAMES, &mut mux, &mut engine).unwrap();
+        assert_eq!(report.completions.len(), FRAMES as usize, "{window}");
+        let att = report
+            .attributed_summary()
+            .map(|s| s.format_ms())
+            .unwrap_or_default();
+        println!(
+            "window {:<11} {:.2} fps | {} | own {} | {} windows | {} dispatches",
+            window.key(),
+            report.throughput_fps(),
+            latency_line(&report),
+            att,
+            report.windows,
+            engine.calls,
+        );
+        reports.push((window, engine.calls, report));
+    }
+    let (_, excl_calls, excl) = &reports[0];
+    let (_, cross_calls, cross) = &reports[1];
+    for (a, b) in excl.completions.iter().zip(&cross.completions) {
+        assert_eq!((a.sequence, a.id), (b.sequence, b.id));
+        assert_eq!(
+            a.result.checksum, b.result.checksum,
+            "seq {} frame {} diverged between window policies",
+            a.sequence, a.id
+        );
+    }
+    assert!(
+        excl.completions.iter().any(|c| c.result.shards > 1),
+        "urban scenes should shard in the mixed mux"
+    );
+    assert!(
+        cross_calls < excl_calls,
+        "cross-scene windows must dispatch strictly less at equal frames: \
+         {cross_calls} vs {excl_calls}"
+    );
+    println!(
+        "cross-scene bit-identical to exclusive; dispatches {cross_calls} vs \
+         {excl_calls} ({} vs {} windows)",
+        cross.windows, excl.windows
+    );
+
+    // Admission frontier: the SLO target set inside the measured band so
+    // the policies actually engage; goodput vs attributed p95 per policy.
+    // More frames than the effective queue depth (2 x inflight = 12) —
+    // with a shallower stream every frame is admitted before the first
+    // completion feeds the estimator and drop/reject never fire.
+    const ADM_FRAMES: u64 = 16;
+    let slo_ms = cross
+        .attributed_summary()
+        .map(|s| s.p95 * 1e3 * 0.6)
+        .unwrap_or(1.0);
+    println!("admission frontier @ slo {slo_ms:.2} ms (0.6x the cross-scene p95):");
+    for policy in [
+        AdmissionPolicy::None,
+        AdmissionPolicy::DropOldest,
+        AdmissionPolicy::DeferSharding,
+        AdmissionPolicy::RejectOverDepth,
+    ] {
+        let srv = StreamServer::new(net(), serving_cfg(extent), 8)
+            .with_window(WindowPolicy::CrossScene)
+            .with_admission(AdmissionConfig {
+                policy,
+                slo_ms,
+                ..Default::default()
+            });
+        let mut mux = mixed_mux(extent);
+        let mut engine = NativeEngine::default();
+        let report = srv.serve(ADM_FRAMES, &mut mux, &mut engine).unwrap();
+        let adm = report.admission;
+        let att = report
+            .attributed_summary()
+            .map(|s| s.format_ms())
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "{:<18} {} served | own {} | {:.2} fps | {} dropped | {} rejected | \
+             {} deferrals",
+            policy.key(),
+            report.completions.len(),
+            att,
+            report.throughput_fps(),
+            adm.dropped,
+            adm.rejected,
+            adm.deferred,
+        );
+        // Shedding policies lose frames only to their counters; deferral
+        // serves everything. Every pulled frame is served or accounted.
+        assert_eq!(
+            report.completions.len() as u64 + adm.dropped + adm.rejected,
+            ADM_FRAMES,
+            "{policy}: completions + shed must cover every pulled frame"
+        );
+    }
+}
+
+/// CI smoke: one serving tick over the checked-in KITTI fixture — the
+/// on-disk reader → voxelizer → stream-server path end to end — plus a
+/// mixed-profile serving tick exercising the sequence mux and the
+/// cross-scene window packer, in a few hundred milliseconds.
 fn smoke() {
     println!("# stream_waves --smoke — KITTI fixture, one tick");
     let fixture = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/kitti");
@@ -227,7 +396,7 @@ fn smoke() {
         ],
     };
     let srv = StreamServer::new(
-        net,
+        net.clone(),
         RunnerConfig {
             inflight: 2,
             compute_workers: 1,
@@ -247,4 +416,69 @@ fn smoke() {
         );
     }
     println!("smoke ok: {} frames served", report.completions.len());
+    serving_smoke(net);
+}
+
+/// The serving-scheduler smoke: a two-sequence mux served through
+/// exclusive and cross-scene windows with sharding forced on — per-frame
+/// bit-identity and a strict dispatch reduction asserted on every push.
+fn serving_smoke(net: NetworkSpec) {
+    println!("\n# --smoke serving tick — mixed-profile mux, 2x2 shards");
+    let extent = net.extent;
+    let cfg = RunnerConfig {
+        shard: ShardConfig {
+            auto_threshold: 1,
+            ..ShardConfig::grid(2, 2).unwrap()
+        },
+        inflight: 8,
+        compute_workers: 1,
+        ..Default::default()
+    };
+    let mux = || {
+        SequenceMux::new(
+            vec![
+                Box::new(
+                    ProfileSource::new(ScenarioProfile::Urban, extent, 0.05, 0x51)
+                        .with_frames(2),
+                ) as Box<dyn FrameSource>,
+                Box::new(
+                    ProfileSource::new(ScenarioProfile::Highway, extent, 0.05, 0x52)
+                        .with_frames(2),
+                ),
+            ],
+            MuxPolicy::RoundRobin,
+        )
+        .expect("two sequences")
+    };
+    let mut results = Vec::new();
+    for window in [WindowPolicy::Exclusive, WindowPolicy::CrossScene] {
+        let srv = StreamServer::new(net.clone(), cfg, 4).with_window(window);
+        let mut engine = NativeEngine::default();
+        let report = srv.serve(4, &mut mux(), &mut engine).unwrap();
+        assert_eq!(report.completions.len(), 4, "{window}");
+        println!(
+            "window {:<11} {} windows | {} dispatches | {}",
+            window.key(),
+            report.windows,
+            engine.calls,
+            latency_line(&report),
+        );
+        results.push((engine.calls, report));
+    }
+    let (excl_calls, excl) = &results[0];
+    let (cross_calls, cross) = &results[1];
+    for (a, b) in excl.completions.iter().zip(&cross.completions) {
+        assert_eq!((a.sequence, a.id), (b.sequence, b.id));
+        assert_eq!(
+            a.result.checksum, b.result.checksum,
+            "seq {} frame {} diverged in the serving smoke",
+            a.sequence, a.id
+        );
+    }
+    assert!(
+        cross_calls < excl_calls,
+        "serving smoke: cross-scene must dispatch strictly less \
+         ({cross_calls} vs {excl_calls})"
+    );
+    println!("serving smoke ok: bit-identical, {cross_calls} vs {excl_calls} dispatches");
 }

@@ -535,68 +535,149 @@ impl NetworkRunner {
             .collect())
     }
 
-    /// Run one frame with shard-level scheduling: when `cfg.shard` is
-    /// active for this scene, split it along the block-DOMS partition
-    /// into halo-padded block shards, run the shards as lockstep
-    /// pseudo-frames through the sparse prefix (sharing GEMM waves like
-    /// any in-flight group), merge the per-shard outputs back by block
-    /// ownership, and finish the dense head (if any) on the merged
-    /// scene. The result is bit-identical to [`Self::run_frame`]: the
-    /// halo covers the prefix's receptive field, so every owned output's
-    /// dependency cone — including rule pairs that cross shard edges —
-    /// is complete inside its shard (checksum-verified in
-    /// `tests/shard_scheduler.rs`). Falls back to the unsharded path
-    /// when sharding is off, the scene is below the auto threshold, or
-    /// the plan collapses to at most one non-empty shard.
+    /// Run one frame with shard-level scheduling: the single-scene
+    /// window of [`Self::run_scenes`]. Kept as the named entry point the
+    /// exclusive-window stream path and the CLI use; bit-identical to
+    /// [`Self::run_frame`] (checksum-verified in
+    /// `tests/shard_scheduler.rs`).
     pub fn run_frame_sharded<E: GemmEngine>(
         &self,
         input: SparseTensor,
         engine: &mut E,
     ) -> crate::Result<FrameResult> {
-        let sc = self.cfg.shard;
-        if !sc.active_for(input.len()) {
-            return self.run_frame(input, engine);
+        Ok(self
+            .run_scenes(vec![input], engine)?
+            .pop()
+            .expect("one scene in, one result out"))
+    }
+
+    /// Run a *window* of scenes in cross-scene lockstep — the serving
+    /// scheduler's window executor. Every scene that `cfg.shard` splits
+    /// contributes its halo-padded block shards as pseudo-frames; every
+    /// other scene contributes itself; and all pseudo-frames, across
+    /// scene boundaries, run through the sparse prefix as **one**
+    /// lockstep group sharing GEMM waves. Sharded scenes then merge back
+    /// by block ownership, and the dense suffix (if any) runs as a
+    /// second lockstep group over the merged scenes with the weight-seed
+    /// sequence continued exactly where the prefix left off (the prefix
+    /// is all weight-bearing sparse layers, so `seed + prefix.len()` is
+    /// the seed the single-pass run would reach).
+    ///
+    /// Per-scene results are bit-identical to running each scene alone:
+    /// the halo covers the prefix's receptive field, so every owned
+    /// output's dependency cone — including rule pairs that cross shard
+    /// edges — is complete inside its shard, and lockstep grouping never
+    /// changes a frame's bits (GEMM rows are independent, scatter-adds
+    /// commute). Checksum-verified across all six `SearcherKind`s in
+    /// `tests/serving_scheduler.rs`. Per-layer records aggregate across
+    /// a scene's shards; halo voxels are processed by every shard whose
+    /// ring they fall in, so summed pairs exceed the unsharded run's —
+    /// that surplus is the replication cost of sharding, reported rather
+    /// than hidden. `FrameResult::total_seconds` is the *window*
+    /// makespan for every scene of the window (like
+    /// [`Self::run_frames`]); per-scene attribution lives in the
+    /// records.
+    ///
+    /// Falls back to [`Self::run_frames`] (one group over the whole
+    /// network) when no scene shards — sharding off, scenes below the
+    /// auto threshold, plans collapsing to one non-empty shard, or an
+    /// empty sparse prefix.
+    pub fn run_scenes<E: GemmEngine>(
+        &self,
+        inputs: Vec<SparseTensor>,
+        engine: &mut E,
+    ) -> crate::Result<Vec<FrameResult>> {
+        if inputs.is_empty() {
+            return Ok(Vec::new());
         }
+        let sc = self.cfg.shard;
         let n_layers = self.net.layers.len();
         let split = self.net.layers.iter().position(|l| !l.is_sparse()).unwrap_or(n_layers);
         let (prefix, suffix) = self.net.layers.split_at(split);
-        if prefix.is_empty() {
-            return self.run_frame(input, engine);
-        }
         let t0 = Instant::now();
-        let plan = ShardPlan::plan(prefix, &input, sc.blocks_x, sc.blocks_y)?;
-        if plan.shards.len() <= 1 {
-            return self.run_frame(input, engine);
+        let mut plans: Vec<Option<ShardPlan>> = Vec::with_capacity(inputs.len());
+        for t in &inputs {
+            let plan = if !prefix.is_empty() && sc.active_for(t.len()) {
+                let p = ShardPlan::plan(prefix, t, sc.blocks_x, sc.blocks_y)?;
+                (p.shards.len() > 1).then_some(p)
+            } else {
+                None
+            };
+            plans.push(plan);
         }
-        let n_shards = plan.shards.len() as u32;
-        let inputs: Vec<SparseTensor> = plan.shards.iter().map(|s| s.tensor.clone()).collect();
-        let runs = self.run_group(prefix, inputs, engine, self.cfg.seed)?;
-        // Per-layer records aggregate across shards. Halo voxels are
-        // processed by every shard whose ring they fall in, so summed
-        // pairs exceed the unsharded run's — that surplus is the
-        // replication cost of sharding, reported rather than hidden.
-        let mut records = merge_records(runs.iter().map(|r| &r.records));
-        let merged = plan.merge(runs.iter().map(|r| r.cur.as_ref()))?;
-        let run = if suffix.is_empty() {
-            GroupRun {
-                records,
-                cur: Arc::new(merged),
-                bev: None,
+        if plans.iter().all(Option::is_none) {
+            return self.run_frames(inputs, engine);
+        }
+        // The cross-scene pseudo-frame group, in scene order: a planned
+        // scene expands into its shards, a plain scene stays whole.
+        let mut pseudo: Vec<SparseTensor> = Vec::new();
+        for (input, plan) in inputs.into_iter().zip(&plans) {
+            match plan {
+                Some(p) => pseudo.extend(p.shards.iter().map(|s| s.tensor.clone())),
+                None => pseudo.push(input),
             }
+        }
+        let runs = self.run_group(prefix, pseudo, engine, self.cfg.seed)?;
+        // Collapse pseudo-frame runs back to per-scene prefix outputs.
+        let mut runs = runs.into_iter();
+        let mut records_per: Vec<Vec<LayerRecord>> = Vec::with_capacity(plans.len());
+        let mut merged: Vec<SparseTensor> = Vec::with_capacity(plans.len());
+        let mut shard_counts: Vec<u32> = Vec::with_capacity(plans.len());
+        for plan in &plans {
+            match plan {
+                Some(p) => {
+                    let scene_runs: Vec<GroupRun> =
+                        runs.by_ref().take(p.shards.len()).collect();
+                    debug_assert_eq!(scene_runs.len(), p.shards.len());
+                    records_per.push(merge_records(scene_runs.iter().map(|r| &r.records)));
+                    merged.push(p.merge(scene_runs.iter().map(|r| r.cur.as_ref()))?);
+                    shard_counts.push(p.shards.len() as u32);
+                }
+                None => {
+                    let r = runs.next().expect("one run per plain scene");
+                    records_per.push(r.records);
+                    merged.push(
+                        Arc::try_unwrap(r.cur).unwrap_or_else(|arc| (*arc).clone()),
+                    );
+                    shard_counts.push(1);
+                }
+            }
+        }
+        let finished: Vec<GroupRun> = if suffix.is_empty() {
+            merged
+                .into_iter()
+                .zip(records_per)
+                .map(|(cur, records)| GroupRun {
+                    records,
+                    cur: Arc::new(cur),
+                    bev: None,
+                })
+                .collect()
         } else {
-            // Dense head on the merged scene; the weight-seed sequence
-            // continues exactly where the prefix left off.
+            // Dense heads run as their own lockstep group over the
+            // merged scenes; the weight-seed sequence continues exactly
+            // where the prefix left off.
             let seed = self.cfg.seed.wrapping_add(prefix.len() as u64);
-            let mut tail = self.run_group(suffix, vec![merged], engine, seed)?;
-            let t = tail.pop().expect("one merged frame in, one out");
-            records.extend(t.records);
-            GroupRun {
-                records,
-                cur: t.cur,
-                bev: t.bev,
-            }
+            let tails = self.run_group(suffix, merged, engine, seed)?;
+            tails
+                .into_iter()
+                .zip(records_per)
+                .map(|(t, mut records)| {
+                    records.extend(t.records);
+                    GroupRun {
+                        records,
+                        cur: t.cur,
+                        bev: t.bev,
+                    }
+                })
+                .collect()
         };
-        Ok(finalize_frame(run, n_shards, t0.elapsed().as_secs_f64()))
+        let total = t0.elapsed().as_secs_f64();
+        Ok(finished
+            .into_iter()
+            .zip(shard_counts)
+            .map(|(run, shards)| finalize_frame(run, shards, total))
+            .collect())
     }
 
     /// Pseudo-frames a scene of `n_voxels` will occupy in a lockstep

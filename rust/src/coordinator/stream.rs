@@ -3,35 +3,60 @@
 //! Fig. 8 hybrid pipeline from layers to the frame stream.
 //!
 //! Frames come from any [`FrameSource`] — KITTI sequences, scenario
-//! profiles, trace replay, or closure adapters, optionally behind a
-//! prefetching buffer (backpressure: a buffered producer blocks when
-//! the accelerator falls behind). The server pulls up to
-//! `RunnerConfig::inflight` ready frames at a time and runs them in
-//! lockstep through [`NetworkRunner::run_frames`]: all in-flight frames'
-//! map searches fan out over the worker pool and their rule pairs pack
-//! into shared GEMM waves, amortizing engine dispatch overhead across
-//! the stream without changing any frame's bits. Latency/throughput
-//! percentiles are reported per stream — the serving-style measurement
-//! the e2e benches record.
+//! profiles, trace replay, closure adapters, or several sequences striped
+//! through a [`SequenceMux`](crate::serving::SequenceMux) — optionally
+//! behind a prefetching buffer (backpressure: a buffered producer blocks
+//! when the accelerator falls behind). The server admits frames into a
+//! bounded pending queue, cuts *lockstep windows* from its front, and
+//! runs each window through the engine layer: all window members' map
+//! searches fan out over the worker pool and their rule pairs pack into
+//! shared GEMM waves, amortizing engine dispatch overhead across the
+//! stream without changing any frame's bits.
+//!
+//! Window packing is policy-driven ([`WindowPolicy`]): the historical
+//! `Exclusive` accounting gives a sharding scene a window of its own,
+//! while `CrossScene` packs pseudo-frames of *different* queued scenes
+//! into one window under an `inflight`-slot budget
+//! ([`NetworkRunner::run_scenes`]). Either way each completion carries
+//! both its end-to-end latency and a per-scene *attributed* latency
+//! (queue wait + the scene's own share of its window), which is what the
+//! SLO-aware [`AdmissionController`](crate::serving::AdmissionController)
+//! estimates p95 over when shedding load.
 
+use std::collections::VecDeque;
 use std::time::Instant;
 
 use crate::coordinator::pipeline::{HybridPipeline, PhaseTiming};
 use crate::coordinator::scheduler::{FrameResult, NetworkRunner, RunnerConfig};
 use crate::dataset::{ClosureSource, FramePoll, FrameSource, PrefetchSource, SourcedFrame};
 use crate::model::layer::NetworkSpec;
+use crate::serving::{AdmissionConfig, AdmissionController, AdmissionReport, WindowPolicy};
 use crate::sparse::tensor::SparseTensor;
 use crate::spconv::layer::GemmEngine;
-use crate::util::stats::percentile;
+use crate::util::stats::{percentile, LatencySummary};
 
 /// Completion record for one frame. The pseudo-frame count of a
 /// block-sharded scene is carried by `result.shards`.
 #[derive(Debug)]
 pub struct FrameCompletion {
     pub id: u64,
+    /// Muxed sequence the frame came from (0 on single-sequence
+    /// streams); frame identity on a muxed stream is `(sequence, id)`.
+    pub sequence: u32,
     pub result: FrameResult,
-    /// Queue wait + processing, seconds.
+    /// End-to-end wall latency, seconds: production → window completion.
+    /// Frames of one lockstep window complete together, so this includes
+    /// the *whole window's* makespan for every member.
     pub latency: f64,
+    /// Per-scene attributed latency, seconds: queue wait plus this
+    /// scene's *own* map-search and compute share of its window (the
+    /// records' pair-proportional attribution), clamped to `latency` —
+    /// a sharded scene's concurrent shard searches sum past the wall
+    /// otherwise. The scene's end-to-end cost rather than the window's:
+    /// a small frame packed next to a monopolizing scene reports its
+    /// own cost here. The SLO admission estimator consumes exactly this
+    /// signal.
+    pub attributed: f64,
 }
 
 /// Stream-level statistics.
@@ -39,6 +64,13 @@ pub struct FrameCompletion {
 pub struct StreamReport {
     pub completions: Vec<FrameCompletion>,
     pub wall_seconds: f64,
+    /// Lockstep windows the server cut (engine entry count — the
+    /// cross-scene packer's win shows up as fewer windows at equal
+    /// frames).
+    pub windows: u64,
+    /// Admission actions taken while serving (all zero without an
+    /// active policy).
+    pub admission: AdmissionReport,
 }
 
 impl StreamReport {
@@ -53,6 +85,18 @@ impl StreamReport {
     }
     fn latencies(&self) -> Vec<f64> {
         self.completions.iter().map(|c| c.latency).collect()
+    }
+
+    /// Summary of end-to-end latencies; `None` for an empty stream.
+    pub fn latency_summary(&self) -> Option<LatencySummary> {
+        LatencySummary::of(&self.latencies())
+    }
+
+    /// Summary of per-scene *attributed* latencies (see
+    /// [`FrameCompletion::attributed`]); `None` for an empty stream.
+    pub fn attributed_summary(&self) -> Option<LatencySummary> {
+        let xs: Vec<f64> = self.completions.iter().map(|c| c.attributed).collect();
+        LatencySummary::of(&xs)
     }
 
     /// Project the measured per-layer phase timings of every served frame
@@ -84,6 +128,11 @@ pub struct StreamServer {
     runner: NetworkRunner,
     /// Bounded queue depth (backpressure threshold).
     pub queue_depth: usize,
+    /// Lockstep-window packing policy.
+    window: WindowPolicy,
+    /// SLO-aware admission (policy `None` by default: every offered
+    /// frame is admitted and the pending bound is plain backpressure).
+    admission: AdmissionConfig,
 }
 
 impl StreamServer {
@@ -92,28 +141,48 @@ impl StreamServer {
         Self {
             runner: NetworkRunner::new(net, cfg),
             queue_depth,
+            window: WindowPolicy::Exclusive,
+            admission: AdmissionConfig::default(),
         }
     }
 
+    /// Select the lockstep-window packing policy (default
+    /// [`WindowPolicy::Exclusive`], the historical accounting).
+    pub fn with_window(mut self, window: WindowPolicy) -> Self {
+        self.window = window;
+        self
+    }
+
+    /// Attach an SLO-aware admission config (default: no policy).
+    pub fn with_admission(mut self, admission: AdmissionConfig) -> Self {
+        self.admission = admission;
+        self
+    }
+
     /// Serve up to `n_frames` frames from any [`FrameSource`] — a KITTI
-    /// sequence, a scenario profile, a trace replay, a prefetched
-    /// wrapper, or a [`ClosureSource`] adapter. The stream ends early if
-    /// the source is exhausted. Processing runs on the caller thread
-    /// with the engine; production overlaps when the source buffers
-    /// (wrap it in a [`PrefetchSource`], or use [`Self::serve_closure`]).
+    /// sequence, a scenario profile, a trace replay, a sequence mux, a
+    /// prefetched wrapper, or a [`ClosureSource`] adapter. The stream
+    /// ends early if the source is exhausted. Processing runs on the
+    /// caller thread with the engine; production overlaps when the
+    /// source buffers (wrap it in a [`PrefetchSource`], or use
+    /// [`Self::serve_closure`]).
     ///
-    /// When `RunnerConfig::inflight > 1` the server opportunistically
-    /// pulls up to that many *ready* frames per iteration
-    /// ([`FrameSource::poll_frame`] — never waiting for a frame that has
-    /// not been produced yet, so latency is not traded for batch size)
-    /// and runs them as one lockstep wave group. Per-frame results are
-    /// bit-identical either way.
+    /// Each iteration admits ready frames into a bounded pending queue
+    /// (blocking only when the queue is empty — latency is never traded
+    /// for batch size), lets the admission policy act on the backlog,
+    /// and cuts one lockstep window from the front per [`WindowPolicy`]:
     ///
-    /// Queue accounting is shard-aware: a scene that `cfg.shard` splits
-    /// occupies a whole lockstep window by itself — its block shards are
-    /// the window's pseudo-frames — so it is never packed together with
-    /// other queued frames, and a frame pulled while filling a window is
-    /// carried over to the next iteration instead of being dropped.
+    /// * `Exclusive` — a scene that `cfg.shard` splits occupies a whole
+    ///   window by itself; plain frames group up to
+    ///   `RunnerConfig::inflight`.
+    /// * `CrossScene` — scenes are charged their pseudo-frame count
+    ///   against an `inflight`-slot budget, so shards of different
+    ///   queued scenes share one window
+    ///   ([`NetworkRunner::run_scenes`]).
+    ///
+    /// Per-frame results are bit-identical across policies, window
+    /// compositions, and admission reorderings (never across drops:
+    /// a dropped frame has no result at all).
     pub fn serve<E: GemmEngine>(
         &self,
         n_frames: u64,
@@ -121,62 +190,88 @@ impl StreamServer {
         engine: &mut E,
     ) -> crate::Result<StreamReport> {
         let inflight = self.runner.cfg.inflight.max(1);
+        let depth = self.admission.effective_depth(inflight);
         let t0 = Instant::now();
+        let mut admission = AdmissionController::new(self.admission);
         let mut completions = Vec::with_capacity(n_frames as usize);
+        let mut windows: u64 = 0;
+        // Admitted frames waiting for a window slot, in arrival order.
+        let mut pending: VecDeque<SourcedFrame> = VecDeque::new();
         // Frames pulled from the source so far (bounds total pulls at
         // `n_frames` even over endless sources).
         let mut pulled: u64 = 0;
-        // A frame pulled while filling a lockstep window but too big to
-        // join it (it shards into its own window) waits here.
-        let mut carry: Option<SourcedFrame> = None;
+        let mut exhausted = false;
         while (completions.len() as u64) < n_frames {
-            let first = match carry.take() {
-                Some(frame) => frame,
-                None => match source.next_frame() {
-                    Some(frame) => {
+            // Refill: block for one frame when nothing is queued, then
+            // top up opportunistically ([`FrameSource::poll_frame`] —
+            // never waiting for a frame that has not been produced yet).
+            let planned = |n: usize| self.runner.planned_shards(n);
+            if pending.is_empty() && !exhausted && pulled < n_frames {
+                match source.next_frame() {
+                    Some(f) => {
                         pulled += 1;
-                        frame
+                        admission.offer(&mut pending, f, inflight, planned);
                     }
-                    None => break, // source exhausted
-                },
-            };
-            // Shard-aware queue accounting: a scene that shards fills
-            // its whole window with its own pseudo-frames.
-            if self.runner.planned_shards(first.tensor.len()) > 1 {
-                let (id, produced) = (first.meta.id, first.produced);
-                let result = self.runner.run_frame_sharded(first.tensor, engine)?;
-                completions.push(FrameCompletion {
-                    id,
-                    latency: produced.elapsed().as_secs_f64(),
-                    result,
-                });
-                continue;
+                    None => exhausted = true,
+                }
             }
-            let mut group = vec![first];
-            let mut exhausted = false;
-            while group.len() < inflight && pulled < n_frames && !exhausted {
+            while !exhausted && pulled < n_frames && pending.len() < depth {
                 match source.poll_frame() {
-                    FramePoll::Ready(Some(frame)) => {
+                    FramePoll::Ready(Some(f)) => {
                         pulled += 1;
-                        if self.runner.planned_shards(frame.tensor.len()) > 1 {
-                            carry = Some(frame);
+                        if admission.offer(&mut pending, f, inflight, planned) {
+                            // The offer shed load: pause this refill
+                            // pass so pressure is re-evaluated against
+                            // the next window's completions instead of
+                            // shedding the whole remaining stream on
+                            // one stale p95.
                             break;
                         }
-                        group.push(frame);
                     }
                     FramePoll::Ready(None) => exhausted = true,
                     FramePoll::Pending => break,
                 }
             }
-            let metas: Vec<(u64, Instant)> =
-                group.iter().map(|f| (f.meta.id, f.produced)).collect();
+            if pending.is_empty() {
+                // Source exhausted or the pull budget is spent; any
+                // shortfall against `n_frames` is recorded admission
+                // shedding, not silence.
+                break;
+            }
+            // SLO pressure: defer-sharding reorders the backlog before
+            // the window is cut.
+            admission.reorder(&mut pending, planned);
+            let window = self.take_window(&mut pending, inflight);
+            windows += 1;
+            let started = Instant::now();
+            let metas: Vec<(u64, u32, Instant)> = window
+                .iter()
+                .map(|f| (f.meta.id, f.meta.sequence, f.produced))
+                .collect();
             let tensors: Vec<SparseTensor> =
-                group.into_iter().map(|f| f.tensor).collect();
-            let results = self.runner.run_frames(tensors, engine)?;
-            for ((id, produced), result) in metas.into_iter().zip(results) {
+                window.into_iter().map(|f| f.tensor).collect();
+            // Both policies execute through the one window executor —
+            // the policy only shaped the window's *composition*. An
+            // Exclusive multi-frame window holds no sharding scene
+            // (take_window guarantees it), so run_scenes plans nothing
+            // and falls back to the plain lockstep group; a lone
+            // sharding scene takes exactly the run_frame_sharded path.
+            let results = self.runner.run_scenes(tensors, engine)?;
+            for ((id, sequence, produced), result) in metas.into_iter().zip(results) {
+                let latency = produced.elapsed().as_secs_f64();
+                let wait = started.saturating_duration_since(produced).as_secs_f64();
+                // A sharded scene's per-shard map searches run
+                // concurrently on the pool, so their summed ms can
+                // exceed the window wall — clamp so "own cost" never
+                // exceeds the frame's end-to-end latency.
+                let attributed = (wait + result.ms_seconds() + result.compute_seconds())
+                    .min(latency);
+                admission.record(attributed);
                 completions.push(FrameCompletion {
                     id,
-                    latency: produced.elapsed().as_secs_f64(),
+                    sequence,
+                    latency,
+                    attributed,
                     result,
                 });
             }
@@ -184,7 +279,52 @@ impl StreamServer {
         Ok(StreamReport {
             completions,
             wall_seconds: t0.elapsed().as_secs_f64(),
+            windows,
+            admission: admission.report,
         })
+    }
+
+    /// Cut one lockstep window from the front of the pending queue (see
+    /// [`Self::serve`] for the two policies). FIFO in both modes: the
+    /// packer never skips past a scene that does not fit, so admitted
+    /// arrival order is the service order.
+    fn take_window(
+        &self,
+        pending: &mut VecDeque<SourcedFrame>,
+        inflight: usize,
+    ) -> Vec<SourcedFrame> {
+        let first = pending.pop_front().expect("take_window on an empty queue");
+        let cost = |f: &SourcedFrame| self.runner.planned_shards(f.tensor.len());
+        match self.window {
+            WindowPolicy::Exclusive => {
+                if cost(&first) > 1 {
+                    return vec![first];
+                }
+                let mut window = vec![first];
+                while window.len() < inflight
+                    && pending.front().is_some_and(|f| cost(f) == 1)
+                {
+                    window.push(pending.pop_front().expect("front checked"));
+                }
+                window
+            }
+            WindowPolicy::CrossScene => {
+                // Slot budget: the first scene always boards (an
+                // oversized scene still gets served); following scenes
+                // board while their pseudo-frame count fits.
+                let mut budget = inflight.saturating_sub(cost(&first));
+                let mut window = vec![first];
+                while let Some(f) = pending.front() {
+                    let c = cost(f);
+                    if c > budget {
+                        break;
+                    }
+                    budget -= c;
+                    window.push(pending.pop_front().expect("front checked"));
+                }
+                window
+            }
+        }
     }
 
     /// The historical closure API: `producer` runs on a background
@@ -211,6 +351,7 @@ impl StreamServer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::shard::ShardConfig;
     use crate::geom::Extent3;
     use crate::model::layer::{LayerSpec, TaskKind};
     use crate::pointcloud::voxelize::Voxelizer;
@@ -250,6 +391,11 @@ mod tests {
         assert_eq!(ids, (0..8).collect::<Vec<_>>());
         assert!(report.throughput_fps() > 0.0);
         assert!(report.latency_p95() >= report.latency_p50());
+        assert_eq!(report.admission, crate::serving::AdmissionReport {
+            admitted: 8,
+            ..Default::default()
+        });
+        assert!(report.windows >= 1);
     }
 
     #[test]
@@ -350,7 +496,6 @@ mod tests {
 
     #[test]
     fn sharded_stream_serves_bit_identical_frames_in_their_own_windows() {
-        use crate::coordinator::shard::ShardConfig;
         let plain = StreamServer::new(tiny_net(), RunnerConfig::default(), 8);
         let sharded = StreamServer::new(
             tiny_net(),
@@ -382,6 +527,80 @@ mod tests {
             b.completions.iter().any(|c| c.result.shards > 1),
             "no frame actually sharded"
         );
+    }
+
+    #[test]
+    fn cross_scene_windows_pack_shards_with_other_frames_bit_identically() {
+        // Every frame shards under the 2x2 grid with threshold 0; with
+        // inflight 8 > 2 * shards, the cross-scene packer fits two
+        // sharded scenes (4 pseudo-frames each) into one window, which
+        // the exclusive policy never does.
+        let cfg = RunnerConfig {
+            shard: ShardConfig::grid(2, 2).unwrap(),
+            inflight: 8,
+            ..Default::default()
+        };
+        let exclusive = StreamServer::new(tiny_net(), cfg, 8);
+        let packed = StreamServer::new(tiny_net(), cfg, 8)
+            .with_window(WindowPolicy::CrossScene);
+        // Direct (synchronous) sources so the window compositions are
+        // deterministic: every poll is Ready, no prefetch-thread races.
+        let a = exclusive
+            .serve(6, &mut ClosureSource::new(make_frame), &mut NativeEngine::default())
+            .unwrap();
+        let b = packed
+            .serve(6, &mut ClosureSource::new(make_frame), &mut NativeEngine::default())
+            .unwrap();
+        assert_eq!(a.completions.len(), b.completions.len());
+        for (x, y) in a.completions.iter().zip(&b.completions) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(
+                x.result.checksum, y.result.checksum,
+                "frame {} diverged under cross-scene packing",
+                x.id
+            );
+            assert_eq!(x.result.shards, y.result.shards);
+        }
+        assert!(
+            b.windows < a.windows,
+            "cross-scene packing must cut fewer windows ({} vs {})",
+            b.windows,
+            a.windows
+        );
+    }
+
+    #[test]
+    fn attributed_latency_is_bounded_by_end_to_end_latency() {
+        // Sharding on: the clamp path matters exactly when a scene's
+        // concurrent shard searches would sum past the window wall.
+        let srv = StreamServer::new(
+            tiny_net(),
+            RunnerConfig {
+                inflight: 8,
+                shard: ShardConfig::grid(2, 2).unwrap(),
+                ..Default::default()
+            },
+            8,
+        )
+        .with_window(WindowPolicy::CrossScene);
+        let report = srv
+            .serve_closure(8, make_frame, &mut NativeEngine::default())
+            .unwrap();
+        for c in &report.completions {
+            assert!(c.attributed >= 0.0);
+            assert!(
+                c.attributed <= c.latency + 1e-6,
+                "frame {}: attributed {} vs latency {}",
+                c.id,
+                c.attributed,
+                c.latency
+            );
+        }
+        let att = report.attributed_summary().unwrap();
+        let e2e = report.latency_summary().unwrap();
+        assert_eq!(att.n, e2e.n);
+        assert!(att.p95 <= e2e.p95 + 1e-6);
+        assert_eq!(e2e.p95, report.latency_p95());
     }
 
     #[test]

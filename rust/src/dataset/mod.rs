@@ -46,6 +46,10 @@ use crate::util::config::Config;
 pub struct FrameMeta {
     /// Source-assigned frame id (file index, profile frame counter, ...).
     pub id: u64,
+    /// Which muxed sequence produced the frame (0 for single-sequence
+    /// sources; stamped by [`crate::serving::SequenceMux`]). Frame
+    /// identity on a multi-sequence stream is `(sequence, id)`.
+    pub sequence: u32,
     /// Raw LiDAR returns before voxelization (0 when the source
     /// synthesizes occupied voxels directly).
     pub points: usize,
@@ -70,6 +74,7 @@ impl SourcedFrame {
         Self {
             meta: FrameMeta {
                 id,
+                sequence: 0,
                 points,
                 extent: tensor.extent,
             },
@@ -233,7 +238,8 @@ impl DatasetConfig {
             return Ok(None);
         }
         let extent = self.extent.unwrap_or(default_extent);
-        let inner: Box<dyn FrameSource> = if std::path::Path::new(&self.source).is_dir() {
+        let path = std::path::Path::new(&self.source);
+        let inner: Box<dyn FrameSource> = if path.is_dir() {
             let vx = crate::pointcloud::Voxelizer::new(
                 self.range,
                 extent,
@@ -246,10 +252,21 @@ impl DatasetConfig {
                     self.offset.2,
                 ),
             )
+        } else if looks_like_path(&self.source) {
+            // A path-shaped source that is not a directory is a config
+            // error in its own words — "unknown profile" would only
+            // obscure the actual typo'd KITTI path.
+            anyhow::bail!(
+                "dataset source {:?} does not exist or is not a directory \
+                 (expected a KITTI velodyne directory, or a scenario profile: \
+                 urban | highway | indoor | far-field)",
+                self.source
+            );
         } else {
             let profile: ScenarioProfile = self.source.parse().map_err(|e| {
                 anyhow::anyhow!(
-                    "dataset source {:?} is neither a directory nor a profile: {e}",
+                    "dataset source {:?} is neither an existing directory nor a \
+                     scenario profile (KITTI dir missing or misspelled?): {e}",
                     self.source
                 )
             })?;
@@ -261,6 +278,16 @@ impl DatasetConfig {
             inner
         }))
     }
+}
+
+/// Does a dataset source spec look like a filesystem path rather than a
+/// profile name? Path separators, relative-path prefixes, and home
+/// shorthand all count — profile names contain none of these.
+fn looks_like_path(source: &str) -> bool {
+    source.contains('/')
+        || source.contains('\\')
+        || source.starts_with('.')
+        || source.starts_with('~')
 }
 
 #[cfg(test)]
@@ -330,5 +357,30 @@ mod tests {
             ..Default::default()
         };
         assert!(bad.build(e).is_err());
+    }
+
+    #[test]
+    fn missing_kitti_directory_is_a_clear_config_error() {
+        // `voxel-cim stream` with `[dataset] source` pointing at a
+        // missing KITTI directory must surface a config error naming the
+        // path — not a panic, and not a misleading "unknown profile".
+        let e = Extent3::new(16, 16, 8);
+        for missing in ["/no/such/kitti/velodyne", "./does-not-exist", "~/kitti"] {
+            let d = DatasetConfig {
+                source: missing.into(),
+                ..Default::default()
+            };
+            let err = format!("{:#}", d.build(e).unwrap_err());
+            assert!(err.contains(missing), "{err}");
+            assert!(
+                err.contains("does not exist or is not a directory"),
+                "{err}"
+            );
+            assert!(
+                !err.contains("unknown scenario profile"),
+                "path-shaped sources must not fall through to profile \
+                 parsing: {err}"
+            );
+        }
     }
 }

@@ -4,9 +4,11 @@
 //! p50/p95 deltas measure the engine, not the workload).
 //!
 //! The on-disk format is deliberately dependency-free (the vendored
-//! registry has no serde): a magic header, then per frame the id, raw
-//! point count, extent, channel count, coordinate triples (i32 LE,
-//! depth-major order preserved) and the int8 feature matrix.
+//! registry has no serde): a magic header, then per frame the id, the
+//! mux sequence index (so recording a muxed stream preserves the
+//! `(sequence, id)` frame identity), raw point count, extent, channel
+//! count, coordinate triples (i32 LE, depth-major order preserved) and
+//! the int8 feature matrix.
 
 use std::io::{Read as _, Write as _};
 use std::path::Path;
@@ -17,12 +19,16 @@ use crate::dataset::{FrameSource, SourcedFrame};
 use crate::geom::{Coord3, Extent3};
 use crate::sparse::tensor::SparseTensor;
 
-const MAGIC: &[u8; 8] = b"VCIMTRC1";
+const MAGIC: &[u8; 8] = b"VCIMTRC2";
 
 /// One recorded frame.
 #[derive(Clone, Debug)]
 pub struct TraceFrame {
     pub id: u64,
+    /// Muxed sequence the frame came from (0 on single-sequence
+    /// streams) — replay restores it, so `(sequence, id)` identity
+    /// survives the round trip.
+    pub sequence: u32,
     pub points: usize,
     pub tensor: SparseTensor,
 }
@@ -41,6 +47,7 @@ impl Trace {
             let Some(f) = source.next_frame() else { break };
             frames.push(TraceFrame {
                 id: f.meta.id,
+                sequence: f.meta.sequence,
                 points: f.meta.points,
                 tensor: f.tensor,
             });
@@ -65,6 +72,7 @@ impl Trace {
         for f in &self.frames {
             let t = &f.tensor;
             out.extend_from_slice(&f.id.to_le_bytes());
+            out.extend_from_slice(&f.sequence.to_le_bytes());
             out.extend_from_slice(&(f.points as u64).to_le_bytes());
             for d in [t.extent.x, t.extent.y, t.extent.z, t.channels, t.len()] {
                 out.extend_from_slice(&(d as u32).to_le_bytes());
@@ -91,15 +99,25 @@ impl Trace {
             .and_then(|mut f| f.read_to_end(&mut bytes))
             .with_context(|| format!("reading trace {}", path.display()))?;
         let mut r = Reader { bytes: &bytes, pos: 0 };
-        anyhow::ensure!(
-            r.take(MAGIC.len())? == MAGIC.as_slice(),
-            "{}: not a voxel-cim trace (bad magic)",
-            path.display()
-        );
+        let magic = r.take(MAGIC.len())?;
+        if magic != MAGIC.as_slice() {
+            // An older trace version deserves a version message, not
+            // "bad magic" — the bytes are a valid trace of its time.
+            anyhow::ensure!(
+                !magic.starts_with(b"VCIMTRC"),
+                "{}: unsupported trace version {} (this build reads {}; re-record \
+                 the trace)",
+                path.display(),
+                String::from_utf8_lossy(&magic[7..]),
+                char::from(MAGIC[7]),
+            );
+            anyhow::bail!("{}: not a voxel-cim trace (bad magic)", path.display());
+        }
         let n_frames = r.u64()? as usize;
         let mut frames = Vec::with_capacity(n_frames.min(1 << 20));
         for _ in 0..n_frames {
             let id = r.u64()?;
+            let sequence = r.u32()?;
             let points = r.u64()? as usize;
             let (ex, ey, ez) = (r.u32()? as usize, r.u32()? as usize, r.u32()? as usize);
             let channels = r.u32()? as usize;
@@ -132,7 +150,12 @@ impl Trace {
                 "{}: frame {id} is not canonical (corrupt trace?)",
                 path.display()
             );
-            frames.push(TraceFrame { id, points, tensor });
+            frames.push(TraceFrame {
+                id,
+                sequence,
+                points,
+                tensor,
+            });
         }
         anyhow::ensure!(
             r.pos == bytes.len(),
@@ -181,7 +204,9 @@ impl FrameSource for ReplaySource {
     fn next_frame(&mut self) -> Option<SourcedFrame> {
         let f = self.frames.get(self.next)?;
         self.next += 1;
-        Some(SourcedFrame::new(f.id, f.points, f.tensor.clone()))
+        let mut frame = SourcedFrame::new(f.id, f.points, f.tensor.clone());
+        frame.meta.sequence = f.sequence;
+        Some(frame)
     }
 
     fn label(&self) -> String {
@@ -229,11 +254,41 @@ mod tests {
         assert_eq!(loaded.frames.len(), 3);
         for (a, b) in trace.frames.iter().zip(&loaded.frames) {
             assert_eq!(a.id, b.id);
+            assert_eq!(a.sequence, b.sequence);
             assert_eq!(a.points, b.points);
             assert_eq!(a.tensor.extent, b.tensor.extent);
             assert_eq!(a.tensor.coords, b.tensor.coords);
             assert_eq!(a.tensor.features, b.tensor.features);
         }
+    }
+
+    #[test]
+    fn recording_a_mux_preserves_sequence_identity() {
+        use crate::serving::{MuxPolicy, SequenceMux};
+        let seq = |p, seed| {
+            Box::new(
+                ProfileSource::new(p, Extent3::new(24, 24, 4), 0.03, seed).with_frames(2),
+            ) as Box<dyn FrameSource>
+        };
+        let mut mux = SequenceMux::new(
+            vec![
+                seq(ScenarioProfile::Urban, 1),
+                seq(ScenarioProfile::Highway, 2),
+            ],
+            MuxPolicy::RoundRobin,
+        )
+        .unwrap();
+        let trace = Trace::record(&mut mux, 4);
+        let keys: Vec<(u32, u64)> =
+            trace.frames.iter().map(|f| (f.sequence, f.id)).collect();
+        assert_eq!(keys, vec![(0, 0), (1, 0), (0, 1), (1, 1)]);
+        // Replay restores the (sequence, id) identity, not just the id.
+        let mut replay = trace.replay();
+        let mut got = Vec::new();
+        while let Some(f) = replay.next_frame() {
+            got.push((f.meta.sequence, f.meta.id));
+        }
+        assert_eq!(got, keys);
     }
 
     #[test]
@@ -247,11 +302,19 @@ mod tests {
         bad[0] ^= 0xFF;
         std::fs::write(&path, &bad).unwrap();
         assert!(Trace::load(&path).is_err());
-        // Inflated voxel count (header bytes 48..52 are frame 0's count
-        // word): must return the truncation error, not abort inside an
-        // oversized allocation.
+        // An older trace version reports a version mismatch, not the
+        // misleading "bad magic".
+        let mut v1 = bytes.clone();
+        v1[7] = b'1';
+        std::fs::write(&path, &v1).unwrap();
+        let err = format!("{:#}", Trace::load(&path).unwrap_err());
+        assert!(err.contains("unsupported trace version 1"), "{err}");
+        // Inflated voxel count (bytes 52..56 are frame 0's count word:
+        // 16-byte file header + id 8 + sequence 4 + points 8 + extent &
+        // channels 16): must return the truncation error, not abort
+        // inside an oversized allocation.
         let mut huge = bytes.clone();
-        huge[48..52].copy_from_slice(&u32::MAX.to_le_bytes());
+        huge[52..56].copy_from_slice(&u32::MAX.to_le_bytes());
         std::fs::write(&path, &huge).unwrap();
         assert!(Trace::load(&path).is_err());
         // Truncation mid-frame.

@@ -35,6 +35,7 @@ pub mod mapsearch;
 pub mod model;
 pub mod pointcloud;
 pub mod runtime;
+pub mod serving;
 pub mod sim;
 pub mod sparse;
 pub mod spconv;
@@ -64,6 +65,10 @@ pub mod prelude {
     pub use crate::model::{minkunet, second, LayerSpec, NetworkSpec};
     pub use crate::pointcloud::{SceneConfig, SceneKind, Voxelizer};
     pub use crate::runtime::{Runtime, RuntimeConfig};
+    pub use crate::serving::{
+        AdmissionConfig, AdmissionPolicy, AdmissionReport, MuxPolicy, SequenceMux,
+        ServingConfig, WindowPolicy,
+    };
     pub use crate::sim::{Accelerator, SimReport};
     pub use crate::sparse::{Rulebook, SparseTensor};
     pub use crate::util::rng::Pcg64;

@@ -5,18 +5,21 @@
 //! voxel-cim run-det [--points N] [--native]    end-to-end SECOND frame
 //! voxel-cim run-seg [--points N] [--native]    end-to-end MinkUNet frame
 //! voxel-cim stream [--dataset D] [--frames N]  serve a frame stream
+//!                  [--sequences A,B] [--admission P] [--slo MS]
+//!                  multi-sequence muxing + SLO-aware admission
 //! voxel-cim info                               config + artifact status
 //! ```
 
 use voxel_cim::coordinator::scheduler::{NetworkRunner, RunnerConfig};
 use voxel_cim::coordinator::stream::StreamServer;
-use voxel_cim::dataset::DatasetConfig;
+use voxel_cim::dataset::{DatasetConfig, FrameSource};
 use voxel_cim::experiments as exp;
 use voxel_cim::model::{minkunet, second};
 use voxel_cim::pointcloud::scene::SceneConfig;
 use voxel_cim::pointcloud::vfe::{Vfe, VfeKind};
 use voxel_cim::pointcloud::voxelize::Voxelizer;
 use voxel_cim::runtime::{Runtime, RuntimeConfig};
+use voxel_cim::serving::{SequenceMux, ServingConfig};
 use voxel_cim::sparse::tensor::SparseTensor;
 use voxel_cim::spconv::layer::{GemmEngine, NativeEngine};
 use voxel_cim::util::cli::Args;
@@ -58,6 +61,24 @@ fn main() -> voxel_cim::Result<()> {
         "frames",
         "",
         "frames to serve with the `stream` command (overrides [dataset] frames)",
+    )
+    .opt(
+        "sequences",
+        "",
+        "comma-separated frame sources muxed into one stream (profiles or \
+         KITTI dirs, e.g. urban,far-field); overrides [serving] sequences",
+    )
+    .opt(
+        "admission",
+        "",
+        "SLO admission policy: none|drop-oldest|defer-sharding|reject-over-depth \
+         (overrides [serving] admission)",
+    )
+    .opt(
+        "slo",
+        "",
+        "p95 latency target in ms driving the admission policy \
+         (overrides [serving] slo_ms; 0 = off)",
     )
     .switch("native", "use the native GEMM engine instead of PJRT artifacts")
     .parse();
@@ -285,9 +306,81 @@ fn apply_engine_overrides(rc: &mut RunnerConfig, args: &Args) -> voxel_cim::Resu
     Ok(())
 }
 
+/// The `[serving]` config with the `--sequences` / `--admission` /
+/// `--slo` CLI overrides applied.
+fn serving_config(
+    cfg: &voxel_cim::util::config::Config,
+    args: &Args,
+) -> voxel_cim::Result<ServingConfig> {
+    let mut sv = ServingConfig::from_config(cfg)?;
+    match args.get("sequences") {
+        "" => {}
+        spec => sv.sequences = voxel_cim::serving::parse_sequences(spec)?,
+    }
+    match args.get("admission") {
+        "" => {}
+        p => sv.admission.policy = p.parse().map_err(anyhow::Error::msg)?,
+    }
+    match args.get("slo") {
+        "" => {}
+        ms => {
+            let ms: f64 = ms
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--slo: not a number ({e})"))?;
+            anyhow::ensure!(
+                ms >= 0.0 && ms.is_finite(),
+                "--slo must be a finite value >= 0, got {ms}"
+            );
+            sv.admission.slo_ms = ms;
+        }
+    }
+    // A shedding policy with no SLO target would be a silent no-op
+    // (over-SLO pressure can never trigger) — refuse it loudly.
+    anyhow::ensure!(
+        sv.admission.policy == voxel_cim::serving::AdmissionPolicy::None
+            || sv.admission.slo_ms > 0.0,
+        "admission policy {} needs an SLO target: set --slo or [serving] slo_ms",
+        sv.admission.policy
+    );
+    Ok(sv)
+}
+
+/// Resolve the stream command's frame source: a [`SequenceMux`] striping
+/// the configured sequences when `[serving] sequences` / `--sequences`
+/// names more than zero of them, the single `[dataset]` source
+/// otherwise. Each sequence gets its own prefetch buffer (per `[dataset]
+/// prefetch`) and a distinct derived seed, so two sequences of the same
+/// profile are different streams.
+fn build_stream_source(
+    ds: &DatasetConfig,
+    serving: &ServingConfig,
+    extent: voxel_cim::geom::Extent3,
+) -> voxel_cim::Result<Box<dyn FrameSource>> {
+    if serving.sequences.is_empty() {
+        return ds
+            .build(extent)?
+            .ok_or_else(|| anyhow::anyhow!("no dataset source configured for `stream`"));
+    }
+    let mut sources = Vec::with_capacity(serving.sequences.len());
+    for (i, spec) in serving.sequences.iter().enumerate() {
+        let ds_i = DatasetConfig {
+            source: spec.clone(),
+            seed: ds.seed.wrapping_add(0x9E37 * i as u64),
+            ..ds.clone()
+        };
+        let src = ds_i.build(extent)?.ok_or_else(|| {
+            anyhow::anyhow!("sequence {i} ({spec:?}) resolved to no source")
+        })?;
+        sources.push(src);
+    }
+    Ok(Box::new(SequenceMux::new(sources, serving.mux)?))
+}
+
 /// `voxel-cim stream` — serve a frame stream from the configured dataset
-/// source (KITTI directory, scenario profile, or trace) through the
-/// stream server and report serving-style latency/throughput.
+/// source (a KITTI directory or a scenario profile), or several of them
+/// muxed (`--sequences`), through the serving scheduler and report
+/// serving-style latency/throughput plus admission actions. (Trace
+/// replay is a library-level source: `Trace::load(..).replay()`.)
 fn run_stream(args: &Args) -> voxel_cim::Result<()> {
     use voxel_cim::model::layer::{LayerSpec, NetworkSpec, TaskKind};
 
@@ -299,6 +392,7 @@ fn run_stream(args: &Args) -> voxel_cim::Result<()> {
     if ds.source.is_empty() {
         ds.source = "urban".into();
     }
+    let serving = serving_config(&cfg, args)?;
     // Stream over a compact segmentation backbone sized to the source's
     // grid (profiles default to a 64 x 64 x 12 grid unless `[dataset]
     // dims` overrides it; KITTI directories use their voxelizer extent).
@@ -319,21 +413,30 @@ fn run_stream(args: &Args) -> voxel_cim::Result<()> {
     };
     let mut runner_cfg = RunnerConfig::from_config(&cfg)?;
     apply_engine_overrides(&mut runner_cfg, args)?;
-    let mut source = ds
-        .build(extent)?
-        .expect("source defaulted above, build returns Some");
+    let window = serving.resolved_window(serving.sequences.len());
+    let mut source = build_stream_source(&ds, &serving, extent)?;
     println!(
-        "stream: {} frames from {} | inflight {} | searcher {} | shards {}x{}",
+        "stream: {} frames from {} | inflight {} | searcher {} | shards {}x{} | \
+         window {} | admission {}{}",
         ds.frames,
         source.label(),
         runner_cfg.inflight,
         runner_cfg.searcher,
         runner_cfg.shard.blocks_x,
         runner_cfg.shard.blocks_y,
+        window,
+        serving.admission.policy,
+        if serving.admission.slo_ms > 0.0 {
+            format!(" (slo {} ms)", serving.admission.slo_ms)
+        } else {
+            String::new()
+        },
     );
     // queue_depth only feeds serve_closure's internal prefetcher; this
     // stream's buffering was already sized by `[dataset] prefetch`.
-    let srv = StreamServer::new(net, runner_cfg, 2);
+    let srv = StreamServer::new(net, runner_cfg, 2)
+        .with_window(window)
+        .with_admission(serving.admission);
     let report = if args.get_bool("native") {
         srv.serve(ds.frames, source.as_mut(), &mut NativeEngine::default())?
     } else {
@@ -341,12 +444,19 @@ fn run_stream(args: &Args) -> voxel_cim::Result<()> {
         println!("runtime: PJRT CPU, batches {:?}", engine.gemm_batches());
         srv.serve(ds.frames, source.as_mut(), &mut engine)?
     };
+    let muxed = !serving.sequences.is_empty();
     for c in &report.completions {
         println!(
-            "  frame {:>4}: {:>8} out voxels | latency {:>7.2} ms{}",
+            "  {}frame {:>4}: {:>8} out voxels | latency {:>7.2} ms | own {:>7.2} ms{}",
+            if muxed {
+                format!("seq {} ", c.sequence)
+            } else {
+                String::new()
+            },
             c.id,
             c.result.out_voxels,
             c.latency * 1e3,
+            c.attributed * 1e3,
             if c.result.shards > 1 {
                 format!(" | {} pseudo-frames", c.result.shards)
             } else {
@@ -354,14 +464,30 @@ fn run_stream(args: &Args) -> voxel_cim::Result<()> {
             }
         );
     }
+    // LatencySummary handles the empty stream (an exhausted or fully
+    // shed source) instead of panicking on an empty percentile.
+    let latency_line = report
+        .latency_summary()
+        .map(|s| s.format_ms())
+        .unwrap_or_else(|| "no completions".into());
     println!(
-        "\nserved {} frames in {:.1} ms: {:.2} fps | p50 {:.2} ms | p95 {:.2} ms",
+        "\nserved {} frames in {:.1} ms over {} windows: {:.2} fps | {}",
         report.completions.len(),
         report.wall_seconds * 1e3,
+        report.windows,
         report.throughput_fps(),
-        report.latency_p50() * 1e3,
-        report.latency_p95() * 1e3,
+        latency_line,
     );
+    if let Some(att) = report.attributed_summary() {
+        println!("attributed (own-cost) latency: {}", att.format_ms());
+    }
+    let adm = report.admission;
+    if adm.dropped + adm.rejected + adm.deferred > 0 {
+        println!(
+            "admission: {} admitted | {} dropped | {} rejected | {} deferrals",
+            adm.admitted, adm.dropped, adm.rejected, adm.deferred
+        );
+    }
     Ok(())
 }
 

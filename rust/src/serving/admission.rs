@@ -1,0 +1,511 @@
+//! SLO-aware admission: what the stream server does when the rolling p95
+//! of attributed frame latencies exceeds the serving target.
+//!
+//! The estimator is deliberately simple — a bounded ring of the most
+//! recent *attributed* latencies (queue wait plus the scene's own
+//! map-search + compute share, never the whole window's makespan), with
+//! p95 computed by the same nearest-rank rule as every bench report
+//! ([`LatencySummary`]). Policies only act while that p95 is over the
+//! `slo_ms` target; under target the server just applies backpressure by
+//! bounding its pending queue.
+//!
+//! * [`AdmissionPolicy::DropOldest`] — shed the stalest queued frames
+//!   down to one window's worth, keeping the queue fresh (streaming
+//!   perception wants the latest frame, not the oldest).
+//! * [`AdmissionPolicy::DeferSharding`] — push scenes that would shard
+//!   (and so monopolize window slots) behind queued non-sharding frames:
+//!   small frames stop paying the big scene's latency.
+//! * [`AdmissionPolicy::RejectOverDepth`] — stop admitting beyond one
+//!   window's worth; rejected frames are counted, never served.
+//!
+//! Every action is recorded in [`AdmissionReport`] so sweeps can plot
+//! the p95-vs-goodput frontier instead of silently losing frames.
+
+use std::collections::VecDeque;
+
+use crate::dataset::SourcedFrame;
+use crate::util::config::Config;
+use crate::util::stats::LatencySummary;
+
+/// What the server does under SLO pressure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum AdmissionPolicy {
+    /// Admit everything; the pending-queue bound is plain backpressure.
+    #[default]
+    None,
+    /// Drop the oldest queued frames down to one window's worth.
+    DropOldest,
+    /// Move scenes that would shard behind queued non-sharding frames.
+    DeferSharding,
+    /// Reject new frames once a full window is already queued.
+    RejectOverDepth,
+}
+
+impl AdmissionPolicy {
+    pub fn key(&self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::DropOldest => "drop-oldest",
+            Self::DeferSharding => "defer-sharding",
+            Self::RejectOverDepth => "reject-over-depth",
+        }
+    }
+}
+
+impl std::str::FromStr for AdmissionPolicy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "none" => Ok(Self::None),
+            "drop-oldest" => Ok(Self::DropOldest),
+            "defer-sharding" => Ok(Self::DeferSharding),
+            "reject-over-depth" => Ok(Self::RejectOverDepth),
+            other => Err(format!(
+                "unknown admission policy {other:?} (expected one of: none, drop-oldest, \
+                 defer-sharding, reject-over-depth)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for AdmissionPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.key())
+    }
+}
+
+/// Admission configuration (the SLO half of the `[serving]` section).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdmissionConfig {
+    pub policy: AdmissionPolicy,
+    /// The p95 latency target in milliseconds; 0 disables SLO pressure
+    /// entirely (policies never fire).
+    pub slo_ms: f64,
+    /// Rolling-estimator window (most recent attributed latencies kept).
+    pub estimator_window: usize,
+    /// Pending-queue bound in frames; 0 = auto (one lockstep window for
+    /// [`AdmissionPolicy::None`], two windows for active policies, so a
+    /// policy has a backlog to act on).
+    pub depth: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        Self {
+            policy: AdmissionPolicy::None,
+            slo_ms: 0.0,
+            estimator_window: 64,
+            depth: 0,
+        }
+    }
+}
+
+impl AdmissionConfig {
+    /// The pending-queue bound this config yields for a server running
+    /// `inflight` pseudo-frame slots per window.
+    pub fn effective_depth(&self, inflight: usize) -> usize {
+        let inflight = inflight.max(1);
+        match self.depth {
+            0 if self.policy == AdmissionPolicy::None => inflight,
+            0 => inflight * 2,
+            d => d,
+        }
+    }
+}
+
+/// Counters of every admission action taken over one served stream.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AdmissionReport {
+    /// Frames admitted to the pending queue.
+    pub admitted: u64,
+    /// Frames evicted by [`AdmissionPolicy::DropOldest`].
+    pub dropped: u64,
+    /// Frames refused by [`AdmissionPolicy::RejectOverDepth`].
+    pub rejected: u64,
+    /// Deferral events from [`AdmissionPolicy::DeferSharding`] (one per
+    /// sharding frame pushed back; a frame deferred across several
+    /// windows counts each time).
+    pub deferred: u64,
+}
+
+/// Rolling nearest-rank p95 estimator over the most recent samples.
+/// The p95 is recomputed once per [`Self::push`] (one sort per frame
+/// *completion*) and cached, so the server's per-offer pressure checks
+/// stay O(1) on the pull path.
+#[derive(Clone, Debug)]
+pub struct RollingEstimator {
+    window: usize,
+    samples: VecDeque<f64>,
+    cached_p95: Option<f64>,
+}
+
+impl RollingEstimator {
+    pub fn new(window: usize) -> Self {
+        Self {
+            window: window.max(1),
+            samples: VecDeque::new(),
+            cached_p95: None,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.samples.len() == self.window {
+            self.samples.pop_front();
+        }
+        self.samples.push_back(x);
+        self.cached_p95 = self.summary().map(|s| s.p95);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// p95 of the retained samples, seconds; `None` until a sample
+    /// lands. Cached at push time — reading it is free.
+    pub fn p95(&self) -> Option<f64> {
+        self.cached_p95
+    }
+
+    /// Full summary of the retained samples.
+    pub fn summary(&self) -> Option<LatencySummary> {
+        let xs: Vec<f64> = self.samples.iter().copied().collect();
+        LatencySummary::of(&xs)
+    }
+}
+
+/// The server-side controller: the estimator plus the policy actions on
+/// a pending queue. Owned by one `serve` call; the report it accumulates
+/// is handed back on the stream report.
+pub struct AdmissionController {
+    pub cfg: AdmissionConfig,
+    est: RollingEstimator,
+    pub report: AdmissionReport,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        Self {
+            est: RollingEstimator::new(cfg.estimator_window),
+            report: AdmissionReport::default(),
+            cfg,
+        }
+    }
+
+    /// Feed one completed frame's attributed latency (seconds).
+    pub fn record(&mut self, attributed_seconds: f64) {
+        self.est.push(attributed_seconds);
+    }
+
+    /// Is the rolling p95 over the SLO target? Always false with no
+    /// target (`slo_ms = 0`) or before the first completion.
+    pub fn over_slo(&self) -> bool {
+        self.cfg.slo_ms > 0.0
+            && self
+                .est
+                .p95()
+                .is_some_and(|p95| p95 * 1e3 > self.cfg.slo_ms)
+    }
+
+    /// Rolling p95 in seconds (for reports).
+    pub fn p95(&self) -> Option<f64> {
+        self.est.p95()
+    }
+
+    /// Offer one pulled frame. Under the SLO (or with no policy) it is
+    /// admitted; over the SLO, [`AdmissionPolicy::RejectOverDepth`]
+    /// refuses it once a full window's worth of *pseudo-frame slots*
+    /// (`inflight`, measured through `planned` like the window packer
+    /// budgets scenes — a sharding scene is a whole window of backlog by
+    /// itself) is queued, and [`AdmissionPolicy::DropOldest`] admits it
+    /// but evicts the stalest queued frames until at most one window's
+    /// worth of slots remains (never below one frame, so an oversized
+    /// scene is not dropped to an empty queue).
+    ///
+    /// Returns `true` when the offer shed load (rejected this frame or
+    /// dropped queued ones). The server pauses its refill pass then, so
+    /// pressure is re-evaluated against fresh completions instead of
+    /// shedding the whole remaining stream on one stale estimate.
+    pub fn offer(
+        &mut self,
+        pending: &mut VecDeque<SourcedFrame>,
+        frame: SourcedFrame,
+        inflight: usize,
+        planned: impl Fn(usize) -> usize,
+    ) -> bool {
+        let inflight = inflight.max(1);
+        if self.over_slo() {
+            let queued_slots = |q: &VecDeque<SourcedFrame>| -> usize {
+                q.iter().map(|f| planned(f.tensor.len()).max(1)).sum()
+            };
+            match self.cfg.policy {
+                AdmissionPolicy::RejectOverDepth if queued_slots(pending) >= inflight => {
+                    self.report.rejected += 1;
+                    return true;
+                }
+                AdmissionPolicy::DropOldest => {
+                    pending.push_back(frame);
+                    self.report.admitted += 1;
+                    let mut dropped = false;
+                    while queued_slots(pending) > inflight && pending.len() > 1 {
+                        pending.pop_front();
+                        self.report.dropped += 1;
+                        dropped = true;
+                    }
+                    return dropped;
+                }
+                _ => {}
+            }
+        }
+        pending.push_back(frame);
+        self.report.admitted += 1;
+        false
+    }
+
+    /// Apply [`AdmissionPolicy::DeferSharding`] before a window is cut:
+    /// over the SLO, stable-partition the pending queue so frames that
+    /// would shard (`planned(voxels) > 1`) queue behind the ones that
+    /// would not. Per-class order is preserved; only the interleaving
+    /// changes — and only while over target.
+    pub fn reorder(
+        &mut self,
+        pending: &mut VecDeque<SourcedFrame>,
+        planned: impl Fn(usize) -> usize,
+    ) {
+        if self.cfg.policy != AdmissionPolicy::DeferSharding || !self.over_slo() {
+            return;
+        }
+        let mut small = Vec::with_capacity(pending.len());
+        let mut sharding = Vec::new();
+        let mut moved = 0u64;
+        for f in pending.drain(..) {
+            if planned(f.tensor.len()) > 1 {
+                sharding.push(f);
+            } else {
+                // A small frame overtaking at least one queued sharding
+                // scene = one deferral event for each scene it passes.
+                moved += sharding.len() as u64;
+                small.push(f);
+            }
+        }
+        // Count each sharding frame at most once per reorder pass.
+        self.report.deferred += moved.min(sharding.len() as u64);
+        pending.extend(small);
+        pending.extend(sharding);
+    }
+}
+
+/// Read the admission half of the `[serving]` section. Strict like the
+/// rest of the section: a present-but-malformed `slo_ms` is an error —
+/// a silently ignored SLO would disable load shedding without a trace.
+pub fn admission_from_config(cfg: &Config) -> crate::Result<AdmissionConfig> {
+    let d = AdmissionConfig::default();
+    let slo_ms = match cfg.get("serving.slo_ms") {
+        None => d.slo_ms,
+        Some(v) => v.as_float().ok_or_else(|| {
+            anyhow::anyhow!("serving.slo_ms must be a number, got {v:?}")
+        })?,
+    };
+    anyhow::ensure!(
+        slo_ms >= 0.0 && slo_ms.is_finite(),
+        "serving.slo_ms must be a finite value >= 0, got {slo_ms}"
+    );
+    Ok(AdmissionConfig {
+        policy: cfg.parsed_or("serving.admission", d.policy)?,
+        slo_ms,
+        estimator_window: cfg
+            .usize_or("serving.estimator_window", d.estimator_window)?
+            .max(1),
+        depth: cfg.usize_or("serving.depth", d.depth)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::SourcedFrame;
+    use crate::geom::{Coord3, Extent3};
+    use crate::sparse::tensor::SparseTensor;
+
+    fn frame(id: u64, voxels: usize) -> SourcedFrame {
+        let e = Extent3::new(64, 8, 4);
+        let coords: Vec<Coord3> = (0..voxels)
+            .map(|i| Coord3::new((i % 64) as i32, (i / 64) as i32, 0))
+            .collect();
+        SourcedFrame::new(id, 0, SparseTensor::from_coords(e, coords, 1))
+    }
+
+    fn over_slo_controller(policy: AdmissionPolicy) -> AdmissionController {
+        let mut c = AdmissionController::new(AdmissionConfig {
+            policy,
+            slo_ms: 1e-9,
+            ..Default::default()
+        });
+        c.record(0.010); // any positive latency exceeds the tiny target
+        assert!(c.over_slo());
+        c
+    }
+
+    #[test]
+    fn rolling_estimator_evicts_old_samples() {
+        let mut e = RollingEstimator::new(3);
+        assert!(e.p95().is_none());
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            e.push(x);
+        }
+        assert_eq!(e.len(), 3);
+        // Window holds [2, 3, 4]: nearest-rank p95 = 4, p50 = 3.
+        assert_eq!(e.p95(), Some(4.0));
+        assert_eq!(e.summary().unwrap().p50, 3.0);
+    }
+
+    #[test]
+    fn no_policy_and_under_slo_admit_everything() {
+        let mut c = AdmissionController::new(AdmissionConfig {
+            policy: AdmissionPolicy::DropOldest,
+            slo_ms: 1e9, // never over
+            ..Default::default()
+        });
+        let mut q = VecDeque::new();
+        for id in 0..5 {
+            c.record(0.001);
+            c.offer(&mut q, frame(id, 2), 2, |_| 1);
+        }
+        assert_eq!(q.len(), 5);
+        assert_eq!(c.report.admitted, 5);
+        assert_eq!(c.report.dropped + c.report.rejected, 0);
+    }
+
+    #[test]
+    fn drop_oldest_sheds_stalest_frames_over_slo() {
+        let mut c = over_slo_controller(AdmissionPolicy::DropOldest);
+        let mut q = VecDeque::new();
+        for id in 0..5 {
+            let shed = c.offer(&mut q, frame(id, 2), 2, |_| 1);
+            // The first two offers fit in one window; every one after
+            // evicts — and reports it, so the server pauses its pull.
+            assert_eq!(shed, id >= 2, "offer {id}");
+        }
+        assert_eq!(c.report.admitted, 5);
+        assert_eq!(c.report.dropped, 3);
+        let kept: Vec<u64> = q.iter().map(|f| f.meta.id).collect();
+        assert_eq!(kept, vec![3, 4], "newest frames survive");
+    }
+
+    #[test]
+    fn reject_over_depth_refuses_beyond_one_window() {
+        let mut c = over_slo_controller(AdmissionPolicy::RejectOverDepth);
+        let mut q = VecDeque::new();
+        for id in 0..5 {
+            c.offer(&mut q, frame(id, 2), 2, |_| 1);
+        }
+        assert_eq!(q.len(), 2);
+        assert_eq!(c.report.admitted, 2);
+        assert_eq!(c.report.rejected, 3);
+        let kept: Vec<u64> = q.iter().map(|f| f.meta.id).collect();
+        assert_eq!(kept, vec![0, 1], "earliest frames keep their slots");
+    }
+
+    #[test]
+    fn defer_sharding_reorders_only_over_slo() {
+        let planned = |voxels: usize| if voxels >= 100 { 4 } else { 1 };
+        // Under SLO: order untouched.
+        let mut c = AdmissionController::new(AdmissionConfig {
+            policy: AdmissionPolicy::DeferSharding,
+            slo_ms: 1e9,
+            ..Default::default()
+        });
+        let mut q: VecDeque<SourcedFrame> =
+            [frame(0, 200), frame(1, 2), frame(2, 2)].into_iter().collect();
+        c.record(0.001);
+        c.reorder(&mut q, planned);
+        assert_eq!(
+            q.iter().map(|f| f.meta.id).collect::<Vec<_>>(),
+            vec![0, 1, 2]
+        );
+        assert_eq!(c.report.deferred, 0);
+        // Over SLO: sharding scenes queue behind the small frames,
+        // per-class order preserved.
+        let mut c = over_slo_controller(AdmissionPolicy::DeferSharding);
+        let mut q: VecDeque<SourcedFrame> =
+            [frame(0, 200), frame(1, 2), frame(2, 300), frame(3, 2)]
+                .into_iter()
+                .collect();
+        c.reorder(&mut q, planned);
+        assert_eq!(
+            q.iter().map(|f| f.meta.id).collect::<Vec<_>>(),
+            vec![1, 3, 0, 2]
+        );
+        assert_eq!(c.report.deferred, 2);
+    }
+
+    #[test]
+    fn backlog_is_measured_in_window_slots_not_frames() {
+        let planned = |voxels: usize| if voxels >= 100 { 4 } else { 1 };
+        // A queued sharding scene (4 slots) is a full window of backlog
+        // by itself at inflight 4: the next offer is rejected even
+        // though only one *frame* is queued.
+        let mut c = over_slo_controller(AdmissionPolicy::RejectOverDepth);
+        let mut q: VecDeque<SourcedFrame> = [frame(0, 200)].into_iter().collect();
+        assert!(c.offer(&mut q, frame(1, 2), 4, planned));
+        assert_eq!(c.report.rejected, 1);
+        assert_eq!(q.len(), 1);
+        // Drop-oldest trims by slots too, but never below one frame —
+        // an oversized scene is not dropped to an empty queue.
+        let mut c = over_slo_controller(AdmissionPolicy::DropOldest);
+        let mut q: VecDeque<SourcedFrame> = [frame(0, 200)].into_iter().collect();
+        assert!(c.offer(&mut q, frame(1, 300), 4, planned));
+        assert_eq!(q.len(), 1, "newest oversized frame survives alone");
+        assert_eq!(q[0].meta.id, 1);
+        assert_eq!(c.report.dropped, 1);
+    }
+
+    #[test]
+    fn effective_depth_defaults_scale_with_policy() {
+        let none = AdmissionConfig::default();
+        assert_eq!(none.effective_depth(3), 3);
+        let active = AdmissionConfig {
+            policy: AdmissionPolicy::DropOldest,
+            ..Default::default()
+        };
+        assert_eq!(active.effective_depth(3), 6);
+        let fixed = AdmissionConfig {
+            depth: 9,
+            ..Default::default()
+        };
+        assert_eq!(fixed.effective_depth(3), 9);
+        assert_eq!(none.effective_depth(0), 1);
+    }
+
+    #[test]
+    fn admission_config_parses_strictly() {
+        let cfg = Config::parse(
+            "[serving]\nadmission = \"drop-oldest\"\nslo_ms = 12.5\n\
+             estimator_window = 16\ndepth = 4",
+        )
+        .unwrap();
+        let a = admission_from_config(&cfg).unwrap();
+        assert_eq!(a.policy, AdmissionPolicy::DropOldest);
+        assert!((a.slo_ms - 12.5).abs() < 1e-12);
+        assert_eq!(a.estimator_window, 16);
+        assert_eq!(a.depth, 4);
+        // Missing section -> defaults.
+        let d = admission_from_config(&Config::parse("").unwrap()).unwrap();
+        assert_eq!(d, AdmissionConfig::default());
+        // Bad values are errors, not silent fallbacks.
+        for bad in [
+            "[serving]\nadmission = \"bogus\"",
+            "[serving]\nadmission = 3",
+            "[serving]\nslo_ms = -1.0",
+            "[serving]\nslo_ms = \"40\"",
+            "[serving]\ndepth = -2",
+            "[serving]\nestimator_window = \"big\"",
+        ] {
+            let cfg = Config::parse(bad).unwrap();
+            assert!(admission_from_config(&cfg).is_err(), "{bad}");
+        }
+    }
+}

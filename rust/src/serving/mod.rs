@@ -1,0 +1,206 @@
+//! Serving scheduler: the subsystem between the dataset layer and the
+//! engine layer that turns the one-scene-at-a-time stream path into a
+//! multi-tenant serve loop.
+//!
+//! ```text
+//!  KITTI drive ─┐
+//!  profile mix ─┤→ SequenceMux ──→ admission ──→ window packer ──→ engine
+//!  trace replay┘   (fair stripe)   (SLO p95)     (cross-scene       (lockstep
+//!                                                 pseudo-frames)     waves)
+//! ```
+//!
+//! Three pieces, one pipeline:
+//!
+//! * [`SequenceMux`] — several independent [`FrameSource`] sequences
+//!   striped into one stream with per-sequence ordering preserved and
+//!   fair interleaving ([`MuxPolicy`]).
+//! * **Cross-scene lockstep windows** ([`WindowPolicy::CrossScene`]) —
+//!   the stream server packs pseudo-frames of *different* queued scenes
+//!   into one lockstep window: a sharding scene no longer owns its
+//!   window exclusively, so mixed-density sequences (urban next to
+//!   far-field) fill the wave slots the paper's W2B packing balances.
+//!   Executed by `NetworkRunner::run_scenes`; bit-identical per frame to
+//!   serving each scene alone (`tests/serving_scheduler.rs`).
+//! * [`AdmissionPolicy`] — drop-oldest / defer-sharding /
+//!   reject-over-depth load shedding, driven by a rolling p95 estimator
+//!   over *attributed* latencies (queue wait + the scene's own share of
+//!   its window, not the window makespan).
+//!
+//! Configured by the `[serving]` section ([`ServingConfig`]) and the
+//! `--sequences` / `--admission` CLI flags of `voxel-cim stream`.
+
+pub mod admission;
+pub mod mux;
+
+pub use admission::{
+    AdmissionConfig, AdmissionController, AdmissionPolicy, AdmissionReport, RollingEstimator,
+};
+pub use mux::{MuxPolicy, SequenceMux};
+
+use crate::util::config::Config;
+
+/// How the stream server cuts lockstep windows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum WindowPolicy {
+    /// The historical accounting: a scene that shards occupies a whole
+    /// window by itself; only non-sharding frames group.
+    #[default]
+    Exclusive,
+    /// Pseudo-frames of different queued scenes pack into one window
+    /// under an `inflight`-slot budget (a sharding scene costs its shard
+    /// count, a plain frame costs one slot).
+    CrossScene,
+}
+
+impl WindowPolicy {
+    pub fn key(&self) -> &'static str {
+        match self {
+            Self::Exclusive => "exclusive",
+            Self::CrossScene => "cross-scene",
+        }
+    }
+}
+
+impl std::str::FromStr for WindowPolicy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "exclusive" => Ok(Self::Exclusive),
+            "cross-scene" | "crossscene" => Ok(Self::CrossScene),
+            other => Err(format!(
+                "unknown window policy {other:?} (expected one of: exclusive, cross-scene)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for WindowPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.key())
+    }
+}
+
+/// The `[serving]` section of a run config.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServingConfig {
+    /// Window packing; `None` = auto (cross-scene when more than one
+    /// sequence is muxed, exclusive otherwise).
+    pub window: Option<WindowPolicy>,
+    /// Mux fairness across sequences (default round-robin).
+    pub mux: MuxPolicy,
+    /// Sequence specs (KITTI directories or profile names) striped into
+    /// one stream; empty = single-sequence serving.
+    pub sequences: Vec<String>,
+    /// SLO-aware admission.
+    pub admission: AdmissionConfig,
+}
+
+impl ServingConfig {
+    /// Read the `[serving]` keys of a run config. Strict like the other
+    /// sections: unknown policy names, negative counts, and malformed
+    /// values are errors, never silent fallbacks.
+    ///
+    /// `sequences` is a comma-separated string (`"urban,highway"` or
+    /// KITTI directories) because the minimal TOML subset has no string
+    /// lists; empty entries are rejected.
+    pub fn from_config(cfg: &Config) -> crate::Result<Self> {
+        let d = Self::default();
+        let window = match cfg.get("serving.window") {
+            None => None,
+            Some(v) => {
+                let s = v.as_str().ok_or_else(|| {
+                    anyhow::anyhow!("serving.window must be a quoted string, got {v:?}")
+                })?;
+                Some(s.parse().map_err(|e| anyhow::anyhow!("serving.window: {e}"))?)
+            }
+        };
+        let sequences = match cfg.get("serving.sequences") {
+            None => Vec::new(),
+            Some(v) => {
+                let s = v.as_str().ok_or_else(|| {
+                    anyhow::anyhow!("serving.sequences must be a quoted string, got {v:?}")
+                })?;
+                parse_sequences(s)?
+            }
+        };
+        Ok(Self {
+            window,
+            mux: cfg.parsed_or("serving.mux", d.mux)?,
+            sequences,
+            admission: admission::admission_from_config(cfg)?,
+        })
+    }
+
+    /// Resolve the window policy for a stream serving `n_sequences`
+    /// muxed sequences: the explicit config wins; the auto default packs
+    /// cross-scene exactly when there is more than one sequence to mux.
+    pub fn resolved_window(&self, n_sequences: usize) -> WindowPolicy {
+        self.window.unwrap_or(if n_sequences > 1 {
+            WindowPolicy::CrossScene
+        } else {
+            WindowPolicy::Exclusive
+        })
+    }
+}
+
+/// Split a comma-separated sequence list, rejecting empty entries
+/// (`"urban,,highway"` is a typo, not two sequences).
+pub fn parse_sequences(spec: &str) -> crate::Result<Vec<String>> {
+    if spec.trim().is_empty() {
+        return Ok(Vec::new());
+    }
+    spec.split(',')
+        .map(|s| {
+            let s = s.trim();
+            anyhow::ensure!(!s.is_empty(), "empty sequence entry in {spec:?}");
+            Ok(s.to_string())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serving_config_parses_and_resolves_window() {
+        let cfg = Config::parse(
+            "[serving]\nwindow = \"cross-scene\"\nmux = \"shortest-queue\"\n\
+             sequences = \"urban, highway\"\nadmission = \"defer-sharding\"\nslo_ms = 40.0",
+        )
+        .unwrap();
+        let s = ServingConfig::from_config(&cfg).unwrap();
+        assert_eq!(s.window, Some(WindowPolicy::CrossScene));
+        assert_eq!(s.mux, MuxPolicy::ShortestQueue);
+        assert_eq!(s.sequences, vec!["urban".to_string(), "highway".to_string()]);
+        assert_eq!(s.admission.policy, AdmissionPolicy::DeferSharding);
+        assert_eq!(s.resolved_window(2), WindowPolicy::CrossScene);
+        // Defaults: no section -> auto window, round-robin, no sequences.
+        let d = ServingConfig::from_config(&Config::parse("").unwrap()).unwrap();
+        assert_eq!(d, ServingConfig::default());
+        assert_eq!(d.resolved_window(1), WindowPolicy::Exclusive);
+        assert_eq!(d.resolved_window(3), WindowPolicy::CrossScene);
+    }
+
+    #[test]
+    fn bad_serving_keys_are_errors() {
+        for bad in [
+            "[serving]\nwindow = \"bogus\"",
+            "[serving]\nwindow = 2",
+            "[serving]\nmux = \"fifo\"",
+            "[serving]\nsequences = \"urban,,highway\"",
+            "[serving]\nsequences = 3",
+        ] {
+            let cfg = Config::parse(bad).unwrap();
+            assert!(ServingConfig::from_config(&cfg).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn window_policy_names_round_trip() {
+        for w in [WindowPolicy::Exclusive, WindowPolicy::CrossScene] {
+            assert_eq!(w.key().parse::<WindowPolicy>().unwrap(), w);
+        }
+        assert!("open".parse::<WindowPolicy>().is_err());
+    }
+}

@@ -1,0 +1,334 @@
+//! Multi-sequence muxing: several independent [`FrameSource`] sequences
+//! striped into one serve loop.
+//!
+//! PointAcc and PC2IM evaluate on continuous multi-frame streams, and a
+//! production accelerator never serves a single drive at a time: KITTI
+//! sequences, scenario-profile mixes, and trace replays arrive side by
+//! side. [`SequenceMux`] is the [`FrameSource`] combinator that makes
+//! the stream server see them as one stream:
+//!
+//! * **Per-sequence ordering preserved** — each inner sequence is only
+//!   ever pulled sequentially, so frames of one drive stay in order no
+//!   matter how the mux interleaves across drives.
+//! * **Fair interleaving policies** — [`MuxPolicy::RoundRobin`] rotates
+//!   through the live sequences; [`MuxPolicy::ShortestQueue`] always
+//!   pulls from the sequence served least so far, so a short or slow
+//!   sequence is never starved by a long dense one.
+//! * **Sequence attribution** — every emitted frame's
+//!   [`FrameMeta::sequence`](crate::dataset::FrameMeta::sequence) is
+//!   stamped with the index of the sequence it came from, which is what
+//!   lets the stream server's completions, the latency attribution, and
+//!   the bit-identity tests key results by `(sequence, frame id)`.
+//!
+//! Exhausted sequences drop out of the rotation; the mux ends when every
+//! sequence has ended. The mux itself never reorders or rewrites frame
+//! tensors — serving a muxed stream is bit-identical per frame to
+//! serving each sequence alone (property-tested in
+//! `tests/serving_scheduler.rs`).
+
+use crate::dataset::{FramePoll, FrameSource, SourcedFrame};
+
+/// How the mux picks the next sequence to pull from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum MuxPolicy {
+    /// Rotate through the live sequences in index order.
+    #[default]
+    RoundRobin,
+    /// Pull from the live sequence with the fewest frames served so far
+    /// (ties break toward the lower sequence index) — the
+    /// fewest-served-first fairness that keeps a lagging sequence from
+    /// being starved.
+    ShortestQueue,
+}
+
+impl MuxPolicy {
+    pub fn key(&self) -> &'static str {
+        match self {
+            Self::RoundRobin => "round-robin",
+            Self::ShortestQueue => "shortest-queue",
+        }
+    }
+}
+
+impl std::str::FromStr for MuxPolicy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "round-robin" | "roundrobin" => Ok(Self::RoundRobin),
+            "shortest-queue" | "shortestqueue" => Ok(Self::ShortestQueue),
+            other => Err(format!(
+                "unknown mux policy {other:?} (expected one of: round-robin, shortest-queue)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for MuxPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.key())
+    }
+}
+
+/// One muxed sequence's rolling state.
+struct Seq {
+    src: Box<dyn FrameSource>,
+    /// Frames pulled from this sequence so far (the shortest-queue key).
+    drawn: u64,
+    /// False once the sequence returned `None` — it leaves the rotation.
+    live: bool,
+}
+
+/// A [`FrameSource`] striping several independent sequences into one
+/// stream. See the module docs for the fairness and ordering contract.
+pub struct SequenceMux {
+    seqs: Vec<Seq>,
+    policy: MuxPolicy,
+    /// Round-robin position: the sequence the next pull starts from.
+    cursor: usize,
+}
+
+impl SequenceMux {
+    /// Build a mux over `sources` (sequence index = position in the
+    /// vector). Empty `sources` is a config error, not an empty stream.
+    pub fn new(sources: Vec<Box<dyn FrameSource>>, policy: MuxPolicy) -> crate::Result<Self> {
+        anyhow::ensure!(
+            !sources.is_empty(),
+            "sequence mux needs at least one source"
+        );
+        Ok(Self {
+            seqs: sources
+                .into_iter()
+                .map(|src| Seq {
+                    src,
+                    drawn: 0,
+                    live: true,
+                })
+                .collect(),
+            policy,
+            cursor: 0,
+        })
+    }
+
+    /// Number of sequences (live or exhausted).
+    pub fn num_sequences(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Frames drawn from sequence `idx` so far.
+    pub fn drawn(&self, idx: usize) -> u64 {
+        self.seqs[idx].drawn
+    }
+
+    /// The candidate order for the next pull: live sequence indices,
+    /// most-preferred first, per the active policy.
+    fn candidates(&self) -> Vec<usize> {
+        let n = self.seqs.len();
+        let mut order: Vec<usize> = match self.policy {
+            MuxPolicy::RoundRobin => (0..n).map(|k| (self.cursor + k) % n).collect(),
+            MuxPolicy::ShortestQueue => {
+                let mut idx: Vec<usize> = (0..n).collect();
+                // Stable sort: ties keep ascending sequence index.
+                idx.sort_by_key(|&i| self.seqs[i].drawn);
+                idx
+            }
+        };
+        order.retain(|&i| self.seqs[i].live);
+        order
+    }
+
+    /// Bookkeeping after sequence `idx` produced a frame: stamp the
+    /// sequence id, advance the fairness state.
+    fn took(&mut self, idx: usize, mut frame: SourcedFrame) -> SourcedFrame {
+        frame.meta.sequence = idx as u32;
+        self.seqs[idx].drawn += 1;
+        // Rotation resumes after the sequence that served, even when a
+        // pending sequence was skipped by an opportunistic poll.
+        self.cursor = (idx + 1) % self.seqs.len();
+        frame
+    }
+}
+
+impl FrameSource for SequenceMux {
+    fn next_frame(&mut self) -> Option<SourcedFrame> {
+        // Blocking pull: take the preferred live sequence; an exhausted
+        // one drops out and the next candidate is tried, so one short
+        // sequence never ends the whole stream.
+        loop {
+            let idx = *self.candidates().first()?;
+            match self.seqs[idx].src.next_frame() {
+                Some(frame) => return Some(self.took(idx, frame)),
+                None => self.seqs[idx].live = false,
+            }
+        }
+    }
+
+    fn poll_frame(&mut self) -> FramePoll {
+        // Opportunistic pull: walk the candidates in preference order
+        // and serve the first sequence with a frame ready. A pending
+        // sequence is skipped (never waited for — the window-fill
+        // contract), but its own frames still come out in order when it
+        // catches up.
+        let mut any_pending = false;
+        for idx in self.candidates() {
+            match self.seqs[idx].src.poll_frame() {
+                FramePoll::Ready(Some(frame)) => {
+                    return FramePoll::Ready(Some(self.took(idx, frame)));
+                }
+                FramePoll::Ready(None) => self.seqs[idx].live = false,
+                FramePoll::Pending => any_pending = true,
+            }
+        }
+        if any_pending {
+            FramePoll::Pending
+        } else {
+            FramePoll::Ready(None)
+        }
+    }
+
+    fn label(&self) -> String {
+        let names: Vec<String> = self.seqs.iter().map(|s| s.src.label()).collect();
+        format!("mux[{}]({})", self.policy, names.join(", "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{ClosureSource, ProfileSource, ScenarioProfile};
+    use crate::geom::{Coord3, Extent3};
+    use crate::sparse::tensor::SparseTensor;
+
+    fn tagged_source(tag: i32) -> Box<dyn FrameSource> {
+        let e = Extent3::new(8, 8, 4);
+        Box::new(ClosureSource::new(move |id| {
+            SparseTensor::from_coords(e, vec![Coord3::new(tag, id as i32 % 8, 0)], 1)
+        }))
+    }
+
+    fn bounded(profile: ScenarioProfile, n: u64, seed: u64) -> Box<dyn FrameSource> {
+        Box::new(
+            ProfileSource::new(profile, Extent3::new(16, 16, 4), 0.03, seed).with_frames(n),
+        )
+    }
+
+    #[test]
+    fn round_robin_alternates_and_stamps_sequences() {
+        let mut mux = SequenceMux::new(
+            vec![tagged_source(0), tagged_source(1)],
+            MuxPolicy::RoundRobin,
+        )
+        .unwrap();
+        let mut got = Vec::new();
+        for _ in 0..6 {
+            let f = mux.next_frame().unwrap();
+            assert_eq!(f.tensor.coords[0].x, f.meta.sequence as i32);
+            got.push((f.meta.sequence, f.meta.id));
+        }
+        assert_eq!(got, vec![(0, 0), (1, 0), (0, 1), (1, 1), (0, 2), (1, 2)]);
+    }
+
+    #[test]
+    fn exhausted_sequence_leaves_the_rotation() {
+        let mut mux = SequenceMux::new(
+            vec![
+                bounded(ScenarioProfile::Urban, 2, 1),
+                bounded(ScenarioProfile::Highway, 4, 2),
+            ],
+            MuxPolicy::RoundRobin,
+        )
+        .unwrap();
+        let order: Vec<(u32, u64)> = std::iter::from_fn(|| mux.next_frame())
+            .map(|f| (f.meta.sequence, f.meta.id))
+            .collect();
+        assert_eq!(
+            order,
+            vec![(0, 0), (1, 0), (0, 1), (1, 1), (1, 2), (1, 3)]
+        );
+        assert!(mux.next_frame().is_none());
+        assert!(matches!(mux.poll_frame(), FramePoll::Ready(None)));
+    }
+
+    #[test]
+    fn shortest_queue_balances_served_counts() {
+        let mut mux = SequenceMux::new(
+            vec![tagged_source(0), tagged_source(1), tagged_source(2)],
+            MuxPolicy::ShortestQueue,
+        )
+        .unwrap();
+        for _ in 0..9 {
+            mux.next_frame().unwrap();
+        }
+        // Fewest-served-first keeps the three endless sequences within
+        // one frame of each other at every step.
+        assert_eq!(
+            (mux.drawn(0), mux.drawn(1), mux.drawn(2)),
+            (3, 3, 3)
+        );
+    }
+
+    #[test]
+    fn per_sequence_ordering_is_preserved() {
+        let mut mux = SequenceMux::new(
+            vec![
+                bounded(ScenarioProfile::Urban, 5, 3),
+                bounded(ScenarioProfile::Indoor, 3, 4),
+            ],
+            MuxPolicy::ShortestQueue,
+        )
+        .unwrap();
+        let mut last: [Option<u64>; 2] = [None, None];
+        while let Some(f) = mux.next_frame() {
+            let s = f.meta.sequence as usize;
+            assert_eq!(f.meta.id, last[s].map_or(0, |v| v + 1), "sequence {s}");
+            last[s] = Some(f.meta.id);
+        }
+        assert_eq!(last, [Some(4), Some(2)]);
+    }
+
+    #[test]
+    fn muxed_frames_are_bitwise_the_solo_frames() {
+        // The mux must pass tensors through untouched: frame (seq, id)
+        // equals the frame the sequence produces served alone.
+        let mut solo0 = bounded(ScenarioProfile::Urban, 3, 7);
+        let mut solo1 = bounded(ScenarioProfile::FarField, 3, 8);
+        let mut mux = SequenceMux::new(
+            vec![
+                bounded(ScenarioProfile::Urban, 3, 7),
+                bounded(ScenarioProfile::FarField, 3, 8),
+            ],
+            MuxPolicy::RoundRobin,
+        )
+        .unwrap();
+        while let Some(f) = mux.next_frame() {
+            let want = match f.meta.sequence {
+                0 => solo0.next_frame().unwrap(),
+                _ => solo1.next_frame().unwrap(),
+            };
+            assert_eq!(f.meta.id, want.meta.id);
+            assert_eq!(f.tensor.coords, want.tensor.coords);
+            assert_eq!(f.tensor.features, want.tensor.features);
+        }
+    }
+
+    #[test]
+    fn policy_names_round_trip_and_reject_unknown() {
+        for p in [MuxPolicy::RoundRobin, MuxPolicy::ShortestQueue] {
+            assert_eq!(p.key().parse::<MuxPolicy>().unwrap(), p);
+        }
+        assert!("bogus".parse::<MuxPolicy>().is_err());
+        assert!(SequenceMux::new(Vec::new(), MuxPolicy::RoundRobin).is_err());
+    }
+
+    #[test]
+    fn label_names_the_sequences() {
+        let mux = SequenceMux::new(
+            vec![
+                bounded(ScenarioProfile::Urban, 1, 0),
+                bounded(ScenarioProfile::Highway, 1, 0),
+            ],
+            MuxPolicy::ShortestQueue,
+        )
+        .unwrap();
+        assert_eq!(mux.label(), "mux[shortest-queue](urban, highway)");
+    }
+}

@@ -57,8 +57,58 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!((0.0..=100.0).contains(&p));
     let mut s: Vec<f64> = xs.to_vec();
     s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
-    s[rank]
+    nearest_rank(&s, p)
+}
+
+/// The one nearest-rank rule: [`percentile`] and [`LatencySummary`]
+/// both resolve ranks here, so they can never disagree on what "p95"
+/// means.
+fn nearest_rank(sorted: &[f64], p: f64) -> f64 {
+    let rank = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[rank]
+}
+
+/// One latency distribution, summarized the way every serving report
+/// prints it — the shared helper behind the stream benches' p50/p95
+/// lines and the admission controller's rolling estimator, so the two
+/// never disagree on what "p95" means (nearest-rank, like
+/// [`percentile`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LatencySummary {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl LatencySummary {
+    /// Summarize a sample of latencies in seconds. `None` when empty —
+    /// an empty stream has no percentiles, and callers must say so
+    /// instead of printing NaNs.
+    pub fn of(xs: &[f64]) -> Option<Self> {
+        if xs.is_empty() {
+            return None;
+        }
+        let mut s: Vec<f64> = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(Self {
+            n: xs.len(),
+            mean: xs.iter().sum::<f64>() / xs.len() as f64,
+            p50: nearest_rank(&s, 50.0),
+            p95: nearest_rank(&s, 95.0),
+            max: *s.last().unwrap(),
+        })
+    }
+
+    /// The bench-report rendering: `p50 1.23 ms | p95 4.56 ms`.
+    pub fn format_ms(&self) -> String {
+        format!(
+            "p50 {:.2} ms | p95 {:.2} ms",
+            self.p50 * 1e3,
+            self.p95 * 1e3
+        )
+    }
 }
 
 /// Geometric mean (for normalized speedup summaries, as in Fig. 11).
@@ -91,6 +141,21 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 50.0), 3.0);
         assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn latency_summary_matches_percentile_and_handles_empty() {
+        assert_eq!(LatencySummary::of(&[]), None);
+        let xs = [0.004, 0.001, 0.002, 0.005, 0.003];
+        let s = LatencySummary::of(&xs).unwrap();
+        assert_eq!(s.n, 5);
+        assert_eq!(s.p50, percentile(&xs, 50.0));
+        assert_eq!(s.p95, percentile(&xs, 95.0));
+        assert_eq!(s.max, 0.005);
+        assert!((s.mean - 0.003).abs() < 1e-12);
+        let line = s.format_ms();
+        assert!(line.contains("p50 3.00 ms"), "{line}");
+        assert!(line.contains("p95 5.00 ms"), "{line}");
     }
 
     #[test]

@@ -1,0 +1,466 @@
+//! Integration: the serving scheduler. Serving several muxed sequences
+//! through cross-scene lockstep windows must be bit-identical per frame
+//! to serving each sequence alone — across every `SearcherKind`, with
+//! sharding on and off — and the packer must strictly reduce engine
+//! dispatches on mixed workloads at equal frame counts. Admission
+//! policies shed load visibly (counted, ordered) and never change the
+//! bits of a frame they let through.
+
+use std::collections::HashMap;
+
+use voxel_cim::coordinator::scheduler::{NetworkRunner, RunnerConfig};
+use voxel_cim::coordinator::shard::ShardConfig;
+use voxel_cim::coordinator::stream::StreamServer;
+use voxel_cim::dataset::{ClosureSource, FrameSource, ProfileSource, ScenarioProfile};
+use voxel_cim::geom::Extent3;
+use voxel_cim::mapsearch::SearcherKind;
+use voxel_cim::model::layer::{LayerSpec, NetworkSpec, TaskKind};
+use voxel_cim::serving::{
+    AdmissionConfig, AdmissionPolicy, MuxPolicy, SequenceMux, WindowPolicy,
+};
+use voxel_cim::sparse::SparseTensor;
+use voxel_cim::spconv::layer::NativeEngine;
+
+const EXTENT: Extent3 = Extent3::new(32, 32, 8);
+
+fn seg_net() -> NetworkSpec {
+    NetworkSpec {
+        name: "serving-seg",
+        task: TaskKind::Segmentation,
+        extent: EXTENT,
+        vfe_channels: 4,
+        layers: vec![
+            LayerSpec::Subm3 { c_in: 4, c_out: 8 },
+            LayerSpec::Subm3 { c_in: 8, c_out: 8 },
+        ],
+    }
+}
+
+fn cfg_with(kind: SearcherKind, shard: ShardConfig, inflight: usize) -> RunnerConfig {
+    RunnerConfig {
+        searcher: kind,
+        shard,
+        inflight,
+        // Serial compute so a caller-held NativeEngine sees every
+        // dispatch in the dispatch-count tests.
+        compute_workers: 1,
+        seed: 21,
+        ..Default::default()
+    }
+}
+
+fn sequence(profile: ScenarioProfile, frames: u64, seed: u64) -> Box<dyn FrameSource> {
+    Box::new(ProfileSource::new(profile, EXTENT, 0.04, seed).with_frames(frames))
+}
+
+/// Per-frame checksums of one sequence served alone: the exclusive,
+/// frame-at-a-time baseline keyed by frame id.
+fn solo_checksums(profile: ScenarioProfile, frames: u64, seed: u64) -> HashMap<u64, u64> {
+    let srv = StreamServer::new(
+        seg_net(),
+        cfg_with(SearcherKind::Doms, ShardConfig::default(), 1),
+        4,
+    );
+    let mut src = sequence(profile, frames, seed);
+    let report = srv
+        .serve(frames, src.as_mut(), &mut NativeEngine::default())
+        .unwrap();
+    assert_eq!(report.completions.len(), frames as usize);
+    report
+        .completions
+        .iter()
+        .map(|c| (c.id, c.result.checksum))
+        .collect()
+}
+
+#[test]
+fn muxed_cross_scene_serving_is_bit_identical_for_every_searcher() {
+    const FRAMES: u64 = 3;
+    let seqs = [
+        (ScenarioProfile::Urban, 0xAAA1u64),
+        (ScenarioProfile::Highway, 0xBBB2),
+    ];
+    let want: Vec<HashMap<u64, u64>> = seqs
+        .iter()
+        .map(|&(p, seed)| solo_checksums(p, FRAMES, seed))
+        .collect();
+    // Sharding on: threshold 1 so every ~130-voxel profile frame splits
+    // on the 2x2 grid; off: the plain grouped path.
+    let shard_modes = [
+        ShardConfig::default(),
+        ShardConfig {
+            auto_threshold: 1,
+            ..ShardConfig::grid(2, 2).unwrap()
+        },
+    ];
+    for kind in SearcherKind::ALL {
+        for shard in shard_modes {
+            let sharding = shard.num_blocks() > 1;
+            // inflight 8 fits two 2x2-sharded scenes (4 pseudo-frames
+            // each) into one cross-scene window.
+            let srv = StreamServer::new(seg_net(), cfg_with(kind, shard, 8), 8)
+                .with_window(WindowPolicy::CrossScene);
+            let mut mux = SequenceMux::new(
+                vec![
+                    sequence(seqs[0].0, FRAMES, seqs[0].1),
+                    sequence(seqs[1].0, FRAMES, seqs[1].1),
+                ],
+                MuxPolicy::RoundRobin,
+            )
+            .unwrap();
+            let report = srv
+                .serve(2 * FRAMES, &mut mux, &mut NativeEngine::default())
+                .unwrap();
+            assert_eq!(
+                report.completions.len(),
+                2 * FRAMES as usize,
+                "{kind} sharding={sharding}"
+            );
+            for c in &report.completions {
+                let solo = want[c.sequence as usize][&c.id];
+                assert_eq!(
+                    c.result.checksum, solo,
+                    "{kind} sharding={sharding}: seq {} frame {} diverged \
+                     through the muxed cross-scene window",
+                    c.sequence, c.id
+                );
+            }
+            if sharding {
+                assert!(
+                    report.completions.iter().all(|c| c.result.shards > 1),
+                    "{kind}: frames should shard at threshold 1"
+                );
+                assert!(
+                    report.windows < 2 * FRAMES,
+                    "{kind}: sharded scenes should still pack windows \
+                     ({} windows for {} frames)",
+                    report.windows,
+                    2 * FRAMES
+                );
+            }
+            // Per-sequence completion order is the sequence's own order.
+            for s in 0..2u32 {
+                let ids: Vec<u64> = report
+                    .completions
+                    .iter()
+                    .filter(|c| c.sequence == s)
+                    .map(|c| c.id)
+                    .collect();
+                assert_eq!(ids, vec![0, 1, 2], "{kind} sequence {s} out of order");
+            }
+        }
+    }
+}
+
+/// The mixed-density workload of the dispatch and admission tests:
+/// even ids are oversized scenes (shard on a 2x2 grid at threshold 300),
+/// odd ids are small frames.
+fn mixed_frame(id: u64) -> SparseTensor {
+    let e = Extent3::new(48, 48, 8);
+    let (target, clusters) = if id % 2 == 0 { (600, 6) } else { (80, 2) };
+    let g = voxel_cim::pointcloud::voxelize::Voxelizer::synth_clustered(
+        e,
+        target as f64 / e.volume() as f64,
+        clusters,
+        0.35,
+        4000 + id,
+    );
+    let mut t = SparseTensor::from_coords(e, g.coords(), 4);
+    let mut rng = voxel_cim::util::rng::Pcg64::new(5000 + id);
+    for v in t.features.iter_mut() {
+        *v = rng.next_i8(0, 8);
+    }
+    t
+}
+
+fn mixed_net() -> NetworkSpec {
+    NetworkSpec {
+        name: "serving-mixed",
+        task: TaskKind::Segmentation,
+        extent: Extent3::new(48, 48, 8),
+        vfe_channels: 4,
+        layers: vec![
+            LayerSpec::Subm3 { c_in: 4, c_out: 8 },
+            LayerSpec::Subm3 { c_in: 8, c_out: 8 },
+        ],
+    }
+}
+
+fn mixed_cfg(inflight: usize) -> RunnerConfig {
+    RunnerConfig {
+        shard: ShardConfig {
+            auto_threshold: 300,
+            ..ShardConfig::grid(2, 2).unwrap()
+        },
+        inflight,
+        compute_workers: 1,
+        // One wave per non-empty offset per window: the dispatch count
+        // directly measures how many windows each offset was split over.
+        batch: 4096,
+        seed: 22,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn cross_scene_windows_dispatch_strictly_less_than_exclusive() {
+    const FRAMES: u64 = 6;
+    let exclusive = StreamServer::new(mixed_net(), mixed_cfg(6), 8);
+    let packed = StreamServer::new(mixed_net(), mixed_cfg(6), 8)
+        .with_window(WindowPolicy::CrossScene);
+    let mut excl_engine = NativeEngine::default();
+    let a = exclusive
+        .serve(FRAMES, &mut ClosureSource::new(mixed_frame), &mut excl_engine)
+        .unwrap();
+    let mut packed_engine = NativeEngine::default();
+    let b = packed
+        .serve(FRAMES, &mut ClosureSource::new(mixed_frame), &mut packed_engine)
+        .unwrap();
+    assert_eq!(a.completions.len(), FRAMES as usize);
+    assert_eq!(b.completions.len(), FRAMES as usize);
+    for (x, y) in a.completions.iter().zip(&b.completions) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(
+            x.result.checksum, y.result.checksum,
+            "frame {} diverged between window policies",
+            x.id
+        );
+        assert_eq!(x.result.shards, y.result.shards, "frame {}", x.id);
+    }
+    assert!(
+        a.completions.iter().any(|c| c.result.shards > 1),
+        "mixed workload should contain sharding scenes"
+    );
+    assert!(
+        b.windows < a.windows,
+        "cross-scene packing should cut fewer windows ({} vs {})",
+        b.windows,
+        a.windows
+    );
+    assert!(
+        packed_engine.calls < excl_engine.calls,
+        "cross-scene windows must dispatch strictly less at equal frames: \
+         {} vs {}",
+        packed_engine.calls,
+        excl_engine.calls
+    );
+}
+
+/// Exclusive serving of the mixed stream with no admission: the
+/// per-frame checksum oracle for the admission tests.
+fn mixed_oracle(frames: u64) -> HashMap<u64, u64> {
+    let srv = StreamServer::new(mixed_net(), mixed_cfg(1), 4);
+    let report = srv
+        .serve(
+            frames,
+            &mut ClosureSource::new(mixed_frame),
+            &mut NativeEngine::default(),
+        )
+        .unwrap();
+    report
+        .completions
+        .iter()
+        .map(|c| (c.id, c.result.checksum))
+        .collect()
+}
+
+/// Admission config that is over its SLO from the first completion on:
+/// any positive latency exceeds the (absurd) target, making the policy
+/// deterministic to test without timing games.
+fn instant_pressure(policy: AdmissionPolicy, depth: usize) -> AdmissionConfig {
+    AdmissionConfig {
+        policy,
+        slo_ms: 1e-9,
+        depth,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn drop_oldest_sheds_stale_frames_and_reports_them() {
+    const FRAMES: u64 = 8;
+    let oracle = mixed_oracle(FRAMES);
+    let srv = StreamServer::new(mixed_net(), mixed_cfg(2), 8)
+        .with_window(WindowPolicy::CrossScene)
+        .with_admission(instant_pressure(AdmissionPolicy::DropOldest, 4));
+    let report = srv
+        .serve(
+            FRAMES,
+            &mut ClosureSource::new(mixed_frame),
+            &mut NativeEngine::default(),
+        )
+        .unwrap();
+    let adm = report.admission;
+    assert!(adm.dropped > 0, "tiny SLO must shed load");
+    assert_eq!(
+        report.completions.len() as u64 + adm.dropped,
+        FRAMES,
+        "every pulled frame is either served or counted dropped"
+    );
+    let ids: Vec<u64> = report.completions.iter().map(|c| c.id).collect();
+    assert!(ids.windows(2).all(|w| w[0] < w[1]), "order kept: {ids:?}");
+    assert_eq!(*ids.last().unwrap(), FRAMES - 1, "newest frame survives");
+    for c in &report.completions {
+        assert_eq!(
+            c.result.checksum, oracle[&c.id],
+            "dropping must not change surviving frames' bits (frame {})",
+            c.id
+        );
+    }
+}
+
+#[test]
+fn reject_over_depth_caps_the_backlog_and_reports_it() {
+    const FRAMES: u64 = 8;
+    let oracle = mixed_oracle(FRAMES);
+    let srv = StreamServer::new(mixed_net(), mixed_cfg(2), 8)
+        .with_window(WindowPolicy::CrossScene)
+        .with_admission(instant_pressure(AdmissionPolicy::RejectOverDepth, 4));
+    let report = srv
+        .serve(
+            FRAMES,
+            &mut ClosureSource::new(mixed_frame),
+            &mut NativeEngine::default(),
+        )
+        .unwrap();
+    let adm = report.admission;
+    assert!(adm.rejected > 0, "tiny SLO must reject load");
+    assert_eq!(report.completions.len() as u64 + adm.rejected, FRAMES);
+    let ids: Vec<u64> = report.completions.iter().map(|c| c.id).collect();
+    // Rejection sheds at most one frame per refill pass (pressure is
+    // re-evaluated each window), so the earliest admitted frames keep
+    // their slots and service order is never scrambled.
+    assert!(ids.windows(2).all(|w| w[0] < w[1]), "order kept: {ids:?}");
+    assert_eq!(ids[0], 0, "earliest admitted frame keeps its slot");
+    for c in &report.completions {
+        assert_eq!(c.result.checksum, oracle[&c.id], "frame {}", c.id);
+    }
+}
+
+#[test]
+fn defer_sharding_serves_small_frames_first_under_pressure() {
+    const FRAMES: u64 = 4;
+    // Stream order: small 1, big 0... mixed_frame: even = big. Use an
+    // explicit order: id0 small, id1 big, id2 small, id3 small.
+    let frame = |id: u64| mixed_frame(match id {
+        0 => 1,
+        1 => 0,
+        2 => 3,
+        3 => 5,
+        other => 2 * other + 1,
+    });
+    // Oracle on the same re-ordered stream.
+    let oracle: HashMap<u64, u64> = {
+        let srv = StreamServer::new(mixed_net(), mixed_cfg(1), 4);
+        let report = srv
+            .serve(FRAMES, &mut ClosureSource::new(frame), &mut NativeEngine::default())
+            .unwrap();
+        report
+            .completions
+            .iter()
+            .map(|c| (c.id, c.result.checksum))
+            .collect()
+    };
+    let srv = StreamServer::new(mixed_net(), mixed_cfg(2), 8)
+        .with_window(WindowPolicy::CrossScene)
+        .with_admission(instant_pressure(AdmissionPolicy::DeferSharding, 4));
+    let report = srv
+        .serve(FRAMES, &mut ClosureSource::new(frame), &mut NativeEngine::default())
+        .unwrap();
+    assert_eq!(report.completions.len(), FRAMES as usize, "defer never drops");
+    assert!(report.admission.deferred > 0, "the big scene should defer");
+    let ids: Vec<u64> = report.completions.iter().map(|c| c.id).collect();
+    assert_eq!(
+        ids,
+        vec![0, 2, 3, 1],
+        "small frames overtake the queued sharding scene under pressure"
+    );
+    for c in &report.completions {
+        assert_eq!(
+            c.result.checksum, oracle[&c.id],
+            "deferral must not change any frame's bits (frame {})",
+            c.id
+        );
+    }
+}
+
+#[test]
+fn cross_scene_window_runs_dense_heads_grouped_bit_identically() {
+    // One sharding detection scene plus one small one in a single
+    // cross-scene window: the sparse prefix runs as one pseudo-frame
+    // group, both merged scenes then run the BEV + RPN suffix as a
+    // second lockstep group — bit-identical to each scene served alone.
+    let e = Extent3::new(48, 48, 8);
+    let net = NetworkSpec {
+        name: "serving-det",
+        task: TaskKind::Detection,
+        extent: e,
+        vfe_channels: 4,
+        layers: vec![
+            LayerSpec::Subm3 { c_in: 4, c_out: 8 },
+            LayerSpec::GConv2 { c_in: 8, c_out: 16 },
+            LayerSpec::ToBev,
+            LayerSpec::Conv2d { c_in: 64, c_out: 32, k: 3, stride: 1 },
+        ],
+    };
+    let runner = NetworkRunner::new(net, mixed_cfg(8));
+    let big = mixed_frame(0);
+    let small = mixed_frame(1);
+    let want_big = runner
+        .run_frame_sharded(big.clone(), &mut NativeEngine::default())
+        .unwrap();
+    let want_small = runner
+        .run_frame_sharded(small.clone(), &mut NativeEngine::default())
+        .unwrap();
+    assert!(want_big.shards > 1, "big det scene should shard");
+    let got = runner
+        .run_scenes(vec![big, small], &mut NativeEngine::default())
+        .unwrap();
+    assert_eq!(got.len(), 2);
+    assert_eq!(got[0].checksum, want_big.checksum, "big scene diverged");
+    assert_eq!(got[1].checksum, want_small.checksum, "small scene diverged");
+    assert_eq!(got[0].shards, want_big.shards);
+    assert_eq!(got[1].shards, 1);
+    assert_eq!(got[0].head_shape, want_big.head_shape);
+    assert_eq!(got[1].head_shape, want_small.head_shape);
+    assert_eq!(got[0].records.len(), want_big.records.len());
+}
+
+#[test]
+fn shortest_queue_mux_keeps_uneven_sequences_fair() {
+    // A 2-frame sequence next to a 6-frame one: fewest-served-first
+    // alternates while both live, then drains the long one; everything
+    // still completes, in per-sequence order, bit-identical to solo.
+    let want0 = solo_checksums(ScenarioProfile::Indoor, 2, 0xC01);
+    let want1 = solo_checksums(ScenarioProfile::FarField, 6, 0xC02);
+    let srv = StreamServer::new(
+        seg_net(),
+        cfg_with(SearcherKind::BlockDoms, ShardConfig::default(), 3),
+        8,
+    )
+    .with_window(WindowPolicy::CrossScene);
+    let mut mux = SequenceMux::new(
+        vec![
+            sequence(ScenarioProfile::Indoor, 2, 0xC01),
+            sequence(ScenarioProfile::FarField, 6, 0xC02),
+        ],
+        MuxPolicy::ShortestQueue,
+    )
+    .unwrap();
+    let report = srv
+        .serve(8, &mut mux, &mut NativeEngine::default())
+        .unwrap();
+    assert_eq!(report.completions.len(), 8);
+    for c in &report.completions {
+        let want = if c.sequence == 0 { &want0 } else { &want1 };
+        assert_eq!(c.result.checksum, want[&c.id], "seq {} frame {}", c.sequence, c.id);
+        assert!(c.attributed <= c.latency + 1e-6);
+    }
+    let seq1_ids: Vec<u64> = report
+        .completions
+        .iter()
+        .filter(|c| c.sequence == 1)
+        .map(|c| c.id)
+        .collect();
+    assert_eq!(seq1_ids, (0..6).collect::<Vec<_>>());
+}
