@@ -1,16 +1,15 @@
 //! Bench E7/E8 (detection side): the full Table 2 / Fig. 11 detection
 //! pipeline — accelerator-model FPS for SECOND plus the host-side
-//! end-to-end frame through the real numerics.
+//! end-to-end frame through the pipeline facade with real numerics.
 
 use voxel_cim::bench_util::bench;
-use voxel_cim::coordinator::scheduler::{NetworkRunner, RunnerConfig};
 use voxel_cim::mapsearch::SearcherKind;
 use voxel_cim::model::second;
+use voxel_cim::pipeline::{EngineKind, Job, Pipeline, PipelineConfig};
 use voxel_cim::pointcloud::voxelize::Voxelizer;
 use voxel_cim::sim::accelerator::{Accelerator, SimOptions};
 use voxel_cim::sim::baselines::{BASELINES, GPU_DET_FPS};
 use voxel_cim::sparse::tensor::SparseTensor;
-use voxel_cim::spconv::layer::NativeEngine;
 use voxel_cim::util::rng::Pcg64;
 
 fn main() {
@@ -35,9 +34,18 @@ fn main() {
         BASELINES.iter().filter_map(|b| b.det_fps).fold(0.0, f64::max),
     );
 
-    // Host-side real-numerics frame at the reduced grid.
+    // Host-side real-numerics frame at the reduced grid, submitted
+    // through the owned-engine facade.
     let small = second::second_small();
-    let runner = NetworkRunner::new(small.clone(), RunnerConfig::default());
+    let cfg = PipelineConfig {
+        engine: EngineKind::Native,
+        ..Default::default()
+    };
+    let mut pipe = Pipeline::builder()
+        .config(cfg)
+        .network(small.clone())
+        .build()
+        .expect("pipeline");
     let gs = Voxelizer::synth_occupancy(small.extent, 2500.0 / small.extent.volume() as f64, 32);
     let mut t = SparseTensor::from_coords(small.extent, gs.coords(), 4);
     let mut rng = Pcg64::new(33);
@@ -45,7 +53,7 @@ fn main() {
         *v = rng.next_i8(0, 12);
     }
     let r = bench("detection/host_frame_native", 0, 3, || {
-        runner.run_frame(t.clone(), &mut NativeEngine::default()).unwrap()
+        pipe.run(Job::Frame(t.clone())).unwrap()
     });
     println!("host frame mean: {:.1} ms (CPU-emulated CIM numerics)", r.mean() * 1e3);
 }

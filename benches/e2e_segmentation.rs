@@ -3,14 +3,13 @@
 //! pipeline level.
 
 use voxel_cim::bench_util::bench;
-use voxel_cim::coordinator::scheduler::{NetworkRunner, RunnerConfig};
 use voxel_cim::mapsearch::SearcherKind;
 use voxel_cim::model::minkunet;
+use voxel_cim::pipeline::{EngineKind, Job, Pipeline, PipelineConfig};
 use voxel_cim::pointcloud::voxelize::Voxelizer;
 use voxel_cim::sim::accelerator::{Accelerator, SimOptions};
 use voxel_cim::sim::baselines::GPU_SEG_FPS;
 use voxel_cim::sparse::tensor::SparseTensor;
-use voxel_cim::spconv::layer::NativeEngine;
 use voxel_cim::util::rng::Pcg64;
 
 fn main() {
@@ -39,9 +38,18 @@ fn main() {
         GPU_SEG_FPS
     );
 
-    // Host-side real-numerics UNet at the reduced grid.
+    // Host-side real-numerics UNet at the reduced grid, submitted
+    // through the owned-engine facade.
     let small = minkunet::minkunet_small();
-    let runner = NetworkRunner::new(small.clone(), RunnerConfig::default());
+    let cfg = PipelineConfig {
+        engine: EngineKind::Native,
+        ..Default::default()
+    };
+    let mut pipe = Pipeline::builder()
+        .config(cfg)
+        .network(small.clone())
+        .build()
+        .expect("pipeline");
     let gs = Voxelizer::synth_clustered(small.extent, 900.0 / small.extent.volume() as f64, 42, 0.3, 43);
     let mut t = SparseTensor::from_coords(small.extent, gs.coords(), 4);
     let mut rng = Pcg64::new(44);
@@ -49,7 +57,7 @@ fn main() {
         *v = rng.next_i8(0, 12);
     }
     let r = bench("segmentation/host_frame_native", 0, 3, || {
-        runner.run_frame(t.clone(), &mut NativeEngine::default()).unwrap()
+        pipe.run(Job::Frame(t.clone())).unwrap()
     });
     println!("host frame mean: {:.1} ms (CPU-emulated CIM numerics)", r.mean() * 1e3);
 }

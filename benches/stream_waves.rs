@@ -1,6 +1,8 @@
 //! Bench: batched multi-frame GEMM waves on the stream path — the
 //! engine-layer feature that packs rule pairs from all in-flight frames
-//! into shared sub-matrix dispatches. Four sweeps plus a CI smoke mode:
+//! into shared sub-matrix dispatches. Four sweeps plus a CI smoke mode,
+//! all submitted through the pipeline facade (`Pipeline::run(Job::..)`,
+//! the engine owned by the pipeline):
 //!
 //! * **inflight sweep** (1/2/4/8): the latency-SLO trade-off curve — p50
 //!   and p95 latency vs throughput as more frames share each wave group,
@@ -28,15 +30,17 @@
 use voxel_cim::bench_util::bench;
 use voxel_cim::coordinator::scheduler::RunnerConfig;
 use voxel_cim::coordinator::shard::ShardConfig;
-use voxel_cim::coordinator::stream::{StreamReport, StreamServer};
+use voxel_cim::coordinator::stream::StreamReport;
 use voxel_cim::dataset::{
-    FrameSource, KittiSource, PrefetchSource, ProfileSource, ScenarioProfile,
+    ClosureSource, DatasetConfig, FrameSource, KittiSource, PrefetchSource, ProfileSource,
+    ScenarioProfile,
 };
 use voxel_cim::geom::Extent3;
 use voxel_cim::model::layer::{LayerSpec, NetworkSpec, TaskKind};
+use voxel_cim::pipeline::{Job, Pipeline, PipelineConfig};
 use voxel_cim::pointcloud::voxelize::Voxelizer;
 use voxel_cim::serving::{
-    AdmissionConfig, AdmissionPolicy, MuxPolicy, SequenceMux, WindowPolicy,
+    AdmissionConfig, AdmissionPolicy, MuxPolicy, SequenceMux, ServingConfig, WindowPolicy,
 };
 use voxel_cim::sparse::tensor::SparseTensor;
 use voxel_cim::spconv::layer::NativeEngine;
@@ -66,6 +70,38 @@ fn make_frame(id: u64) -> SparseTensor {
     t
 }
 
+/// One facade per measured serve: the owned `NativeEngine`'s dispatch
+/// counter then measures exactly that stream (`pipe.dispatches()`).
+fn mk_pipe(net: NetworkSpec, runner: RunnerConfig, serving: ServingConfig, frames: u64) -> Pipeline {
+    let cfg = PipelineConfig {
+        runner,
+        serving,
+        dataset: DatasetConfig {
+            frames,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    Pipeline::builder()
+        .config(cfg)
+        .network(net)
+        .engine(NativeEngine::default())
+        .build()
+        .expect("bench pipeline")
+}
+
+/// The old `serve_closure` producer/consumer split as a stream job: a
+/// prefetch thread over a closure source, buffer depth `depth`.
+fn prefetched_job<P>(producer: P, depth: usize) -> Job
+where
+    P: Fn(u64) -> SparseTensor + Send + 'static,
+{
+    Job::stream(PrefetchSource::spawn(
+        Box::new(ClosureSource::new(producer)),
+        depth,
+    ))
+}
+
 /// The shared p50/p95 line every sweep prints (`util::stats::LatencySummary`).
 fn latency_line(report: &StreamReport) -> String {
     report
@@ -88,26 +124,32 @@ fn main() {
     for inflight in [1usize, 2, 4, 8] {
         let cfg = RunnerConfig {
             inflight,
-            // Serial compute so the caller's NativeEngine counter sees
+            // Serial compute so the owned NativeEngine's counter sees
             // every GEMM (forked pool engines keep their own counters).
             compute_workers: 1,
             ..Default::default()
         };
-        let srv = StreamServer::new(net(), cfg, FRAMES as usize);
-        let mut engine = NativeEngine::default();
+        let mut timed = mk_pipe(net(), cfg, ServingConfig::default(), FRAMES);
         let r = bench(&format!("stream/serve8/inflight{inflight}"), 0, 3, || {
-            srv.serve_closure(FRAMES, make_frame, &mut engine).unwrap()
+            timed
+                .run(prefetched_job(make_frame, FRAMES as usize))
+                .unwrap()
         });
-        let mut engine = NativeEngine::default();
-        let report = srv.serve_closure(FRAMES, make_frame, &mut engine).unwrap();
+        let mut counted = mk_pipe(net(), cfg, ServingConfig::default(), FRAMES);
+        let report = counted
+            .run(prefetched_job(make_frame, FRAMES as usize))
+            .unwrap()
+            .into_stream()
+            .unwrap();
+        let calls = counted.dispatches();
         println!(
             "inflight {inflight}: {:.2} fps | {} | {} engine dispatches | mean {:.1} ms",
             report.throughput_fps(),
             latency_line(&report),
-            engine.calls,
+            calls,
             r.mean() * 1e3,
         );
-        reports.push((inflight, engine.calls, report));
+        reports.push((inflight, calls, report));
     }
 
     // Bit-identity across wave packing: every inflight level's per-frame
@@ -169,16 +211,19 @@ fn shard_sweep() {
             compute_workers: 1,
             ..Default::default()
         };
-        let srv = StreamServer::new(net.clone(), cfg, 4);
-        let mut engine = NativeEngine::default();
-        let report = srv.serve_closure(FRAMES, make_big, &mut engine).unwrap();
+        let mut pipe = mk_pipe(net.clone(), cfg, ServingConfig::default(), FRAMES);
+        let report = pipe
+            .run(prefetched_job(make_big, 4))
+            .unwrap()
+            .into_stream()
+            .unwrap();
         let shards: u32 = report.completions.iter().map(|c| c.result.shards).sum();
         println!(
             "shards {bx}x{by}: {:.2} fps | {} | {} pseudo-frames | {} dispatches",
             report.throughput_fps(),
             latency_line(&report),
             shards,
-            engine.calls,
+            pipe.dispatches(),
         );
         match &baseline {
             None => baseline = Some(report),
@@ -208,11 +253,14 @@ fn profile_sweep() {
             compute_workers: 1,
             ..Default::default()
         };
-        let srv = StreamServer::new(net(), cfg, 4);
+        let mut pipe = mk_pipe(net(), cfg, ServingConfig::default(), FRAMES);
         let inner = ProfileSource::new(profile, extent, 0.02, 0xA11).with_channels(8);
-        let mut source = PrefetchSource::spawn(Box::new(inner), 2);
-        let mut engine = NativeEngine::default();
-        let report = srv.serve(FRAMES, &mut source, &mut engine).unwrap();
+        let source = PrefetchSource::spawn(Box::new(inner), 2);
+        let report = pipe
+            .run(Job::stream(source))
+            .unwrap()
+            .into_stream()
+            .unwrap();
         let voxels: u64 = report.completions.iter().map(|c| c.result.out_voxels).sum();
         println!(
             "{:<10} {:.2} fps | {} | {} out voxels | {} dispatches",
@@ -220,7 +268,7 @@ fn profile_sweep() {
             report.throughput_fps(),
             latency_line(&report),
             voxels,
-            engine.calls,
+            pipe.dispatches(),
         );
         assert_eq!(report.completions.len(), FRAMES as usize, "{profile}");
     }
@@ -265,6 +313,16 @@ fn serving_cfg(extent: Extent3) -> RunnerConfig {
     }
 }
 
+/// The serving sweep's `[serving]` view: an explicit window policy plus
+/// (optionally) an admission config.
+fn serving_with(window: WindowPolicy, admission: AdmissionConfig) -> ServingConfig {
+    ServingConfig {
+        window: Some(window),
+        admission,
+        ..Default::default()
+    }
+}
+
 /// Serving sweep: cross-scene lockstep windows + SLO admission over a
 /// mixed-profile sequence mux — the p95-vs-throughput frontier against
 /// the exclusive-window baseline.
@@ -277,10 +335,17 @@ fn serving_sweep() {
     // strict engine-dispatch reduction (the acceptance criterion).
     let mut reports: Vec<(WindowPolicy, u64, StreamReport)> = Vec::new();
     for window in [WindowPolicy::Exclusive, WindowPolicy::CrossScene] {
-        let srv = StreamServer::new(net(), serving_cfg(extent), 8).with_window(window);
-        let mut mux = mixed_mux(extent);
-        let mut engine = NativeEngine::default();
-        let report = srv.serve(FRAMES, &mut mux, &mut engine).unwrap();
+        let mut pipe = mk_pipe(
+            net(),
+            serving_cfg(extent),
+            serving_with(window, AdmissionConfig::default()),
+            FRAMES,
+        );
+        let report = pipe
+            .run(Job::stream(mixed_mux(extent)))
+            .unwrap()
+            .into_stream()
+            .unwrap();
         assert_eq!(report.completions.len(), FRAMES as usize, "{window}");
         let att = report
             .attributed_summary()
@@ -293,9 +358,9 @@ fn serving_sweep() {
             latency_line(&report),
             att,
             report.windows,
-            engine.calls,
+            pipe.dispatches(),
         );
-        reports.push((window, engine.calls, report));
+        reports.push((window, pipe.dispatches(), report));
     }
     let (_, excl_calls, excl) = &reports[0];
     let (_, cross_calls, cross) = &reports[1];
@@ -339,16 +404,24 @@ fn serving_sweep() {
         AdmissionPolicy::DeferSharding,
         AdmissionPolicy::RejectOverDepth,
     ] {
-        let srv = StreamServer::new(net(), serving_cfg(extent), 8)
-            .with_window(WindowPolicy::CrossScene)
-            .with_admission(AdmissionConfig {
-                policy,
-                slo_ms,
-                ..Default::default()
-            });
-        let mut mux = mixed_mux(extent);
-        let mut engine = NativeEngine::default();
-        let report = srv.serve(ADM_FRAMES, &mut mux, &mut engine).unwrap();
+        let mut pipe = mk_pipe(
+            net(),
+            serving_cfg(extent),
+            serving_with(
+                WindowPolicy::CrossScene,
+                AdmissionConfig {
+                    policy,
+                    slo_ms,
+                    ..Default::default()
+                },
+            ),
+            ADM_FRAMES,
+        );
+        let report = pipe
+            .run(Job::stream(mixed_mux(extent)))
+            .unwrap()
+            .into_stream()
+            .unwrap();
         let adm = report.admission;
         let att = report
             .attributed_summary()
@@ -384,7 +457,7 @@ fn smoke() {
     let fixture = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/kitti");
     let extent = Extent3::new(16, 16, 8);
     let vx = Voxelizer::new((16.0, 16.0, 8.0), extent, 8);
-    let mut source = KittiSource::open(fixture, vx).expect("fixture dir");
+    let source = KittiSource::open(fixture, vx).expect("fixture dir");
     let net = NetworkSpec {
         name: "smoke",
         task: TaskKind::Segmentation,
@@ -395,17 +468,20 @@ fn smoke() {
             LayerSpec::Subm3 { c_in: 8, c_out: 8 },
         ],
     };
-    let srv = StreamServer::new(
+    let mut pipe = mk_pipe(
         net.clone(),
         RunnerConfig {
             inflight: 2,
             compute_workers: 1,
             ..Default::default()
         },
-        2,
+        ServingConfig::default(),
+        8,
     );
-    let report = srv
-        .serve(8, &mut source, &mut NativeEngine::default())
+    let report = pipe
+        .run(Job::stream(source))
+        .unwrap()
+        .into_stream()
         .unwrap();
     assert_eq!(report.completions.len(), 2, "fixture holds two frames");
     for c in &report.completions {
@@ -452,18 +528,26 @@ fn serving_smoke(net: NetworkSpec) {
     };
     let mut results = Vec::new();
     for window in [WindowPolicy::Exclusive, WindowPolicy::CrossScene] {
-        let srv = StreamServer::new(net.clone(), cfg, 4).with_window(window);
-        let mut engine = NativeEngine::default();
-        let report = srv.serve(4, &mut mux(), &mut engine).unwrap();
+        let mut pipe = mk_pipe(
+            net.clone(),
+            cfg,
+            serving_with(window, AdmissionConfig::default()),
+            4,
+        );
+        let report = pipe
+            .run(Job::stream(mux()))
+            .unwrap()
+            .into_stream()
+            .unwrap();
         assert_eq!(report.completions.len(), 4, "{window}");
         println!(
             "window {:<11} {} windows | {} dispatches | {}",
             window.key(),
             report.windows,
-            engine.calls,
+            pipe.dispatches(),
             latency_line(&report),
         );
-        results.push((engine.calls, report));
+        results.push((pipe.dispatches(), report));
     }
     let (excl_calls, excl) = &results[0];
     let (cross_calls, cross) = &results[1];

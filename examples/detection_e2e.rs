@@ -1,5 +1,5 @@
 //! End-to-end detection driver (EXPERIMENTS.md E9): SECOND on a synthetic
-//! KITTI-like frame, real numerics through the PJRT artifacts, full
+//! KITTI-like frame, real numerics through the pipeline facade, full
 //! request path — scene → voxelize → VFE → 7 map searches → 11 Spconv3D
 //! layers → BEV → 12-layer RPN → detection head — with per-stage timing
 //! and the accelerator-model projection next to the host measurement.
@@ -10,16 +10,13 @@
 
 use std::time::Instant;
 
-use voxel_cim::coordinator::scheduler::{NetworkRunner, RunnerConfig};
-use voxel_cim::mapsearch::SearcherKind;
 use voxel_cim::model::second;
+use voxel_cim::pipeline::{Job, Overrides, Pipeline, PipelineConfig};
 use voxel_cim::pointcloud::scene::SceneConfig;
 use voxel_cim::pointcloud::vfe::{Vfe, VfeKind};
 use voxel_cim::pointcloud::voxelize::Voxelizer;
-use voxel_cim::runtime::{Runtime, RuntimeConfig};
 use voxel_cim::sim::accelerator::{Accelerator, SimOptions};
 use voxel_cim::sparse::tensor::SparseTensor;
-use voxel_cim::spconv::layer::NativeEngine;
 use voxel_cim::util::cli::Args;
 
 fn main() -> voxel_cim::Result<()> {
@@ -35,33 +32,21 @@ fn main() -> voxel_cim::Result<()> {
         .switch("native", "skip PJRT, use the native engine")
         .parse();
 
-    let searcher: SearcherKind = args.get("searcher").parse().expect("--searcher");
+    // The facade resolves the searcher and the engine (PJRT artifacts
+    // with native fallback, or native when --native pins it).
+    let mut cfg = PipelineConfig::default();
+    cfg.apply(&Overrides {
+        searcher: Some(args.get("searcher").to_string()),
+        native: args.get_bool("native"),
+        ..Default::default()
+    })?;
+    let searcher = cfg.runner.searcher;
     let net = second::second_small();
     println!("=== {} | extent {:?} | searcher {searcher} ===", net.name, net.extent);
-    let runner = NetworkRunner::new(
-        net.clone(),
-        RunnerConfig {
-            searcher,
-            ..Default::default()
-        },
-    );
+    let mut pipe = Pipeline::builder().config(cfg).network(net.clone()).build()?;
+    println!("engine: {}", pipe.engine_desc());
     let vx = Voxelizer::new((70.4, 80.0, 4.0), net.extent, 32);
     let vfe = Vfe::new(VfeKind::Simple);
-
-    let mut pjrt = if args.get_bool("native") {
-        None
-    } else {
-        match Runtime::load(&RuntimeConfig::discover()) {
-            Ok(rt) => {
-                println!("engine: PJRT CPU, GEMM batches {:?}", rt.gemm_batches());
-                Some(rt)
-            }
-            Err(e) => {
-                println!("engine: native fallback ({e:#})");
-                None
-            }
-        }
-    };
 
     let frames = args.get_usize("frames");
     let mut host_total = 0.0;
@@ -85,10 +70,7 @@ fn main() -> voxel_cim::Result<()> {
         );
         let n_vox = input.len();
 
-        let res = match pjrt.as_mut() {
-            Some(rt) => runner.run_frame(input, rt)?,
-            None => runner.run_frame(input, &mut NativeEngine::default())?,
-        };
+        let res = pipe.run(Job::Frame(input))?.into_frame()?;
         host_total += res.total_seconds + pre;
         let (h, w, c) = res.head_shape.expect("detection head");
         println!(
@@ -101,8 +83,9 @@ fn main() -> voxel_cim::Result<()> {
         );
     }
     println!(
-        "\nhost throughput: {:.2} fps over {frames} frames (CPU-interpreted CIM numerics)",
-        frames as f64 / host_total
+        "\nhost throughput: {:.2} fps over {frames} frames ({} engine dispatches)",
+        frames as f64 / host_total,
+        pipe.dispatches(),
     );
 
     // Accelerator-model projection for the same workload at full scale.

@@ -1,23 +1,24 @@
-//! Quickstart: the whole stack in ~60 lines.
+//! Quickstart: the whole stack in ~60 lines, through the pipeline facade.
 //!
-//! Generates a synthetic LiDAR frame, voxelizes it, builds the IN-OUT map
-//! with the searcher named in `examples/configs/default.toml` (DOMS by
-//! default — edit `searcher = "..."` to swap the dataflow), and runs one
-//! subm3 sparse convolution through the compiled PJRT artifact (falling
-//! back to the native engine when `make artifacts` hasn't been run).
+//! Generates a synthetic LiDAR frame, voxelizes it, then builds a
+//! `Pipeline` from `examples/configs/default.toml` — one owned-engine
+//! front door that resolves the map-search dataflow (`[runner]
+//! searcher`, DOMS by default — edit it to swap), the GEMM engine
+//! (compiled PJRT artifacts when `make artifacts` has run, the bit-exact
+//! native fallback otherwise), and the whole runner/serving stack — and
+//! submits the frame as one `Job`.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
 use voxel_cim::geom::Extent3;
-use voxel_cim::mapsearch::{MapSearch, SearcherKind};
+use voxel_cim::model::layer::{LayerSpec, NetworkSpec, TaskKind};
+use voxel_cim::pipeline::{Job, Pipeline, PipelineConfig};
 use voxel_cim::pointcloud::scene::SceneConfig;
 use voxel_cim::pointcloud::vfe::{Vfe, VfeKind};
 use voxel_cim::pointcloud::voxelize::Voxelizer;
-use voxel_cim::runtime::{Runtime, RuntimeConfig};
 use voxel_cim::sparse::tensor::SparseTensor;
-use voxel_cim::spconv::layer::{GemmEngine, LayerWeights, NativeEngine, SpconvLayer};
 
 fn main() -> voxel_cim::Result<()> {
     // 1. A synthetic urban LiDAR frame (KITTI substitute — see DESIGN.md).
@@ -45,54 +46,48 @@ fn main() -> voxel_cim::Result<()> {
         4,
     );
 
-    // 3. Map search through the engine layer's pluggable searcher — any
-    // kind from the run config builds a bit-identical rulebook. Only a
-    // *missing* config falls back to defaults; a config that fails to
-    // parse (or names an unknown searcher) is a real error.
+    // 3. The pipeline facade: one strict config load (only a *missing*
+    // config falls back to defaults; a config that fails to parse, or
+    // names an unknown searcher, is a real error), one builder, one
+    // owned engine. A compact backbone sized to the grid above.
     let cfg_path = "examples/configs/default.toml";
     let cfg = if std::path::Path::new(cfg_path).exists() {
-        voxel_cim::util::config::Config::load(cfg_path)?
+        PipelineConfig::load(cfg_path)?
     } else {
-        voxel_cim::util::config::Config::default()
+        PipelineConfig::default()
     };
-    let kind = cfg.parsed_or("runner.searcher", SearcherKind::Doms)?;
-    let searcher = kind.build();
-    let (rulebook, stats) =
-        searcher.search(&input, voxel_cim::sparse::rulebook::ConvKind::subm3());
-    println!(
-        "{}: {} IN-OUT pairs | off-chip access {:.2}x N | {} sorter passes | table {} B",
-        searcher.name(),
-        rulebook.len(),
-        stats.normalized(input.len()),
-        stats.sorter_passes,
-        stats.table_bytes
-    );
+    println!("searcher: {} (from {cfg_path})", cfg.runner.searcher);
+    let net = NetworkSpec {
+        name: "quickstart",
+        task: TaskKind::Segmentation,
+        extent,
+        vfe_channels: 4,
+        layers: vec![
+            LayerSpec::Subm3 { c_in: 4, c_out: 16 },
+            LayerSpec::Subm3 { c_in: 16, c_out: 16 },
+        ],
+    };
+    let mut pipe = Pipeline::builder().config(cfg).network(net).build()?;
+    println!("engine: {}", pipe.engine_desc());
 
-    // 4. One subm3 layer (4 -> 16 channels) through the CIM GEMM.
-    let layer = SpconvLayer::new(LayerWeights::random(27, 4, 16, 7), 256);
-    let out = match Runtime::load(&RuntimeConfig::discover()) {
-        Ok(mut rt) => {
-            println!("engine: PJRT CPU (AOT Pallas artifacts)");
-            let out = layer.execute(&input, &rulebook, &mut rt)?;
-            println!("PJRT GEMM dispatches: {}", rt.dispatches());
-            out
-        }
-        Err(e) => {
-            println!("engine: native fallback ({e:#})");
-            layer.execute(&input, &rulebook, &mut NativeEngine::default())?
-        }
-    };
+    // 4. Submit the frame as one job; the facade routes it through the
+    // same lockstep executor every entry point shares.
+    let res = pipe.run(Job::Frame(input))?.into_frame()?;
+    for r in &res.records {
+        println!(
+            "  {:<24} {:>9} IN-OUT pairs -> {:>7} voxels  (ms {:.1} ms, compute {:.1} ms)",
+            r.name,
+            r.pairs,
+            r.out_voxels,
+            r.ms_seconds * 1e3,
+            r.compute_seconds * 1e3
+        );
+    }
     println!(
-        "spconv3d: {} -> {} voxels, {} channels, {} GEMM tiles",
-        input.len(),
-        out.tensor.len(),
-        out.tensor.channels,
-        out.gemm_calls
-    );
-    let active = out.tensor.features.iter().filter(|&&v| v != 0).count();
-    println!(
-        "output features: {:.1}% non-zero after ReLU",
-        100.0 * active as f64 / out.tensor.features.len() as f64
+        "done: {} output voxels | {} GEMM dispatches | checksum {:#018x}",
+        res.out_voxels,
+        pipe.dispatches(),
+        res.checksum
     );
     Ok(())
 }

@@ -1,23 +1,21 @@
 //! End-to-end segmentation driver (EXPERIMENTS.md E9): MinkUNet on a
 //! synthetic SemanticKITTI-like frame — the Spconv3D-dominated workload
-//! the paper runs the W2B study on. Streams frames through the full UNet
-//! (encoder gconv2 downs, decoder tconv2 ups) with real numerics, then
-//! prints the accelerator-model projection with and without W2B.
+//! the paper runs the W2B study on. Runs the frame through the full UNet
+//! (encoder gconv2 downs, decoder tconv2 ups) via the pipeline facade
+//! with real numerics, then prints the accelerator-model projection with
+//! and without W2B.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example segmentation_e2e
 //! ```
 
-use voxel_cim::coordinator::scheduler::{NetworkRunner, RunnerConfig};
-use voxel_cim::mapsearch::SearcherKind;
 use voxel_cim::model::minkunet;
+use voxel_cim::pipeline::{Job, Overrides, Pipeline, PipelineConfig};
 use voxel_cim::pointcloud::scene::{SceneConfig, SceneKind};
 use voxel_cim::pointcloud::vfe::{Vfe, VfeKind};
 use voxel_cim::pointcloud::voxelize::Voxelizer;
-use voxel_cim::runtime::{Runtime, RuntimeConfig};
 use voxel_cim::sim::accelerator::{Accelerator, SimOptions};
 use voxel_cim::sparse::tensor::SparseTensor;
-use voxel_cim::spconv::layer::NativeEngine;
 use voxel_cim::util::cli::Args;
 
 fn main() -> voxel_cim::Result<()> {
@@ -32,7 +30,13 @@ fn main() -> voxel_cim::Result<()> {
         .switch("native", "skip PJRT, use the native engine")
         .parse();
 
-    let searcher: SearcherKind = args.get("searcher").parse().expect("--searcher");
+    let mut cfg = PipelineConfig::default();
+    cfg.apply(&Overrides {
+        searcher: Some(args.get("searcher").to_string()),
+        native: args.get_bool("native"),
+        ..Default::default()
+    })?;
+    let searcher = cfg.runner.searcher;
     let net = minkunet::minkunet_small();
     println!("=== {} | extent {:?} | searcher {searcher} ===", net.name, net.extent);
 
@@ -58,27 +62,9 @@ fn main() -> voxel_cim::Result<()> {
         4,
     );
 
-    let runner = NetworkRunner::new(
-        net.clone(),
-        RunnerConfig {
-            searcher,
-            ..Default::default()
-        },
-    );
-    let res = if args.get_bool("native") {
-        runner.run_frame(input, &mut NativeEngine::default())?
-    } else {
-        match Runtime::load(&RuntimeConfig::discover()) {
-            Ok(mut rt) => {
-                println!("engine: PJRT CPU, GEMM batches {:?}", rt.gemm_batches());
-                runner.run_frame(input, &mut rt)?
-            }
-            Err(e) => {
-                println!("engine: native fallback ({e:#})");
-                runner.run_frame(input, &mut NativeEngine::default())?
-            }
-        }
-    };
+    let mut pipe = Pipeline::builder().config(cfg).network(net.clone()).build()?;
+    println!("engine: {}", pipe.engine_desc());
+    let res = pipe.run(Job::Frame(input))?.into_frame()?;
 
     println!("\nper-layer (UNet):");
     for r in &res.records {
@@ -96,9 +82,10 @@ fn main() -> voxel_cim::Result<()> {
         );
     }
     println!(
-        "\nsegmentation output: {} voxels labeled | host total {:.1} ms",
+        "\nsegmentation output: {} voxels labeled | host total {:.1} ms | {} dispatches",
         res.out_voxels,
-        res.total_seconds * 1e3
+        res.total_seconds * 1e3,
+        pipe.dispatches(),
     );
 
     // Accelerator projection at full scale, W2B on/off (Fig. 10's story).

@@ -247,7 +247,16 @@ impl NetworkRunner {
         self.searcher.as_ref()
     }
 
-    /// Run one frame through the network.
+    /// Run one frame through the network (never block-sharded).
+    ///
+    /// Legacy shim: submit through the facade instead —
+    /// `Pipeline::run(Job::Frame(..))` routes through [`Self::run_scenes`]
+    /// and is checksum-bit-identical (`tests/pipeline_api.rs`).
+    #[deprecated(
+        since = "0.2.0",
+        note = "submit through `pipeline::Pipeline::run(Job::Frame(..))`; \
+                the facade owns the engine and routes through `run_scenes`"
+    )]
     pub fn run_frame<E: GemmEngine>(
         &self,
         input: SparseTensor,
@@ -536,10 +545,16 @@ impl NetworkRunner {
     }
 
     /// Run one frame with shard-level scheduling: the single-scene
-    /// window of [`Self::run_scenes`]. Kept as the named entry point the
-    /// exclusive-window stream path and the CLI use; bit-identical to
-    /// [`Self::run_frame`] (checksum-verified in
-    /// `tests/shard_scheduler.rs`).
+    /// window of [`Self::run_scenes`].
+    ///
+    /// Legacy shim: submit through the facade instead —
+    /// `Pipeline::run(Job::Frame(..))` takes exactly this path and is
+    /// checksum-bit-identical (`tests/pipeline_api.rs`).
+    #[deprecated(
+        since = "0.2.0",
+        note = "submit through `pipeline::Pipeline::run(Job::Frame(..))`; \
+                the facade owns the engine and routes through `run_scenes`"
+    )]
     pub fn run_frame_sharded<E: GemmEngine>(
         &self,
         input: SparseTensor,
@@ -816,6 +831,16 @@ mod tests {
         t
     }
 
+    /// One frame through the lockstep loop (the non-deprecated spelling
+    /// of the old `run_frame`).
+    fn run_one(runner: &NetworkRunner, t: SparseTensor) -> FrameResult {
+        runner
+            .run_frames(vec![t], &mut NativeEngine::default())
+            .unwrap()
+            .pop()
+            .expect("one frame in, one result out")
+    }
+
     #[test]
     fn to_bev_roundtrip_values() {
         let e = Extent3::new(4, 3, 2);
@@ -842,7 +867,7 @@ mod tests {
             ..Default::default()
         });
         let input = frame(Extent3::new(176, 200, 10), 1500, 4, 71);
-        let res = runner.run_frame(input, &mut NativeEngine::default()).unwrap();
+        let res = run_one(&runner, input);
         // Detection path ends in a dense head.
         let (h, w, c) = res.head_shape.expect("detection head");
         assert_eq!(c, 128);
@@ -868,7 +893,7 @@ mod tests {
             ..Default::default()
         });
         let input = frame(Extent3::new(128, 128, 16), 1200, 4, 72);
-        let res = runner.run_frame(input, &mut NativeEngine::default()).unwrap();
+        let res = run_one(&runner, input);
         assert!(res.head_shape.is_none());
         assert!(res.out_voxels > 0);
         // UNet output voxel count >= input (upsampled back + dilation).
@@ -892,9 +917,7 @@ mod tests {
             .run_frames(inputs.clone(), &mut NativeEngine::default())
             .unwrap();
         for (input, got) in inputs.into_iter().zip(&batched) {
-            let want = runner
-                .run_frame(input, &mut NativeEngine::default())
-                .unwrap();
+            let want = run_one(&runner, input);
             assert_eq!(want.checksum, got.checksum, "frame outputs diverged");
             assert_eq!(want.head_shape, got.head_shape);
             assert_eq!(want.total_pairs(), got.total_pairs());
@@ -919,9 +942,7 @@ mod tests {
                     ..Default::default()
                 },
             );
-            let res = runner
-                .run_frame(input.clone(), &mut NativeEngine::default())
-                .unwrap();
+            let res = run_one(&runner, input.clone());
             checksums.push((kind, res.checksum));
         }
         let want = checksums[0].1;

@@ -153,6 +153,13 @@ impl StreamServer {
         self
     }
 
+    /// The engine-layer runner this server drives. The pipeline facade
+    /// routes `Job::Frame` / `Job::Window` submissions through it
+    /// (`run_scenes`), so frame and stream jobs share one executor.
+    pub fn runner(&self) -> &NetworkRunner {
+        &self.runner
+    }
+
     /// Attach an SLO-aware admission config (default: no policy).
     pub fn with_admission(mut self, admission: AdmissionConfig) -> Self {
         self.admission = admission;
@@ -331,7 +338,17 @@ impl StreamServer {
     /// prefetch thread feeding a bounded buffer of `queue_depth` frames
     /// (backpressure: the producer blocks when the accelerator falls
     /// behind), exactly the producer/consumer split `serve` used to
-    /// hard-code. Kept as the convenience path for synthetic streams.
+    /// hard-code.
+    ///
+    /// Legacy shim: submit through the facade instead —
+    /// `Pipeline::run(Job::stream(PrefetchSource::spawn(..)))` is the
+    /// same producer/consumer split with the engine owned by the
+    /// pipeline (`tests/pipeline_api.rs` witnesses bit-identity).
+    #[deprecated(
+        since = "0.2.0",
+        note = "submit through `pipeline::Pipeline::run(Job::Stream(..))` with a \
+                `PrefetchSource`-wrapped `ClosureSource`"
+    )]
     pub fn serve_closure<E, P>(
         &self,
         n_frames: u64,
@@ -380,12 +397,22 @@ mod tests {
         t
     }
 
+    /// The old `serve_closure` producer/consumer split, spelled with the
+    /// non-deprecated source API: a prefetch thread over a closure
+    /// source, bounded by the server's `queue_depth`.
+    fn serve_prefetched<P>(srv: &StreamServer, n: u64, producer: P) -> StreamReport
+    where
+        P: Fn(u64) -> SparseTensor + Send + 'static,
+    {
+        let mut source =
+            PrefetchSource::spawn(Box::new(ClosureSource::new(producer)), srv.queue_depth);
+        srv.serve(n, &mut source, &mut NativeEngine::default()).unwrap()
+    }
+
     #[test]
     fn serves_all_frames_in_order() {
         let srv = StreamServer::new(tiny_net(), RunnerConfig::default(), 2);
-        let report = srv
-            .serve_closure(8, make_frame, &mut NativeEngine::default())
-            .unwrap();
+        let report = serve_prefetched(&srv, 8, make_frame);
         assert_eq!(report.completions.len(), 8);
         let ids: Vec<u64> = report.completions.iter().map(|c| c.id).collect();
         assert_eq!(ids, (0..8).collect::<Vec<_>>());
@@ -408,9 +435,7 @@ mod tests {
             },
             4,
         );
-        let prefetched = srv
-            .serve_closure(6, make_frame, &mut NativeEngine::default())
-            .unwrap();
+        let prefetched = serve_prefetched(&srv, 6, make_frame);
         let mut direct = ClosureSource::new(make_frame);
         let direct = srv
             .serve(6, &mut direct, &mut NativeEngine::default())
@@ -451,17 +476,15 @@ mod tests {
     #[test]
     fn queue_depth_one_still_completes() {
         let srv = StreamServer::new(tiny_net(), RunnerConfig::default(), 1);
-        let report = srv
-            .serve_closure(4, make_frame, &mut NativeEngine::default())
-            .unwrap();
+        let report = serve_prefetched(&srv, 4, make_frame);
         assert_eq!(report.completions.len(), 4);
     }
 
     #[test]
     fn deterministic_results_across_streams() {
         let srv = StreamServer::new(tiny_net(), RunnerConfig::default(), 3);
-        let a = srv.serve_closure(3, make_frame, &mut NativeEngine::default()).unwrap();
-        let b = srv.serve_closure(3, make_frame, &mut NativeEngine::default()).unwrap();
+        let a = serve_prefetched(&srv, 3, make_frame);
+        let b = serve_prefetched(&srv, 3, make_frame);
         for (x, y) in a.completions.iter().zip(&b.completions) {
             assert_eq!(x.result.total_pairs(), y.result.total_pairs());
             assert_eq!(x.result.out_voxels, y.result.out_voxels);
@@ -480,12 +503,8 @@ mod tests {
             },
             8,
         );
-        let a = unbatched
-            .serve_closure(8, make_frame, &mut NativeEngine::default())
-            .unwrap();
-        let b = batched
-            .serve_closure(8, make_frame, &mut NativeEngine::default())
-            .unwrap();
+        let a = serve_prefetched(&unbatched, 8, make_frame);
+        let b = serve_prefetched(&batched, 8, make_frame);
         assert_eq!(a.completions.len(), b.completions.len());
         for (x, y) in a.completions.iter().zip(&b.completions) {
             assert_eq!(x.id, y.id);
@@ -506,12 +525,8 @@ mod tests {
             },
             8,
         );
-        let a = plain
-            .serve_closure(6, make_frame, &mut NativeEngine::default())
-            .unwrap();
-        let b = sharded
-            .serve_closure(6, make_frame, &mut NativeEngine::default())
-            .unwrap();
+        let a = serve_prefetched(&plain, 6, make_frame);
+        let b = serve_prefetched(&sharded, 6, make_frame);
         assert_eq!(a.completions.len(), b.completions.len());
         for (x, y) in a.completions.iter().zip(&b.completions) {
             assert_eq!(x.id, y.id);
@@ -583,9 +598,7 @@ mod tests {
             8,
         )
         .with_window(WindowPolicy::CrossScene);
-        let report = srv
-            .serve_closure(8, make_frame, &mut NativeEngine::default())
-            .unwrap();
+        let report = serve_prefetched(&srv, 8, make_frame);
         for c in &report.completions {
             assert!(c.attributed >= 0.0);
             assert!(
@@ -606,9 +619,7 @@ mod tests {
     #[test]
     fn modeled_stream_pipeline_is_bounded_by_serial_sum() {
         let srv = StreamServer::new(tiny_net(), RunnerConfig::default(), 4);
-        let report = srv
-            .serve_closure(4, make_frame, &mut NativeEngine::default())
-            .unwrap();
+        let report = serve_prefetched(&srv, 4, make_frame);
         let pipe = HybridPipeline::default();
         let modeled = report.modeled_pipeline_seconds(&pipe);
         let serial: f64 = report

@@ -229,6 +229,15 @@ impl DatasetConfig {
         })
     }
 
+    /// Check that `source` will resolve, without constructing anything
+    /// (no KITTI directory scan, no prefetch thread). An empty source is
+    /// valid ("nothing configured"). The pipeline facade runs this at
+    /// build time so a typo'd KITTI path or unknown profile surfaces as
+    /// a typed config error before any stream starts.
+    pub fn validate(&self) -> crate::Result<()> {
+        validate_source(&self.source)
+    }
+
     /// Resolve `source` into a boxed frame source: an existing directory
     /// opens as a KITTI sequence, anything else parses as a scenario
     /// profile. Wrapped in a [`PrefetchSource`] when `prefetch > 0`.
@@ -237,6 +246,7 @@ impl DatasetConfig {
         if self.source.is_empty() {
             return Ok(None);
         }
+        validate_source(&self.source)?;
         let extent = self.extent.unwrap_or(default_extent);
         let path = std::path::Path::new(&self.source);
         let inner: Box<dyn FrameSource> = if path.is_dir() {
@@ -252,23 +262,12 @@ impl DatasetConfig {
                     self.offset.2,
                 ),
             )
-        } else if looks_like_path(&self.source) {
-            // A path-shaped source that is not a directory is a config
-            // error in its own words — "unknown profile" would only
-            // obscure the actual typo'd KITTI path.
-            anyhow::bail!(
-                "dataset source {:?} does not exist or is not a directory \
-                 (expected a KITTI velodyne directory, or a scenario profile: \
-                 urban | highway | indoor | far-field)",
-                self.source
-            );
         } else {
+            // validate_source admitted the profile name just above; keep
+            // the error path anyway (a directory racing away between the
+            // two checks lands here, not in a panic).
             let profile: ScenarioProfile = self.source.parse().map_err(|e| {
-                anyhow::anyhow!(
-                    "dataset source {:?} is neither an existing directory nor a \
-                     scenario profile (KITTI dir missing or misspelled?): {e}",
-                    self.source
-                )
+                anyhow::anyhow!("dataset source {:?}: {e}", self.source)
             })?;
             Box::new(ProfileSource::new(profile, extent, self.sparsity, self.seed))
         };
@@ -278,6 +277,33 @@ impl DatasetConfig {
             inner
         }))
     }
+}
+
+/// Does a dataset source spec resolve — an existing KITTI directory, or
+/// a known scenario-profile name? Empty is fine (nothing configured).
+/// The error text names the actual problem: a path-shaped source that is
+/// not a directory is reported as a missing/typo'd KITTI path, never as
+/// an "unknown profile".
+pub fn validate_source(source: &str) -> crate::Result<()> {
+    if source.is_empty() {
+        return Ok(());
+    }
+    if std::path::Path::new(source).is_dir() {
+        return Ok(());
+    }
+    if looks_like_path(source) {
+        anyhow::bail!(
+            "dataset source {source:?} does not exist or is not a directory \
+             (expected a KITTI velodyne directory, or a scenario profile: \
+             urban | highway | indoor | far-field)"
+        );
+    }
+    source.parse::<ScenarioProfile>().map(|_| ()).map_err(|e| {
+        anyhow::anyhow!(
+            "dataset source {source:?} is neither an existing directory nor a \
+             scenario profile (KITTI dir missing or misspelled?): {e}"
+        )
+    })
 }
 
 /// Does a dataset source spec look like a filesystem path rather than a

@@ -25,6 +25,12 @@
 //! See `DESIGN.md` (repo root) for the full module map and experiment
 //! index, and `examples/configs/default.toml` for the engine-layer run
 //! config (`[runner] searcher = ...`, wave batching, worker counts).
+//!
+//! **Start at [`pipeline`]**: `Pipeline::builder().config(cfg).build()?`
+//! yields the one owned-engine submission surface
+//! (`pipeline.run(Job::Frame | Job::Window | Job::Stream)`) that
+//! replaces hand-assembling `NetworkRunner` / `StreamServer` / engine
+//! per call site.
 
 pub mod cim;
 pub mod coordinator;
@@ -33,6 +39,7 @@ pub mod experiments;
 pub mod geom;
 pub mod mapsearch;
 pub mod model;
+pub mod pipeline;
 pub mod pointcloud;
 pub mod runtime;
 pub mod serving;
@@ -63,6 +70,10 @@ pub mod prelude {
         SearcherKind, WeightMajor,
     };
     pub use crate::model::{minkunet, second, LayerSpec, NetworkSpec};
+    pub use crate::pipeline::{
+        EngineKind, Job, NetworkKind, Overrides, Pipeline, PipelineConfig, PipelineError,
+        RunOutcome,
+    };
     pub use crate::pointcloud::{SceneConfig, SceneKind, Voxelizer};
     pub use crate::runtime::{Runtime, RuntimeConfig};
     pub use crate::serving::{

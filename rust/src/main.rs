@@ -9,20 +9,26 @@
 //!                  multi-sequence muxing + SLO-aware admission
 //! voxel-cim info                               config + artifact status
 //! ```
+//!
+//! Every command goes through the pipeline facade: one
+//! [`PipelineConfig`] load (all config sections in a single strict
+//! pass), one [`Overrides`] application (the CLI flags), one
+//! [`Pipeline::builder`] — then a single [`Pipeline::run`] submission
+//! (`Job::Frame` for `run-det` / `run-seg`, `Job::Stream` for `stream`).
+//! The engine (PJRT artifacts or the native fallback) is owned by the
+//! pipeline; no command threads `&mut E` by hand anymore.
 
-use voxel_cim::coordinator::scheduler::{NetworkRunner, RunnerConfig};
-use voxel_cim::coordinator::stream::StreamServer;
-use voxel_cim::dataset::{DatasetConfig, FrameSource};
+use voxel_cim::dataset::FrameSource;
 use voxel_cim::experiments as exp;
 use voxel_cim::model::{minkunet, second};
+use voxel_cim::pipeline::{Job, Overrides, Pipeline, PipelineConfig};
 use voxel_cim::pointcloud::scene::SceneConfig;
 use voxel_cim::pointcloud::vfe::{Vfe, VfeKind};
 use voxel_cim::pointcloud::voxelize::Voxelizer;
 use voxel_cim::runtime::{Runtime, RuntimeConfig};
-use voxel_cim::serving::{SequenceMux, ServingConfig};
 use voxel_cim::sparse::tensor::SparseTensor;
-use voxel_cim::spconv::layer::{GemmEngine, NativeEngine};
 use voxel_cim::util::cli::Args;
+use voxel_cim::util::config::Config;
 
 fn main() -> voxel_cim::Result<()> {
     let args = Args::new(
@@ -136,12 +142,22 @@ fn run_experiments(which: &str, seed: u64) -> voxel_cim::Result<()> {
     Ok(())
 }
 
-fn run_net(detection: bool, args: &Args) -> voxel_cim::Result<()> {
-    // Optional TOML config overrides the CLI defaults.
-    let cfg = match args.get("config") {
-        "" => voxel_cim::util::config::Config::default(),
-        path => voxel_cim::util::config::Config::load(path)?,
+/// The one config path of every command: load the (optional) TOML run
+/// config, parse every section strictly, apply the CLI overrides. The
+/// raw [`Config`] is returned too for the synthetic-scene keys
+/// (`[scene]`) that only `run-det` / `run-seg` read.
+fn load_config(args: &Args) -> voxel_cim::Result<(PipelineConfig, Config)> {
+    let raw = match args.get("config") {
+        "" => Config::default(),
+        path => Config::load(path)?,
     };
+    let mut cfg = PipelineConfig::from_config(&raw)?;
+    cfg.apply(&Overrides::from_args(args))?;
+    Ok((cfg, raw))
+}
+
+fn run_net(detection: bool, args: &Args) -> voxel_cim::Result<()> {
+    let (cfg, raw) = load_config(args)?;
     let full = args.get("extent") == "full";
     let net = match (detection, full) {
         (true, true) => second::second(),
@@ -154,7 +170,7 @@ fn run_net(detection: bool, args: &Args) -> voxel_cim::Result<()> {
 
     // Frame input: the `[dataset]` / `--dataset` ingestion subsystem when
     // configured, else the classic synthetic scene -> voxelize -> VFE path.
-    let input = match dataset_config(&cfg, args)?.build(e)? {
+    let input = match cfg.dataset.build(e)? {
         Some(mut source) => {
             let frame = source
                 .next_frame()
@@ -176,10 +192,10 @@ fn run_net(detection: bool, args: &Args) -> voxel_cim::Result<()> {
         }
         None => {
             let mut scene = SceneConfig::default()
-                .with_points(cfg.int_or("scene.points", args.get_usize("points") as i64) as usize)
-                .with_seed(cfg.int_or("seed", args.get_u64("seed") as i64) as u64);
+                .with_points(raw.int_or("scene.points", args.get_usize("points") as i64) as usize)
+                .with_seed(raw.int_or("seed", args.get_u64("seed") as i64) as u64);
             if let Some(kind) =
-                voxel_cim::pointcloud::scene::SceneKind::parse(cfg.str_or("scene.kind", "urban"))
+                voxel_cim::pointcloud::scene::SceneKind::parse(raw.str_or("scene.kind", "urban"))
             {
                 scene.kind = kind;
             }
@@ -207,29 +223,21 @@ fn run_net(detection: bool, args: &Args) -> voxel_cim::Result<()> {
         }
     };
 
-    let mut runner_cfg = RunnerConfig::from_config(&cfg)?;
-    apply_engine_overrides(&mut runner_cfg, args)?;
+    let rc = cfg.runner;
     println!(
         "engine layer: searcher={} batch={} workers={} compute_workers={} w2b={} shards={}x{}",
-        runner_cfg.searcher,
-        runner_cfg.batch,
-        runner_cfg.workers,
-        runner_cfg.compute_workers,
-        runner_cfg.w2b_factor,
-        runner_cfg.shard.blocks_x,
-        runner_cfg.shard.blocks_y,
+        rc.searcher,
+        rc.batch,
+        rc.workers,
+        rc.compute_workers,
+        rc.w2b_factor,
+        rc.shard.blocks_x,
+        rc.shard.blocks_y,
     );
-    let runner = NetworkRunner::new(net, runner_cfg);
-    let res = if args.get_bool("native") {
-        let mut engine = NativeEngine::default();
-        runner.run_frame_sharded(input, &mut engine)?
-    } else {
-        let mut engine = Runtime::load(&RuntimeConfig::discover())?;
-        println!("runtime: PJRT CPU, batches {:?}", engine.gemm_batches());
-        let r = runner.run_frame_sharded(input, &mut engine)?;
-        println!("PJRT dispatches: {}", engine.dispatches());
-        r
-    };
+    let mut pipe = Pipeline::builder().config(cfg).network(net).build()?;
+    println!("engine: {}", pipe.engine_desc());
+    let res = pipe.run(Job::Frame(input))?.into_frame()?;
+    println!("engine dispatches: {}", pipe.dispatches());
     if res.shards > 1 {
         println!("shard scheduler: scene served as {} lockstep pseudo-frames", res.shards);
     }
@@ -260,191 +268,39 @@ fn run_net(detection: bool, args: &Args) -> voxel_cim::Result<()> {
     Ok(())
 }
 
-/// The `[dataset]` config with the `--dataset` CLI override applied.
-fn dataset_config(
-    cfg: &voxel_cim::util::config::Config,
-    args: &Args,
-) -> voxel_cim::Result<DatasetConfig> {
-    let mut ds = DatasetConfig::from_config(cfg)?;
-    match args.get("dataset") {
-        "" => {}
-        spec => ds.source = spec.to_string(),
-    }
-    match args.get("frames") {
-        "" => {}
-        n => {
-            ds.frames = n
-                .parse()
-                .map_err(|e| anyhow::anyhow!("--frames: not an integer ({e})"))?
-        }
-    }
-    Ok(ds)
-}
-
-/// Apply the engine-layer CLI overrides (`--searcher`, `--shards`,
-/// `--w2b`) on top of a parsed `[runner]`/`[shard]` config.
-fn apply_engine_overrides(rc: &mut RunnerConfig, args: &Args) -> voxel_cim::Result<()> {
-    match args.get("searcher") {
-        "" => {}
-        s => rc.searcher = s.parse().map_err(anyhow::Error::msg)?,
-    }
-    match args.get("shards") {
-        "" => {}
-        s => {
-            let (bx, by) = voxel_cim::util::cli::parse_grid(s).map_err(anyhow::Error::msg)?;
-            rc.shard = voxel_cim::coordinator::shard::ShardConfig::grid(bx, by)?;
-        }
-    }
-    match args.get("w2b") {
-        "" => {}
-        s => {
-            rc.w2b_factor = s
-                .parse()
-                .map_err(|e| anyhow::anyhow!("--w2b: not an integer ({e})"))?
-        }
-    }
-    Ok(())
-}
-
-/// The `[serving]` config with the `--sequences` / `--admission` /
-/// `--slo` CLI overrides applied.
-fn serving_config(
-    cfg: &voxel_cim::util::config::Config,
-    args: &Args,
-) -> voxel_cim::Result<ServingConfig> {
-    let mut sv = ServingConfig::from_config(cfg)?;
-    match args.get("sequences") {
-        "" => {}
-        spec => sv.sequences = voxel_cim::serving::parse_sequences(spec)?,
-    }
-    match args.get("admission") {
-        "" => {}
-        p => sv.admission.policy = p.parse().map_err(anyhow::Error::msg)?,
-    }
-    match args.get("slo") {
-        "" => {}
-        ms => {
-            let ms: f64 = ms
-                .parse()
-                .map_err(|e| anyhow::anyhow!("--slo: not a number ({e})"))?;
-            anyhow::ensure!(
-                ms >= 0.0 && ms.is_finite(),
-                "--slo must be a finite value >= 0, got {ms}"
-            );
-            sv.admission.slo_ms = ms;
-        }
-    }
-    // A shedding policy with no SLO target would be a silent no-op
-    // (over-SLO pressure can never trigger) — refuse it loudly.
-    anyhow::ensure!(
-        sv.admission.policy == voxel_cim::serving::AdmissionPolicy::None
-            || sv.admission.slo_ms > 0.0,
-        "admission policy {} needs an SLO target: set --slo or [serving] slo_ms",
-        sv.admission.policy
-    );
-    Ok(sv)
-}
-
-/// Resolve the stream command's frame source: a [`SequenceMux`] striping
-/// the configured sequences when `[serving] sequences` / `--sequences`
-/// names more than zero of them, the single `[dataset]` source
-/// otherwise. Each sequence gets its own prefetch buffer (per `[dataset]
-/// prefetch`) and a distinct derived seed, so two sequences of the same
-/// profile are different streams.
-fn build_stream_source(
-    ds: &DatasetConfig,
-    serving: &ServingConfig,
-    extent: voxel_cim::geom::Extent3,
-) -> voxel_cim::Result<Box<dyn FrameSource>> {
-    if serving.sequences.is_empty() {
-        return ds
-            .build(extent)?
-            .ok_or_else(|| anyhow::anyhow!("no dataset source configured for `stream`"));
-    }
-    let mut sources = Vec::with_capacity(serving.sequences.len());
-    for (i, spec) in serving.sequences.iter().enumerate() {
-        let ds_i = DatasetConfig {
-            source: spec.clone(),
-            seed: ds.seed.wrapping_add(0x9E37 * i as u64),
-            ..ds.clone()
-        };
-        let src = ds_i.build(extent)?.ok_or_else(|| {
-            anyhow::anyhow!("sequence {i} ({spec:?}) resolved to no source")
-        })?;
-        sources.push(src);
-    }
-    Ok(Box::new(SequenceMux::new(sources, serving.mux)?))
-}
-
 /// `voxel-cim stream` — serve a frame stream from the configured dataset
 /// source (a KITTI directory or a scenario profile), or several of them
 /// muxed (`--sequences`), through the serving scheduler and report
 /// serving-style latency/throughput plus admission actions. (Trace
 /// replay is a library-level source: `Trace::load(..).replay()`.)
 fn run_stream(args: &Args) -> voxel_cim::Result<()> {
-    use voxel_cim::model::layer::{LayerSpec, NetworkSpec, TaskKind};
-
-    let cfg = match args.get("config") {
-        "" => voxel_cim::util::config::Config::default(),
-        path => voxel_cim::util::config::Config::load(path)?,
-    };
-    let mut ds = dataset_config(&cfg, args)?;
-    if ds.source.is_empty() {
-        ds.source = "urban".into();
+    let (mut cfg, _) = load_config(args)?;
+    if cfg.dataset.source.is_empty() {
+        cfg.dataset.source = "urban".into();
     }
-    let serving = serving_config(&cfg, args)?;
-    // Stream over a compact segmentation backbone sized to the source's
-    // grid (profiles default to a 64 x 64 x 12 grid unless `[dataset]
-    // dims` overrides it; KITTI directories use their voxelizer extent).
-    let extent = ds
-        .extent
-        .unwrap_or(voxel_cim::geom::Extent3::new(64, 64, 12));
-    let net = NetworkSpec {
-        name: "stream",
-        task: TaskKind::Segmentation,
-        extent,
-        vfe_channels: 4,
-        layers: vec![
-            LayerSpec::Subm3 { c_in: 4, c_out: 16 },
-            LayerSpec::Subm3 { c_in: 16, c_out: 16 },
-            LayerSpec::GConv2 { c_in: 16, c_out: 32 },
-            LayerSpec::Subm3 { c_in: 32, c_out: 32 },
-        ],
-    };
-    let mut runner_cfg = RunnerConfig::from_config(&cfg)?;
-    apply_engine_overrides(&mut runner_cfg, args)?;
-    let window = serving.resolved_window(serving.sequences.len());
-    let mut source = build_stream_source(&ds, &serving, extent)?;
+    let muxed = !cfg.serving.sequences.is_empty();
+    let mut pipe = Pipeline::builder().config(cfg).build()?;
+    let source: Box<dyn FrameSource> = pipe.open_source()?;
+    let cfg = pipe.config();
     println!(
         "stream: {} frames from {} | inflight {} | searcher {} | shards {}x{} | \
          window {} | admission {}{}",
-        ds.frames,
+        cfg.dataset.frames,
         source.label(),
-        runner_cfg.inflight,
-        runner_cfg.searcher,
-        runner_cfg.shard.blocks_x,
-        runner_cfg.shard.blocks_y,
-        window,
-        serving.admission.policy,
-        if serving.admission.slo_ms > 0.0 {
-            format!(" (slo {} ms)", serving.admission.slo_ms)
+        cfg.runner.inflight,
+        cfg.runner.searcher,
+        cfg.runner.shard.blocks_x,
+        cfg.runner.shard.blocks_y,
+        pipe.window(),
+        cfg.serving.admission.policy,
+        if cfg.serving.admission.slo_ms > 0.0 {
+            format!(" (slo {} ms)", cfg.serving.admission.slo_ms)
         } else {
             String::new()
         },
     );
-    // queue_depth only feeds serve_closure's internal prefetcher; this
-    // stream's buffering was already sized by `[dataset] prefetch`.
-    let srv = StreamServer::new(net, runner_cfg, 2)
-        .with_window(window)
-        .with_admission(serving.admission);
-    let report = if args.get_bool("native") {
-        srv.serve(ds.frames, source.as_mut(), &mut NativeEngine::default())?
-    } else {
-        let mut engine = Runtime::load(&RuntimeConfig::discover())?;
-        println!("runtime: PJRT CPU, batches {:?}", engine.gemm_batches());
-        srv.serve(ds.frames, source.as_mut(), &mut engine)?
-    };
-    let muxed = !serving.sequences.is_empty();
+    println!("engine: {}", pipe.engine_desc());
+    let report = pipe.run(Job::Stream(source))?.into_stream()?;
     for c in &report.completions {
         println!(
             "  {}frame {:>4}: {:>8} out voxels | latency {:>7.2} ms | own {:>7.2} ms{}",

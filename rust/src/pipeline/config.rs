@@ -1,0 +1,593 @@
+//! The unified run configuration of the pipeline facade.
+//!
+//! [`PipelineConfig`] is the one strict-keys load over every config
+//! section the stack grew across PRs — `[runner]` + `[shard]` (engine
+//! layer), `[dataset]` (ingestion), `[serving]` (scheduler), and the new
+//! `[pipeline]` section (network / engine / artifacts dir) — plus the
+//! one place CLI overrides apply ([`Overrides`]): the
+//! `apply_engine_overrides`-style helpers `main.rs` used to duplicate
+//! per command collapse into [`PipelineConfig::apply`].
+//!
+//! Validation is centralized too: [`PipelineConfig::validate`] surfaces
+//! inconsistent configurations (a shedding admission policy without an
+//! SLO target, a path-shaped dataset source that does not exist, a
+//! sequence list naming an unknown profile) as typed
+//! [`PipelineError::InvalidConfig`] errors before anything is built.
+
+use std::path::PathBuf;
+
+use crate::coordinator::scheduler::RunnerConfig;
+use crate::coordinator::shard::ShardConfig;
+use crate::dataset::{DatasetConfig, FrameSource};
+use crate::geom::Extent3;
+use crate::model::layer::{LayerSpec, NetworkSpec, TaskKind};
+use crate::model::{minkunet, second};
+use crate::runtime::RuntimeConfig;
+use crate::serving::{SequenceMux, ServingConfig};
+use crate::util::cli::Args;
+use crate::util::config::Config;
+
+/// Typed error of the pipeline facade: what went wrong building or
+/// submitting to a [`Pipeline`](crate::pipeline::Pipeline). Carried
+/// inside the crate-wide `anyhow` result so callers that care can
+/// `downcast_ref::<PipelineError>()` while everyone else just prints it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PipelineError {
+    /// The configuration is inconsistent or invalid; the message names
+    /// the offending keys in config-file terms.
+    InvalidConfig(String),
+    /// The configured engine cannot be brought up in this environment —
+    /// a valid config, missing runtime pieces (the `pjrt` cargo feature,
+    /// or `make artifacts` not run). Distinct from
+    /// [`Self::InvalidConfig`] so callers can route "fix the config"
+    /// and "fix the environment" remediation differently.
+    EngineUnavailable(String),
+    /// A stream job needs a frame source but none is configured.
+    NoSource(String),
+    /// A job outcome was unwrapped as the wrong variant.
+    WrongOutcome(&'static str),
+}
+
+impl std::fmt::Display for PipelineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::InvalidConfig(msg) => write!(f, "invalid pipeline config: {msg}"),
+            Self::EngineUnavailable(msg) => write!(f, "engine unavailable: {msg}"),
+            Self::NoSource(msg) => write!(f, "no frame source: {msg}"),
+            Self::WrongOutcome(msg) => write!(f, "wrong job outcome: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for PipelineError {}
+
+/// Which network the pipeline drives (`[pipeline] network`). The CLI's
+/// `run-det` / `run-seg` commands pass an explicit
+/// [`NetworkSpec`] to the builder instead; this enum is how a config
+/// file alone can name the model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum NetworkKind {
+    /// Full-resolution SECOND detection backbone + RPN.
+    Second,
+    /// Reduced-grid SECOND (the host-scale default of `run-det`).
+    SecondSmall,
+    /// Full-resolution MinkUNet segmentation UNet.
+    MinkUNet,
+    /// Reduced-grid MinkUNet (the host-scale default of `run-seg`).
+    MinkUNetSmall,
+    /// The compact segmentation backbone the `stream` command serves,
+    /// sized to the dataset extent (`[dataset] dims`, default 64x64x12).
+    #[default]
+    StreamBackbone,
+}
+
+impl NetworkKind {
+    /// Canonical config-file name.
+    pub fn key(&self) -> &'static str {
+        match self {
+            Self::Second => "second",
+            Self::SecondSmall => "second-small",
+            Self::MinkUNet => "minkunet",
+            Self::MinkUNetSmall => "minkunet-small",
+            Self::StreamBackbone => "stream",
+        }
+    }
+
+    /// Build the named [`NetworkSpec`]. `stream_extent` sizes only the
+    /// stream backbone; the named models carry their own grids.
+    pub fn build(&self, stream_extent: Extent3) -> NetworkSpec {
+        match self {
+            Self::Second => second::second(),
+            Self::SecondSmall => second::second_small(),
+            Self::MinkUNet => minkunet::minkunet(),
+            Self::MinkUNetSmall => minkunet::minkunet_small(),
+            Self::StreamBackbone => NetworkSpec {
+                name: "stream",
+                task: TaskKind::Segmentation,
+                extent: stream_extent,
+                vfe_channels: 4,
+                layers: vec![
+                    LayerSpec::Subm3 { c_in: 4, c_out: 16 },
+                    LayerSpec::Subm3 { c_in: 16, c_out: 16 },
+                    LayerSpec::GConv2 { c_in: 16, c_out: 32 },
+                    LayerSpec::Subm3 { c_in: 32, c_out: 32 },
+                ],
+            },
+        }
+    }
+}
+
+impl std::str::FromStr for NetworkKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "second" => Ok(Self::Second),
+            "second-small" => Ok(Self::SecondSmall),
+            "minkunet" => Ok(Self::MinkUNet),
+            "minkunet-small" => Ok(Self::MinkUNetSmall),
+            "stream" => Ok(Self::StreamBackbone),
+            other => Err(format!(
+                "unknown network {other:?} (expected one of: second, second-small, \
+                 minkunet, minkunet-small, stream)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for NetworkKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.key())
+    }
+}
+
+/// How the pipeline resolves its owned GEMM engine (`[pipeline] engine`)
+/// when the builder is not handed one explicitly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// Compiled PJRT artifacts when they load, native fallback otherwise
+    /// (with the load error kept in the engine description). Note: the
+    /// pre-facade CLI hard-failed `run-det`/`run-seg`/`stream` when
+    /// artifacts were missing; under `auto` they now fall back — pin
+    /// `pjrt` to get the hard error back.
+    #[default]
+    Auto,
+    /// The bit-exact native reference engine (no artifacts needed).
+    Native,
+    /// Compiled PJRT artifacts, and a hard error when they cannot load.
+    Pjrt,
+}
+
+impl EngineKind {
+    /// Canonical config-file name.
+    pub fn key(&self) -> &'static str {
+        match self {
+            Self::Auto => "auto",
+            Self::Native => "native",
+            Self::Pjrt => "pjrt",
+        }
+    }
+}
+
+impl std::str::FromStr for EngineKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "auto" => Ok(Self::Auto),
+            "native" => Ok(Self::Native),
+            "pjrt" => Ok(Self::Pjrt),
+            other => Err(format!(
+                "unknown engine {other:?} (expected one of: auto, native, pjrt)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.key())
+    }
+}
+
+/// CLI overrides for a [`PipelineConfig`]: every flag the `voxel-cim`
+/// binary layers on top of a config file, as optional raw strings. One
+/// struct replaces the `apply_engine_overrides` / `dataset_config` /
+/// `serving_config` helper trio `main.rs` used to duplicate between the
+/// `run` and `stream` commands; parsing (and its error messages) lives
+/// in [`PipelineConfig::apply`].
+#[derive(Clone, Debug, Default)]
+pub struct Overrides {
+    /// `--searcher`: map-search engine name.
+    pub searcher: Option<String>,
+    /// `--shards`: `BXxBY` (or bare `N` = `NxN`) block-shard grid.
+    pub shards: Option<String>,
+    /// `--w2b`: W2B replication budget (multiple of the kernel volume).
+    pub w2b: Option<String>,
+    /// `--dataset`: frame source (KITTI dir or scenario profile).
+    pub dataset: Option<String>,
+    /// `--frames`: frames to serve on the stream path.
+    pub frames: Option<String>,
+    /// `--sequences`: comma-separated muxed frame sources.
+    pub sequences: Option<String>,
+    /// `--admission`: SLO admission policy name.
+    pub admission: Option<String>,
+    /// `--slo`: p95 latency target in milliseconds.
+    pub slo: Option<String>,
+    /// `--native`: pin the engine to the native reference.
+    pub native: bool,
+}
+
+impl Overrides {
+    /// Collect the standard `voxel-cim` flag set from parsed [`Args`].
+    /// Requires all nine flags to be declared (the binary declares them
+    /// once for every command); examples with a narrower flag set fill
+    /// the fields they declare directly.
+    pub fn from_args(args: &Args) -> Self {
+        let opt = |name: &str| match args.get(name) {
+            "" => None,
+            s => Some(s.to_string()),
+        };
+        Self {
+            searcher: opt("searcher"),
+            shards: opt("shards"),
+            w2b: opt("w2b"),
+            dataset: opt("dataset"),
+            frames: opt("frames"),
+            sequences: opt("sequences"),
+            admission: opt("admission"),
+            slo: opt("slo"),
+            native: args.get_bool("native"),
+        }
+    }
+}
+
+/// The unified run configuration: every section of a run config parsed
+/// in one strict pass, one override surface, one validation pass. The
+/// [`Pipeline`](crate::pipeline::Pipeline) builder consumes it whole.
+#[derive(Clone, Debug, Default)]
+pub struct PipelineConfig {
+    /// Engine layer: `[runner]` + `[shard]`.
+    pub runner: RunnerConfig,
+    /// Ingestion: `[dataset]`.
+    pub dataset: DatasetConfig,
+    /// Serving scheduler: `[serving]`.
+    pub serving: ServingConfig,
+    /// Which network a config-only build drives (`[pipeline] network`);
+    /// an explicit builder network wins.
+    pub network: NetworkKind,
+    /// Owned-engine resolution (`[pipeline] engine`); an explicit
+    /// builder engine wins.
+    pub engine: EngineKind,
+    /// PJRT artifacts directory (`[pipeline] artifacts`); `None`
+    /// discovers `artifacts/manifest.txt` upward from the cwd.
+    pub artifacts: Option<PathBuf>,
+}
+
+impl PipelineConfig {
+    /// Parse every section of a run config in one strict pass (unknown
+    /// enum names, negative counts, and malformed values are errors in
+    /// whichever section they appear).
+    pub fn from_config(cfg: &Config) -> crate::Result<Self> {
+        let artifacts = match cfg.str_or("pipeline.artifacts", "") {
+            "" => None,
+            dir => Some(PathBuf::from(dir)),
+        };
+        Ok(Self {
+            runner: RunnerConfig::from_config(cfg)?,
+            dataset: DatasetConfig::from_config(cfg)?,
+            serving: ServingConfig::from_config(cfg)?,
+            network: cfg.parsed_or("pipeline.network", NetworkKind::default())?,
+            engine: cfg.parsed_or("pipeline.engine", EngineKind::default())?,
+            artifacts,
+        })
+    }
+
+    /// Load a TOML run config from `path`; `""` yields the defaults
+    /// (the behavior of every CLI command's optional `--config`).
+    pub fn load(path: &str) -> crate::Result<Self> {
+        match path {
+            "" => Self::from_config(&Config::default()),
+            p => Self::from_config(&Config::load(p)?),
+        }
+    }
+
+    /// Apply CLI overrides on top of the parsed config. Parse failures
+    /// carry the flag name (`--shards: ...`), not just the value.
+    pub fn apply(&mut self, ov: &Overrides) -> crate::Result<()> {
+        if let Some(s) = &ov.searcher {
+            self.runner.searcher = s.parse().map_err(anyhow::Error::msg)?;
+        }
+        if let Some(s) = &ov.shards {
+            let (bx, by) = crate::util::cli::parse_grid(s).map_err(anyhow::Error::msg)?;
+            self.runner.shard = ShardConfig::grid(bx, by)?;
+        }
+        if let Some(s) = &ov.w2b {
+            self.runner.w2b_factor = s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--w2b: not an integer ({e})"))?;
+        }
+        if let Some(s) = &ov.dataset {
+            self.dataset.source = s.clone();
+        }
+        if let Some(s) = &ov.frames {
+            self.dataset.frames = s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--frames: not an integer ({e})"))?;
+        }
+        if let Some(s) = &ov.sequences {
+            self.serving.sequences = crate::serving::parse_sequences(s)?;
+        }
+        if let Some(s) = &ov.admission {
+            self.serving.admission.policy = s.parse().map_err(anyhow::Error::msg)?;
+        }
+        if let Some(s) = &ov.slo {
+            let ms: f64 = s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--slo: not a number ({e})"))?;
+            anyhow::ensure!(
+                ms >= 0.0 && ms.is_finite(),
+                "--slo must be a finite value >= 0, got {ms}"
+            );
+            self.serving.admission.slo_ms = ms;
+        }
+        if ov.native {
+            self.engine = EngineKind::Native;
+        }
+        Ok(())
+    }
+
+    /// Check cross-section consistency, surfacing every failure as a
+    /// typed [`PipelineError::InvalidConfig`]. The builder runs this
+    /// before constructing anything — deliberately including the
+    /// stream-only `[serving]` keys even when the pipeline will only
+    /// ever see frame jobs: a config that names a shedding policy with
+    /// no SLO, or a sequence that cannot resolve, is wrong *as a
+    /// config*, and failing at build keeps the error next to the typo
+    /// instead of deferring it to the first stream submission.
+    pub fn validate(&self) -> crate::Result<()> {
+        let invalid =
+            |msg: String| -> anyhow::Error { PipelineError::InvalidConfig(msg).into() };
+        self.serving
+            .validate()
+            .map_err(|e| invalid(format!("{e:#}")))?;
+        self.dataset
+            .validate()
+            .map_err(|e| invalid(format!("{e:#}")))?;
+        for (i, seq) in self.serving.sequences.iter().enumerate() {
+            crate::dataset::validate_source(seq)
+                .map_err(|e| invalid(format!("serving sequence {i}: {e:#}")))?;
+        }
+        // `engine = "pjrt"` without the feature (or without artifacts) is
+        // NOT checked here: an explicit builder engine overrides the
+        // config's resolution, so the check lives in `build_engine`, the
+        // only place the kind is consumed.
+        Ok(())
+    }
+
+    /// The voxel-grid extent of the stream backbone / profile sources:
+    /// `[dataset] dims` when set, the historical 64x64x12 otherwise.
+    pub fn stream_extent(&self) -> Extent3 {
+        self.dataset.extent.unwrap_or(Extent3::new(64, 64, 12))
+    }
+
+    /// The [`RuntimeConfig`] this pipeline loads PJRT artifacts with.
+    pub fn runtime_config(&self) -> RuntimeConfig {
+        match &self.artifacts {
+            Some(dir) => RuntimeConfig {
+                artifacts_dir: dir.clone(),
+            },
+            None => RuntimeConfig::discover(),
+        }
+    }
+
+    /// Resolve the configured frame source(s) for a stream job, sized to
+    /// `extent`: a [`SequenceMux`] striping `[serving] sequences` when
+    /// more than zero are configured (each sequence with its own
+    /// prefetch buffer and a distinct derived seed, so two sequences of
+    /// the same profile are different streams), the single `[dataset]`
+    /// source otherwise, `Ok(None)` when neither is configured.
+    pub fn build_source(
+        &self,
+        extent: Extent3,
+    ) -> crate::Result<Option<Box<dyn FrameSource>>> {
+        if self.serving.sequences.is_empty() {
+            return self.dataset.build(extent);
+        }
+        let mut sources = Vec::with_capacity(self.serving.sequences.len());
+        for (i, spec) in self.serving.sequences.iter().enumerate() {
+            let ds_i = DatasetConfig {
+                source: spec.clone(),
+                seed: self.dataset.seed.wrapping_add(0x9E37 * i as u64),
+                ..self.dataset.clone()
+            };
+            let src = ds_i.build(extent)?.ok_or_else(|| {
+                anyhow::anyhow!("sequence {i} ({spec:?}) resolved to no source")
+            })?;
+            sources.push(src);
+        }
+        Ok(Some(Box::new(SequenceMux::new(sources, self.serving.mux)?)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapsearch::SearcherKind;
+    use crate::serving::AdmissionPolicy;
+
+    #[test]
+    fn one_strict_pass_over_every_section() {
+        let cfg = Config::parse(
+            "[runner]\nsearcher = \"octree\"\ninflight = 3\nw2b_factor = 2\n\
+             [shard]\nblocks_x = 2\nblocks_y = 2\n\
+             [dataset]\nsource = \"highway\"\nframes = 5\n\
+             [serving]\nsequences = \"urban, far-field\"\nadmission = \"drop-oldest\"\nslo_ms = 25.0\n\
+             [pipeline]\nnetwork = \"minkunet-small\"\nengine = \"native\"",
+        )
+        .unwrap();
+        let pc = PipelineConfig::from_config(&cfg).unwrap();
+        assert_eq!(pc.runner.searcher, SearcherKind::Octree);
+        assert_eq!(pc.runner.inflight, 3);
+        assert_eq!(pc.runner.w2b_factor, 2);
+        assert_eq!((pc.runner.shard.blocks_x, pc.runner.shard.blocks_y), (2, 2));
+        assert_eq!(pc.dataset.source, "highway");
+        assert_eq!(pc.dataset.frames, 5);
+        assert_eq!(pc.serving.sequences.len(), 2);
+        assert_eq!(pc.serving.admission.policy, AdmissionPolicy::DropOldest);
+        assert_eq!(pc.network, NetworkKind::MinkUNetSmall);
+        assert_eq!(pc.engine, EngineKind::Native);
+        pc.validate().unwrap();
+        // A bad key in *any* section fails the one load.
+        for bad in [
+            "[runner]\nsearcher = \"bogus\"",
+            "[shard]\nblocks_x = 0",
+            "[dataset]\nframes = -1",
+            "[serving]\nmux = \"fifo\"",
+            "[pipeline]\nnetwork = \"resnet\"",
+            "[pipeline]\nengine = \"gpu\"",
+        ] {
+            let cfg = Config::parse(bad).unwrap();
+            assert!(PipelineConfig::from_config(&cfg).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn overrides_apply_and_parse_strictly() {
+        let mut pc = PipelineConfig::default();
+        pc.apply(&Overrides {
+            searcher: Some("block-doms".into()),
+            shards: Some("2x4".into()),
+            w2b: Some("2".into()),
+            dataset: Some("indoor".into()),
+            frames: Some("9".into()),
+            sequences: Some("urban,highway".into()),
+            admission: Some("defer-sharding".into()),
+            slo: Some("12.5".into()),
+            native: true,
+        })
+        .unwrap();
+        assert_eq!(pc.runner.searcher, SearcherKind::BlockDoms);
+        assert_eq!((pc.runner.shard.blocks_x, pc.runner.shard.blocks_y), (2, 4));
+        assert_eq!(pc.runner.w2b_factor, 2);
+        assert_eq!(pc.dataset.source, "indoor");
+        assert_eq!(pc.dataset.frames, 9);
+        assert_eq!(pc.serving.sequences, vec!["urban", "highway"]);
+        assert_eq!(pc.serving.admission.policy, AdmissionPolicy::DeferSharding);
+        assert!((pc.serving.admission.slo_ms - 12.5).abs() < 1e-12);
+        assert_eq!(pc.engine, EngineKind::Native);
+        pc.validate().unwrap();
+        for bad in [
+            Overrides {
+                searcher: Some("bogus".into()),
+                ..Default::default()
+            },
+            Overrides {
+                shards: Some("0x2".into()),
+                ..Default::default()
+            },
+            Overrides {
+                w2b: Some("two".into()),
+                ..Default::default()
+            },
+            Overrides {
+                frames: Some("-3".into()),
+                ..Default::default()
+            },
+            Overrides {
+                slo: Some("NaN".into()),
+                ..Default::default()
+            },
+            Overrides {
+                sequences: Some("urban,,highway".into()),
+                ..Default::default()
+            },
+        ] {
+            assert!(PipelineConfig::default().apply(&bad).is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn validate_surfaces_typed_config_errors() {
+        use crate::serving::AdmissionConfig;
+        // Shedding policy without an SLO target.
+        let pc = PipelineConfig {
+            serving: ServingConfig {
+                admission: AdmissionConfig {
+                    policy: AdmissionPolicy::DropOldest,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let err = pc.validate().unwrap_err();
+        let typed = err.downcast_ref::<PipelineError>().expect("typed error");
+        assert!(matches!(typed, PipelineError::InvalidConfig(m) if m.contains("slo")));
+        // Path-shaped missing dataset source.
+        let pc = PipelineConfig {
+            dataset: DatasetConfig {
+                source: "/no/such/kitti/velodyne".into(),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let err = pc.validate().unwrap_err();
+        assert!(err.downcast_ref::<PipelineError>().is_some(), "{err:#}");
+        // Unknown profile inside the sequence list.
+        let pc = PipelineConfig {
+            serving: ServingConfig {
+                sequences: vec!["urban".into(), "nebula".into()],
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let err = pc.validate().unwrap_err();
+        let typed = err.downcast_ref::<PipelineError>().expect("typed error");
+        assert!(matches!(typed, PipelineError::InvalidConfig(m) if m.contains("sequence 1")));
+    }
+
+    #[test]
+    fn network_and_engine_kinds_round_trip() {
+        for k in [
+            NetworkKind::Second,
+            NetworkKind::SecondSmall,
+            NetworkKind::MinkUNet,
+            NetworkKind::MinkUNetSmall,
+            NetworkKind::StreamBackbone,
+        ] {
+            assert_eq!(k.key().parse::<NetworkKind>().unwrap(), k);
+        }
+        for k in [EngineKind::Auto, EngineKind::Native, EngineKind::Pjrt] {
+            assert_eq!(k.key().parse::<EngineKind>().unwrap(), k);
+        }
+        let e = Extent3::new(32, 32, 8);
+        assert_eq!(NetworkKind::StreamBackbone.build(e).extent, e);
+        assert_eq!(NetworkKind::SecondSmall.build(e).name, "SECOND-small");
+    }
+
+    #[test]
+    fn build_source_muxes_sequences_with_derived_seeds() {
+        let mut pc = PipelineConfig {
+            dataset: DatasetConfig {
+                prefetch: 0,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        // No source configured at all.
+        assert!(pc.build_source(Extent3::new(16, 16, 8)).unwrap().is_none());
+        // Two same-profile sequences must still be distinct streams.
+        pc.serving.sequences = vec!["urban".into(), "urban".into()];
+        let mut src = pc
+            .build_source(Extent3::new(16, 16, 8))
+            .unwrap()
+            .expect("mux source");
+        let a = src.next_frame().expect("frame from sequence 0");
+        let b = src.next_frame().expect("frame from sequence 1");
+        assert_ne!(a.meta.sequence, b.meta.sequence);
+        assert_ne!(
+            (a.tensor.coords.clone(), a.tensor.features.clone()),
+            (b.tensor.coords.clone(), b.tensor.features.clone()),
+            "derived seeds must differ"
+        );
+    }
+}

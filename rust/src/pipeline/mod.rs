@@ -1,0 +1,388 @@
+//! The pipeline facade: one owned-engine front door for the whole stack.
+//!
+//! ```text
+//!   dataset (FrameSource / SequenceMux)
+//!        │
+//!   serving (admission · window packing)
+//!        │
+//!   Pipeline ── owns Runtime-or-NativeEngine, NetworkRunner, StreamServer
+//!        │
+//!   engine layer (run_scenes → lockstep GEMM waves)
+//! ```
+//!
+//! Four PRs of layer growth left the public API as a sprawl:
+//! `NetworkRunner::{run_frame, run_frames, run_frame_sharded, run_scenes}`,
+//! `StreamServer::{serve, serve_closure}`, and five config structs that
+//! every caller assembled by hand while threading `&mut E: GemmEngine`
+//! through each call. This module replaces that with a single submission
+//! surface:
+//!
+//! ```no_run
+//! use voxel_cim::pipeline::{Job, Pipeline, PipelineConfig};
+//!
+//! # fn main() -> voxel_cim::Result<()> {
+//! let cfg = PipelineConfig::load("examples/configs/default.toml")?;
+//! let mut pipe = Pipeline::builder().config(cfg).build()?;
+//! let source = pipe.open_source()?;
+//! let report = pipe.run(Job::Stream(source))?.into_stream()?;
+//! println!("{:.1} fps", report.throughput_fps());
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! [`Pipeline::run`] routes every [`Job`] through the same internals the
+//! legacy entry points used — `NetworkRunner::run_scenes` for frames and
+//! windows, `StreamServer::serve` for streams — so results are
+//! checksum-bit-identical to `run_frame` / `run_frame_sharded` /
+//! `run_frames` / `serve` for every `SearcherKind`, sharded or not
+//! (witnessed in `tests/pipeline_api.rs`). The engine is *owned*: the
+//! facade resolves it once ([`EngineKind`]) and no `&mut E` parameter
+//! appears on the public surface — the prerequisite for the ROADMAP's
+//! forkable per-worker PJRT executable.
+
+mod config;
+
+pub use config::{EngineKind, NetworkKind, Overrides, PipelineConfig, PipelineError};
+
+use crate::coordinator::scheduler::FrameResult;
+use crate::coordinator::stream::{StreamReport, StreamServer};
+use crate::dataset::FrameSource;
+use crate::model::layer::NetworkSpec;
+use crate::runtime::Runtime;
+use crate::serving::WindowPolicy;
+use crate::sparse::tensor::SparseTensor;
+use crate::spconv::layer::{GemmEngine, NativeEngine};
+
+/// One unit of work submitted to [`Pipeline::run`].
+pub enum Job {
+    /// One scene through the network (block-sharded into lockstep
+    /// pseudo-frames when the configured `[shard]` grid triggers).
+    Frame(SparseTensor),
+    /// An explicit lockstep window of scenes: all of them advance
+    /// through the network together sharing GEMM waves, bit-identical
+    /// per scene to running each alone.
+    Window(Vec<SparseTensor>),
+    /// Serve `[dataset] frames` frames from a source through the serving
+    /// scheduler (admission, window packing, latency attribution). Build
+    /// the configured source with [`Pipeline::open_source`], or pass any
+    /// [`FrameSource`] of your own.
+    Stream(Box<dyn FrameSource>),
+}
+
+impl Job {
+    /// Box any [`FrameSource`] into a stream job.
+    pub fn stream(source: impl FrameSource + 'static) -> Self {
+        Self::Stream(Box::new(source))
+    }
+}
+
+/// What a [`Job`] produced — one variant per job kind.
+#[derive(Debug)]
+pub enum RunOutcome {
+    /// Result of a [`Job::Frame`].
+    Frame(FrameResult),
+    /// Per-scene results of a [`Job::Window`], in submission order.
+    Window(Vec<FrameResult>),
+    /// Report of a [`Job::Stream`].
+    Stream(StreamReport),
+}
+
+impl RunOutcome {
+    /// Unwrap a [`Job::Frame`] outcome.
+    pub fn into_frame(self) -> crate::Result<FrameResult> {
+        match self {
+            Self::Frame(r) => Ok(r),
+            other => Err(PipelineError::WrongOutcome(other.kind()).into()),
+        }
+    }
+
+    /// Unwrap a [`Job::Window`] outcome.
+    pub fn into_window(self) -> crate::Result<Vec<FrameResult>> {
+        match self {
+            Self::Window(r) => Ok(r),
+            other => Err(PipelineError::WrongOutcome(other.kind()).into()),
+        }
+    }
+
+    /// Unwrap a [`Job::Stream`] outcome.
+    pub fn into_stream(self) -> crate::Result<StreamReport> {
+        match self {
+            Self::Stream(r) => Ok(r),
+            other => Err(PipelineError::WrongOutcome(other.kind()).into()),
+        }
+    }
+
+    fn kind(&self) -> &'static str {
+        match self {
+            Self::Frame(_) => "frame",
+            Self::Window(_) => "window",
+            Self::Stream(_) => "stream",
+        }
+    }
+}
+
+/// Builder for [`Pipeline`] — `Pipeline::builder().config(cfg).build()?`.
+///
+/// Everything is optional: the config defaults to
+/// [`PipelineConfig::default`], the network to the config's
+/// `[pipeline] network`, and the engine to the config's
+/// `[pipeline] engine` resolution (PJRT artifacts with native fallback).
+pub struct PipelineBuilder {
+    cfg: PipelineConfig,
+    network: Option<NetworkSpec>,
+    engine: Option<(Box<dyn GemmEngine>, String)>,
+}
+
+impl PipelineBuilder {
+    /// Use this unified run config.
+    pub fn config(mut self, cfg: PipelineConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Drive this network instead of the config's `[pipeline] network`.
+    pub fn network(mut self, net: NetworkSpec) -> Self {
+        self.network = Some(net);
+        self
+    }
+
+    /// Hand the pipeline this engine instead of resolving one from the
+    /// config (tests and benches pass a fresh `NativeEngine` here).
+    pub fn engine<E: GemmEngine + 'static>(mut self, engine: E) -> Self {
+        self.engine = Some((Box::new(engine), "caller-supplied".into()));
+        self
+    }
+
+    /// Validate the config and assemble the owned stack. Configuration
+    /// inconsistencies surface as typed
+    /// [`PipelineError::InvalidConfig`] errors.
+    pub fn build(self) -> crate::Result<Pipeline> {
+        let cfg = self.cfg;
+        cfg.validate()?;
+        let net = self
+            .network
+            .unwrap_or_else(|| cfg.network.build(cfg.stream_extent()));
+        let (engine, engine_desc) = match self.engine {
+            Some(e) => e,
+            None => build_engine(&cfg)?,
+        };
+        let window = cfg.serving.resolved_window(cfg.serving.sequences.len());
+        // The server's queue_depth only sizes the deprecated
+        // serve_closure prefetch buffer, which the facade never calls;
+        // stream jobs' pending-queue bound is `[serving] depth`
+        // (`AdmissionConfig::effective_depth`).
+        let server = StreamServer::new(net, cfg.runner, 2)
+            .with_window(window)
+            .with_admission(cfg.serving.admission);
+        Ok(Pipeline {
+            cfg,
+            server,
+            engine,
+            engine_desc,
+            window,
+        })
+    }
+}
+
+/// Resolve the owned engine named by `[pipeline] engine`.
+fn build_engine(cfg: &PipelineConfig) -> crate::Result<(Box<dyn GemmEngine>, String)> {
+    let native = || -> (Box<dyn GemmEngine>, String) {
+        (
+            Box::new(NativeEngine::default()),
+            "native (bit-exact CIM reference)".into(),
+        )
+    };
+    let pjrt = || -> crate::Result<(Box<dyn GemmEngine>, String)> {
+        let rt = Runtime::load(&cfg.runtime_config())?;
+        let desc = format!("PJRT CPU (GEMM batches {:?})", rt.gemm_batches());
+        Ok((Box::new(rt), desc))
+    };
+    match cfg.engine {
+        EngineKind::Native => Ok(native()),
+        EngineKind::Pjrt => pjrt().map_err(|e| {
+            // A valid config whose runtime pieces are missing — typed
+            // apart from InvalidConfig so "run make artifacts" is not
+            // mistaken for a config typo.
+            PipelineError::EngineUnavailable(format!("pipeline.engine = \"pjrt\": {e:#}"))
+                .into()
+        }),
+        EngineKind::Auto => match pjrt() {
+            Ok(resolved) => Ok(resolved),
+            Err(e) => {
+                let (engine, base) = native();
+                Ok((engine, format!("{base}; PJRT unavailable: {e:#}")))
+            }
+        },
+    }
+}
+
+/// The facade: owns the run config, the network runner, the serving
+/// scheduler, and the GEMM engine. Submit work with [`Self::run`].
+pub struct Pipeline {
+    cfg: PipelineConfig,
+    server: StreamServer,
+    engine: Box<dyn GemmEngine>,
+    engine_desc: String,
+    window: WindowPolicy,
+}
+
+impl Pipeline {
+    /// Start building a pipeline.
+    pub fn builder() -> PipelineBuilder {
+        PipelineBuilder {
+            cfg: PipelineConfig::default(),
+            network: None,
+            engine: None,
+        }
+    }
+
+    /// The unified config this pipeline was built from.
+    pub fn config(&self) -> &PipelineConfig {
+        &self.cfg
+    }
+
+    /// The network being driven.
+    pub fn network(&self) -> &NetworkSpec {
+        &self.server.runner().net
+    }
+
+    /// Human-readable description of the owned engine (resolution +
+    /// artifact batches for PJRT).
+    pub fn engine_desc(&self) -> &str {
+        &self.engine_desc
+    }
+
+    /// The resolved lockstep-window packing policy of stream jobs.
+    pub fn window(&self) -> WindowPolicy {
+        self.window
+    }
+
+    /// GEMM dispatches the owned engine has issued so far (cumulative
+    /// across jobs; forked worker engines keep their own counters).
+    pub fn dispatches(&self) -> u64 {
+        self.engine.dispatches()
+    }
+
+    /// Build the frame source the config names (`[dataset] source`, or a
+    /// [`SequenceMux`](crate::serving::SequenceMux) over `[serving]
+    /// sequences`), sized to the network extent. A configuration with no
+    /// source is a typed [`PipelineError::NoSource`] error.
+    pub fn open_source(&self) -> crate::Result<Box<dyn FrameSource>> {
+        self.cfg.build_source(self.network().extent)?.ok_or_else(|| {
+            PipelineError::NoSource(
+                "no dataset source configured: set [dataset] source / --dataset \
+                 or [serving] sequences / --sequences"
+                    .into(),
+            )
+            .into()
+        })
+    }
+
+    /// Submit one job. Every kind routes through the same internals —
+    /// `run_scenes` for frames and windows, `serve` for streams — so
+    /// results are bit-identical to the legacy per-entry-point API.
+    pub fn run(&mut self, job: Job) -> crate::Result<RunOutcome> {
+        match job {
+            Job::Frame(tensor) => {
+                let result = self
+                    .server
+                    .runner()
+                    .run_scenes(vec![tensor], &mut self.engine)?
+                    .pop()
+                    .expect("one scene in, one result out");
+                Ok(RunOutcome::Frame(result))
+            }
+            Job::Window(tensors) => Ok(RunOutcome::Window(
+                self.server.runner().run_scenes(tensors, &mut self.engine)?,
+            )),
+            Job::Stream(mut source) => Ok(RunOutcome::Stream(self.server.serve(
+                self.cfg.dataset.frames,
+                source.as_mut(),
+                &mut self.engine,
+            )?)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::ClosureSource;
+    use crate::geom::Extent3;
+    use crate::pointcloud::voxelize::Voxelizer;
+
+    fn tiny_cfg() -> PipelineConfig {
+        PipelineConfig {
+            dataset: crate::dataset::DatasetConfig {
+                extent: Some(Extent3::new(16, 16, 8)),
+                ..Default::default()
+            },
+            engine: EngineKind::Native,
+            ..Default::default()
+        }
+    }
+
+    fn make_frame(id: u64) -> SparseTensor {
+        let e = Extent3::new(16, 16, 8);
+        let g = Voxelizer::synth_occupancy(e, 0.05, 400 + id);
+        let mut t = SparseTensor::from_coords(e, g.coords(), 4);
+        for (i, v) in t.features.iter_mut().enumerate() {
+            *v = ((i as u64 + id) % 7) as i8;
+        }
+        t
+    }
+
+    #[test]
+    fn frame_window_and_stream_jobs_run_through_one_pipeline() {
+        let mut pipe = Pipeline::builder().config(tiny_cfg()).build().unwrap();
+        assert_eq!(pipe.network().name, "stream");
+        let frame = pipe.run(Job::Frame(make_frame(0))).unwrap();
+        let frame = frame.into_frame().unwrap();
+        assert!(frame.out_voxels > 0);
+        let window = pipe
+            .run(Job::Window(vec![make_frame(1), make_frame(2)]))
+            .unwrap()
+            .into_window()
+            .unwrap();
+        assert_eq!(window.len(), 2);
+        let mut cfg = tiny_cfg();
+        cfg.dataset.frames = 3;
+        let mut pipe = Pipeline::builder().config(cfg).build().unwrap();
+        let report = pipe
+            .run(Job::stream(ClosureSource::new(make_frame)))
+            .unwrap()
+            .into_stream()
+            .unwrap();
+        assert_eq!(report.completions.len(), 3);
+        assert!(pipe.dispatches() > 0, "owned engine counts dispatches");
+    }
+
+    #[test]
+    fn wrong_outcome_unwraps_are_typed_errors() {
+        let mut pipe = Pipeline::builder().config(tiny_cfg()).build().unwrap();
+        let out = pipe.run(Job::Frame(make_frame(7))).unwrap();
+        let err = out.into_stream().unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<PipelineError>(),
+            Some(PipelineError::WrongOutcome("frame"))
+        ));
+    }
+
+    #[test]
+    fn open_source_without_config_is_a_typed_error() {
+        let pipe = Pipeline::builder().config(tiny_cfg()).build().unwrap();
+        let err = pipe.open_source().unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<PipelineError>(),
+            Some(PipelineError::NoSource(_))
+        ));
+    }
+
+    #[test]
+    fn builder_rejects_invalid_config_before_construction() {
+        let mut cfg = tiny_cfg();
+        cfg.serving.admission.policy = crate::serving::AdmissionPolicy::RejectOverDepth;
+        let err = Pipeline::builder().config(cfg).build().unwrap_err();
+        assert!(err.downcast_ref::<PipelineError>().is_some(), "{err:#}");
+    }
+}

@@ -131,6 +131,19 @@ impl ServingConfig {
         })
     }
 
+    /// Cross-key consistency: a shedding admission policy with no SLO
+    /// target would be a silent no-op (over-SLO pressure can never
+    /// trigger) — refuse it loudly. The pipeline facade runs this at
+    /// build time; it used to live ad hoc in `main.rs`.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.admission.policy == AdmissionPolicy::None || self.admission.slo_ms > 0.0,
+            "admission policy {} needs an SLO target: set --slo or [serving] slo_ms",
+            self.admission.policy
+        );
+        Ok(())
+    }
+
     /// Resolve the window policy for a stream serving `n_sequences`
     /// muxed sequences: the explicit config wins; the auto default packs
     /// cross-scene exactly when there is more than one sequence to mux.
@@ -194,6 +207,17 @@ mod tests {
             let cfg = Config::parse(bad).unwrap();
             assert!(ServingConfig::from_config(&cfg).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn shedding_policy_without_slo_fails_validation() {
+        let mut s = ServingConfig::default();
+        s.validate().unwrap();
+        s.admission.policy = AdmissionPolicy::DropOldest;
+        let err = format!("{:#}", s.validate().unwrap_err());
+        assert!(err.contains("slo"), "{err}");
+        s.admission.slo_ms = 25.0;
+        s.validate().unwrap();
     }
 
     #[test]

@@ -15,7 +15,7 @@ use crate::coordinator::executor::WorkerPool;
 use crate::sparse::rulebook::Rulebook;
 use crate::sparse::tensor::SparseTensor;
 use crate::spconv::gather::{
-    gather_batches, gather_batches_multi, gather_batches_multi_w2b, MultiGatherBatch,
+    gather_batches_multi, gather_batches_multi_w2b, MultiGatherBatch,
 };
 use crate::spconv::quant;
 
@@ -47,6 +47,30 @@ pub trait GemmEngine {
     /// authoritative.
     fn fork(&self) -> Option<Box<dyn GemmEngine + Send>> {
         None
+    }
+}
+
+/// Boxed engines forward transparently, so the pipeline facade's owned
+/// `Box<dyn GemmEngine>` satisfies every `E: GemmEngine` bound on the
+/// execution paths.
+impl<T: GemmEngine + ?Sized> GemmEngine for Box<T> {
+    fn gemm_i8(
+        &mut self,
+        acts: &[i8],
+        weights: &[i8],
+        b: usize,
+        c1: usize,
+        c2: usize,
+    ) -> crate::Result<Vec<i32>> {
+        (**self).gemm_i8(acts, weights, b, c1, c2)
+    }
+
+    fn dispatches(&self) -> u64 {
+        (**self).dispatches()
+    }
+
+    fn fork(&self) -> Option<Box<dyn GemmEngine + Send>> {
+        (**self).fork()
     }
 }
 
@@ -221,15 +245,19 @@ impl SpconvLayer {
         }
     }
 
-    /// Execute over a prebuilt rulebook, single-threaded (the historical
-    /// entry point; tests and the sim harness use it directly).
+    /// Execute over a prebuilt rulebook, single-threaded: the
+    /// one-element group of [`Self::execute_batch`] (single-frame and
+    /// batched execution share one gather/GEMM/scatter body; a lone
+    /// frame simply fills every wave by itself). Kept as the convenience
+    /// entry point for layer-level tests and microbenches.
     pub fn execute<E: GemmEngine>(
         &self,
         input: &SparseTensor,
         rb: &Rulebook,
         engine: &mut E,
     ) -> crate::Result<SpconvOutput> {
-        self.execute_serial(input, rb, engine)
+        let mut outs = self.execute_batch(&[(input, rb)], engine)?;
+        Ok(outs.pop().expect("one frame in, one out"))
     }
 
     /// Execute over a prebuilt rulebook, sharding gather/GEMM/scatter
@@ -255,70 +283,8 @@ impl SpconvLayer {
                 let mut outs = self.execute_batch_pooled(&group, engine, pool)?;
                 Ok(outs.pop().expect("one frame in, one out"))
             }
-            _ => self.execute_serial(input, rb, engine),
+            _ => self.execute(input, rb, engine),
         }
-    }
-
-    fn execute_serial<E: GemmEngine>(
-        &self,
-        input: &SparseTensor,
-        rb: &Rulebook,
-        engine: &mut E,
-    ) -> crate::Result<SpconvOutput> {
-        assert_eq!(input.channels, self.weights.c_in, "channel mismatch");
-        assert_eq!(rb.kind.kernel_volume(), self.weights.k_volume);
-        let c2 = self.weights.c_out;
-        let n_out = rb.out_coords.len();
-        let mut psums = vec![0i32; n_out * c2];
-        let (waves, _) = gather_batches(rb, self.batch);
-        let mut gemm_calls = 0u64;
-        let mut gathered_rows = 0u64;
-
-        // Contraction/output tiling in TILE_C chunks (independent ADC
-        // clamping per contraction tile — see module docs).
-        let tw = TiledWeights::new(&self.weights);
-
-        let mut acts_tile: Vec<i8> = Vec::new();
-        for wave in &waves {
-            let b = wave.pairs.len();
-            gathered_rows += b as u64;
-            for (i1, &(c1_lo, c1_len)) in tw.c1_tiles.iter().enumerate() {
-                // Gather the activation tile for this wave.
-                acts_tile.clear();
-                acts_tile.reserve(b * c1_len);
-                for &(i, _) in &wave.pairs {
-                    let row = input.feature(i as usize);
-                    acts_tile.extend_from_slice(&row[c1_lo..c1_lo + c1_len]);
-                }
-                for (i2, &(c2_lo, c2_len)) in tw.c2_tiles.iter().enumerate() {
-                    let wtile = tw.get(wave.offset as usize, i1, i2);
-                    let out = engine.gemm_i8(&acts_tile, wtile, b, c1_len, c2_len)?;
-                    gemm_calls += 1;
-                    scatter_add(
-                        &mut psums,
-                        c2,
-                        c2_lo,
-                        c2_len,
-                        &out,
-                        wave.pairs.iter().map(|&(_, o)| o),
-                    );
-                }
-            }
-        }
-
-        let features = quant::dequant_relu_quant(&psums, &self.scale, &self.zero, c2);
-        let tensor = SparseTensor {
-            extent: rb.out_extent,
-            coords: rb.out_coords.clone(),
-            features,
-            channels: c2,
-        };
-        Ok(SpconvOutput {
-            tensor,
-            psums,
-            gemm_calls,
-            gathered_rows,
-        })
     }
 
     /// Execute one layer for several in-flight frames at once, packing
@@ -533,25 +499,6 @@ impl SpconvLayer {
                 }
             })
             .collect()
-    }
-}
-
-/// Scatter one GEMM tile's rows into the psum tensor (`outputs` yields
-/// the destination output index of each row, in row order).
-fn scatter_add(
-    psums: &mut [i32],
-    c2: usize,
-    c2_lo: usize,
-    c2_len: usize,
-    out: &[i32],
-    outputs: impl Iterator<Item = u32>,
-) {
-    for (row, o) in outputs.enumerate() {
-        let dst = &mut psums[o as usize * c2 + c2_lo..o as usize * c2 + c2_lo + c2_len];
-        let src = &out[row * c2_len..(row + 1) * c2_len];
-        for (d, &s) in dst.iter_mut().zip(src) {
-            *d += s;
-        }
     }
 }
 

@@ -217,11 +217,15 @@ fn scenario_profiles_run_sharded_bit_identically() {
         let frame = ProfileSource::new(profile, extent, 0.03, 0xCAFE).generate(1);
         assert!(!frame.is_empty(), "{profile}");
         let want = plain
-            .run_frame(frame.clone(), &mut NativeEngine::default())
-            .unwrap();
+            .run_frames(vec![frame.clone()], &mut NativeEngine::default())
+            .unwrap()
+            .pop()
+            .expect("one frame in, one result out");
         let got = sharded
-            .run_frame_sharded(frame, &mut NativeEngine::default())
-            .unwrap();
+            .run_scenes(vec![frame], &mut NativeEngine::default())
+            .unwrap()
+            .pop()
+            .expect("one scene in, one result out");
         assert_eq!(
             want.checksum, got.checksum,
             "{profile} diverged under shard scheduling"

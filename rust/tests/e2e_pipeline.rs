@@ -40,17 +40,28 @@ fn frame(extent: Extent3, n: usize, seed: u64) -> SparseTensor {
     t
 }
 
+/// One frame through the lockstep loop — the non-deprecated spelling of
+/// the legacy `run_frame` (facade submissions go through
+/// `Pipeline::run(Job::Frame(..))`; see `tests/pipeline_api.rs`).
+fn run_one<E: voxel_cim::spconv::layer::GemmEngine>(
+    runner: &NetworkRunner,
+    t: SparseTensor,
+    engine: &mut E,
+) -> voxel_cim::coordinator::FrameResult {
+    runner
+        .run_frames(vec![t], engine)
+        .unwrap()
+        .pop()
+        .expect("one frame in, one result out")
+}
+
 #[test]
 fn native_run_is_deterministic() {
     let net = tiny_net();
     let input = frame(net.extent, 250, 201);
     let runner = NetworkRunner::new(net, RunnerConfig { batch: 64, workers: 2, seed: 5, ..Default::default() });
-    let a = runner
-        .run_frame(input.clone(), &mut NativeEngine::default())
-        .unwrap();
-    let b = runner
-        .run_frame(input, &mut NativeEngine::default())
-        .unwrap();
+    let a = run_one(&runner, input.clone(), &mut NativeEngine::default());
+    let b = run_one(&runner, input, &mut NativeEngine::default());
     assert_eq!(a.total_pairs(), b.total_pairs());
     assert_eq!(a.head_shape, b.head_shape);
     let last_a = &a.records.last().unwrap();
@@ -67,10 +78,8 @@ fn pjrt_and_native_agree_end_to_end() {
     let net = tiny_net();
     let input = frame(net.extent, 200, 202);
     let runner = NetworkRunner::new(net, RunnerConfig { batch: 64, workers: 2, seed: 6, ..Default::default() });
-    let native = runner
-        .run_frame(input.clone(), &mut NativeEngine::default())
-        .unwrap();
-    let pjrt = runner.run_frame(input, &mut rt).unwrap();
+    let native = run_one(&runner, input.clone(), &mut NativeEngine::default());
+    let pjrt = run_one(&runner, input, &mut rt);
     assert_eq!(native.head_shape, pjrt.head_shape);
     assert_eq!(native.total_pairs(), pjrt.total_pairs());
     // The per-layer output voxel counts and pair counts must agree
@@ -92,9 +101,7 @@ fn batch_size_does_not_change_results() {
             tiny_net(),
             RunnerConfig { batch, workers: 1, seed: 6, ..Default::default() },
         );
-        let res = runner
-            .run_frame(input.clone(), &mut NativeEngine::default())
-            .unwrap();
+        let res = run_one(&runner, input.clone(), &mut NativeEngine::default());
         // Head shape and pair totals are invariant under wave batching.
         // 24x24 voxel grid -> gconv2 -> 12x12 BEV -> stride-2 RPN -> 6x6.
         assert_eq!(res.head_shape, Some((6, 6, 32)));

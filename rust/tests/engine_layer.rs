@@ -6,6 +6,7 @@
 
 use voxel_cim::coordinator::scheduler::{NetworkRunner, RunnerConfig};
 use voxel_cim::coordinator::stream::StreamServer;
+use voxel_cim::dataset::ClosureSource;
 use voxel_cim::geom::Extent3;
 use voxel_cim::mapsearch::SearcherKind;
 use voxel_cim::model::layer::{LayerSpec, NetworkSpec, TaskKind};
@@ -73,8 +74,10 @@ fn runner_accepts_every_searcher_kind_with_identical_outputs() {
             },
         );
         let res = runner
-            .run_frame(make_frame(0), &mut NativeEngine::default())
-            .unwrap();
+            .run_frames(vec![make_frame(0)], &mut NativeEngine::default())
+            .unwrap()
+            .pop()
+            .expect("one frame in, one result out");
         assert!(res.total_pairs() > 0);
         // One record per layer; every sparse layer actually searched.
         let net = tiny_net();
@@ -108,7 +111,13 @@ fn batched_waves_are_bit_identical_and_amortize_dispatches() {
     let mut solo_engine = NativeEngine::default();
     let mut solo = Vec::new();
     for f in &frames {
-        solo.push(runner.run_frame(f.clone(), &mut solo_engine).unwrap());
+        solo.push(
+            runner
+                .run_frames(vec![f.clone()], &mut solo_engine)
+                .unwrap()
+                .pop()
+                .expect("one frame in, one result out"),
+        );
     }
 
     let mut wave_engine = NativeEngine::default();
@@ -147,8 +156,9 @@ fn stream_server_accepts_configured_searchers() {
             },
             4,
         );
+        let mut source = ClosureSource::new(make_frame);
         let report = srv
-            .serve_closure(4, make_frame, &mut NativeEngine::default())
+            .serve(4, &mut source, &mut NativeEngine::default())
             .unwrap();
         assert_eq!(report.completions.len(), 4, "{kind}");
         let ids: Vec<u64> = report.completions.iter().map(|c| c.id).collect();

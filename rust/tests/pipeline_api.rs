@@ -1,0 +1,352 @@
+//! Legacy-compat witness for the pipeline facade: `Pipeline::run(Job::*)`
+//! must be checksum-bit-identical to every legacy entry point it
+//! replaces — `run_frame`, `run_frame_sharded`, `run_frames`, `serve`,
+//! and `serve_closure` — for all six `SearcherKind`s, sharded and
+//! unsharded; and builder misconfigurations must surface as typed
+//! `PipelineError`s.
+//!
+//! This file is the ONE place deprecated entry points may still be
+//! called (the CI deprecation check builds everything else with
+//! `-D deprecated`): the comparisons below are exactly what the shims
+//! exist for.
+#![allow(deprecated)]
+
+use voxel_cim::coordinator::scheduler::{NetworkRunner, RunnerConfig};
+use voxel_cim::coordinator::shard::ShardConfig;
+use voxel_cim::coordinator::stream::StreamServer;
+use voxel_cim::dataset::ClosureSource;
+use voxel_cim::geom::Extent3;
+use voxel_cim::mapsearch::SearcherKind;
+use voxel_cim::model::layer::{LayerSpec, NetworkSpec, TaskKind};
+use voxel_cim::pipeline::{EngineKind, Job, Pipeline, PipelineConfig, PipelineError};
+use voxel_cim::pointcloud::voxelize::Voxelizer;
+use voxel_cim::sparse::SparseTensor;
+use voxel_cim::spconv::layer::NativeEngine;
+
+/// Segmentation net with a downsampling stage: shard plans get a real
+/// halo and the merge path real cross-block pairs.
+fn seg_net(extent: Extent3) -> NetworkSpec {
+    NetworkSpec {
+        name: "facade-seg",
+        task: TaskKind::Segmentation,
+        extent,
+        vfe_channels: 4,
+        layers: vec![
+            LayerSpec::Subm3 { c_in: 4, c_out: 8 },
+            LayerSpec::Subm3 { c_in: 8, c_out: 8 },
+            LayerSpec::GConv2 { c_in: 8, c_out: 16 },
+        ],
+    }
+}
+
+/// Detection-shaped net: sparse prefix, BEV flatten, one dense RPN layer
+/// — exercises the merged-scene dense suffix through the facade.
+fn det_net(extent: Extent3) -> NetworkSpec {
+    NetworkSpec {
+        name: "facade-det",
+        task: TaskKind::Detection,
+        extent,
+        vfe_channels: 4,
+        layers: vec![
+            LayerSpec::Subm3 { c_in: 4, c_out: 8 },
+            LayerSpec::GConv2 { c_in: 8, c_out: 16 },
+            LayerSpec::ToBev,
+            LayerSpec::Conv2d { c_in: 64, c_out: 16, k: 3, stride: 1 },
+        ],
+    }
+}
+
+fn make_frame(id: u64) -> SparseTensor {
+    // Uniform occupancy: every 2x2 shard block is populated, so the
+    // sharded comparisons below genuinely split each scene.
+    let e = Extent3::new(24, 24, 8);
+    let g = Voxelizer::synth_occupancy(e, 0.05, 7100 + id);
+    let mut t = SparseTensor::from_coords(e, g.coords(), 4);
+    for (i, v) in t.features.iter_mut().enumerate() {
+        *v = ((i as u64 + 3 * id) % 9) as i8;
+    }
+    t
+}
+
+/// A facade over `net` with this exact runner config and a fresh native
+/// engine — the same stack the legacy entry points are handed.
+fn facade(net: NetworkSpec, rc: RunnerConfig) -> Pipeline {
+    let cfg = PipelineConfig {
+        runner: rc,
+        engine: EngineKind::Native,
+        ..Default::default()
+    };
+    Pipeline::builder()
+        .config(cfg)
+        .network(net)
+        .engine(NativeEngine::default())
+        .build()
+        .expect("facade pipeline")
+}
+
+#[test]
+fn job_frame_matches_run_frame_and_run_frame_sharded_for_every_searcher() {
+    let e = Extent3::new(24, 24, 8);
+    for kind in SearcherKind::ALL {
+        for (sharded, shard) in [
+            (false, ShardConfig::default()),
+            (true, ShardConfig::grid(2, 2).unwrap()),
+        ] {
+            let rc = RunnerConfig {
+                searcher: kind,
+                shard,
+                batch: 64,
+                seed: 41,
+                ..Default::default()
+            };
+            let legacy = NetworkRunner::new(seg_net(e), rc);
+            let want = if sharded {
+                legacy
+                    .run_frame_sharded(make_frame(3), &mut NativeEngine::default())
+                    .unwrap()
+            } else {
+                legacy
+                    .run_frame(make_frame(3), &mut NativeEngine::default())
+                    .unwrap()
+            };
+            let mut pipe = facade(seg_net(e), rc);
+            let got = pipe
+                .run(Job::Frame(make_frame(3)))
+                .unwrap()
+                .into_frame()
+                .unwrap();
+            assert_eq!(
+                want.checksum, got.checksum,
+                "{kind} sharded={sharded}: facade diverged from the legacy entry point"
+            );
+            assert_eq!(want.out_voxels, got.out_voxels, "{kind} sharded={sharded}");
+            assert_eq!(want.shards, got.shards, "{kind} sharded={sharded}");
+            if sharded {
+                assert!(got.shards > 1, "{kind}: scene should actually shard");
+            }
+        }
+    }
+}
+
+#[test]
+fn job_frame_runs_the_dense_head_like_the_legacy_sharded_path() {
+    let e = Extent3::new(32, 32, 8);
+    let rc = RunnerConfig {
+        shard: ShardConfig::grid(2, 2).unwrap(),
+        batch: 64,
+        seed: 43,
+        ..Default::default()
+    };
+    let legacy = NetworkRunner::new(det_net(e), rc);
+    let want = legacy
+        .run_frame_sharded(make_big(e, 9), &mut NativeEngine::default())
+        .unwrap();
+    let mut pipe = facade(det_net(e), rc);
+    let got = pipe
+        .run(Job::Frame(make_big(e, 9)))
+        .unwrap()
+        .into_frame()
+        .unwrap();
+    assert!(got.shards > 1);
+    assert_eq!(want.checksum, got.checksum, "dense-head bits diverged");
+    assert_eq!(want.head_shape, got.head_shape);
+}
+
+fn make_big(e: Extent3, id: u64) -> SparseTensor {
+    let g = Voxelizer::synth_occupancy(e, 0.06, 9200 + id);
+    let mut t = SparseTensor::from_coords(e, g.coords(), 4);
+    for (i, v) in t.features.iter_mut().enumerate() {
+        *v = ((i as u64 + id) % 8) as i8;
+    }
+    t
+}
+
+#[test]
+fn job_window_matches_run_frames() {
+    let e = Extent3::new(24, 24, 8);
+    let rc = RunnerConfig {
+        batch: 64,
+        seed: 44,
+        ..Default::default()
+    };
+    let inputs: Vec<SparseTensor> = (0..3).map(make_frame).collect();
+    let legacy = NetworkRunner::new(seg_net(e), rc);
+    let want = legacy
+        .run_frames(inputs.clone(), &mut NativeEngine::default())
+        .unwrap();
+    let mut pipe = facade(seg_net(e), rc);
+    let got = pipe
+        .run(Job::Window(inputs))
+        .unwrap()
+        .into_window()
+        .unwrap();
+    assert_eq!(want.len(), got.len());
+    for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+        assert_eq!(a.checksum, b.checksum, "window member {i} diverged");
+        assert_eq!(a.out_voxels, b.out_voxels, "window member {i}");
+    }
+}
+
+#[test]
+fn job_stream_matches_legacy_serve_and_serve_closure() {
+    let e = Extent3::new(24, 24, 8);
+    const FRAMES: u64 = 6;
+    let rc = RunnerConfig {
+        inflight: 2,
+        seed: 45,
+        ..Default::default()
+    };
+    // Legacy direct-source serve.
+    let srv = StreamServer::new(seg_net(e), rc, 3);
+    let want = srv
+        .serve(
+            FRAMES,
+            &mut ClosureSource::new(make_frame),
+            &mut NativeEngine::default(),
+        )
+        .unwrap();
+    // Legacy prefetched closure serve.
+    let closure = srv
+        .serve_closure(FRAMES, make_frame, &mut NativeEngine::default())
+        .unwrap();
+    // Facade stream job.
+    let cfg = PipelineConfig {
+        runner: rc,
+        dataset: voxel_cim::dataset::DatasetConfig {
+            frames: FRAMES,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut pipe = Pipeline::builder()
+        .config(cfg)
+        .network(seg_net(e))
+        .engine(NativeEngine::default())
+        .build()
+        .unwrap();
+    let got = pipe
+        .run(Job::stream(ClosureSource::new(make_frame)))
+        .unwrap()
+        .into_stream()
+        .unwrap();
+    assert_eq!(want.completions.len(), FRAMES as usize);
+    assert_eq!(got.completions.len(), FRAMES as usize);
+    assert_eq!(closure.completions.len(), FRAMES as usize);
+    for ((a, b), c) in want
+        .completions
+        .iter()
+        .zip(&got.completions)
+        .zip(&closure.completions)
+    {
+        assert_eq!(a.id, b.id);
+        assert_eq!(
+            a.result.checksum, b.result.checksum,
+            "frame {}: facade stream diverged from legacy serve",
+            a.id
+        );
+        assert_eq!(
+            a.result.checksum, c.result.checksum,
+            "frame {}: serve_closure diverged",
+            a.id
+        );
+    }
+    assert!(pipe.dispatches() > 0, "owned engine saw the stream");
+}
+
+#[test]
+fn facade_owns_the_engine_across_jobs() {
+    // No `&mut E` anywhere: consecutive jobs accumulate on the one owned
+    // engine, and the caller never touches it.
+    let e = Extent3::new(24, 24, 8);
+    let mut pipe = facade(seg_net(e), RunnerConfig { seed: 46, ..Default::default() });
+    pipe.run(Job::Frame(make_frame(0))).unwrap();
+    let after_one = pipe.dispatches();
+    pipe.run(Job::Window(vec![make_frame(1), make_frame(2)]))
+        .unwrap();
+    assert!(after_one > 0);
+    assert!(pipe.dispatches() > after_one, "dispatches accumulate");
+}
+
+#[test]
+fn builder_validation_errors_are_typed_config_errors() {
+    use voxel_cim::dataset::DatasetConfig;
+    use voxel_cim::serving::{AdmissionConfig, AdmissionPolicy, ServingConfig};
+
+    // Shedding admission policy without an SLO target.
+    let cfg = PipelineConfig {
+        serving: ServingConfig {
+            admission: AdmissionConfig {
+                policy: AdmissionPolicy::DropOldest,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let err = Pipeline::builder().config(cfg).build().unwrap_err();
+    match err.downcast_ref::<PipelineError>() {
+        Some(PipelineError::InvalidConfig(msg)) => {
+            assert!(msg.contains("slo"), "{msg}")
+        }
+        other => panic!("expected InvalidConfig, got {other:?} ({err:#})"),
+    }
+
+    // Path-shaped dataset source that does not exist.
+    let cfg = PipelineConfig {
+        dataset: DatasetConfig {
+            source: "/no/such/kitti/velodyne".into(),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let err = Pipeline::builder().config(cfg).build().unwrap_err();
+    match err.downcast_ref::<PipelineError>() {
+        Some(PipelineError::InvalidConfig(msg)) => {
+            assert!(msg.contains("/no/such/kitti/velodyne"), "{msg}");
+            assert!(msg.contains("does not exist"), "{msg}");
+        }
+        other => panic!("expected InvalidConfig, got {other:?} ({err:#})"),
+    }
+
+    // Unknown profile in the sequence list.
+    let cfg = PipelineConfig {
+        serving: ServingConfig {
+            sequences: vec!["urban".into(), "wormhole".into()],
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let err = Pipeline::builder().config(cfg).build().unwrap_err();
+    match err.downcast_ref::<PipelineError>() {
+        Some(PipelineError::InvalidConfig(msg)) => {
+            assert!(msg.contains("sequence 1"), "{msg}")
+        }
+        other => panic!("expected InvalidConfig, got {other:?} ({err:#})"),
+    }
+
+    // `engine = "pjrt"` that cannot load (feature off, or artifacts
+    // missing) errors at engine resolution as EngineUnavailable (an
+    // environment problem, not a config typo) — and only when the
+    // builder actually resolves from the config; an explicit engine
+    // wins.
+    #[cfg(not(feature = "pjrt"))]
+    {
+        let cfg = PipelineConfig {
+            engine: EngineKind::Pjrt,
+            ..Default::default()
+        };
+        let err = Pipeline::builder().config(cfg.clone()).build().unwrap_err();
+        match err.downcast_ref::<PipelineError>() {
+            Some(PipelineError::EngineUnavailable(msg)) => {
+                assert!(msg.contains("pjrt"), "{msg}")
+            }
+            other => panic!("expected EngineUnavailable, got {other:?} ({err:#})"),
+        }
+        // Same config + caller-supplied engine builds fine.
+        Pipeline::builder()
+            .config(cfg)
+            .engine(NativeEngine::default())
+            .build()
+            .expect("explicit engine overrides the config's pjrt kind");
+    }
+}

@@ -407,11 +407,15 @@ fn cross_scene_window_runs_dense_heads_grouped_bit_identically() {
     let big = mixed_frame(0);
     let small = mixed_frame(1);
     let want_big = runner
-        .run_frame_sharded(big.clone(), &mut NativeEngine::default())
-        .unwrap();
+        .run_scenes(vec![big.clone()], &mut NativeEngine::default())
+        .unwrap()
+        .pop()
+        .expect("one scene in, one result out");
     let want_small = runner
-        .run_frame_sharded(small.clone(), &mut NativeEngine::default())
-        .unwrap();
+        .run_scenes(vec![small.clone()], &mut NativeEngine::default())
+        .unwrap()
+        .pop()
+        .expect("one scene in, one result out");
     assert!(want_big.shards > 1, "big det scene should shard");
     let got = runner
         .run_scenes(vec![big, small], &mut NativeEngine::default())

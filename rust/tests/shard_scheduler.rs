@@ -5,7 +5,7 @@
 //! in composition with W2B-aware wave packing. The halo math is what
 //! makes this hold across shard edges; these tests are its witness.
 
-use voxel_cim::coordinator::scheduler::{NetworkRunner, RunnerConfig};
+use voxel_cim::coordinator::scheduler::{FrameResult, NetworkRunner, RunnerConfig};
 use voxel_cim::coordinator::shard::ShardConfig;
 use voxel_cim::geom::Extent3;
 use voxel_cim::mapsearch::SearcherKind;
@@ -71,6 +71,26 @@ fn scene(e: Extent3, n: usize, channels: usize, seed: u64) -> SparseTensor {
     featured(SparseTensor::from_coords(e, g.coords(), 1), channels, seed ^ 0x5eed)
 }
 
+/// One frame through the plain lockstep loop (never sharded) — the
+/// non-deprecated spelling of the legacy `run_frame`.
+fn run_plain(runner: &NetworkRunner, t: SparseTensor) -> FrameResult {
+    runner
+        .run_frames(vec![t], &mut NativeEngine::default())
+        .unwrap()
+        .pop()
+        .expect("one frame in, one result out")
+}
+
+/// One scene through the shard-scheduling window executor — the
+/// non-deprecated spelling of the legacy `run_frame_sharded`.
+fn run_sharded(runner: &NetworkRunner, t: SparseTensor) -> FrameResult {
+    runner
+        .run_scenes(vec![t], &mut NativeEngine::default())
+        .unwrap()
+        .pop()
+        .expect("one scene in, one result out")
+}
+
 fn runner_with(net: NetworkSpec, shard: ShardConfig, kind: SearcherKind, w2b: u32) -> NetworkRunner {
     NetworkRunner::new(
         net,
@@ -99,12 +119,8 @@ fn sharded_runs_are_bit_identical_for_every_searcher_and_partition() {
                 kind,
                 0,
             );
-            let want = runner
-                .run_frame(t.clone(), &mut NativeEngine::default())
-                .unwrap();
-            let got = runner
-                .run_frame_sharded(t.clone(), &mut NativeEngine::default())
-                .unwrap();
+            let want = run_plain(&runner, t.clone());
+            let got = run_sharded(&runner, t.clone());
             assert_eq!(
                 want.checksum, got.checksum,
                 "{kind} diverged at {bx}x{by} on {} voxels at {e:?}",
@@ -122,10 +138,8 @@ fn detection_head_runs_on_the_merged_scene() {
     let e = Extent3::new(48, 48, 8);
     let t = scene(e, 400, 4, 77);
     let runner = runner_with(det_net(e), ShardConfig::grid(2, 2).unwrap(), SearcherKind::Doms, 0);
-    let want = runner.run_frame(t.clone(), &mut NativeEngine::default()).unwrap();
-    let got = runner
-        .run_frame_sharded(t, &mut NativeEngine::default())
-        .unwrap();
+    let want = run_plain(&runner, t.clone());
+    let got = run_sharded(&runner, t);
     assert!(got.shards > 1, "scene should actually shard");
     assert_eq!(want.checksum, got.checksum, "dense head bits diverged");
     assert_eq!(want.head_shape, got.head_shape);
@@ -142,10 +156,8 @@ fn minkunet_decoder_shards_bit_identically() {
     let e = net.extent;
     let t = scene(e, 500, 4, 91);
     let runner = runner_with(net, ShardConfig::grid(2, 2).unwrap(), SearcherKind::Doms, 0);
-    let want = runner.run_frame(t.clone(), &mut NativeEngine::default()).unwrap();
-    let got = runner
-        .run_frame_sharded(t, &mut NativeEngine::default())
-        .unwrap();
+    let want = run_plain(&runner, t.clone());
+    let got = run_sharded(&runner, t);
     assert!(got.shards > 1);
     assert_eq!(want.checksum, got.checksum, "UNet bits diverged under sharding");
     assert_eq!(want.out_voxels, got.out_voxels);
@@ -163,10 +175,8 @@ fn empty_blocks_drop_without_losing_bits() {
     );
     let t = featured(SparseTensor::from_coords(e, corner.coords(), 1), 4, 14);
     let runner = runner_with(seg_net(e), ShardConfig::grid(4, 2).unwrap(), SearcherKind::Doms, 0);
-    let want = runner.run_frame(t.clone(), &mut NativeEngine::default()).unwrap();
-    let got = runner
-        .run_frame_sharded(t, &mut NativeEngine::default())
-        .unwrap();
+    let want = run_plain(&runner, t.clone());
+    let got = run_sharded(&runner, t);
     assert!(got.shards > 1, "expected several live shards");
     assert!(got.shards < 8, "empty blocks should have been dropped");
     assert_eq!(want.checksum, got.checksum);
@@ -182,10 +192,8 @@ fn auto_threshold_gates_sharding() {
     };
     let runner = runner_with(seg_net(e), gated, SearcherKind::Doms, 0);
     let plain = runner_with(seg_net(e), ShardConfig::default(), SearcherKind::Doms, 0);
-    let got = runner
-        .run_frame_sharded(t.clone(), &mut NativeEngine::default())
-        .unwrap();
-    let want = plain.run_frame(t, &mut NativeEngine::default()).unwrap();
+    let got = run_sharded(&runner, t.clone());
+    let want = run_plain(&plain, t);
     assert_eq!(got.shards, 1, "below-threshold scene must not shard");
     assert_eq!(got.checksum, want.checksum);
 }
@@ -195,15 +203,13 @@ fn w2b_packing_composes_with_sharding_bit_identically() {
     let e = Extent3::new(40, 40, 8);
     let t = scene(e, 350, 4, 66);
     let base = runner_with(seg_net(e), ShardConfig::default(), SearcherKind::Doms, 0);
-    let want = base.run_frame(t.clone(), &mut NativeEngine::default()).unwrap();
+    let want = run_plain(&base, t.clone());
     // W2B packing alone, then W2B + sharding: both bit-identical.
     let w2b = runner_with(seg_net(e), ShardConfig::default(), SearcherKind::Doms, 2);
-    let got = w2b.run_frame(t.clone(), &mut NativeEngine::default()).unwrap();
+    let got = run_plain(&w2b, t.clone());
     assert_eq!(want.checksum, got.checksum, "W2B packing changed the bits");
     let both = runner_with(seg_net(e), ShardConfig::grid(2, 2).unwrap(), SearcherKind::Doms, 2);
-    let got = both
-        .run_frame_sharded(t, &mut NativeEngine::default())
-        .unwrap();
+    let got = run_sharded(&both, t);
     assert!(got.shards > 1);
     assert_eq!(want.checksum, got.checksum, "W2B + sharding changed the bits");
 }
