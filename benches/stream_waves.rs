@@ -1,6 +1,6 @@
 //! Bench: batched multi-frame GEMM waves on the stream path — the
 //! engine-layer feature that packs rule pairs from all in-flight frames
-//! into shared sub-matrix dispatches. Four sweeps plus a CI smoke mode,
+//! into shared sub-matrix dispatches. Five sweeps plus a CI smoke mode,
 //! all submitted through the pipeline facade (`Pipeline::run(Job::..)`,
 //! the engine owned by the pipeline):
 //!
@@ -18,13 +18,17 @@
 //!   strict dispatch reduction asserted — then the SLO admission
 //!   frontier (drop-oldest / defer-sharding / reject-over-depth) over
 //!   the attributed-latency p95.
+//! * **delta sweep**: an ego-motion drift stream served cold vs warm
+//!   through the temporal delta map-search cache — per-frame
+//!   bit-identity asserted, cold-vs-warm p50/p95 and blocks-searched
+//!   vs frame index printed with the stream's reuse ratio.
 //!
 //! ```sh
 //! cargo bench --bench stream_waves             # full sweeps
 //! cargo bench --bench stream_waves -- --smoke  # CI: one tick over the
 //!                                              # checked-in KITTI fixture
-//!                                              # + a mixed-profile
-//!                                              # serving tick
+//!                                              # + serving + warm-cache
+//!                                              # ticks
 //! ```
 
 use voxel_cim::bench_util::bench;
@@ -36,6 +40,7 @@ use voxel_cim::dataset::{
     ScenarioProfile,
 };
 use voxel_cim::geom::Extent3;
+use voxel_cim::mapsearch::DeltaConfig;
 use voxel_cim::model::layer::{LayerSpec, NetworkSpec, TaskKind};
 use voxel_cim::pipeline::{Job, Pipeline, PipelineConfig};
 use voxel_cim::pointcloud::voxelize::Voxelizer;
@@ -173,6 +178,7 @@ fn main() {
     shard_sweep();
     profile_sweep();
     serving_sweep();
+    delta_sweep();
 }
 
 /// Shard-count sweep: one oversized scene per frame, served at 1 / 2x2 /
@@ -448,10 +454,88 @@ fn serving_sweep() {
     }
 }
 
+/// Delta sweep: the temporal delta map-search cache over an ego-motion
+/// drift stream — the same frames served cold (cache off) and warm,
+/// with per-frame bit-identity asserted, the cold-vs-warm latency
+/// distributions printed, and the warm run's blocks-searched curve
+/// traced against the frame index (the compulsory-cold first frame,
+/// then the steady dirty + halo band).
+fn delta_sweep() {
+    const FRAMES: u64 = 8;
+    let extent = Extent3::new(64, 64, 12);
+    println!("\n# delta sweep — temporal map-search cache over an ego-motion stream");
+    let source = || {
+        let inner = ProfileSource::new(ScenarioProfile::Urban, extent, 0.02, 0xDE17A)
+            .with_drift(1.0)
+            .with_channels(8);
+        PrefetchSource::spawn(Box::new(inner), 2)
+    };
+    let mut reports = Vec::new();
+    for enabled in [false, true] {
+        let cfg = RunnerConfig {
+            // One frame per window so every warm frame plans against its
+            // predecessor's committed cache entry.
+            inflight: 1,
+            compute_workers: 1,
+            delta: DeltaConfig {
+                enabled,
+                blocks_x: 16,
+                blocks_y: 16,
+                ..DeltaConfig::default()
+            },
+            ..Default::default()
+        };
+        let mut pipe = mk_pipe(net(), cfg, ServingConfig::default(), FRAMES);
+        let report = pipe
+            .run(Job::stream(source()))
+            .unwrap()
+            .into_stream()
+            .unwrap();
+        assert_eq!(report.completions.len(), FRAMES as usize);
+        println!(
+            "delta {:<4} {:.2} fps | {} | {} searched | {} reused ({:.1}% reuse) | \
+             {} dispatches",
+            if enabled { "on" } else { "off" },
+            report.throughput_fps(),
+            latency_line(&report),
+            report.blocks_searched,
+            report.blocks_reused,
+            report.reuse_ratio() * 100.0,
+            pipe.dispatches(),
+        );
+        reports.push(report);
+    }
+    let (cold, warm) = (&reports[0], &reports[1]);
+    for (a, b) in cold.completions.iter().zip(&warm.completions) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(
+            a.result.checksum, b.result.checksum,
+            "frame {} diverged with the delta cache on",
+            a.id
+        );
+    }
+    assert!(
+        warm.blocks_reused > 0,
+        "the ego-motion stream must reuse blocks once warm"
+    );
+    for c in &warm.completions {
+        println!(
+            "frame {}: {} blocks searched | {} reused",
+            c.id, c.result.blocks_searched, c.result.blocks_reused
+        );
+    }
+    println!(
+        "delta sweep bit-identical; stream reuse {:.1}%",
+        warm.reuse_ratio() * 100.0
+    );
+}
+
 /// CI smoke: one serving tick over the checked-in KITTI fixture — the
 /// on-disk reader → voxelizer → stream-server path end to end — plus a
 /// mixed-profile serving tick exercising the sequence mux and the
-/// cross-scene window packer, in a few hundred milliseconds.
+/// cross-scene window packer, and a warm-cache tick asserting the
+/// temporal delta cache reuses blocks without changing a single bit.
+/// A few hundred milliseconds in total.
 fn smoke() {
     println!("# stream_waves --smoke — KITTI fixture, one tick");
     let fixture = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/kitti");
@@ -492,7 +576,8 @@ fn smoke() {
         );
     }
     println!("smoke ok: {} frames served", report.completions.len());
-    serving_smoke(net);
+    serving_smoke(net.clone());
+    delta_smoke(net);
 }
 
 /// The serving-scheduler smoke: a two-sequence mux served through
@@ -565,4 +650,55 @@ fn serving_smoke(net: NetworkSpec) {
          ({cross_calls} vs {excl_calls})"
     );
     println!("serving smoke ok: bit-identical, {cross_calls} vs {excl_calls} dispatches");
+}
+
+/// The warm-cache smoke: a short ego-motion drift stream served cold and
+/// warm — per-frame checksum equality against the cold pass plus a
+/// nonzero reuse ratio asserted on every push.
+fn delta_smoke(net: NetworkSpec) {
+    println!("\n# --smoke delta tick — warm temporal cache vs cold, drift stream");
+    let extent = net.extent;
+    let source = || {
+        ProfileSource::new(ScenarioProfile::Urban, extent, 0.08, 0xD3)
+            .with_drift(1.0)
+            .with_frames(4)
+    };
+    let mut reports = Vec::new();
+    for enabled in [false, true] {
+        let cfg = RunnerConfig {
+            inflight: 1,
+            compute_workers: 1,
+            delta: DeltaConfig {
+                enabled,
+                ..DeltaConfig::default()
+            },
+            ..Default::default()
+        };
+        let mut pipe = mk_pipe(net.clone(), cfg, ServingConfig::default(), 4);
+        let report = pipe
+            .run(Job::stream(source()))
+            .unwrap()
+            .into_stream()
+            .unwrap();
+        assert_eq!(report.completions.len(), 4);
+        reports.push(report);
+    }
+    let (cold, warm) = (&reports[0], &reports[1]);
+    for (a, b) in cold.completions.iter().zip(&warm.completions) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(
+            a.result.checksum, b.result.checksum,
+            "frame {} diverged with the warm cache",
+            a.id
+        );
+    }
+    assert_eq!(cold.blocks_searched + cold.blocks_reused, 0, "cache off is free");
+    assert!(warm.blocks_reused > 0, "warm drift stream must reuse blocks");
+    assert!(warm.reuse_ratio() > 0.0);
+    println!(
+        "delta smoke ok: bit-identical, {} searched | {} reused ({:.1}% reuse)",
+        warm.blocks_searched,
+        warm.blocks_reused,
+        warm.reuse_ratio() * 100.0
+    );
 }

@@ -18,8 +18,9 @@ use std::time::Instant;
 
 use crate::cim::w2b::copies_for_factor;
 use crate::coordinator::executor::WorkerPool;
-use crate::coordinator::shard::{ShardConfig, ShardPlan};
+use crate::coordinator::shard::{delta_slot_specs, ShardConfig, ShardPlan};
 use crate::geom::{Coord3, Extent3};
+use crate::mapsearch::delta::{self, DeltaCache, DeltaConfig, DeltaKey, FrameDelta, SlotSpec};
 use crate::mapsearch::{AccessStats, MapSearch, SearcherKind};
 use crate::model::layer::{LayerSpec, NetworkSpec};
 use crate::sparse::rulebook::{ConvKind, Rulebook};
@@ -54,6 +55,9 @@ pub struct RunnerConfig {
     /// Block-shard scheduling of oversized scenes (`1x1` grid = off);
     /// see [`crate::coordinator::shard`].
     pub shard: ShardConfig,
+    /// Temporal delta map-search cache for streamed sequences (off by
+    /// default); see [`crate::mapsearch::delta`].
+    pub delta: DeltaConfig,
     /// Weight seed (weights are random — hardware cost is value-free).
     pub seed: u64,
 }
@@ -68,6 +72,7 @@ impl Default for RunnerConfig {
             searcher: SearcherKind::Doms,
             w2b_factor: 0,
             shard: ShardConfig::default(),
+            delta: DeltaConfig::default(),
             seed: 0x5EC0,
         }
     }
@@ -91,6 +96,7 @@ impl RunnerConfig {
             w2b_factor: u32::try_from(cfg.usize_or("runner.w2b_factor", d.w2b_factor as usize)?)
                 .map_err(|_| anyhow::anyhow!("runner.w2b_factor out of u32 range"))?,
             shard: ShardConfig::from_config(cfg)?,
+            delta: DeltaConfig::from_config(cfg)?,
             seed: cfg.int_or("runner.seed", d.seed as i64) as u64,
         })
     }
@@ -133,6 +139,13 @@ pub struct FrameResult {
     /// not sum this across a group; per-frame compute attribution lives
     /// in `records[..].compute_seconds`.
     pub total_seconds: f64,
+    /// Blocks map-searched for this frame by the temporal delta cache
+    /// (dirty + halo ring on warm frames, all occupied blocks on cold
+    /// ones). Zero when the cache is disabled.
+    pub blocks_searched: u64,
+    /// Blocks whose rulebook fragments were spliced from the cache
+    /// instead of searched. Zero when the cache is disabled.
+    pub blocks_reused: u64,
 }
 
 impl FrameResult {
@@ -183,6 +196,12 @@ struct FrameState {
     /// upsampling stage).
     skip_stack: Vec<(Extent3, Vec<Coord3>)>,
     records: Vec<LayerRecord>,
+    /// Temporal delta plan for this frame (dirty blocks + cached
+    /// fragments per fresh-subm3 slot); `None` when the cache is off.
+    delta: Option<FrameDelta>,
+    /// Delta-cache counters accumulated across this frame's slots.
+    searched: u64,
+    reused: u64,
 }
 
 /// One frame's rolling output from a [`NetworkRunner::run_group`] pass:
@@ -191,6 +210,11 @@ struct GroupRun {
     records: Vec<LayerRecord>,
     cur: Arc<SparseTensor>,
     bev: Option<DenseMap>,
+    /// Finished delta plan, carrying the fragments to commit back to
+    /// the cache once the whole window has planned against prior state.
+    delta: Option<FrameDelta>,
+    searched: u64,
+    reused: u64,
 }
 
 /// How one frame obtains its rulebook for a sparse layer.
@@ -279,7 +303,7 @@ impl NetworkRunner {
         engine: &mut E,
     ) -> crate::Result<Vec<FrameResult>> {
         let t0 = Instant::now();
-        let runs = self.run_group(&self.net.layers, inputs, engine, self.cfg.seed)?;
+        let runs = self.run_group(&self.net.layers, inputs, Vec::new(), engine, self.cfg.seed)?;
         let total = t0.elapsed().as_secs_f64();
         Ok(runs
             .into_iter()
@@ -293,10 +317,18 @@ impl NetworkRunner {
     /// prefix on shard pseudo-frames and then the dense suffix on the
     /// merged scene with `seed0` advanced past the prefix's weights, so
     /// every layer sees exactly the weights the unsharded run would.
+    ///
+    /// `deltas` carries one optional temporal delta plan per frame
+    /// (empty = cache off for the whole group): each fresh subm3 search
+    /// claims the frame's next slot and runs [`delta::delta_search`]
+    /// instead of a full search. Slot order is safe by construction —
+    /// [`delta_slot_specs`] mirrors this loop's rulebook-sharing rule,
+    /// and exhausted slots simply fall back to the plain search.
     fn run_group<E: GemmEngine>(
         &self,
         layers: &[LayerSpec],
         inputs: Vec<SparseTensor>,
+        deltas: Vec<Option<FrameDelta>>,
         engine: &mut E,
         seed0: u64,
     ) -> crate::Result<Vec<GroupRun>> {
@@ -304,6 +336,11 @@ impl NetworkRunner {
         if nf == 0 {
             return Ok(Vec::new());
         }
+        debug_assert!(
+            deltas.is_empty() || deltas.len() == nf,
+            "one delta plan per frame when the cache is on"
+        );
+        let mut deltas = deltas.into_iter().chain(std::iter::repeat_with(|| None));
         let mut frames: Vec<FrameState> = inputs
             .into_iter()
             .map(|cur| FrameState {
@@ -312,6 +349,9 @@ impl NetworkRunner {
                 shared_rb: None,
                 skip_stack: Vec::new(),
                 records: Vec::new(),
+                delta: deltas.next().flatten(),
+                searched: 0,
+                reused: 0,
             })
             .collect();
         let mut weight_seed = seed0;
@@ -377,10 +417,37 @@ impl NetworkRunner {
                                 1,
                             );
                             let searcher = Arc::clone(&self.searcher);
+                            // A fresh subm3 search claims the frame's
+                            // next delta slot (if any); other kinds and
+                            // slots past the static walk take the plain
+                            // full search.
+                            let slot = match kind {
+                                ConvKind::Submanifold { k } => f
+                                    .delta
+                                    .as_mut()
+                                    .and_then(FrameDelta::take_slot)
+                                    .map(|task| (k, task)),
+                                _ => None,
+                            };
                             handles.push((plans.len(), self.pool.submit(move || {
                                 let t = Instant::now();
-                                let (rb, st) = searcher.search(&coords_tensor, kind);
-                                (rb, st, t.elapsed().as_secs_f64())
+                                let (rb, st, outcome) = match slot {
+                                    Some((k, task)) => {
+                                        let (rb, st, out) = delta::delta_search(
+                                            searcher.as_ref(),
+                                            &coords_tensor,
+                                            k,
+                                            &task,
+                                        );
+                                        (rb, st, Some((task.index, out)))
+                                    }
+                                    None => {
+                                        let (rb, st) =
+                                            searcher.search(&coords_tensor, kind);
+                                        (rb, st, None)
+                                    }
+                                };
+                                (rb, st, t.elapsed().as_secs_f64(), outcome)
                             })));
                             plans.push(RbPlan::Pooled);
                         }
@@ -401,9 +468,17 @@ impl NetworkRunner {
                             }
                             RbPlan::Inline(rb, st, secs) => rbs.push((rb, st, secs)),
                             RbPlan::Pooled => {
-                                let (idx, (rb, st, secs)) =
+                                let (idx, (rb, st, secs, outcome)) =
                                     searched.next().expect("one search per pooled plan");
                                 debug_assert_eq!(idx, fi);
+                                if let Some((slot, out)) = outcome {
+                                    let f = &mut frames[fi];
+                                    f.searched += out.searched;
+                                    f.reused += out.reused;
+                                    if let Some(d) = f.delta.as_mut() {
+                                        d.record(slot, out.frags);
+                                    }
+                                }
                                 let rb = Arc::new(rb);
                                 frames[fi].shared_rb =
                                     matches!(kind, ConvKind::Submanifold { .. })
@@ -540,6 +615,9 @@ impl NetworkRunner {
                 records: f.records,
                 cur: f.cur,
                 bev: f.bev,
+                delta: f.delta,
+                searched: f.searched,
+                reused: f.reused,
             })
             .collect())
     }
@@ -593,22 +671,57 @@ impl NetworkRunner {
     /// [`Self::run_frames`]); per-scene attribution lives in the
     /// records.
     ///
-    /// Falls back to [`Self::run_frames`] (one group over the whole
-    /// network) when no scene shards — sharding off, scenes below the
-    /// auto threshold, plans collapsing to one non-empty shard, or an
-    /// empty sparse prefix.
+    /// Falls back to a single lockstep group over the whole network
+    /// (the [`Self::run_frames`] shape) when no scene shards — sharding
+    /// off, scenes below the auto threshold, plans collapsing to one
+    /// non-empty shard, or an empty sparse prefix.
     pub fn run_scenes<E: GemmEngine>(
         &self,
         inputs: Vec<SparseTensor>,
         engine: &mut E,
     ) -> crate::Result<Vec<FrameResult>> {
+        self.run_scenes_delta(inputs, None, engine)
+    }
+
+    /// [`Self::run_scenes`] with an optional temporal delta cache: one
+    /// sequence id per scene (window order) plus the serve-scoped
+    /// [`DeltaCache`]. Warm frames re-search only dirty blocks plus the
+    /// receptive-cone halo ring and splice the rest of the rulebook from
+    /// the cache — bit-identical to the cold path by construction (hash
+    /// invalidation, canonical rulebooks); only the blocks-searched /
+    /// blocks-reused counters and the search cost change. Plans are made
+    /// against pre-window cache state for every scene of the window and
+    /// committed in window order afterwards, so lockstep grouping never
+    /// sees mid-window cache mutation.
+    pub fn run_scenes_delta<E: GemmEngine>(
+        &self,
+        inputs: Vec<SparseTensor>,
+        mut delta: Option<(&[u32], &mut DeltaCache)>,
+        engine: &mut E,
+    ) -> crate::Result<Vec<FrameResult>> {
         if inputs.is_empty() {
             return Ok(Vec::new());
+        }
+        if let Some((seqs, _)) = &delta {
+            anyhow::ensure!(
+                seqs.len() == inputs.len(),
+                "one sequence id per scene ({} vs {} scenes)",
+                seqs.len(),
+                inputs.len()
+            );
         }
         let sc = self.cfg.shard;
         let n_layers = self.net.layers.len();
         let split = self.net.layers.iter().position(|l| !l.is_sparse()).unwrap_or(n_layers);
         let (prefix, suffix) = self.net.layers.split_at(split);
+        // The slot walk stops at the first non-subm3-compatible layer,
+        // so it is identical whether the group runs the whole network
+        // (fallback) or just the sparse prefix (sharded path).
+        let specs: Arc<Vec<SlotSpec>> = Arc::new(if delta.is_some() {
+            delta_slot_specs(&self.net.layers)
+        } else {
+            Vec::new()
+        });
         let t0 = Instant::now();
         let mut plans: Vec<Option<ShardPlan>> = Vec::with_capacity(inputs.len());
         for t in &inputs {
@@ -621,21 +734,81 @@ impl NetworkRunner {
             plans.push(plan);
         }
         if plans.iter().all(Option::is_none) {
-            return self.run_frames(inputs, engine);
+            // No scene shards: one lockstep group over the whole
+            // network, each scene planned against its (sequence, whole
+            // scene) cache entry.
+            let frame_deltas: Vec<Option<FrameDelta>> = match &delta {
+                Some((seqs, cache)) => inputs
+                    .iter()
+                    .zip(seqs.iter())
+                    .map(|(t, &sequence)| {
+                        Some(cache.begin_frame(
+                            DeltaKey { sequence, shard: None },
+                            t,
+                            &specs,
+                        ))
+                    })
+                    .collect(),
+                None => Vec::new(),
+            };
+            let mut runs =
+                self.run_group(&self.net.layers, inputs, frame_deltas, engine, self.cfg.seed)?;
+            if let Some((_, cache)) = delta.as_mut() {
+                for r in &mut runs {
+                    if let Some(fd) = r.delta.take() {
+                        cache.commit(fd);
+                    }
+                }
+            }
+            let total = t0.elapsed().as_secs_f64();
+            return Ok(runs
+                .into_iter()
+                .map(|r| finalize_frame(r, 1, total))
+                .collect());
         }
         // The cross-scene pseudo-frame group, in scene order: a planned
-        // scene expands into its shards, a plain scene stays whole.
+        // scene expands into its shards (cached per (sequence, block)),
+        // a plain scene stays whole.
         let mut pseudo: Vec<SparseTensor> = Vec::new();
-        for (input, plan) in inputs.into_iter().zip(&plans) {
+        let mut frame_deltas: Vec<Option<FrameDelta>> = Vec::new();
+        for (i, (input, plan)) in inputs.into_iter().zip(&plans).enumerate() {
             match plan {
-                Some(p) => pseudo.extend(p.shards.iter().map(|s| s.tensor.clone())),
-                None => pseudo.push(input),
+                Some(p) => {
+                    for s in &p.shards {
+                        if let Some((seqs, cache)) = &delta {
+                            frame_deltas.push(Some(cache.begin_frame(
+                                DeltaKey { sequence: seqs[i], shard: Some(s.block) },
+                                &s.tensor,
+                                &specs,
+                            )));
+                        }
+                        pseudo.push(s.tensor.clone());
+                    }
+                }
+                None => {
+                    if let Some((seqs, cache)) = &delta {
+                        frame_deltas.push(Some(cache.begin_frame(
+                            DeltaKey { sequence: seqs[i], shard: None },
+                            &input,
+                            &specs,
+                        )));
+                    }
+                    pseudo.push(input);
+                }
             }
         }
-        let runs = self.run_group(prefix, pseudo, engine, self.cfg.seed)?;
+        let mut runs = self.run_group(prefix, pseudo, frame_deltas, engine, self.cfg.seed)?;
+        if let Some((_, cache)) = delta.as_mut() {
+            for r in &mut runs {
+                if let Some(fd) = r.delta.take() {
+                    cache.commit(fd);
+                }
+            }
+        }
         // Collapse pseudo-frame runs back to per-scene prefix outputs.
         let mut runs = runs.into_iter();
         let mut records_per: Vec<Vec<LayerRecord>> = Vec::with_capacity(plans.len());
+        let mut counters_per: Vec<(u64, u64)> = Vec::with_capacity(plans.len());
         let mut merged: Vec<SparseTensor> = Vec::with_capacity(plans.len());
         let mut shard_counts: Vec<u32> = Vec::with_capacity(plans.len());
         for plan in &plans {
@@ -645,12 +818,20 @@ impl NetworkRunner {
                         runs.by_ref().take(p.shards.len()).collect();
                     debug_assert_eq!(scene_runs.len(), p.shards.len());
                     records_per.push(merge_records(scene_runs.iter().map(|r| &r.records)));
+                    let mut searched = 0;
+                    let mut reused = 0;
+                    for r in &scene_runs {
+                        searched += r.searched;
+                        reused += r.reused;
+                    }
+                    counters_per.push((searched, reused));
                     merged.push(p.merge(scene_runs.iter().map(|r| r.cur.as_ref()))?);
                     shard_counts.push(p.shards.len() as u32);
                 }
                 None => {
                     let r = runs.next().expect("one run per plain scene");
                     records_per.push(r.records);
+                    counters_per.push((r.searched, r.reused));
                     merged.push(
                         Arc::try_unwrap(r.cur).unwrap_or_else(|arc| (*arc).clone()),
                     );
@@ -662,27 +843,37 @@ impl NetworkRunner {
             merged
                 .into_iter()
                 .zip(records_per)
-                .map(|(cur, records)| GroupRun {
+                .zip(&counters_per)
+                .map(|((cur, records), &(searched, reused))| GroupRun {
                     records,
                     cur: Arc::new(cur),
                     bev: None,
+                    delta: None,
+                    searched,
+                    reused,
                 })
                 .collect()
         } else {
             // Dense heads run as their own lockstep group over the
             // merged scenes; the weight-seed sequence continues exactly
-            // where the prefix left off.
+            // where the prefix left off. The suffix never map-searches
+            // submanifold layers, so the delta counters are the
+            // prefix's.
             let seed = self.cfg.seed.wrapping_add(prefix.len() as u64);
-            let tails = self.run_group(suffix, merged, engine, seed)?;
+            let tails = self.run_group(suffix, merged, Vec::new(), engine, seed)?;
             tails
                 .into_iter()
                 .zip(records_per)
-                .map(|(t, mut records)| {
+                .zip(&counters_per)
+                .map(|((t, mut records), &(searched, reused))| {
                     records.extend(t.records);
                     GroupRun {
                         records,
                         cur: t.cur,
                         bev: t.bev,
+                        delta: None,
+                        searched,
+                        reused,
                     }
                 })
                 .collect()
@@ -722,6 +913,8 @@ fn finalize_frame(run: GroupRun, shards: u32, total_seconds: f64) -> FrameResult
         checksum,
         shards,
         total_seconds,
+        blocks_searched: run.searched,
+        blocks_reused: run.reused,
     }
 }
 
@@ -964,12 +1157,37 @@ mod tests {
         assert_eq!(rc.inflight, 2);
         assert_eq!(rc.searcher, SearcherKind::Octree);
         assert_eq!(rc.seed, 99);
-        // Missing section -> defaults.
+        // Missing section -> defaults (delta cache off).
         let rc = RunnerConfig::from_config(&Config::parse("").unwrap()).unwrap();
         assert_eq!(rc.searcher, SearcherKind::Doms);
         assert_eq!(rc.batch, 256);
         assert_eq!(rc.w2b_factor, 0);
         assert_eq!(rc.shard, ShardConfig::default());
+        assert_eq!(rc.delta, DeltaConfig::default());
+        assert!(!rc.delta.enabled);
+    }
+
+    #[test]
+    fn delta_config_keys_parse_strictly() {
+        let cfg = Config::parse(
+            "[runner]\ndelta = true\ndelta_blocks_x = 4\ndelta_blocks_y = 16\ndelta_max_entries = 3",
+        )
+        .unwrap();
+        let rc = RunnerConfig::from_config(&cfg).unwrap();
+        assert!(rc.delta.enabled);
+        assert_eq!(rc.delta.blocks_x, 4);
+        assert_eq!(rc.delta.blocks_y, 16);
+        assert_eq!(rc.delta.max_entries, 3);
+        for bad in [
+            "[runner]\ndelta = 3",
+            "[runner]\ndelta = \"yes\"",
+            "[runner]\ndelta_blocks_x = 0",
+            "[runner]\ndelta_blocks_y = -1",
+            "[runner]\ndelta_max_entries = 0",
+        ] {
+            let cfg = Config::parse(bad).unwrap();
+            assert!(RunnerConfig::from_config(&cfg).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -133,6 +133,52 @@ pub fn prefix_halo(layers: &[LayerSpec]) -> crate::Result<(usize, usize)> {
     Ok((halo, scale))
 }
 
+/// Static map-search slot walk for the temporal delta cache: one
+/// [`SlotSpec`] per *fresh* Subm3 search of the sparse prefix — a Subm3
+/// not immediately preceded by another Subm3, mirroring the scheduler's
+/// rulebook sharing (`NetworkSpec::n_map_searches`). Each spec records
+/// the [`prefix_halo`]-style receptive-cone radius *through that slot's
+/// layer inclusive* and the slot tensor's coordinate scale: a cached
+/// block fragment stays valid exactly when every layer-0 block within
+/// that halo is clean.
+///
+/// Unlike [`prefix_halo`] this walk never errors: it stops at the first
+/// layer the sparse prefix cannot absorb (a dense layer, or a TConv2
+/// below input resolution) and returns the specs gathered so far —
+/// runtime searches past that point simply bypass the cache, which keeps
+/// the walk a *prefix* of the runtime search sequence.
+pub fn delta_slot_specs(layers: &[LayerSpec]) -> Vec<crate::mapsearch::SlotSpec> {
+    let mut specs = Vec::new();
+    let (mut halo, mut scale) = (0usize, 1usize);
+    let mut prev_subm = false;
+    for l in layers {
+        match l {
+            LayerSpec::Subm3 { .. } => {
+                halo += scale;
+                if !prev_subm {
+                    specs.push(crate::mapsearch::SlotSpec { halo, scale });
+                }
+                prev_subm = true;
+            }
+            LayerSpec::GConv2 { .. } => {
+                halo += scale;
+                scale *= 2;
+                prev_subm = false;
+            }
+            LayerSpec::TConv2 { .. } => {
+                if scale < 2 {
+                    break;
+                }
+                scale /= 2;
+                halo += scale;
+                prev_subm = false;
+            }
+            _ => break,
+        }
+    }
+    specs
+}
+
 /// One pseudo-frame: a block's owned voxels plus its halo ring, at the
 /// scene's global coordinates and full extent. Geometry is untouched —
 /// only membership shrinks — so every searcher treats a shard exactly
@@ -321,6 +367,40 @@ mod tests {
         assert!(prefix_halo(&[TConv2 { c_in: 4, c_out: 4 }]).is_err());
         // Dense layers never belong to a sparse prefix.
         assert!(prefix_halo(&[ToBev]).is_err());
+    }
+
+    #[test]
+    fn slot_specs_follow_rulebook_sharing() {
+        use crate::mapsearch::SlotSpec;
+        use LayerSpec::*;
+        // Stream-backbone shape: two slots — the consecutive Subm3 pair
+        // shares the first search; the post-GConv2 Subm3 is the second.
+        let specs = delta_slot_specs(&[
+            Subm3 { c_in: 4, c_out: 16 },
+            Subm3 { c_in: 16, c_out: 16 },
+            GConv2 { c_in: 16, c_out: 32 },
+            Subm3 { c_in: 32, c_out: 32 },
+        ]);
+        assert_eq!(
+            specs,
+            vec![SlotSpec { halo: 1, scale: 1 }, SlotSpec { halo: 5, scale: 2 }]
+        );
+        // The walk stops at the first dense layer instead of erroring.
+        let specs = delta_slot_specs(&[
+            Subm3 { c_in: 4, c_out: 8 },
+            ToBev,
+            Subm3 { c_in: 8, c_out: 8 },
+        ]);
+        assert_eq!(specs, vec![SlotSpec { halo: 1, scale: 1 }]);
+        // Encoder-decoder: the decoder-side Subm3 gets the full cone.
+        let specs = delta_slot_specs(&[
+            GConv2 { c_in: 4, c_out: 8 },
+            TConv2 { c_in: 8, c_out: 8 },
+            Subm3 { c_in: 8, c_out: 8 },
+        ]);
+        assert_eq!(specs, vec![SlotSpec { halo: 3, scale: 1 }]);
+        // Upsampling past input resolution stops the walk.
+        assert!(delta_slot_specs(&[TConv2 { c_in: 4, c_out: 4 }]).is_empty());
     }
 
     #[test]

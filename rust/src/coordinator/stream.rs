@@ -71,6 +71,15 @@ pub struct StreamReport {
     /// Admission actions taken while serving (all zero without an
     /// active policy).
     pub admission: AdmissionReport,
+    /// Blocks map-searched across the stream by the temporal delta
+    /// cache (dirty + halo on warm frames, every occupied block on cold
+    /// ones). Zero when `RunnerConfig::delta` is off.
+    pub blocks_searched: u64,
+    /// Blocks whose rulebook fragments were spliced from the cache
+    /// instead of searched. Zero when the cache is off.
+    pub blocks_reused: u64,
+    /// Cache entries displaced by the `delta_max_entries` bound.
+    pub evictions: u64,
 }
 
 impl StreamReport {
@@ -85,6 +94,17 @@ impl StreamReport {
     }
     fn latencies(&self) -> Vec<f64> {
         self.completions.iter().map(|c| c.latency).collect()
+    }
+
+    /// Fraction of occupied blocks served from the temporal delta cache
+    /// instead of map-searched; 0 when the cache is off (or nothing ran).
+    pub fn reuse_ratio(&self) -> f64 {
+        let total = self.blocks_searched + self.blocks_reused;
+        if total == 0 {
+            0.0
+        } else {
+            self.blocks_reused as f64 / total as f64
+        }
     }
 
     /// Summary of end-to-end latencies; `None` for an empty stream.
@@ -202,6 +222,17 @@ impl StreamServer {
         let mut admission = AdmissionController::new(self.admission);
         let mut completions = Vec::with_capacity(n_frames as usize);
         let mut windows: u64 = 0;
+        // Temporal delta cache, scoped to this serve: entries key on
+        // (FrameMeta::sequence, shard block), so muxed sequences never
+        // cross-invalidate and solo streams (sequence 0) reuse across
+        // consecutive frames.
+        let mut cache = if self.runner.cfg.delta.enabled {
+            Some(crate::mapsearch::DeltaCache::new(self.runner.cfg.delta))
+        } else {
+            None
+        };
+        let mut blocks_searched: u64 = 0;
+        let mut blocks_reused: u64 = 0;
         // Admitted frames waiting for a window slot, in arrival order.
         let mut pending: VecDeque<SourcedFrame> = VecDeque::new();
         // Frames pulled from the source so far (bounds total pulls at
@@ -263,8 +294,16 @@ impl StreamServer {
             // (take_window guarantees it), so run_scenes plans nothing
             // and falls back to the plain lockstep group; a lone
             // sharding scene takes exactly the run_frame_sharded path.
-            let results = self.runner.run_scenes(tensors, engine)?;
+            let results = match cache.as_mut() {
+                Some(c) => {
+                    let seqs: Vec<u32> = metas.iter().map(|m| m.1).collect();
+                    self.runner.run_scenes_delta(tensors, Some((&seqs, c)), engine)?
+                }
+                None => self.runner.run_scenes(tensors, engine)?,
+            };
             for ((id, sequence, produced), result) in metas.into_iter().zip(results) {
+                blocks_searched += result.blocks_searched;
+                blocks_reused += result.blocks_reused;
                 let latency = produced.elapsed().as_secs_f64();
                 let wait = started.saturating_duration_since(produced).as_secs_f64();
                 // A sharded scene's per-shard map searches run
@@ -288,6 +327,9 @@ impl StreamServer {
             wall_seconds: t0.elapsed().as_secs_f64(),
             windows,
             admission: admission.report,
+            blocks_searched,
+            blocks_reused,
+            evictions: cache.as_ref().map_or(0, |c| c.evictions),
         })
     }
 
@@ -614,6 +656,42 @@ mod tests {
         assert_eq!(att.n, e2e.n);
         assert!(att.p95 <= e2e.p95 + 1e-6);
         assert_eq!(e2e.p95, report.latency_p95());
+    }
+
+    #[test]
+    fn delta_cache_stream_is_bit_identical_and_reuses_blocks() {
+        let cold = StreamServer::new(tiny_net(), RunnerConfig::default(), 4);
+        let warm = StreamServer::new(
+            tiny_net(),
+            RunnerConfig {
+                delta: crate::mapsearch::DeltaConfig {
+                    enabled: true,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            4,
+        );
+        // A static scene: every block stays clean after frame 0, so the
+        // warm server must splice everything and search nothing new.
+        let frame = |_: u64| make_frame(3);
+        let a = cold
+            .serve(4, &mut ClosureSource::new(frame), &mut NativeEngine::default())
+            .unwrap();
+        let b = warm
+            .serve(4, &mut ClosureSource::new(frame), &mut NativeEngine::default())
+            .unwrap();
+        assert_eq!(a.completions.len(), b.completions.len());
+        for (x, y) in a.completions.iter().zip(&b.completions) {
+            assert_eq!(x.result.checksum, y.result.checksum, "frame {}", x.id);
+            assert_eq!(x.result.total_pairs(), y.result.total_pairs());
+        }
+        // Off by default: the cold server reports no delta activity.
+        assert_eq!(a.blocks_searched + a.blocks_reused, 0);
+        assert_eq!(a.reuse_ratio(), 0.0);
+        assert!(b.blocks_reused > 0, "static stream reused no blocks");
+        assert!(b.reuse_ratio() > 0.0);
+        assert_eq!(b.evictions, 0);
     }
 
     #[test]

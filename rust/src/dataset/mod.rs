@@ -146,6 +146,10 @@ pub struct DatasetConfig {
     pub frames: u64,
     /// Target voxel sparsity for profile sources.
     pub sparsity: f64,
+    /// Ego-motion drift speed for profile sources, in voxels per frame
+    /// (0 = off): consecutive frames share a world-anchored field, the
+    /// temporally coherent regime the delta cache reuses across.
+    pub drift: f64,
     /// Voxel-grid dims override (`dims = [x, y, z]`); `None` falls back
     /// to the caller's default extent.
     pub extent: Option<Extent3>,
@@ -171,6 +175,7 @@ impl Default for DatasetConfig {
             source: String::new(),
             frames: 8,
             sparsity: 0.02,
+            drift: 0.0,
             extent: None,
             prefetch: 2,
             seed: 0xDA7A,
@@ -207,10 +212,16 @@ impl DatasetConfig {
                 ))
             }
         };
+        let drift = cfg.float_or("dataset.drift", d.drift);
+        anyhow::ensure!(
+            drift >= 0.0 && drift.is_finite(),
+            "dataset.drift must be a finite value >= 0, got {drift}"
+        );
         Ok(Self {
             source: cfg.str_or("dataset.source", &d.source).to_string(),
             frames: cfg.usize_or("dataset.frames", d.frames as usize)? as u64,
             sparsity: cfg.float_or("dataset.sparsity", d.sparsity),
+            drift,
             extent,
             prefetch: cfg.usize_or("dataset.prefetch", d.prefetch)?,
             seed: cfg.int_or("dataset.seed", d.seed as i64) as u64,
@@ -269,7 +280,10 @@ impl DatasetConfig {
             let profile: ScenarioProfile = self.source.parse().map_err(|e| {
                 anyhow::anyhow!("dataset source {:?}: {e}", self.source)
             })?;
-            Box::new(ProfileSource::new(profile, extent, self.sparsity, self.seed))
+            Box::new(
+                ProfileSource::new(profile, extent, self.sparsity, self.seed)
+                    .with_drift(self.drift),
+            )
         };
         Ok(Some(if self.prefetch > 0 {
             Box::new(PrefetchSource::spawn(inner, self.prefetch))
@@ -340,13 +354,14 @@ mod tests {
     fn dataset_config_parses_and_validates() {
         let cfg = Config::parse(
             "[dataset]\nsource = \"highway\"\nframes = 4\nsparsity = 0.01\n\
-             dims = [32, 32, 8]\nprefetch = 0\nseed = 5",
+             drift = 1.5\ndims = [32, 32, 8]\nprefetch = 0\nseed = 5",
         )
         .unwrap();
         let d = DatasetConfig::from_config(&cfg).unwrap();
         assert_eq!(d.source, "highway");
         assert_eq!(d.frames, 4);
         assert!((d.sparsity - 0.01).abs() < 1e-12);
+        assert!((d.drift - 1.5).abs() < 1e-12);
         assert_eq!(d.extent, Some(Extent3::new(32, 32, 8)));
         assert_eq!(d.prefetch, 0);
         assert_eq!(d.seed, 5);
@@ -361,6 +376,7 @@ mod tests {
             "[dataset]\ndims = \"big\"",
             "[dataset]\nframes = -1",
             "[dataset]\nprefetch = -2",
+            "[dataset]\ndrift = -0.5",
         ] {
             let cfg = Config::parse(bad).unwrap();
             assert!(DatasetConfig::from_config(&cfg).is_err(), "{bad}");

@@ -5,7 +5,7 @@
 //! voxel-cim run-det [--points N] [--native]    end-to-end SECOND frame
 //! voxel-cim run-seg [--points N] [--native]    end-to-end MinkUNet frame
 //! voxel-cim stream [--dataset D] [--frames N]  serve a frame stream
-//!                  [--sequences A,B] [--admission P] [--slo MS]
+//!                  [--sequences A,B] [--admission P] [--slo MS] [--delta]
 //!                  multi-sequence muxing + SLO-aware admission
 //! voxel-cim info                               config + artifact status
 //! ```
@@ -87,6 +87,11 @@ fn main() -> voxel_cim::Result<()> {
          (overrides [serving] slo_ms; 0 = off)",
     )
     .switch("native", "use the native GEMM engine instead of PJRT artifacts")
+    .switch(
+        "delta",
+        "enable the temporal delta map-search cache: warm stream frames re-search \
+         only dirty blocks and splice the rest (overrides [runner] delta; bit-identical)",
+    )
     .parse();
 
     let seed = args.get_u64("seed");
@@ -283,7 +288,7 @@ fn run_stream(args: &Args) -> voxel_cim::Result<()> {
     let source: Box<dyn FrameSource> = pipe.open_source()?;
     let cfg = pipe.config();
     println!(
-        "stream: {} frames from {} | inflight {} | searcher {} | shards {}x{} | \
+        "stream: {} frames from {} | inflight {} | searcher {} | shards {}x{}{} | \
          window {} | admission {}{}",
         cfg.dataset.frames,
         source.label(),
@@ -291,6 +296,7 @@ fn run_stream(args: &Args) -> voxel_cim::Result<()> {
         cfg.runner.searcher,
         cfg.runner.shard.blocks_x,
         cfg.runner.shard.blocks_y,
+        if cfg.runner.delta.enabled { " | delta on" } else { "" },
         pipe.window(),
         cfg.serving.admission.policy,
         if cfg.serving.admission.slo_ms > 0.0 {
@@ -336,6 +342,15 @@ fn run_stream(args: &Args) -> voxel_cim::Result<()> {
     );
     if let Some(att) = report.attributed_summary() {
         println!("attributed (own-cost) latency: {}", att.format_ms());
+    }
+    if report.blocks_searched + report.blocks_reused > 0 {
+        println!(
+            "delta cache: {} blocks searched | {} reused ({:.1}% reuse) | {} evictions",
+            report.blocks_searched,
+            report.blocks_reused,
+            report.reuse_ratio() * 100.0,
+            report.evictions,
+        );
     }
     let adm = report.admission;
     if adm.dropped + adm.rejected + adm.deferred > 0 {

@@ -1,0 +1,693 @@
+//! Temporal delta map-search cache: block-level rulebook reuse across
+//! streamed frames.
+//!
+//! Consecutive LiDAR frames of one drive overlap heavily, yet the stream
+//! path re-runs map search on every frame from scratch — the per-frame
+//! cost PointAcc and SpOctA identify as the dominant overhead of voxel
+//! pipelines. This module converts that cost from O(frame) to O(delta):
+//!
+//! * Each frame's layer-0 voxel set is hashed per block on the block-DOMS
+//!   `(bx, by)` grid ([`block_hashes`]). A block is **dirty** when its
+//!   hash differs from the prior frame of the same [`DeltaKey`]
+//!   (`FrameMeta::sequence` × scene-shard block).
+//! * Per map-search slot (one per *fresh* Subm3 run — consecutive Subm3
+//!   layers share a rulebook), the prior frame's rulebook is kept as
+//!   per-block [`BlockFragment`]s binned by output coordinate.
+//! * On a warm frame, only dirty blocks plus a halo ring sized by the
+//!   `prefix_halo`-style receptive cone ([`SlotSpec::halo`]) are
+//!   re-searched against a sub-tensor; clean blocks splice their cached
+//!   pairs back in. After `Rulebook::canonicalize` the merged result is
+//!   **bit-identical** to a cold full search, because the canonical
+//!   rulebook is a pure function of the coordinate set and the halo rule
+//!   covers every layer-0 voxel a clean block's fragment can depend on.
+//!
+//! Correctness is unconditional — hashing catches any change, and the
+//! halo ring covers cross-block influence — so eviction and window
+//! ordering only ever affect the hit rate, never the produced rulebook.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::bail;
+
+use crate::geom::{Coord3, Extent3, KernelOffsets};
+use crate::mapsearch::table::BlockPartition;
+use crate::mapsearch::{AccessStats, MapSearch};
+use crate::sparse::rulebook::{ConvKind, RulePair, Rulebook};
+use crate::sparse::tensor::SparseTensor;
+use crate::util::config::{Config, Value};
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x1000_0000_01b3;
+
+/// `[runner] delta*` keys: the temporal delta cache's knobs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DeltaConfig {
+    /// Off by default: the cache only pays for itself on coherent
+    /// sequences, and cold one-shot jobs should not carry its bookkeeping.
+    pub enabled: bool,
+    /// Invalidation grid over the layer-0 (x, y) plane.
+    pub blocks_x: usize,
+    pub blocks_y: usize,
+    /// Bound on cached `(sequence, shard-block)` entries; LRU beyond it.
+    pub max_entries: usize,
+}
+
+impl Default for DeltaConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            blocks_x: 8,
+            blocks_y: 8,
+            max_entries: 32,
+        }
+    }
+}
+
+impl DeltaConfig {
+    /// Parse `[runner]` delta keys with the same strictness contract as
+    /// the rest of `RunnerConfig`: missing keys default, present-but-bad
+    /// values error.
+    pub fn from_config(cfg: &Config) -> crate::Result<Self> {
+        let d = Self::default();
+        let enabled = match cfg.get("runner.delta") {
+            None => d.enabled,
+            Some(Value::Bool(b)) => *b,
+            Some(v) => bail!("runner.delta must be a boolean, got {v:?}"),
+        };
+        let blocks_x = cfg.usize_or("runner.delta_blocks_x", d.blocks_x)?;
+        let blocks_y = cfg.usize_or("runner.delta_blocks_y", d.blocks_y)?;
+        let max_entries = cfg.usize_or("runner.delta_max_entries", d.max_entries)?;
+        anyhow::ensure!(
+            blocks_x >= 1 && blocks_y >= 1,
+            "runner.delta_blocks_x/delta_blocks_y must be >= 1"
+        );
+        anyhow::ensure!(max_entries >= 1, "runner.delta_max_entries must be >= 1");
+        Ok(Self {
+            enabled,
+            blocks_x,
+            blocks_y,
+            max_entries,
+        })
+    }
+}
+
+/// One map-search slot of the sparse prefix: the receptive-cone radius
+/// (in layer-0 voxels, x/y Chebyshev) through that slot's layer
+/// inclusive, and the slot tensor's coordinate scale relative to layer 0.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SlotSpec {
+    pub halo: usize,
+    pub scale: usize,
+}
+
+/// Fingerprint of a slot-spec chain; a cached entry built under a
+/// different network shape must not be spliced.
+pub fn specs_sig(specs: &[SlotSpec]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for s in specs {
+        for v in [s.halo as u64, s.scale as u64] {
+            for byte in v.to_le_bytes() {
+                h = (h ^ byte as u64).wrapping_mul(FNV_PRIME);
+            }
+        }
+    }
+    h
+}
+
+/// Cache key: one entry per streamed sequence — and per scene-shard block
+/// when the window shards, since each pseudo-frame searches its own
+/// tensor. Non-muxed serves stamp `FrameMeta::sequence = 0`, so solo
+/// streams hit the cache exactly like muxed ones.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct DeltaKey {
+    pub sequence: u32,
+    pub shard: Option<(usize, usize)>,
+}
+
+/// The prior frame's rule pairs for one block, stored positionally:
+/// `(offset index, output coordinate)`. The input coordinate is implied
+/// (`out + offsets[offset]`), and indices are re-resolved against the
+/// *current* frame's tensor at splice time — frame-to-frame index shifts
+/// in clean blocks therefore cost two binary searches per pair, not a
+/// cache miss.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct BlockFragment {
+    pub pairs: Vec<(u16, Coord3)>,
+}
+
+struct SeqEntry {
+    extent: Extent3,
+    part: BlockPartition,
+    sig: u64,
+    hashes: Vec<u64>,
+    /// Per slot, per block: the fragment to splice when the block stays
+    /// clean.
+    slots: Vec<Vec<Arc<BlockFragment>>>,
+    tick: u64,
+}
+
+/// Per-serve temporal cache, bounded by `max_entries` with LRU eviction.
+pub struct DeltaCache {
+    cfg: DeltaConfig,
+    entries: HashMap<DeltaKey, SeqEntry>,
+    tick: u64,
+    /// Entries displaced by the `max_entries` bound.
+    pub evictions: u64,
+}
+
+impl DeltaCache {
+    pub fn new(cfg: DeltaConfig) -> Self {
+        Self {
+            cfg,
+            entries: HashMap::new(),
+            tick: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Plan one frame's delta work against the cached prior state
+    /// (non-mutating: every frame of a lockstep window plans against the
+    /// pre-window cache; [`DeltaCache::commit`] lands results in frame
+    /// order afterwards). A missing or structurally mismatched entry
+    /// (extent, grid, or network shape changed) degrades to a cold plan:
+    /// every block dirty, nothing to splice.
+    pub fn begin_frame(
+        &self,
+        key: DeltaKey,
+        input: &SparseTensor,
+        specs: &Arc<Vec<SlotSpec>>,
+    ) -> FrameDelta {
+        let part = BlockPartition::new(
+            self.cfg.blocks_x,
+            self.cfg.blocks_y,
+            input.extent.x,
+            input.extent.y,
+        );
+        let sig = specs_sig(specs);
+        let hashes = block_hashes(input, &part);
+        let prior = self.entries.get(&key).filter(|e| {
+            e.extent == input.extent
+                && e.part == part
+                && e.sig == sig
+                && e.slots.len() == specs.len()
+                && e.hashes.len() == hashes.len()
+        });
+        let dirty: Vec<bool> = match prior {
+            Some(e) => e.hashes.iter().zip(&hashes).map(|(a, b)| a != b).collect(),
+            None => vec![true; part.num_blocks()],
+        };
+        let (bw, bh) = (part.block_w(), part.block_h());
+        let slots = specs
+            .iter()
+            .enumerate()
+            .map(|(s, spec)| {
+                // Halo rule: a fragment for block B is valid only if every
+                // layer-0 block within the slot's receptive cone of B is
+                // clean — so dirtiness dilates by ceil(halo / block side).
+                let research = dilate(
+                    &dirty,
+                    part.bx,
+                    part.by,
+                    spec.halo.div_ceil(bw),
+                    spec.halo.div_ceil(bh),
+                );
+                Some(SlotTask {
+                    index: s,
+                    spec: *spec,
+                    part,
+                    research,
+                    prior: prior.map(|e| e.slots[s].clone()),
+                })
+            })
+            .collect();
+        FrameDelta {
+            key,
+            extent: input.extent,
+            part,
+            sig,
+            hashes,
+            slots,
+            new_slots: vec![None; specs.len()],
+            next: 0,
+        }
+    }
+
+    /// Land a completed frame: its hashes and fresh fragments become the
+    /// prior state for the next frame of the same key.
+    pub fn commit(&mut self, fd: FrameDelta) {
+        // A hole (a slot the runtime never searched) means the static
+        // walk and the run disagreed; drop the entry rather than cache a
+        // partial frame.
+        let mut slots = Vec::with_capacity(fd.new_slots.len());
+        for s in fd.new_slots {
+            match s {
+                Some(f) => slots.push(f),
+                None => {
+                    self.entries.remove(&fd.key);
+                    return;
+                }
+            }
+        }
+        self.tick += 1;
+        if !self.entries.contains_key(&fd.key) && self.entries.len() >= self.cfg.max_entries {
+            if let Some(lru) = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.tick)
+                .map(|(k, _)| *k)
+            {
+                self.entries.remove(&lru);
+                self.evictions += 1;
+            }
+        }
+        self.entries.insert(
+            fd.key,
+            SeqEntry {
+                extent: fd.extent,
+                part: fd.part,
+                sig: fd.sig,
+                hashes: fd.hashes,
+                slots,
+                tick: self.tick,
+            },
+        );
+    }
+}
+
+/// One frame's delta plan, threaded through the scheduler: the group
+/// runner takes one [`SlotTask`] per fresh Subm3 search (in layer order)
+/// and records the resulting fragments back for [`DeltaCache::commit`].
+pub struct FrameDelta {
+    key: DeltaKey,
+    extent: Extent3,
+    part: BlockPartition,
+    sig: u64,
+    hashes: Vec<u64>,
+    slots: Vec<Option<SlotTask>>,
+    new_slots: Vec<Option<Vec<Arc<BlockFragment>>>>,
+    next: usize,
+}
+
+impl FrameDelta {
+    /// Claim the next slot's task, in map-search order. Returns `None`
+    /// once the static slot walk is exhausted — searches past that point
+    /// (e.g. after a dense layer) simply bypass the cache.
+    pub fn take_slot(&mut self) -> Option<SlotTask> {
+        let i = self.next;
+        self.next += 1;
+        self.slots.get_mut(i)?.take()
+    }
+
+    /// Record the fragments produced for slot `index`.
+    pub fn record(&mut self, index: usize, frags: Vec<Arc<BlockFragment>>) {
+        self.new_slots[index] = Some(frags);
+    }
+
+    pub fn key(&self) -> DeltaKey {
+        self.key
+    }
+}
+
+/// The delta work for one map-search slot of one frame.
+pub struct SlotTask {
+    pub index: usize,
+    pub spec: SlotSpec,
+    pub part: BlockPartition,
+    /// Blocks that must be re-searched this frame (dirty ∪ halo ring).
+    pub research: Vec<bool>,
+    /// Prior-frame fragments per block; `None` on a cold start.
+    pub prior: Option<Vec<Arc<BlockFragment>>>,
+}
+
+/// What one delta-managed search produced: next-frame fragments plus the
+/// reuse counters `StreamReport` aggregates.
+pub struct SlotOutcome {
+    pub frags: Vec<Arc<BlockFragment>>,
+    /// Occupied blocks that went through the searcher this frame.
+    pub searched: u64,
+    /// Occupied blocks whose pairs were spliced from the cache.
+    pub reused: u64,
+}
+
+/// Per-block FNV-1a over the (sorted) coordinate list: the invalidation
+/// unit. Any voxel appearing, moving, or vanishing anywhere in a block's
+/// (x, y) column changes that block's hash.
+pub fn block_hashes(input: &SparseTensor, part: &BlockPartition) -> Vec<u64> {
+    let mut hashes = vec![FNV_OFFSET; part.num_blocks()];
+    for c in &input.coords {
+        let h = &mut hashes[block_at(part, *c, 1)];
+        for v in [c.x, c.y, c.z] {
+            for byte in v.to_le_bytes() {
+                *h = (*h ^ byte as u64).wrapping_mul(FNV_PRIME);
+            }
+        }
+    }
+    hashes
+}
+
+/// Flat block id of a (possibly downscaled) coordinate on the layer-0
+/// partition, via its fine-grid anchor — the same anchoring
+/// `ShardPlan::merge` uses to route coarse outputs to blocks.
+#[inline]
+fn block_at(part: &BlockPartition, c: Coord3, scale: usize) -> usize {
+    let (i, j) = part.block_of(Coord3::new(c.x * scale as i32, c.y * scale as i32, c.z));
+    j * part.bx + i
+}
+
+/// Chebyshev dilation of a block mask by `(rx, ry)` blocks, clamped at
+/// the grid border.
+fn dilate(mask: &[bool], bx: usize, by: usize, rx: usize, ry: usize) -> Vec<bool> {
+    let mut out = vec![false; mask.len()];
+    for j in 0..by {
+        for i in 0..bx {
+            if !mask[j * bx + i] {
+                continue;
+            }
+            for jj in j.saturating_sub(ry)..=(j + ry).min(by - 1) {
+                for ii in i.saturating_sub(rx)..=(i + rx).min(bx - 1) {
+                    out[jj * bx + ii] = true;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Run one slot's map search through the delta plan: search only the
+/// re-search region (cold plans degenerate to a full search), splice
+/// clean blocks from the prior frame's fragments, and canonicalize — the
+/// result is bit-identical to `searcher.search_subm(input, k)` for every
+/// `SearcherKind`, because all searchers produce the same canonical
+/// rulebook and the output-block partition of its pairs is exhaustive
+/// and disjoint.
+pub fn delta_search(
+    searcher: &dyn MapSearch,
+    input: &SparseTensor,
+    k: usize,
+    task: &SlotTask,
+) -> (Rulebook, AccessStats, SlotOutcome) {
+    let part = &task.part;
+    let scale = task.spec.scale;
+    let nb = part.num_blocks();
+
+    // Block id per voxel plus occupancy (submanifold outputs == inputs,
+    // so this doubles as the output occupancy the counters report).
+    let mut occupied = vec![false; nb];
+    let blocks: Vec<usize> = input
+        .coords
+        .iter()
+        .map(|c| {
+            let b = block_at(part, *c, scale);
+            occupied[b] = true;
+            b
+        })
+        .collect();
+
+    let warm = task.prior.is_some() && task.research.iter().any(|r| !r);
+    let (rb, stats) = if !warm {
+        searcher.search_subm(input, k)
+    } else {
+        let prior = task.prior.as_ref().expect("warm implies prior");
+        let mut pairs: Vec<RulePair> = Vec::new();
+        let mut sub_stats = AccessStats::default();
+        if task.research.iter().any(|r| *r) {
+            // Sub-tensor: coords within kernel reach of the re-search
+            // region — every true input of a re-searched output is
+            // present, so the searcher cannot miss or invent pairs for
+            // those outputs.
+            let reach = (k / 2) * scale;
+            let gather = dilate(
+                &task.research,
+                part.bx,
+                part.by,
+                reach.div_ceil(part.block_w()),
+                reach.div_ceil(part.block_h()),
+            );
+            // Selection preserves sorted order, so the sub-tensor stays
+            // canonical and `sel` maps sub indices back to global ones.
+            let mut sel: Vec<u32> = Vec::new();
+            let mut sub_coords: Vec<Coord3> = Vec::new();
+            for (i, c) in input.coords.iter().enumerate() {
+                if gather[blocks[i]] {
+                    sel.push(i as u32);
+                    sub_coords.push(*c);
+                }
+            }
+            let sub = SparseTensor::from_coords(input.extent, sub_coords, 1);
+            let (sub_rb, st) = searcher.search_subm(&sub, k);
+            sub_stats = st;
+            pairs.reserve(sub_rb.pairs.len());
+            for p in &sub_rb.pairs {
+                let out_global = sel[p.output as usize];
+                if task.research[blocks[out_global as usize]] {
+                    pairs.push(RulePair {
+                        offset: p.offset,
+                        input: sel[p.input as usize],
+                        output: out_global,
+                    });
+                }
+            }
+        }
+        // Splice clean blocks from the prior frame. The hash + halo rule
+        // guarantees both pair endpoints still exist in this frame; a
+        // miss here would mean the invalidation invariant is broken, so
+        // fail loudly rather than emit a silently wrong rulebook.
+        let offs = KernelOffsets::centered(k).offsets;
+        for (b, frag) in prior.iter().enumerate() {
+            if task.research[b] {
+                continue;
+            }
+            for &(off, out) in &frag.pairs {
+                let pin = out.offset(offs[off as usize]);
+                let i = input
+                    .find(pin)
+                    .expect("delta cache: clean-block input vanished");
+                let o = input
+                    .find(out)
+                    .expect("delta cache: clean-block output vanished");
+                pairs.push(RulePair {
+                    offset: off,
+                    input: i as u32,
+                    output: o as u32,
+                });
+            }
+        }
+        let mut rb = Rulebook {
+            kind: ConvKind::Submanifold { k },
+            pairs,
+            out_coords: input.coords.clone(),
+            out_extent: input.extent,
+        };
+        rb.canonicalize();
+        let mut stats = sub_stats;
+        stats.voxel_reads += input.len() as u64; // hash + splice scan
+        (rb, stats)
+    };
+
+    // Fragments for the next frame, binned by output block. Rebuilt from
+    // the merged rulebook every frame — self-correcting by construction,
+    // since the merged rulebook *is* the full-search rulebook.
+    let binned = rb.pairs_by_output_bin(nb, |c| block_at(part, c, scale));
+    let frags = binned
+        .into_iter()
+        .map(|ps| {
+            Arc::new(BlockFragment {
+                pairs: ps
+                    .into_iter()
+                    .map(|p| (p.offset, rb.out_coords[p.output as usize]))
+                    .collect(),
+            })
+        })
+        .collect();
+
+    let mut searched = 0u64;
+    let mut reused = 0u64;
+    for (b, occ) in occupied.iter().enumerate() {
+        if !occ {
+            continue;
+        }
+        if !warm || task.research[b] {
+            searched += 1;
+        } else {
+            reused += 1;
+        }
+    }
+    (rb, stats, SlotOutcome { frags, searched, reused })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapsearch::SearcherKind;
+    use crate::pointcloud::voxelize::Voxelizer;
+    use crate::util::config::Config;
+
+    fn tensor(e: Extent3, sparsity: f64, seed: u64) -> SparseTensor {
+        SparseTensor::from_coords(e, Voxelizer::synth_occupancy(e, sparsity, seed).coords(), 1)
+    }
+
+    #[test]
+    fn block_hashes_localize_changes() {
+        let e = Extent3::new(32, 32, 4);
+        let part = BlockPartition::new(8, 8, e.x, e.y);
+        let a = tensor(e, 0.05, 11);
+        let dropped = a.coords[0];
+        let coords: Vec<Coord3> = a.coords.iter().copied().filter(|c| *c != dropped).collect();
+        let b = SparseTensor::from_coords(e, coords, 1);
+        let (ha, hb) = (block_hashes(&a, &part), block_hashes(&b, &part));
+        let changed = block_at(&part, dropped, 1);
+        for (i, (x, y)) in ha.iter().zip(&hb).enumerate() {
+            if i == changed {
+                assert_ne!(x, y, "dropped voxel must dirty its block");
+            } else {
+                assert_eq!(x, y, "block {i} unaffected by the drop");
+            }
+        }
+    }
+
+    #[test]
+    fn dilation_clamps_at_borders() {
+        let mut m = vec![false; 16]; // 4x4
+        m[0] = true; // corner
+        let d = dilate(&m, 4, 4, 1, 1);
+        let want: Vec<bool> = (0..16).map(|i| matches!(i, 0 | 1 | 4 | 5)).collect();
+        assert_eq!(d, want);
+        assert_eq!(dilate(&m, 4, 4, 0, 0), m);
+    }
+
+    #[test]
+    fn warm_delta_search_is_bit_identical_for_every_searcher() {
+        let e = Extent3::new(32, 32, 4);
+        let a = tensor(e, 0.08, 7);
+        // Frame B: one extra voxel in the (0, 0) block — a localized edit.
+        let mut coords = a.coords.clone();
+        coords.push(Coord3::new(2, 2, 1));
+        let b = SparseTensor::from_coords(e, coords, 1);
+        let specs = Arc::new(vec![SlotSpec { halo: 1, scale: 1 }]);
+        let key = DeltaKey { sequence: 0, shard: None };
+        for kind in SearcherKind::ALL {
+            let searcher = kind.build();
+            let mut cache = DeltaCache::new(DeltaConfig {
+                enabled: true,
+                ..Default::default()
+            });
+            // Cold frame A.
+            let mut fd = cache.begin_frame(key, &a, &specs);
+            let task = fd.take_slot().unwrap();
+            let (rb, _, out) = delta_search(searcher.as_ref(), &a, 3, &task);
+            let (want, _) = searcher.search_subm(&a, 3);
+            assert_eq!(rb.pairs, want.pairs, "{kind}: cold frame diverged");
+            assert_eq!(out.reused, 0, "{kind}: nothing to reuse on a cold frame");
+            assert!(out.searched > 0);
+            fd.record(task.index, out.frags);
+            cache.commit(fd);
+            // Warm frame B.
+            let mut fd = cache.begin_frame(key, &b, &specs);
+            let task = fd.take_slot().unwrap();
+            assert!(
+                task.research.iter().any(|r| !r),
+                "a one-voxel edit must leave clean blocks"
+            );
+            let (rb, _, out) = delta_search(searcher.as_ref(), &b, 3, &task);
+            let (want, _) = searcher.search_subm(&b, 3);
+            assert_eq!(rb.pairs, want.pairs, "{kind}: warm frame diverged");
+            assert_eq!(rb.out_coords, want.out_coords);
+            assert!(out.reused > 0, "{kind}: warm frame reused nothing");
+            fd.record(task.index, out.frags);
+            cache.commit(fd);
+            assert_eq!(cache.len(), 1);
+        }
+    }
+
+    #[test]
+    fn structural_mismatch_degrades_to_cold() {
+        let e = Extent3::new(32, 32, 4);
+        let a = tensor(e, 0.05, 3);
+        let specs = Arc::new(vec![SlotSpec { halo: 1, scale: 1 }]);
+        let key = DeltaKey { sequence: 0, shard: None };
+        let mut cache = DeltaCache::new(DeltaConfig::default());
+        let mut fd = cache.begin_frame(key, &a, &specs);
+        let task = fd.take_slot().unwrap();
+        let (_, _, out) = delta_search(SearcherKind::Doms.build().as_ref(), &a, 3, &task);
+        fd.record(task.index, out.frags);
+        cache.commit(fd);
+        // Different network shape -> cold plan despite identical coords.
+        let other = Arc::new(vec![SlotSpec { halo: 3, scale: 2 }]);
+        let mut fd = cache.begin_frame(key, &a, &other);
+        let task = fd.take_slot().unwrap();
+        assert!(task.prior.is_none());
+        assert!(task.research.iter().all(|r| *r));
+    }
+
+    #[test]
+    fn cache_evicts_lru_beyond_bound() {
+        let e = Extent3::new(16, 16, 2);
+        let t = tensor(e, 0.1, 5);
+        let specs = Arc::new(vec![SlotSpec { halo: 1, scale: 1 }]);
+        let mut cache = DeltaCache::new(DeltaConfig {
+            enabled: true,
+            max_entries: 1,
+            ..Default::default()
+        });
+        let s = SearcherKind::Doms.build();
+        for seq in 0..3u32 {
+            let key = DeltaKey { sequence: seq, shard: None };
+            let mut fd = cache.begin_frame(key, &t, &specs);
+            let task = fd.take_slot().unwrap();
+            let (_, _, out) = delta_search(s.as_ref(), &t, 3, &task);
+            fd.record(task.index, out.frags);
+            cache.commit(fd);
+            assert_eq!(cache.len(), 1, "bound must hold after every commit");
+        }
+        assert_eq!(cache.evictions, 2);
+    }
+
+    #[test]
+    fn partial_commit_drops_entry() {
+        let e = Extent3::new(16, 16, 2);
+        let t = tensor(e, 0.1, 5);
+        let specs = Arc::new(vec![SlotSpec { halo: 1, scale: 1 }]);
+        let key = DeltaKey { sequence: 9, shard: None };
+        let mut cache = DeltaCache::new(DeltaConfig::default());
+        let fd = cache.begin_frame(key, &t, &specs); // slot never taken
+        cache.commit(fd);
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn config_parses_and_rejects_bad_values() {
+        let c = Config::parse(
+            "[runner]\ndelta = true\ndelta_blocks_x = 4\ndelta_blocks_y = 2\ndelta_max_entries = 5",
+        )
+        .unwrap();
+        let d = DeltaConfig::from_config(&c).unwrap();
+        assert_eq!(
+            d,
+            DeltaConfig { enabled: true, blocks_x: 4, blocks_y: 2, max_entries: 5 }
+        );
+        // Missing keys: defaults, disabled.
+        let d = DeltaConfig::from_config(&Config::parse("").unwrap()).unwrap();
+        assert_eq!(d, DeltaConfig::default());
+        assert!(!d.enabled);
+        // Present-but-bad values are errors, not silent fallbacks.
+        for bad in [
+            "[runner]\ndelta = 3",
+            "[runner]\ndelta = \"yes\"",
+            "[runner]\ndelta_blocks_x = 0",
+            "[runner]\ndelta_blocks_y = -1",
+            "[runner]\ndelta_max_entries = 0",
+        ] {
+            let c = Config::parse(bad).unwrap();
+            assert!(DeltaConfig::from_config(&c).is_err(), "{bad:?} must be rejected");
+        }
+    }
+}

@@ -19,6 +19,7 @@
 
 pub mod block_doms;
 pub mod buffer;
+pub mod delta;
 pub mod doms;
 pub mod octree;
 pub mod output_major;
@@ -27,6 +28,7 @@ pub mod table;
 pub mod weight_major;
 
 pub use block_doms::BlockDoms;
+pub use delta::{DeltaCache, DeltaConfig, DeltaKey, FrameDelta, SlotSpec};
 pub use doms::Doms;
 pub use octree::OctreeSearch;
 pub use output_major::OutputMajor;

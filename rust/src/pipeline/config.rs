@@ -214,11 +214,13 @@ pub struct Overrides {
     pub slo: Option<String>,
     /// `--native`: pin the engine to the native reference.
     pub native: bool,
+    /// `--delta`: enable the temporal delta map-search cache.
+    pub delta: bool,
 }
 
 impl Overrides {
     /// Collect the standard `voxel-cim` flag set from parsed [`Args`].
-    /// Requires all nine flags to be declared (the binary declares them
+    /// Requires all ten flags to be declared (the binary declares them
     /// once for every command); examples with a narrower flag set fill
     /// the fields they declare directly.
     pub fn from_args(args: &Args) -> Self {
@@ -236,6 +238,7 @@ impl Overrides {
             admission: opt("admission"),
             slo: opt("slo"),
             native: args.get_bool("native"),
+            delta: args.get_bool("delta"),
         }
     }
 }
@@ -331,6 +334,9 @@ impl PipelineConfig {
         }
         if ov.native {
             self.engine = EngineKind::Native;
+        }
+        if ov.delta {
+            self.runner.delta.enabled = true;
         }
         Ok(())
     }
@@ -463,6 +469,7 @@ mod tests {
             admission: Some("defer-sharding".into()),
             slo: Some("12.5".into()),
             native: true,
+            delta: true,
         })
         .unwrap();
         assert_eq!(pc.runner.searcher, SearcherKind::BlockDoms);
@@ -474,6 +481,7 @@ mod tests {
         assert_eq!(pc.serving.admission.policy, AdmissionPolicy::DeferSharding);
         assert!((pc.serving.admission.slo_ms - 12.5).abs() < 1e-12);
         assert_eq!(pc.engine, EngineKind::Native);
+        assert!(pc.runner.delta.enabled);
         pc.validate().unwrap();
         for bad in [
             Overrides {

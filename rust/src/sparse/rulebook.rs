@@ -114,6 +114,25 @@ impl Rulebook {
         groups
     }
 
+    /// Group pairs by a caller-defined bin of their *output* coordinate
+    /// (e.g. a block id) — how the temporal delta cache extracts
+    /// per-block rulebook fragments. Bins preserve canonical pair order,
+    /// so re-concatenating all bins and canonicalizing reproduces
+    /// `self.pairs` exactly.
+    pub fn pairs_by_output_bin(
+        &self,
+        nbins: usize,
+        bin: impl Fn(Coord3) -> usize,
+    ) -> Vec<Vec<RulePair>> {
+        let mut groups = vec![Vec::new(); nbins];
+        for p in &self.pairs {
+            let b = bin(self.out_coords[p.output as usize]);
+            debug_assert!(b < nbins, "output bin {b} out of range");
+            groups[b].push(*p);
+        }
+        groups
+    }
+
     /// Check structural invariants against the input tensor (used by the
     /// property tests): indices in range, offsets consistent with the
     /// geometry.
@@ -225,6 +244,30 @@ mod tests {
         rb.canonicalize();
         assert_eq!(rb.len(), 2);
         assert!(rb.pairs[0] < rb.pairs[1]);
+    }
+
+    #[test]
+    fn output_bins_partition_canonical_pairs() {
+        let mut rb = Rulebook {
+            kind: ConvKind::subm3(),
+            pairs: vec![
+                RulePair { offset: 13, input: 0, output: 0 },
+                RulePair { offset: 13, input: 1, output: 1 },
+                RulePair { offset: 0, input: 1, output: 0 },
+            ],
+            out_coords: vec![Coord3::new(0, 0, 0), Coord3::new(3, 0, 0)],
+            out_extent: Extent3::new(4, 1, 1),
+        };
+        rb.canonicalize();
+        // Bin by x-half: output 0 -> bin 0, output 1 -> bin 1.
+        let bins = rb.pairs_by_output_bin(2, |c| (c.x >= 2) as usize);
+        assert_eq!(bins.len(), 2);
+        assert_eq!(bins[0].len(), 2);
+        assert_eq!(bins[1].len(), 1);
+        // Re-concatenating and canonicalizing reproduces the rulebook.
+        let mut merged: Vec<RulePair> = bins.into_iter().flatten().collect();
+        merged.sort_unstable();
+        assert_eq!(merged, rb.pairs);
     }
 
     #[test]

@@ -1,0 +1,319 @@
+//! Integration: the temporal delta map-search cache. Warm stream frames
+//! must be bit-identical to a cold full search across every
+//! `SearcherKind`, sharded and unsharded, solo and muxed — while
+//! performing strictly fewer block map-searches on temporally coherent
+//! frames. The cache is off by default, and its per-sequence memory is
+//! bounded by `delta_max_entries` (evictions are counted, never wrong).
+
+use std::path::{Path, PathBuf};
+
+use voxel_cim::coordinator::scheduler::RunnerConfig;
+use voxel_cim::coordinator::shard::ShardConfig;
+use voxel_cim::coordinator::stream::{StreamReport, StreamServer};
+use voxel_cim::dataset::{FrameSource, KittiSource, ProfileSource, ScenarioProfile};
+use voxel_cim::geom::Extent3;
+use voxel_cim::mapsearch::{DeltaConfig, SearcherKind};
+use voxel_cim::model::layer::{LayerSpec, NetworkSpec, TaskKind};
+use voxel_cim::pointcloud::voxelize::Voxelizer;
+use voxel_cim::serving::{MuxPolicy, SequenceMux};
+use voxel_cim::spconv::layer::NativeEngine;
+
+const EXTENT: Extent3 = Extent3::new(64, 64, 6);
+
+/// The stream backbone shape: two submanifold layers sharing a rulebook,
+/// a downsample, and a fresh submanifold at the coarse scale — both delta
+/// slot shapes (fresh full-res, fresh post-downsample) are exercised.
+fn stream_net() -> NetworkSpec {
+    NetworkSpec {
+        name: "delta-stream",
+        task: TaskKind::Segmentation,
+        extent: EXTENT,
+        vfe_channels: 4,
+        layers: vec![
+            LayerSpec::Subm3 { c_in: 4, c_out: 8 },
+            LayerSpec::Subm3 { c_in: 8, c_out: 8 },
+            LayerSpec::GConv2 { c_in: 8, c_out: 16 },
+            LayerSpec::Subm3 { c_in: 16, c_out: 16 },
+        ],
+    }
+}
+
+fn cfg(kind: SearcherKind, shard: ShardConfig, delta_on: bool) -> RunnerConfig {
+    RunnerConfig {
+        searcher: kind,
+        shard,
+        // One frame per window: every warm frame plans against its own
+        // predecessor's committed entry.
+        inflight: 1,
+        compute_workers: 1,
+        seed: 33,
+        delta: DeltaConfig {
+            enabled: delta_on,
+            // 4x4-voxel blocks: fine enough that the drift edge and the
+            // per-frame dynamic blob leave most of the field clean.
+            blocks_x: 16,
+            blocks_y: 16,
+            ..DeltaConfig::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// An ego-motion sequence: world-anchored field drifting one voxel per
+/// frame plus a small per-frame dynamic blob — the temporally coherent
+/// regime the cache is built for.
+fn drift_source(frames: u64, seed: u64) -> Box<dyn FrameSource> {
+    Box::new(
+        ProfileSource::new(ScenarioProfile::Urban, EXTENT, 0.03, seed)
+            .with_drift(1.0)
+            .with_frames(frames),
+    )
+}
+
+fn serve_drift(
+    kind: SearcherKind,
+    shard: ShardConfig,
+    delta_on: bool,
+    frames: u64,
+    seed: u64,
+) -> StreamReport {
+    let srv = StreamServer::new(stream_net(), cfg(kind, shard, delta_on), 4);
+    let mut src = drift_source(frames, seed);
+    srv.serve(frames, src.as_mut(), &mut NativeEngine::default())
+        .unwrap()
+}
+
+/// The acceptance property: for every searcher kind, sharded and not,
+/// warm frames are bit-identical to the cold full search and re-search
+/// strictly fewer blocks. A cold pass searches every occupied block of a
+/// frame, and occupied = searched + reused on the warm pass, so
+/// `blocks_reused > 0` is exactly the strictly-fewer claim.
+#[test]
+fn warm_serving_is_bit_identical_and_reuses_blocks_for_every_searcher() {
+    const FRAMES: u64 = 4;
+    let shard_modes = [
+        ShardConfig::default(),
+        ShardConfig {
+            auto_threshold: 1,
+            ..ShardConfig::grid(2, 2).unwrap()
+        },
+    ];
+    for kind in SearcherKind::ALL {
+        for shard in shard_modes {
+            let sharding = shard.num_blocks() > 1;
+            let cold = serve_drift(kind, shard, false, FRAMES, 0xD1F7);
+            let warm = serve_drift(kind, shard, true, FRAMES, 0xD1F7);
+            assert_eq!(cold.completions.len(), FRAMES as usize);
+            assert_eq!(warm.completions.len(), FRAMES as usize);
+            for (c, w) in cold.completions.iter().zip(&warm.completions) {
+                assert_eq!(c.id, w.id);
+                assert_eq!(
+                    c.result.checksum, w.result.checksum,
+                    "{kind} sharding={sharding}: frame {} diverged warm",
+                    c.id
+                );
+                assert_eq!(
+                    c.result.total_pairs(),
+                    w.result.total_pairs(),
+                    "{kind} sharding={sharding}: frame {} pair count",
+                    c.id
+                );
+                assert_eq!(c.result.shards, w.result.shards, "frame {}", c.id);
+                // Cold runs never touch the cache or its counters.
+                assert_eq!(
+                    c.result.blocks_searched + c.result.blocks_reused,
+                    0,
+                    "{kind} sharding={sharding}: cold frame {} counted blocks",
+                    c.id
+                );
+            }
+            if sharding {
+                assert!(
+                    warm.completions.iter().all(|c| c.result.shards > 1),
+                    "{kind}: frames should shard at threshold 1"
+                );
+            }
+            // Frame 0 is compulsory-cold: full search, nothing spliced.
+            let first = &warm.completions[0].result;
+            assert!(first.blocks_searched > 0, "{kind} sharding={sharding}");
+            assert_eq!(first.blocks_reused, 0, "{kind} sharding={sharding}");
+            // Every later frame splices cached fragments — i.e. searches
+            // strictly fewer blocks than the cold pass on the same frame.
+            for w in &warm.completions[1..] {
+                assert!(
+                    w.result.blocks_reused > 0,
+                    "{kind} sharding={sharding}: warm frame {} reused nothing",
+                    w.id
+                );
+            }
+            assert!(warm.reuse_ratio() > 0.0, "{kind} sharding={sharding}");
+            assert_eq!(warm.evictions, 0, "{kind} sharding={sharding}");
+        }
+    }
+}
+
+fn fixture_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/kitti")
+}
+
+/// Real-data spot check: the KITTI fixture's two (largely disjoint)
+/// frames through a warm cache are bit-identical to cold — dirty-block
+/// invalidation must stay correct even when almost nothing is reusable.
+#[test]
+fn kitti_fixture_is_bit_identical_through_a_warm_cache() {
+    let extent = Extent3::new(16, 16, 8);
+    let net = || NetworkSpec {
+        name: "delta-kitti",
+        task: TaskKind::Segmentation,
+        extent,
+        vfe_channels: 4,
+        layers: vec![
+            LayerSpec::Subm3 { c_in: 4, c_out: 8 },
+            LayerSpec::Subm3 { c_in: 8, c_out: 8 },
+        ],
+    };
+    let voxelizer = || Voxelizer::new((16.0, 16.0, 8.0), extent, 8);
+    let serve_once = |delta_on: bool| {
+        let rc = RunnerConfig {
+            delta: DeltaConfig {
+                enabled: delta_on,
+                ..DeltaConfig::default()
+            },
+            ..Default::default()
+        };
+        let srv = StreamServer::new(net(), rc, 2);
+        let mut src = KittiSource::open(fixture_dir(), voxelizer()).unwrap();
+        srv.serve(8, &mut src, &mut NativeEngine::default()).unwrap()
+    };
+    let cold = serve_once(false);
+    let warm = serve_once(true);
+    assert_eq!(cold.completions.len(), 2);
+    assert_eq!(warm.completions.len(), 2);
+    for (c, w) in cold.completions.iter().zip(&warm.completions) {
+        assert_eq!(c.id, w.id);
+        assert_eq!(c.result.checksum, w.result.checksum, "frame {}", c.id);
+    }
+    assert!(warm.blocks_searched > 0);
+    assert_eq!(cold.blocks_searched + cold.blocks_reused, 0);
+}
+
+/// Muxed serving: two interleaved drift sequences keep separate cache
+/// lineages (keys include `FrameMeta::sequence`), so both reuse blocks
+/// and both stay bit-identical to the cold muxed run.
+#[test]
+fn muxed_sequences_reuse_independently_and_stay_bit_identical() {
+    const FRAMES: u64 = 3;
+    let mux = || {
+        SequenceMux::new(
+            vec![drift_source(FRAMES, 0xA11CE), drift_source(FRAMES, 0xB0B)],
+            MuxPolicy::RoundRobin,
+        )
+        .unwrap()
+    };
+    let serve_once = |delta_on: bool| {
+        let srv = StreamServer::new(
+            stream_net(),
+            cfg(SearcherKind::Octree, ShardConfig::default(), delta_on),
+            8,
+        );
+        let mut m = mux();
+        srv.serve(2 * FRAMES, &mut m, &mut NativeEngine::default())
+            .unwrap()
+    };
+    let cold = serve_once(false);
+    let warm = serve_once(true);
+    assert_eq!(cold.completions.len(), 2 * FRAMES as usize);
+    assert_eq!(warm.completions.len(), 2 * FRAMES as usize);
+    for (c, w) in cold.completions.iter().zip(&warm.completions) {
+        assert_eq!((c.sequence, c.id), (w.sequence, w.id));
+        assert_eq!(
+            c.result.checksum, w.result.checksum,
+            "seq {} frame {} diverged warm through the mux",
+            c.sequence, c.id
+        );
+    }
+    // Each sequence's frame 0 is cold; every later frame of *both*
+    // sequences reuses — the interleaving never cross-contaminates.
+    for w in &warm.completions {
+        if w.id == 0 {
+            assert_eq!(w.result.blocks_reused, 0, "seq {} frame 0", w.sequence);
+        } else {
+            assert!(
+                w.result.blocks_reused > 0,
+                "seq {} frame {} reused nothing",
+                w.sequence,
+                w.id
+            );
+        }
+    }
+    assert_eq!(warm.evictions, 0, "two sequences fit the default bound");
+}
+
+/// `delta_max_entries = 1` with two alternating sequences: every commit
+/// displaces the other lineage, so the cache stays bounded (evictions
+/// counted), no frame ever finds a prior, and the bits never change.
+#[test]
+fn eviction_bound_keeps_memory_capped_and_bits_identical() {
+    const FRAMES: u64 = 3;
+    let mux = || {
+        SequenceMux::new(
+            vec![drift_source(FRAMES, 0xE01), drift_source(FRAMES, 0xE02)],
+            MuxPolicy::RoundRobin,
+        )
+        .unwrap()
+    };
+    let serve_once = |delta_on: bool, max_entries: usize| {
+        let rc = RunnerConfig {
+            inflight: 1,
+            compute_workers: 1,
+            seed: 33,
+            delta: DeltaConfig {
+                enabled: delta_on,
+                max_entries,
+                ..DeltaConfig::default()
+            },
+            ..Default::default()
+        };
+        let srv = StreamServer::new(stream_net(), rc, 8);
+        let mut m = mux();
+        srv.serve(2 * FRAMES, &mut m, &mut NativeEngine::default())
+            .unwrap()
+    };
+    let cold = serve_once(false, 1);
+    let starved = serve_once(true, 1);
+    assert!(starved.evictions > 0, "cap 1 must displace the other lineage");
+    // Strict round-robin alternation means no key ever survives to its
+    // own sequence's next frame: every frame is effectively cold.
+    assert_eq!(starved.blocks_reused, 0);
+    assert!(starved.blocks_searched > 0);
+    for (c, w) in cold.completions.iter().zip(&starved.completions) {
+        assert_eq!((c.sequence, c.id), (w.sequence, w.id));
+        assert_eq!(
+            c.result.checksum, w.result.checksum,
+            "seq {} frame {} diverged under eviction pressure",
+            c.sequence, c.id
+        );
+    }
+}
+
+/// The cache is strictly opt-in: a default `RunnerConfig` never touches
+/// it and reports zero counters.
+#[test]
+fn delta_cache_is_off_by_default() {
+    let rc = RunnerConfig::default();
+    assert!(!rc.delta.enabled);
+    let srv = StreamServer::new(stream_net(), rc, 4);
+    let mut src = drift_source(3, 0x0FF);
+    let report = srv
+        .serve(3, src.as_mut(), &mut NativeEngine::default())
+        .unwrap();
+    assert_eq!(report.completions.len(), 3);
+    assert_eq!(report.blocks_searched, 0);
+    assert_eq!(report.blocks_reused, 0);
+    assert_eq!(report.evictions, 0);
+    assert_eq!(report.reuse_ratio(), 0.0);
+    assert!(report
+        .completions
+        .iter()
+        .all(|c| c.result.blocks_searched == 0 && c.result.blocks_reused == 0));
+}
