@@ -18,17 +18,23 @@
 //!   strict dispatch reduction asserted — then the SLO admission
 //!   frontier (drop-oldest / defer-sharding / reject-over-depth) over
 //!   the attributed-latency p95.
-//! * **delta sweep**: an ego-motion drift stream served cold vs warm
-//!   through the temporal delta map-search cache — per-frame
+//! * **delta sweep**: an ego-motion drift stream served cold, warm
+//!   (map-search rung), and warm with compute reuse — per-frame
 //!   bit-identity asserted, cold-vs-warm p50/p95 and blocks-searched
-//!   vs frame index printed with the stream's reuse ratio.
+//!   vs frame index printed with the stream's reuse ratio — then a
+//!   feature-stable coherent stream where the compute rung actually
+//!   splices psums: gather rows saved, waves skipped, and a strict
+//!   GEMM-dispatch reduction asserted.
 //!
 //! ```sh
 //! cargo bench --bench stream_waves             # full sweeps
 //! cargo bench --bench stream_waves -- --smoke  # CI: one tick over the
 //!                                              # checked-in KITTI fixture
 //!                                              # + serving + warm-cache
-//!                                              # ticks
+//!                                              # + compute-reuse ticks
+//! cargo bench --bench stream_waves -- --json BENCH_stream_waves.json
+//!     # machine-readable sweep points (fps, p50/p95, dispatches, and
+//!     # the reuse/skip counters); composes with --smoke
 //! ```
 
 use voxel_cim::bench_util::bench;
@@ -115,9 +121,97 @@ fn latency_line(report: &StreamReport) -> String {
         .unwrap_or_else(|| "no completions".into())
 }
 
+/// One sweep point of the machine-readable report (`--json <path>`):
+/// throughput, the latency distribution, the engine dispatch count, and
+/// every delta-reuse counter the stream report carries.
+struct JsonPoint {
+    sweep: String,
+    label: String,
+    fps: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    dispatches: u64,
+    blocks_searched: u64,
+    blocks_reused: u64,
+    voxels_rebinned: u64,
+    waves_skipped: u64,
+    rows_gathered_saved: u64,
+}
+
+impl JsonPoint {
+    fn of(sweep: &str, label: &str, report: &StreamReport, dispatches: u64) -> Self {
+        let (p50_ms, p95_ms) = report
+            .latency_summary()
+            .map(|s| (s.p50 * 1e3, s.p95 * 1e3))
+            .unwrap_or((0.0, 0.0));
+        Self {
+            sweep: sweep.into(),
+            label: label.into(),
+            fps: report.throughput_fps(),
+            p50_ms,
+            p95_ms,
+            dispatches,
+            blocks_searched: report.blocks_searched,
+            blocks_reused: report.blocks_reused,
+            voxels_rebinned: report.voxels_rebinned,
+            waves_skipped: report.waves_skipped,
+            rows_gathered_saved: report.rows_gathered_saved,
+        }
+    }
+
+    // `{:?}` on the ASCII sweep/label strings is valid JSON escaping.
+    fn render(&self) -> String {
+        format!(
+            "    {{\"sweep\": {:?}, \"label\": {:?}, \"fps\": {:.3}, \
+             \"p50_ms\": {:.4}, \"p95_ms\": {:.4}, \"dispatches\": {}, \
+             \"blocks_searched\": {}, \"blocks_reused\": {}, \
+             \"voxels_rebinned\": {}, \"waves_skipped\": {}, \
+             \"rows_gathered_saved\": {}}}",
+            self.sweep,
+            self.label,
+            self.fps,
+            self.p50_ms,
+            self.p95_ms,
+            self.dispatches,
+            self.blocks_searched,
+            self.blocks_reused,
+            self.voxels_rebinned,
+            self.waves_skipped,
+            self.rows_gathered_saved,
+        )
+    }
+}
+
+/// `--json <path>`; a bare `--json` falls back to the CI convention,
+/// `BENCH_stream_waves.json` in the working directory.
+fn json_path() -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter().position(|a| a == "--json").map(|i| {
+        args.get(i + 1)
+            .filter(|p| !p.starts_with("--"))
+            .cloned()
+            .unwrap_or_else(|| "BENCH_stream_waves.json".into())
+    })
+}
+
+fn write_json(path: &str, points: &[JsonPoint]) {
+    let body: Vec<String> = points.iter().map(JsonPoint::render).collect();
+    let doc = format!(
+        "{{\n  \"bench\": \"stream_waves\",\n  \"points\": [\n{}\n  ]\n}}\n",
+        body.join(",\n")
+    );
+    std::fs::write(path, doc).expect("write --json report");
+    println!("wrote {path} ({} sweep points)", points.len());
+}
+
 fn main() {
+    let json = json_path();
+    let mut points: Vec<JsonPoint> = Vec::new();
     if std::env::args().any(|a| a == "--smoke") {
-        smoke();
+        smoke(&mut points);
+        if let Some(path) = &json {
+            write_json(path, &points);
+        }
         return;
     }
     println!("# stream_waves — multi-frame GEMM wave batching");
@@ -154,6 +248,12 @@ fn main() {
             calls,
             r.mean() * 1e3,
         );
+        points.push(JsonPoint::of(
+            "inflight",
+            &format!("inflight{inflight}"),
+            &report,
+            calls,
+        ));
         reports.push((inflight, calls, report));
     }
 
@@ -175,16 +275,19 @@ fn main() {
         );
     }
 
-    shard_sweep();
-    profile_sweep();
-    serving_sweep();
-    delta_sweep();
+    shard_sweep(&mut points);
+    profile_sweep(&mut points);
+    serving_sweep(&mut points);
+    delta_sweep(&mut points);
+    if let Some(path) = &json {
+        write_json(path, &points);
+    }
 }
 
 /// Shard-count sweep: one oversized scene per frame, served at 1 / 2x2 /
 /// 4x4 block-shard grids — the latency-vs-throughput curve of the shard
 /// scheduler, with bit-identity asserted across every grid.
-fn shard_sweep() {
+fn shard_sweep(points: &mut Vec<JsonPoint>) {
     const FRAMES: u64 = 3;
     let extent = Extent3::new(192, 192, 10);
     let net = NetworkSpec {
@@ -231,6 +334,12 @@ fn shard_sweep() {
             shards,
             pipe.dispatches(),
         );
+        points.push(JsonPoint::of(
+            "shard",
+            &format!("{bx}x{by}"),
+            &report,
+            pipe.dispatches(),
+        ));
         match &baseline {
             None => baseline = Some(report),
             Some(base) => {
@@ -249,7 +358,7 @@ fn shard_sweep() {
 
 /// Scenario-profile sweep: workload diversity through the prefetching
 /// dataset layer — same engine config, four density shapes.
-fn profile_sweep() {
+fn profile_sweep(points: &mut Vec<JsonPoint>) {
     const FRAMES: u64 = 6;
     let extent = Extent3::new(64, 64, 12);
     println!("\n# profile sweep — dataset ingestion (prefetch depth 2, inflight 2)");
@@ -277,6 +386,7 @@ fn profile_sweep() {
             pipe.dispatches(),
         );
         assert_eq!(report.completions.len(), FRAMES as usize, "{profile}");
+        points.push(JsonPoint::of("profile", profile.key(), &report, pipe.dispatches()));
     }
 }
 
@@ -332,7 +442,7 @@ fn serving_with(window: WindowPolicy, admission: AdmissionConfig) -> ServingConf
 /// Serving sweep: cross-scene lockstep windows + SLO admission over a
 /// mixed-profile sequence mux — the p95-vs-throughput frontier against
 /// the exclusive-window baseline.
-fn serving_sweep() {
+fn serving_sweep(points: &mut Vec<JsonPoint>) {
     const FRAMES: u64 = 8;
     let extent = Extent3::new(64, 64, 12);
     println!("\n# serving sweep — mixed-profile mux (urban shards next to far-field)");
@@ -366,6 +476,7 @@ fn serving_sweep() {
             report.windows,
             pipe.dispatches(),
         );
+        points.push(JsonPoint::of("window", window.key(), &report, pipe.dispatches()));
         reports.push((window, pipe.dispatches(), report));
     }
     let (_, excl_calls, excl) = &reports[0];
@@ -444,6 +555,7 @@ fn serving_sweep() {
             adm.rejected,
             adm.deferred,
         );
+        points.push(JsonPoint::of("admission", policy.key(), &report, pipe.dispatches()));
         // Shedding policies lose frames only to their counters; deferral
         // serves everything. Every pulled frame is served or accounted.
         assert_eq!(
@@ -454,16 +566,20 @@ fn serving_sweep() {
     }
 }
 
-/// Delta sweep: the temporal delta map-search cache over an ego-motion
-/// drift stream — the same frames served cold (cache off) and warm,
-/// with per-frame bit-identity asserted, the cold-vs-warm latency
-/// distributions printed, and the warm run's blocks-searched curve
-/// traced against the frame index (the compulsory-cold first frame,
-/// then the steady dirty + halo band).
-fn delta_sweep() {
+/// Delta sweep: the temporal delta cache over an ego-motion drift
+/// stream — the same frames served cold, warm (map-search rung), and
+/// warm with the compute rung stacked on top — with per-frame
+/// bit-identity asserted, the latency distributions printed, and the
+/// warm run's blocks-searched curve traced against the frame index.
+/// Drift profiles re-randomize per-voxel features every frame, so the
+/// compute rung must stay bit-identical there while splicing nothing;
+/// a final feature-stable coherent stream shows the rung actually
+/// saving gather rows, skipping waves, and dispatching strictly fewer
+/// GEMMs.
+fn delta_sweep(points: &mut Vec<JsonPoint>) {
     const FRAMES: u64 = 8;
     let extent = Extent3::new(64, 64, 12);
-    println!("\n# delta sweep — temporal map-search cache over an ego-motion stream");
+    println!("\n# delta sweep — temporal delta cache over an ego-motion stream");
     let source = || {
         let inner = ProfileSource::new(ScenarioProfile::Urban, extent, 0.02, 0xDE17A)
             .with_drift(1.0)
@@ -471,7 +587,9 @@ fn delta_sweep() {
         PrefetchSource::spawn(Box::new(inner), 2)
     };
     let mut reports = Vec::new();
-    for enabled in [false, true] {
+    for (label, enabled, compute) in
+        [("off", false, false), ("map", true, false), ("map+compute", true, true)]
+    {
         let cfg = RunnerConfig {
             // One frame per window so every warm frame plans against its
             // predecessor's committed cache entry.
@@ -479,6 +597,7 @@ fn delta_sweep() {
             compute_workers: 1,
             delta: DeltaConfig {
                 enabled,
+                compute,
                 blocks_x: 16,
                 blocks_y: 16,
                 ..DeltaConfig::default()
@@ -493,32 +612,37 @@ fn delta_sweep() {
             .unwrap();
         assert_eq!(report.completions.len(), FRAMES as usize);
         println!(
-            "delta {:<4} {:.2} fps | {} | {} searched | {} reused ({:.1}% reuse) | \
-             {} dispatches",
-            if enabled { "on" } else { "off" },
+            "delta {:<11} {:.2} fps | {} | {} searched | {} reused ({:.1}% reuse) | \
+             {} rows saved | {} waves skipped | {} dispatches",
+            label,
             report.throughput_fps(),
             latency_line(&report),
             report.blocks_searched,
             report.blocks_reused,
             report.reuse_ratio() * 100.0,
+            report.rows_gathered_saved,
+            report.waves_skipped,
             pipe.dispatches(),
         );
+        points.push(JsonPoint::of("delta", label, &report, pipe.dispatches()));
         reports.push(report);
     }
-    let (cold, warm) = (&reports[0], &reports[1]);
-    for (a, b) in cold.completions.iter().zip(&warm.completions) {
-        assert_eq!(a.id, b.id);
-        assert_eq!(
-            a.result.checksum, b.result.checksum,
-            "frame {} diverged with the delta cache on",
-            a.id
+    let cold = &reports[0];
+    for warm in &reports[1..] {
+        for (a, b) in cold.completions.iter().zip(&warm.completions) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(
+                a.result.checksum, b.result.checksum,
+                "frame {} diverged with the delta cache on",
+                a.id
+            );
+        }
+        assert!(
+            warm.blocks_reused > 0,
+            "the ego-motion stream must reuse blocks once warm"
         );
     }
-    assert!(
-        warm.blocks_reused > 0,
-        "the ego-motion stream must reuse blocks once warm"
-    );
-    for c in &warm.completions {
+    for c in &reports[1].completions {
         println!(
             "frame {}: {} blocks searched | {} reused",
             c.id, c.result.blocks_searched, c.result.blocks_reused
@@ -526,17 +650,83 @@ fn delta_sweep() {
     }
     println!(
         "delta sweep bit-identical; stream reuse {:.1}%",
-        warm.reuse_ratio() * 100.0
+        reports[1].reuse_ratio() * 100.0
+    );
+
+    // Compute-rung point: a feature-stable coherent stream (the same
+    // scene every frame — the regime where psums are reusable at all).
+    println!("\n# delta sweep — compute reuse on a feature-stable coherent stream");
+    let coherent = make_frame(9);
+    let mut pair = Vec::new();
+    for on in [false, true] {
+        let cfg = RunnerConfig {
+            inflight: 1,
+            compute_workers: 1,
+            delta: DeltaConfig {
+                enabled: on,
+                compute: on,
+                blocks_x: 16,
+                blocks_y: 16,
+                ..DeltaConfig::default()
+            },
+            ..Default::default()
+        };
+        let mut pipe = mk_pipe(net(), cfg, ServingConfig::default(), FRAMES);
+        let t = coherent.clone();
+        let report = pipe
+            .run(Job::stream(ClosureSource::new(move |_| t.clone())))
+            .unwrap()
+            .into_stream()
+            .unwrap();
+        assert_eq!(report.completions.len(), FRAMES as usize);
+        println!(
+            "compute {:<4} {:.2} fps | {} | {} rows saved | {} waves skipped | \
+             {} dispatches",
+            if on { "on" } else { "off" },
+            report.throughput_fps(),
+            latency_line(&report),
+            report.rows_gathered_saved,
+            report.waves_skipped,
+            pipe.dispatches(),
+        );
+        points.push(JsonPoint::of(
+            "delta-compute",
+            if on { "warm" } else { "cold" },
+            &report,
+            pipe.dispatches(),
+        ));
+        pair.push((pipe.dispatches(), report));
+    }
+    let (cold_calls, cold) = &pair[0];
+    let (warm_calls, warm) = &pair[1];
+    for (a, b) in cold.completions.iter().zip(&warm.completions) {
+        assert_eq!(
+            a.result.checksum, b.result.checksum,
+            "frame {} diverged with compute reuse",
+            a.id
+        );
+    }
+    assert!(warm.rows_gathered_saved > 0, "coherent stream must splice psums");
+    assert!(warm.waves_skipped > 0, "full splices must drop whole waves");
+    assert!(
+        warm_calls < cold_calls,
+        "compute reuse must dispatch strictly fewer GEMMs ({warm_calls} vs {cold_calls})"
+    );
+    println!(
+        "compute reuse bit-identical; dispatches {warm_calls} vs {cold_calls}, \
+         {} rows saved, {} waves skipped",
+        warm.rows_gathered_saved, warm.waves_skipped
     );
 }
 
 /// CI smoke: one serving tick over the checked-in KITTI fixture — the
 /// on-disk reader → voxelizer → stream-server path end to end — plus a
 /// mixed-profile serving tick exercising the sequence mux and the
-/// cross-scene window packer, and a warm-cache tick asserting the
-/// temporal delta cache reuses blocks without changing a single bit.
-/// A few hundred milliseconds in total.
-fn smoke() {
+/// cross-scene window packer, a warm-cache tick asserting the temporal
+/// delta cache reuses blocks without changing a single bit, and a
+/// compute-reuse tick asserting a warm coherent frame issues strictly
+/// fewer GEMM dispatches than cold. A few hundred milliseconds total.
+fn smoke(points: &mut Vec<JsonPoint>) {
     println!("# stream_waves --smoke — KITTI fixture, one tick");
     let fixture = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/kitti");
     let extent = Extent3::new(16, 16, 8);
@@ -576,14 +766,15 @@ fn smoke() {
         );
     }
     println!("smoke ok: {} frames served", report.completions.len());
-    serving_smoke(net.clone());
-    delta_smoke(net);
+    points.push(JsonPoint::of("smoke", "kitti", &report, pipe.dispatches()));
+    serving_smoke(net.clone(), points);
+    delta_smoke(net, points);
 }
 
 /// The serving-scheduler smoke: a two-sequence mux served through
 /// exclusive and cross-scene windows with sharding forced on — per-frame
 /// bit-identity and a strict dispatch reduction asserted on every push.
-fn serving_smoke(net: NetworkSpec) {
+fn serving_smoke(net: NetworkSpec, points: &mut Vec<JsonPoint>) {
     println!("\n# --smoke serving tick — mixed-profile mux, 2x2 shards");
     let extent = net.extent;
     let cfg = RunnerConfig {
@@ -632,6 +823,12 @@ fn serving_smoke(net: NetworkSpec) {
             pipe.dispatches(),
             latency_line(&report),
         );
+        points.push(JsonPoint::of(
+            "smoke-serving",
+            window.key(),
+            &report,
+            pipe.dispatches(),
+        ));
         results.push((pipe.dispatches(), report));
     }
     let (excl_calls, excl) = &results[0];
@@ -654,8 +851,11 @@ fn serving_smoke(net: NetworkSpec) {
 
 /// The warm-cache smoke: a short ego-motion drift stream served cold and
 /// warm — per-frame checksum equality against the cold pass plus a
-/// nonzero reuse ratio asserted on every push.
-fn delta_smoke(net: NetworkSpec) {
+/// nonzero reuse ratio asserted on every push — followed by the
+/// compute-reuse tick: a feature-stable coherent stream where the warm
+/// pass must save gather rows, skip waves, and issue strictly fewer
+/// GEMM dispatches than the cold pass, bit-identically.
+fn delta_smoke(net: NetworkSpec, points: &mut Vec<JsonPoint>) {
     println!("\n# --smoke delta tick — warm temporal cache vs cold, drift stream");
     let extent = net.extent;
     let source = || {
@@ -681,6 +881,12 @@ fn delta_smoke(net: NetworkSpec) {
             .into_stream()
             .unwrap();
         assert_eq!(report.completions.len(), 4);
+        points.push(JsonPoint::of(
+            "smoke-delta",
+            if enabled { "warm" } else { "cold" },
+            &report,
+            pipe.dispatches(),
+        ));
         reports.push(report);
     }
     let (cold, warm) = (&reports[0], &reports[1]);
@@ -700,5 +906,68 @@ fn delta_smoke(net: NetworkSpec) {
         warm.blocks_searched,
         warm.blocks_reused,
         warm.reuse_ratio() * 100.0
+    );
+
+    // Compute-reuse tick: the same coherent scene every frame (drift
+    // profiles re-randomize features, which correctly defeats psum
+    // reuse — the dispatch-reduction gate needs a stable-feature
+    // stream).
+    println!("\n# --smoke compute tick — psum splicing vs cold, coherent stream");
+    let coherent = {
+        let g = Voxelizer::synth_clustered(extent, 0.08, 4, 0.3, 0xC0);
+        let mut t = SparseTensor::from_coords(extent, g.coords(), 4);
+        for (i, v) in t.features.iter_mut().enumerate() {
+            *v = ((i % 13) as i8) - 6;
+        }
+        t
+    };
+    let mut pair = Vec::new();
+    for on in [false, true] {
+        let cfg = RunnerConfig {
+            inflight: 1,
+            compute_workers: 1,
+            delta: DeltaConfig {
+                enabled: on,
+                compute: on,
+                ..DeltaConfig::default()
+            },
+            ..Default::default()
+        };
+        let mut pipe = mk_pipe(net.clone(), cfg, ServingConfig::default(), 4);
+        let t = coherent.clone();
+        let report = pipe
+            .run(Job::stream(ClosureSource::new(move |_| t.clone())))
+            .unwrap()
+            .into_stream()
+            .unwrap();
+        assert_eq!(report.completions.len(), 4);
+        points.push(JsonPoint::of(
+            "smoke-compute",
+            if on { "warm" } else { "cold" },
+            &report,
+            pipe.dispatches(),
+        ));
+        pair.push((pipe.dispatches(), report));
+    }
+    let (cold_calls, ccold) = &pair[0];
+    let (warm_calls, cwarm) = &pair[1];
+    for (a, b) in ccold.completions.iter().zip(&cwarm.completions) {
+        assert_eq!(
+            a.result.checksum, b.result.checksum,
+            "frame {} diverged with compute reuse",
+            a.id
+        );
+    }
+    assert!(cwarm.rows_gathered_saved > 0, "compute smoke must splice psums");
+    assert!(cwarm.waves_skipped > 0, "full splices must drop whole waves");
+    assert!(
+        warm_calls < cold_calls,
+        "compute smoke: warm must issue strictly fewer GEMM dispatches \
+         ({warm_calls} vs {cold_calls})"
+    );
+    println!(
+        "compute smoke ok: bit-identical, dispatches {warm_calls} vs {cold_calls}, \
+         {} rows saved, {} waves skipped",
+        cwarm.rows_gathered_saved, cwarm.waves_skipped
     );
 }

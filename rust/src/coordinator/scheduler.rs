@@ -26,6 +26,7 @@ use crate::model::layer::{LayerSpec, NetworkSpec};
 use crate::sparse::rulebook::{ConvKind, Rulebook};
 use crate::sparse::tensor::SparseTensor;
 use crate::spconv::conv2d::{conv2d_im2col, DenseMap};
+use crate::spconv::gather::ComputeSplice;
 use crate::spconv::layer::{GemmEngine, LayerWeights, SpconvLayer, SpconvOutput};
 use crate::spconv::quant;
 use crate::util::config::Config;
@@ -146,6 +147,16 @@ pub struct FrameResult {
     /// Blocks whose rulebook fragments were spliced from the cache
     /// instead of searched. Zero when the cache is disabled.
     pub blocks_reused: u64,
+    /// Voxels re-binned by delta voxelization (all of them on a cold or
+    /// non-delta frame). Stamped by the stream server from `FrameMeta`;
+    /// zero on non-streamed runs.
+    pub voxels_rebinned: u64,
+    /// Shared GEMM waves this frame skipped via compute-core reuse,
+    /// summed over the sparse prefix. Zero when `delta_compute` is off.
+    pub waves_skipped: u64,
+    /// Gather rows (rule pairs) compute-core reuse removed from wave
+    /// packing. Zero when `delta_compute` is off.
+    pub rows_gathered_saved: u64,
 }
 
 impl FrameResult {
@@ -202,6 +213,9 @@ struct FrameState {
     /// Delta-cache counters accumulated across this frame's slots.
     searched: u64,
     reused: u64,
+    /// Compute-core reuse counters accumulated across the prefix layers.
+    waves_skipped: u64,
+    rows_saved: u64,
 }
 
 /// One frame's rolling output from a [`NetworkRunner::run_group`] pass:
@@ -215,6 +229,8 @@ struct GroupRun {
     delta: Option<FrameDelta>,
     searched: u64,
     reused: u64,
+    waves_skipped: u64,
+    rows_saved: u64,
 }
 
 /// How one frame obtains its rulebook for a sparse layer.
@@ -352,6 +368,8 @@ impl NetworkRunner {
                 delta: deltas.next().flatten(),
                 searched: 0,
                 reused: 0,
+                waves_skipped: 0,
+                rows_saved: 0,
             })
             .collect();
         let mut weight_seed = seed0;
@@ -507,6 +525,23 @@ impl NetworkRunner {
                         }
                     }
                     let tc = Instant::now();
+                    // Compute-core reuse: each frame's compute slot for
+                    // this layer (claimed by layer index — compute specs
+                    // are one-per-layer, contiguous from 0 both in the
+                    // whole net and in the sharded prefix group). A task
+                    // with clean-cone blocks yields a splice plan: its
+                    // cached psum rows bypass gather/GEMM/scatter.
+                    let mut ctasks: Vec<Option<delta::ComputeTask>> = frames
+                        .iter_mut()
+                        .map(|f| f.delta.as_mut().and_then(|d| d.take_compute(li)))
+                        .collect();
+                    let splices: Vec<Option<ComputeSplice>> = ctasks
+                        .iter()
+                        .zip(&rbs)
+                        .map(|(t, (rb, _, _))| {
+                            t.as_ref().and_then(|t| t.splice_plan(&rb.out_coords))
+                        })
+                        .collect();
                     // Single frames and lockstep groups share one path:
                     // shared GEMM waves, sharded over the compute pool
                     // when the engine can fork.
@@ -515,21 +550,41 @@ impl NetworkRunner {
                         .zip(&rbs)
                         .map(|(f, (rb, _, _))| (Arc::clone(&f.cur), Arc::clone(rb)))
                         .collect();
-                    let outs: Vec<SpconvOutput> =
-                        layer.execute_batch_pooled(&group, engine, self.compute_pool.as_ref())?;
+                    let (outs, dstats): (Vec<SpconvOutput>, _) = layer.execute_batch_delta(
+                        &group,
+                        engine,
+                        self.compute_pool.as_ref(),
+                        &splices,
+                    )?;
                     let layer_secs = tc.elapsed().as_secs_f64();
                     // Attribute the shared compute wall time to frames in
                     // proportion to their pair counts.
                     let total_pairs: u64 =
                         rbs.iter().map(|(rb, _, _)| rb.len() as u64).sum();
-                    for ((f, (rb, access, ms_secs)), out) in
-                        frames.iter_mut().zip(rbs).zip(outs)
+                    for (fi, ((f, (rb, access, ms_secs)), out)) in
+                        frames.iter_mut().zip(rbs).zip(outs).enumerate()
                     {
                         let share = if total_pairs == 0 {
                             layer_secs / nf as f64
                         } else {
                             layer_secs * rb.len() as f64 / total_pairs as f64
                         };
+                        f.waves_skipped += dstats.waves_skipped[fi];
+                        f.rows_saved += dstats.rows_saved[fi];
+                        // The layer's psum rows become next frame's cache
+                        // for this compute slot (clean blocks keep their
+                        // prior Arc).
+                        if let Some(task) = ctasks[fi].take() {
+                            let rows = delta::bin_compute_rows(
+                                &task,
+                                &rb.out_coords,
+                                &out.psums,
+                                c_out,
+                            );
+                            if let Some(d) = f.delta.as_mut() {
+                                d.record_compute(task.index, rows);
+                            }
+                        }
                         f.records.push(LayerRecord {
                             name: format!("{spec:?}"),
                             pairs: rb.len() as u64,
@@ -618,6 +673,8 @@ impl NetworkRunner {
                 delta: f.delta,
                 searched: f.searched,
                 reused: f.reused,
+                waves_skipped: f.waves_skipped,
+                rows_saved: f.rows_saved,
             })
             .collect())
     }
@@ -722,6 +779,15 @@ impl NetworkRunner {
         } else {
             Vec::new()
         });
+        // Compute slots mirror the same static walk, one per prefix
+        // layer; empty (== feature off) unless `delta_compute` is set.
+        let cspecs: Arc<Vec<SlotSpec>> = Arc::new(
+            if delta.is_some() && self.cfg.delta.compute {
+                crate::coordinator::shard::delta_compute_specs(&self.net.layers)
+            } else {
+                Vec::new()
+            },
+        );
         let t0 = Instant::now();
         let mut plans: Vec<Option<ShardPlan>> = Vec::with_capacity(inputs.len());
         for t in &inputs {
@@ -746,6 +812,7 @@ impl NetworkRunner {
                             DeltaKey { sequence, shard: None },
                             t,
                             &specs,
+                            &cspecs,
                         ))
                     })
                     .collect(),
@@ -780,6 +847,7 @@ impl NetworkRunner {
                                 DeltaKey { sequence: seqs[i], shard: Some(s.block) },
                                 &s.tensor,
                                 &specs,
+                                &cspecs,
                             )));
                         }
                         pseudo.push(s.tensor.clone());
@@ -791,6 +859,7 @@ impl NetworkRunner {
                             DeltaKey { sequence: seqs[i], shard: None },
                             &input,
                             &specs,
+                            &cspecs,
                         )));
                     }
                     pseudo.push(input);
@@ -808,7 +877,7 @@ impl NetworkRunner {
         // Collapse pseudo-frame runs back to per-scene prefix outputs.
         let mut runs = runs.into_iter();
         let mut records_per: Vec<Vec<LayerRecord>> = Vec::with_capacity(plans.len());
-        let mut counters_per: Vec<(u64, u64)> = Vec::with_capacity(plans.len());
+        let mut counters_per: Vec<(u64, u64, u64, u64)> = Vec::with_capacity(plans.len());
         let mut merged: Vec<SparseTensor> = Vec::with_capacity(plans.len());
         let mut shard_counts: Vec<u32> = Vec::with_capacity(plans.len());
         for plan in &plans {
@@ -820,18 +889,22 @@ impl NetworkRunner {
                     records_per.push(merge_records(scene_runs.iter().map(|r| &r.records)));
                     let mut searched = 0;
                     let mut reused = 0;
+                    let mut waves_skipped = 0;
+                    let mut rows_saved = 0;
                     for r in &scene_runs {
                         searched += r.searched;
                         reused += r.reused;
+                        waves_skipped += r.waves_skipped;
+                        rows_saved += r.rows_saved;
                     }
-                    counters_per.push((searched, reused));
+                    counters_per.push((searched, reused, waves_skipped, rows_saved));
                     merged.push(p.merge(scene_runs.iter().map(|r| r.cur.as_ref()))?);
                     shard_counts.push(p.shards.len() as u32);
                 }
                 None => {
                     let r = runs.next().expect("one run per plain scene");
                     records_per.push(r.records);
-                    counters_per.push((r.searched, r.reused));
+                    counters_per.push((r.searched, r.reused, r.waves_skipped, r.rows_saved));
                     merged.push(
                         Arc::try_unwrap(r.cur).unwrap_or_else(|arc| (*arc).clone()),
                     );
@@ -844,13 +917,15 @@ impl NetworkRunner {
                 .into_iter()
                 .zip(records_per)
                 .zip(&counters_per)
-                .map(|((cur, records), &(searched, reused))| GroupRun {
+                .map(|((cur, records), &(searched, reused, waves_skipped, rows_saved))| GroupRun {
                     records,
                     cur: Arc::new(cur),
                     bev: None,
                     delta: None,
                     searched,
                     reused,
+                    waves_skipped,
+                    rows_saved,
                 })
                 .collect()
         } else {
@@ -865,7 +940,7 @@ impl NetworkRunner {
                 .into_iter()
                 .zip(records_per)
                 .zip(&counters_per)
-                .map(|((t, mut records), &(searched, reused))| {
+                .map(|((t, mut records), &(searched, reused, waves_skipped, rows_saved))| {
                     records.extend(t.records);
                     GroupRun {
                         records,
@@ -874,6 +949,8 @@ impl NetworkRunner {
                         delta: None,
                         searched,
                         reused,
+                        waves_skipped,
+                        rows_saved,
                     }
                 })
                 .collect()
@@ -915,6 +992,9 @@ fn finalize_frame(run: GroupRun, shards: u32, total_seconds: f64) -> FrameResult
         total_seconds,
         blocks_searched: run.searched,
         blocks_reused: run.reused,
+        voxels_rebinned: 0,
+        waves_skipped: run.waves_skipped,
+        rows_gathered_saved: run.rows_saved,
     }
 }
 

@@ -179,6 +179,46 @@ pub fn delta_slot_specs(layers: &[LayerSpec]) -> Vec<crate::mapsearch::SlotSpec>
     specs
 }
 
+/// Static compute-slot walk for the temporal delta cache's compute-core
+/// reuse: one [`SlotSpec`] per *layer* of the sparse prefix (slot index
+/// == layer index), recording the accumulated receptive-cone radius of
+/// that layer's **output** in layer-0 voxels plus the output coordinate
+/// scale. A cached block of output rows (psums) is valid exactly when
+/// every layer-0 block within `ceil(halo / block_w)` Chebyshev blocks is
+/// clean in both coordinates *and* features — clean cone ⇒ identical
+/// rule pairs and identical input features ⇒ identical psums (weights
+/// are deterministic per layer) ⇒ identical features through the pure
+/// per-row requant epilogue.
+///
+/// Unlike [`delta_slot_specs`] (one slot per fresh search) this walk is
+/// dense over the layer prefix, because *every* layer's GEMM waves are
+/// re-dispatched per frame even when its rulebook was spliced. It stops
+/// at the first layer it cannot absorb (dense, or TConv2 — decoder
+/// reuse would need union-cones across the skip connection), keeping the
+/// specs a safe prefix: layers past the stop simply bypass compute
+/// reuse.
+pub fn delta_compute_specs(layers: &[LayerSpec]) -> Vec<crate::mapsearch::SlotSpec> {
+    let mut specs = Vec::new();
+    let (mut halo, mut scale) = (0usize, 1usize);
+    for l in layers {
+        match l {
+            LayerSpec::Subm3 { .. } => {
+                halo += scale;
+                specs.push(crate::mapsearch::SlotSpec { halo, scale });
+            }
+            LayerSpec::GConv2 { .. } => {
+                halo += scale;
+                scale *= 2;
+                // The *output* scale: cached rows are binned to layer-0
+                // blocks through the anchor `c * scale`.
+                specs.push(crate::mapsearch::SlotSpec { halo, scale });
+            }
+            _ => break,
+        }
+    }
+    specs
+}
+
 /// One pseudo-frame: a block's owned voxels plus its halo ring, at the
 /// scene's global coordinates and full extent. Geometry is untouched —
 /// only membership shrinks — so every searcher treats a shard exactly
@@ -401,6 +441,54 @@ mod tests {
         assert_eq!(specs, vec![SlotSpec { halo: 3, scale: 1 }]);
         // Upsampling past input resolution stops the walk.
         assert!(delta_slot_specs(&[TConv2 { c_in: 4, c_out: 4 }]).is_empty());
+    }
+
+    #[test]
+    fn compute_specs_cover_every_prefix_layer() {
+        use crate::mapsearch::SlotSpec;
+        use LayerSpec::*;
+        // Stream-backbone shape: one slot per layer, cones accumulating
+        // exactly like prefix_halo, GConv2 slots at the *output* scale.
+        let specs = delta_compute_specs(&[
+            Subm3 { c_in: 4, c_out: 16 },
+            Subm3 { c_in: 16, c_out: 16 },
+            GConv2 { c_in: 16, c_out: 32 },
+            Subm3 { c_in: 32, c_out: 32 },
+        ]);
+        assert_eq!(
+            specs,
+            vec![
+                SlotSpec { halo: 1, scale: 1 },
+                SlotSpec { halo: 2, scale: 1 },
+                SlotSpec { halo: 3, scale: 2 },
+                SlotSpec { halo: 5, scale: 2 },
+            ]
+        );
+        // The final slot's cone matches the shard planner's whole-prefix
+        // halo: both walks bound the same dependency cone.
+        let net = [
+            Subm3 { c_in: 4, c_out: 16 },
+            Subm3 { c_in: 16, c_out: 16 },
+            GConv2 { c_in: 16, c_out: 32 },
+            Subm3 { c_in: 32, c_out: 32 },
+        ];
+        let (h, s) = prefix_halo(&net).unwrap();
+        let last = *delta_compute_specs(&net).last().unwrap();
+        assert_eq!((last.halo, last.scale), (h, s));
+        // Safe prefix: the walk stops at dense layers and TConv2.
+        let specs = delta_compute_specs(&[
+            Subm3 { c_in: 4, c_out: 8 },
+            ToBev,
+            Subm3 { c_in: 8, c_out: 8 },
+        ]);
+        assert_eq!(specs.len(), 1);
+        let specs = delta_compute_specs(&[
+            GConv2 { c_in: 4, c_out: 8 },
+            TConv2 { c_in: 8, c_out: 8 },
+            Subm3 { c_in: 8, c_out: 8 },
+        ]);
+        assert_eq!(specs, vec![SlotSpec { halo: 1, scale: 2 }]);
+        assert!(delta_compute_specs(&[ToBev]).is_empty());
     }
 
     #[test]

@@ -80,6 +80,17 @@ pub struct StreamReport {
     pub blocks_reused: u64,
     /// Cache entries displaced by the `delta_max_entries` bound.
     pub evictions: u64,
+    /// Voxels actually re-binned by the sources across the stream: with
+    /// delta voxelization only the dirty blocks' voxels, otherwise every
+    /// occupied voxel of every KITTI frame (zero for synthetic sources,
+    /// which have no voxelization stage).
+    pub voxels_rebinned: u64,
+    /// Shared GEMM waves skipped across the stream by compute-core reuse
+    /// (zero unless `delta_compute` is on).
+    pub waves_skipped: u64,
+    /// Gather rows (rule pairs) compute-core reuse dropped from wave
+    /// packing across the stream (zero unless `delta_compute` is on).
+    pub rows_gathered_saved: u64,
 }
 
 impl StreamReport {
@@ -233,6 +244,9 @@ impl StreamServer {
         };
         let mut blocks_searched: u64 = 0;
         let mut blocks_reused: u64 = 0;
+        let mut voxels_rebinned: u64 = 0;
+        let mut waves_skipped: u64 = 0;
+        let mut rows_gathered_saved: u64 = 0;
         // Admitted frames waiting for a window slot, in arrival order.
         let mut pending: VecDeque<SourcedFrame> = VecDeque::new();
         // Frames pulled from the source so far (bounds total pulls at
@@ -282,9 +296,11 @@ impl StreamServer {
             let window = self.take_window(&mut pending, inflight);
             windows += 1;
             let started = Instant::now();
-            let metas: Vec<(u64, u32, Instant)> = window
+            let metas: Vec<(u64, u32, Instant, u64)> = window
                 .iter()
-                .map(|f| (f.meta.id, f.meta.sequence, f.produced))
+                .map(|f| {
+                    (f.meta.id, f.meta.sequence, f.produced, f.meta.voxels_rebinned)
+                })
                 .collect();
             let tensors: Vec<SparseTensor> =
                 window.into_iter().map(|f| f.tensor).collect();
@@ -301,9 +317,17 @@ impl StreamServer {
                 }
                 None => self.runner.run_scenes(tensors, engine)?,
             };
-            for ((id, sequence, produced), result) in metas.into_iter().zip(results) {
+            for ((id, sequence, produced, rebinned), mut result) in
+                metas.into_iter().zip(results)
+            {
+                // The runner never sees the voxelization stage; stamp
+                // the source-side counter onto the frame's result here.
+                result.voxels_rebinned = rebinned;
                 blocks_searched += result.blocks_searched;
                 blocks_reused += result.blocks_reused;
+                voxels_rebinned += result.voxels_rebinned;
+                waves_skipped += result.waves_skipped;
+                rows_gathered_saved += result.rows_gathered_saved;
                 let latency = produced.elapsed().as_secs_f64();
                 let wait = started.saturating_duration_since(produced).as_secs_f64();
                 // A sharded scene's per-shard map searches run
@@ -330,6 +354,9 @@ impl StreamServer {
             blocks_searched,
             blocks_reused,
             evictions: cache.as_ref().map_or(0, |c| c.evictions),
+            voxels_rebinned,
+            waves_skipped,
+            rows_gathered_saved,
         })
     }
 
@@ -666,6 +693,7 @@ mod tests {
             RunnerConfig {
                 delta: crate::mapsearch::DeltaConfig {
                     enabled: true,
+                    compute: true,
                     ..Default::default()
                 },
                 ..Default::default()
@@ -692,6 +720,12 @@ mod tests {
         assert!(b.blocks_reused > 0, "static stream reused no blocks");
         assert!(b.reuse_ratio() > 0.0);
         assert_eq!(b.evictions, 0);
+        // Compute-core reuse: a fully static scene splices every psum
+        // row after frame 0, so warm frames shed gather rows and whole
+        // GEMM waves — while staying bit-identical (checked above).
+        assert_eq!(a.waves_skipped + a.rows_gathered_saved, 0);
+        assert!(b.rows_gathered_saved > 0, "static stream saved no gather rows");
+        assert!(b.waves_skipped > 0, "static stream skipped no waves");
     }
 
     #[test]

@@ -26,7 +26,7 @@ use anyhow::Context;
 use crate::dataset::{FrameSource, SourcedFrame};
 use crate::pointcloud::scene::Point;
 use crate::pointcloud::vfe::{Vfe, VfeKind, VFE_FEATURES};
-use crate::pointcloud::voxelize::{VoxelGrid, Voxelizer};
+use crate::pointcloud::voxelize::{DeltaVoxelizer, VoxelGrid, Voxelizer};
 use crate::sparse::tensor::SparseTensor;
 
 /// One decoded frame: surviving points, their labels (when a label file
@@ -166,6 +166,11 @@ pub struct KittiSource {
     /// frame — including the whole ground plane — would be discarded as
     /// out-of-range. SECOND's detection crop corresponds to (0, 40, 3).
     offset: (f32, f32, f32),
+    /// Temporal delta voxelization: re-voxelize only the blocks whose
+    /// point stream changed since the previous frame (bit-identical to
+    /// the plain path; see [`DeltaVoxelizer`]). `None` = full rebuild
+    /// every frame.
+    delta: Option<DeltaVoxelizer>,
     label: String,
 }
 
@@ -208,6 +213,7 @@ impl KittiSource {
             voxelizer,
             vfe: Vfe::new(VfeKind::Simple),
             offset: (0.0, 0.0, 0.0),
+            delta: None,
             label: dir.display().to_string(),
         })
     }
@@ -216,6 +222,19 @@ impl KittiSource {
     /// sensor-centered cloud into the positive-octant voxel grid.
     pub fn with_offset(mut self, dx: f32, dy: f32, dz: f32) -> Self {
         self.offset = (dx, dy, dz);
+        self
+    }
+
+    /// Enable delta voxelization over a `(blocks_x, blocks_y)` grid — the
+    /// same block partition the map-search delta cache uses, so the two
+    /// reuse rungs dirty together under drift.
+    pub fn with_delta(mut self, blocks_x: usize, blocks_y: usize) -> Self {
+        self.delta = Some(DeltaVoxelizer::new(
+            self.voxelizer.clone(),
+            self.vfe.clone(),
+            blocks_x,
+            blocks_y,
+        ));
         self
     }
 
@@ -230,7 +249,10 @@ impl KittiSource {
 
     /// Voxelize + featurize one decoded frame (the same path `run-det` /
     /// `run-seg` take for synthetic scenes), after the origin shift.
-    fn build_tensor(&self, points: &[Point]) -> SparseTensor {
+    /// Returns the tensor plus how many voxels were actually re-binned:
+    /// every occupied voxel without delta voxelization, only the dirty
+    /// blocks' voxels with it.
+    fn build_tensor(&mut self, points: &[Point]) -> (SparseTensor, u64) {
         let (dx, dy, dz) = self.offset;
         let shifted: Vec<Point> = points
             .iter()
@@ -241,9 +263,13 @@ impl KittiSource {
                 reflectance: p.reflectance,
             })
             .collect();
+        if let Some(delta) = self.delta.as_mut() {
+            return delta.process(&shifted);
+        }
         let grid = self.voxelizer.voxelize(&shifted);
         let (feats, _scale) = self.vfe.extract_i8(&grid);
-        SparseTensor::new(
+        let rebinned = grid.len() as u64;
+        let tensor = SparseTensor::new(
             self.voxelizer.extent,
             grid.voxels
                 .iter()
@@ -256,7 +282,8 @@ impl KittiSource {
                 })
                 .collect(),
             VFE_FEATURES,
-        )
+        );
+        (tensor, rebinned)
     }
 }
 
@@ -275,8 +302,10 @@ impl FrameSource for KittiSource {
                 return None;
             }
         };
-        let tensor = self.build_tensor(&frame.points);
-        Some(SourcedFrame::new(id, frame.points.len(), tensor))
+        let (tensor, rebinned) = self.build_tensor(&frame.points);
+        let mut sf = SourcedFrame::new(id, frame.points.len(), tensor);
+        sf.meta.voxels_rebinned = rebinned;
+        Some(sf)
     }
 
     fn label(&self) -> String {
@@ -333,15 +362,18 @@ mod tests {
             voxelizer: unit_voxelizer(),
             vfe: Vfe::new(VfeKind::Simple),
             offset: (0.0, 0.0, 0.0),
+            delta: None,
             label: "test".into(),
         }
     }
 
     #[test]
     fn build_tensor_routes_through_voxelizer_and_vfe() {
-        let src = test_source();
-        let t = src.build_tensor(&[pt(3.5, 4.5, 1.5), pt(3.6, 4.4, 1.5), pt(12.5, 0.5, 6.5)]);
+        let mut src = test_source();
+        let (t, rebinned) =
+            src.build_tensor(&[pt(3.5, 4.5, 1.5), pt(3.6, 4.4, 1.5), pt(12.5, 0.5, 6.5)]);
         assert_eq!(t.len(), 2);
+        assert_eq!(rebinned, 2, "no delta: every voxel counts as rebinned");
         assert_eq!(t.channels, VFE_FEATURES);
         assert!(t.check_canonical());
         assert_eq!(t.coords[0], Coord3::new(3, 4, 1));
@@ -358,11 +390,39 @@ mod tests {
         let sensor_centered = [pt(3.5, -6.5, -1.5), pt(10.5, 2.5, 0.5)];
         // Without an offset the negative-component return is dropped
         // (only (10.5, 2.5, 0.5) is in-range).
-        assert_eq!(test_source().build_tensor(&sensor_centered).len(), 1);
-        let shifted = test_source().with_offset(0.0, 8.0, 4.0);
-        let t = shifted.build_tensor(&sensor_centered);
+        assert_eq!(test_source().build_tensor(&sensor_centered).0.len(), 1);
+        let mut shifted = test_source().with_offset(0.0, 8.0, 4.0);
+        let (t, _) = shifted.build_tensor(&sensor_centered);
         assert_eq!(t.len(), 2);
         assert_eq!(t.coords[0], Coord3::new(3, 1, 2));
         assert_eq!(t.coords[1], Coord3::new(10, 10, 4));
+    }
+
+    #[test]
+    fn delta_source_matches_plain_and_reports_rebinning() {
+        // The same three-frame "sequence" through a plain source and a
+        // delta-voxelizing one: tensors bit-identical frame by frame, and
+        // the warm frames rebin strictly fewer voxels than the cold one.
+        let frames: Vec<Vec<Point>> = vec![
+            vec![pt(3.5, 4.5, 1.5), pt(12.5, 9.5, 6.5), pt(1.5, 14.5, 0.5)],
+            vec![pt(3.5, 4.5, 1.5), pt(12.5, 9.5, 6.5), pt(1.5, 14.5, 0.5)],
+            vec![pt(3.5, 4.5, 1.5), pt(12.6, 9.5, 6.5), pt(1.5, 14.5, 0.5)],
+        ];
+        let mut plain = test_source();
+        let mut delta = test_source().with_delta(4, 4);
+        let mut cold_rebinned = 0;
+        for (i, f) in frames.iter().enumerate() {
+            let (pt_, pr) = plain.build_tensor(f);
+            let (dt, dr) = delta.build_tensor(f);
+            assert_eq!(pt_.coords, dt.coords, "frame {i}");
+            assert_eq!(pt_.features, dt.features, "frame {i}");
+            assert_eq!(pr, pt_.len() as u64);
+            if i == 0 {
+                cold_rebinned = dr;
+                assert_eq!(dr, dt.len() as u64);
+            } else {
+                assert!(dr < cold_rebinned, "frame {i}: {dr} vs {cold_rebinned}");
+            }
+        }
     }
 }

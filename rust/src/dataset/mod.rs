@@ -55,6 +55,11 @@ pub struct FrameMeta {
     pub points: usize,
     /// Voxel-grid extent of the frame.
     pub extent: Extent3,
+    /// Voxels the source actually re-binned building this frame's
+    /// tensor: with delta voxelization only the dirty blocks' voxels,
+    /// otherwise all of them. Zero for sources that synthesize occupied
+    /// voxels directly (no voxelization stage to skip).
+    pub voxels_rebinned: u64,
 }
 
 /// One frame handed to the stream server: metadata + the voxelized
@@ -77,6 +82,7 @@ impl SourcedFrame {
                 sequence: 0,
                 points,
                 extent: tensor.extent,
+                voxels_rebinned: 0,
             },
             tensor,
             produced: Instant::now(),
@@ -254,6 +260,20 @@ impl DatasetConfig {
     /// profile. Wrapped in a [`PrefetchSource`] when `prefetch > 0`.
     /// `Ok(None)` when no source is configured.
     pub fn build(&self, default_extent: Extent3) -> crate::Result<Option<Box<dyn FrameSource>>> {
+        self.build_delta(default_extent, None)
+    }
+
+    /// [`Self::build`] with delta voxelization: when `delta_blocks` is
+    /// `Some((bx, by))`, a KITTI source re-voxelizes only the blocks of
+    /// that grid whose point stream changed since the previous frame
+    /// (bit-identical tensors; `FrameMeta::voxels_rebinned` reports the
+    /// savings). Profile and trace sources synthesize voxels directly and
+    /// ignore the hint.
+    pub fn build_delta(
+        &self,
+        default_extent: Extent3,
+        delta_blocks: Option<(usize, usize)>,
+    ) -> crate::Result<Option<Box<dyn FrameSource>>> {
         if self.source.is_empty() {
             return Ok(None);
         }
@@ -266,13 +286,15 @@ impl DatasetConfig {
                 extent,
                 self.max_points_per_voxel,
             );
-            Box::new(
-                KittiSource::open(&self.source, vx)?.with_offset(
-                    self.offset.0,
-                    self.offset.1,
-                    self.offset.2,
-                ),
-            )
+            let mut src = KittiSource::open(&self.source, vx)?.with_offset(
+                self.offset.0,
+                self.offset.1,
+                self.offset.2,
+            );
+            if let Some((bx, by)) = delta_blocks {
+                src = src.with_delta(bx, by);
+            }
+            Box::new(src)
         } else {
             // validate_source admitted the profile name just above; keep
             // the error path anyway (a directory racing away between the

@@ -92,6 +92,17 @@ fn main() -> voxel_cim::Result<()> {
         "enable the temporal delta map-search cache: warm stream frames re-search \
          only dirty blocks and splice the rest (overrides [runner] delta; bit-identical)",
     )
+    .switch(
+        "delta-compute",
+        "extend the delta cache through the GEMM core: clean-cone blocks splice \
+         cached psum rows and skip their gather rows and waves (implies --delta; \
+         bit-identical)",
+    )
+    .switch(
+        "delta-voxelize",
+        "extend the delta cache through voxelization: KITTI sources re-bin only \
+         dirty blocks' points (implies --delta; bit-identical)",
+    )
     .parse();
 
     let seed = args.get_u64("seed");
@@ -296,7 +307,17 @@ fn run_stream(args: &Args) -> voxel_cim::Result<()> {
         cfg.runner.searcher,
         cfg.runner.shard.blocks_x,
         cfg.runner.shard.blocks_y,
-        if cfg.runner.delta.enabled { " | delta on" } else { "" },
+        match (
+            cfg.runner.delta.enabled,
+            cfg.runner.delta.compute,
+            cfg.runner.delta.voxelize,
+        ) {
+            (false, _, _) => "",
+            (true, false, false) => " | delta on",
+            (true, true, false) => " | delta on (+compute)",
+            (true, false, true) => " | delta on (+voxelize)",
+            (true, true, true) => " | delta on (+compute +voxelize)",
+        },
         pipe.window(),
         cfg.serving.admission.policy,
         if cfg.serving.admission.slo_ms > 0.0 {
@@ -306,6 +327,7 @@ fn run_stream(args: &Args) -> voxel_cim::Result<()> {
         },
     );
     println!("engine: {}", pipe.engine_desc());
+    let delta_voxelize = cfg.runner.delta.enabled && cfg.runner.delta.voxelize;
     let report = pipe.run(Job::Stream(source))?.into_stream()?;
     for c in &report.completions {
         println!(
@@ -351,6 +373,15 @@ fn run_stream(args: &Args) -> voxel_cim::Result<()> {
             report.reuse_ratio() * 100.0,
             report.evictions,
         );
+    }
+    if report.waves_skipped + report.rows_gathered_saved > 0 {
+        println!(
+            "delta compute: {} GEMM waves skipped | {} gather rows saved",
+            report.waves_skipped, report.rows_gathered_saved,
+        );
+    }
+    if delta_voxelize {
+        println!("delta voxelize: {} voxels re-binned", report.voxels_rebinned);
     }
     let adm = report.admission;
     if adm.dropped + adm.rejected + adm.deferred > 0 {

@@ -24,6 +24,25 @@
 //! Correctness is unconditional — hashing catches any change, and the
 //! halo ring covers cross-block influence — so eviction and window
 //! ordering only ever affect the hit rate, never the produced rulebook.
+//!
+//! Two further reuse rungs ride the same hash/halo machinery
+//! (`[runner] delta_compute`, off by default):
+//!
+//! * **Compute-core reuse** — per compute slot (one per sparse-prefix
+//!   layer, `shard::delta_compute_specs`), the prior frame's pre-epilogue
+//!   psum rows are kept per block ([`BlockRows`]). A block splices its
+//!   cached rows when every layer-0 block within the slot's *accumulated*
+//!   receptive cone is clean in **coordinates and features**
+//!   ([`block_chashes`]): a clean cone fixes the rule pairs and every
+//!   input feature feeding the block, weights are deterministic per
+//!   layer, so the psums — and through the pure per-row requant epilogue
+//!   the output features — are bit-identical. Spliced rows are dropped
+//!   from gather/GEMM/scatter packing entirely ([`ComputeTask::splice_plan`]
+//!   feeds the skip-aware wave packer), so warm frames dispatch strictly
+//!   fewer GEMM waves.
+//! * **Delta voxelization** lives with the voxelizer
+//!   (`pointcloud::voxelize::DeltaVoxelizer`) but follows the same
+//!   per-block hash-and-reuse contract one level earlier, on raw points.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -35,6 +54,7 @@ use crate::mapsearch::table::BlockPartition;
 use crate::mapsearch::{AccessStats, MapSearch};
 use crate::sparse::rulebook::{ConvKind, RulePair, Rulebook};
 use crate::sparse::tensor::SparseTensor;
+use crate::spconv::gather::ComputeSplice;
 use crate::util::config::{Config, Value};
 
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
@@ -51,6 +71,13 @@ pub struct DeltaConfig {
     pub blocks_y: usize,
     /// Bound on cached `(sequence, shard-block)` entries; LRU beyond it.
     pub max_entries: usize,
+    /// Compute-core reuse: cache per-block psum rows of the sparse
+    /// prefix and skip the GEMM waves of blocks whose accumulated
+    /// receptive cone stayed clean. Only meaningful with `enabled`.
+    pub compute: bool,
+    /// Delta voxelization: re-bin points and re-run VFE only for dirty
+    /// blocks of a point-cloud source. Only meaningful with `enabled`.
+    pub voxelize: bool,
 }
 
 impl Default for DeltaConfig {
@@ -60,6 +87,8 @@ impl Default for DeltaConfig {
             blocks_x: 8,
             blocks_y: 8,
             max_entries: 32,
+            compute: false,
+            voxelize: false,
         }
     }
 }
@@ -78,6 +107,16 @@ impl DeltaConfig {
         let blocks_x = cfg.usize_or("runner.delta_blocks_x", d.blocks_x)?;
         let blocks_y = cfg.usize_or("runner.delta_blocks_y", d.blocks_y)?;
         let max_entries = cfg.usize_or("runner.delta_max_entries", d.max_entries)?;
+        let compute = match cfg.get("runner.delta_compute") {
+            None => d.compute,
+            Some(Value::Bool(b)) => *b,
+            Some(v) => bail!("runner.delta_compute must be a boolean, got {v:?}"),
+        };
+        let voxelize = match cfg.get("runner.delta_voxelize") {
+            None => d.voxelize,
+            Some(Value::Bool(b)) => *b,
+            Some(v) => bail!("runner.delta_voxelize must be a boolean, got {v:?}"),
+        };
         anyhow::ensure!(
             blocks_x >= 1 && blocks_y >= 1,
             "runner.delta_blocks_x/delta_blocks_y must be >= 1"
@@ -88,6 +127,8 @@ impl DeltaConfig {
             blocks_x,
             blocks_y,
             max_entries,
+            compute,
+            voxelize,
         })
     }
 }
@@ -136,14 +177,32 @@ pub struct BlockFragment {
     pub pairs: Vec<(u16, Coord3)>,
 }
 
+/// The prior frame's compute rows for one block of one compute slot:
+/// `(output coordinate, pre-epilogue psum row)` in coordinate order. The
+/// psum row is spliced into the zero-initialized accumulation buffer
+/// *before* the requant epilogue, so the output features fall out
+/// bit-identically without re-running gather/GEMM/scatter for the row.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct BlockRows {
+    pub rows: Vec<(Coord3, Vec<i32>)>,
+}
+
 struct SeqEntry {
     extent: Extent3,
     part: BlockPartition,
     sig: u64,
     hashes: Vec<u64>,
+    /// Per-block hash over coordinates *and* features — the stricter
+    /// invalidation unit compute reuse needs (a feature edit with
+    /// unchanged geometry keeps the rulebook but changes every psum
+    /// downstream).
+    chashes: Vec<u64>,
     /// Per slot, per block: the fragment to splice when the block stays
     /// clean.
     slots: Vec<Vec<Arc<BlockFragment>>>,
+    /// Per compute slot (layer of the sparse prefix), per block: the psum
+    /// rows to splice when the block's accumulated cone stays clean.
+    compute: Vec<Vec<Arc<BlockRows>>>,
     tick: u64,
 }
 
@@ -180,11 +239,17 @@ impl DeltaCache {
     /// order afterwards). A missing or structurally mismatched entry
     /// (extent, grid, or network shape changed) degrades to a cold plan:
     /// every block dirty, nothing to splice.
+    ///
+    /// `specs` are the map-search slots (`shard::delta_slot_specs`);
+    /// `cspecs` the compute slots (`shard::delta_compute_specs`, empty
+    /// when compute reuse is off). Both chains are part of the entry
+    /// signature, so flipping either feature starts cold, never wrong.
     pub fn begin_frame(
         &self,
         key: DeltaKey,
         input: &SparseTensor,
         specs: &Arc<Vec<SlotSpec>>,
+        cspecs: &Arc<Vec<SlotSpec>>,
     ) -> FrameDelta {
         let part = BlockPartition::new(
             self.cfg.blocks_x,
@@ -192,18 +257,32 @@ impl DeltaCache {
             input.extent.x,
             input.extent.y,
         );
-        let sig = specs_sig(specs);
+        let sig = specs_sig(specs) ^ specs_sig(cspecs).wrapping_mul(FNV_PRIME);
         let hashes = block_hashes(input, &part);
+        let chashes = if cspecs.is_empty() {
+            Vec::new()
+        } else {
+            block_chashes(input, &part)
+        };
         let prior = self.entries.get(&key).filter(|e| {
             e.extent == input.extent
                 && e.part == part
                 && e.sig == sig
                 && e.slots.len() == specs.len()
                 && e.hashes.len() == hashes.len()
+                && e.compute.len() == cspecs.len()
+                && e.chashes.len() == chashes.len()
         });
         let dirty: Vec<bool> = match prior {
             Some(e) => e.hashes.iter().zip(&hashes).map(|(a, b)| a != b).collect(),
             None => vec![true; part.num_blocks()],
+        };
+        // Compute dirtiness is strictly stronger: features count too.
+        let cdirty: Vec<bool> = match prior {
+            Some(e) if !cspecs.is_empty() => {
+                e.chashes.iter().zip(&chashes).map(|(a, b)| a != b).collect()
+            }
+            _ => vec![true; part.num_blocks()],
         };
         let (bw, bh) = (part.block_w(), part.block_h());
         let slots = specs
@@ -229,14 +308,37 @@ impl DeltaCache {
                 })
             })
             .collect();
+        let compute = cspecs
+            .iter()
+            .enumerate()
+            .map(|(s, spec)| {
+                let research = dilate(
+                    &cdirty,
+                    part.bx,
+                    part.by,
+                    spec.halo.div_ceil(bw),
+                    spec.halo.div_ceil(bh),
+                );
+                Some(ComputeTask {
+                    index: s,
+                    spec: *spec,
+                    part,
+                    research,
+                    prior: prior.map(|e| e.compute[s].clone()),
+                })
+            })
+            .collect();
         FrameDelta {
             key,
             extent: input.extent,
             part,
             sig,
             hashes,
+            chashes,
             slots,
             new_slots: vec![None; specs.len()],
+            compute,
+            new_compute: vec![None; cspecs.len()],
             next: 0,
         }
     }
@@ -246,11 +348,21 @@ impl DeltaCache {
     pub fn commit(&mut self, fd: FrameDelta) {
         // A hole (a slot the runtime never searched) means the static
         // walk and the run disagreed; drop the entry rather than cache a
-        // partial frame.
+        // partial frame. Compute slots obey the same rule.
         let mut slots = Vec::with_capacity(fd.new_slots.len());
         for s in fd.new_slots {
             match s {
                 Some(f) => slots.push(f),
+                None => {
+                    self.entries.remove(&fd.key);
+                    return;
+                }
+            }
+        }
+        let mut compute = Vec::with_capacity(fd.new_compute.len());
+        for s in fd.new_compute {
+            match s {
+                Some(r) => compute.push(r),
                 None => {
                     self.entries.remove(&fd.key);
                     return;
@@ -276,7 +388,9 @@ impl DeltaCache {
                 part: fd.part,
                 sig: fd.sig,
                 hashes: fd.hashes,
+                chashes: fd.chashes,
                 slots,
+                compute,
                 tick: self.tick,
             },
         );
@@ -292,8 +406,11 @@ pub struct FrameDelta {
     part: BlockPartition,
     sig: u64,
     hashes: Vec<u64>,
+    chashes: Vec<u64>,
     slots: Vec<Option<SlotTask>>,
     new_slots: Vec<Option<Vec<Arc<BlockFragment>>>>,
+    compute: Vec<Option<ComputeTask>>,
+    new_compute: Vec<Option<Vec<Arc<BlockRows>>>>,
     next: usize,
 }
 
@@ -310,6 +427,20 @@ impl FrameDelta {
     /// Record the fragments produced for slot `index`.
     pub fn record(&mut self, index: usize, frags: Vec<Arc<BlockFragment>>) {
         self.new_slots[index] = Some(frags);
+    }
+
+    /// Claim the compute task for sparse-prefix layer `layer`. Unlike
+    /// [`FrameDelta::take_slot`] this claims by index, not sequentially:
+    /// compute slots are one-per-layer (contiguous from layer 0, both in
+    /// the whole net and in a sharded prefix group), so the group runner
+    /// addresses them by its local layer index directly.
+    pub fn take_compute(&mut self, layer: usize) -> Option<ComputeTask> {
+        self.compute.get_mut(layer)?.take()
+    }
+
+    /// Record the psum rows produced for compute slot `index`.
+    pub fn record_compute(&mut self, index: usize, rows: Vec<Arc<BlockRows>>) {
+        self.new_compute[index] = Some(rows);
     }
 
     pub fn key(&self) -> DeltaKey {
@@ -338,6 +469,90 @@ pub struct SlotOutcome {
     pub reused: u64,
 }
 
+/// The delta compute work for one sparse-prefix layer of one frame.
+pub struct ComputeTask {
+    pub index: usize,
+    pub spec: SlotSpec,
+    pub part: BlockPartition,
+    /// Blocks whose psums must be recomputed this frame: compute-dirty
+    /// (coords *or* features changed) dilated by the layer's accumulated
+    /// receptive cone.
+    pub research: Vec<bool>,
+    /// Prior-frame psum rows per block; `None` on a cold start.
+    pub prior: Option<Vec<Arc<BlockRows>>>,
+}
+
+impl ComputeTask {
+    /// Build the splice plan against this frame's output coordinates:
+    /// which output rows can skip gather/GEMM/scatter entirely, and the
+    /// cached psum rows to write in their place. `None` means nothing to
+    /// splice (cold start, or every block inside the re-compute region) —
+    /// the layer then runs the plain packing with zero overhead.
+    ///
+    /// The skip mask is derived *from the cache*: only rows present in a
+    /// clean block's cached entry are skipped, so any output the cache
+    /// does not know about is computed normally. The converse — a cached
+    /// clean-block row whose coordinate no longer exists — would mean the
+    /// hash/halo invariant is broken, and fails loudly.
+    pub fn splice_plan(&self, out_coords: &[Coord3]) -> Option<ComputeSplice> {
+        let prior = self.prior.as_ref()?;
+        if self.research.iter().all(|r| *r) {
+            return None;
+        }
+        let mut skip = vec![false; out_coords.len()];
+        let mut rows: Vec<(u32, Vec<i32>)> = Vec::new();
+        for (b, br) in prior.iter().enumerate() {
+            if self.research[b] {
+                continue;
+            }
+            for (c, psums) in &br.rows {
+                let o = out_coords
+                    .binary_search(c)
+                    .expect("delta compute: clean-block output vanished");
+                skip[o] = true;
+                rows.push((o as u32, psums.clone()));
+            }
+        }
+        if rows.is_empty() {
+            return None;
+        }
+        Some(ComputeSplice { skip, rows })
+    }
+}
+
+/// Bin one layer's pre-epilogue psums into per-block [`BlockRows`] for
+/// the next frame. Re-computed blocks are rebuilt from the psum buffer;
+/// clean blocks keep the prior frame's `Arc` (the spliced rows *are* in
+/// the buffer too, so either source is bit-identical — the clone is
+/// free).
+pub fn bin_compute_rows(
+    task: &ComputeTask,
+    out_coords: &[Coord3],
+    psums: &[i32],
+    c_out: usize,
+) -> Vec<Arc<BlockRows>> {
+    let nb = task.part.num_blocks();
+    let warm = task.prior.is_some();
+    let mut fresh: Vec<Vec<(Coord3, Vec<i32>)>> = vec![Vec::new(); nb];
+    for (o, c) in out_coords.iter().enumerate() {
+        let b = block_at(&task.part, *c, task.spec.scale);
+        if !warm || task.research[b] {
+            fresh[b].push((*c, psums[o * c_out..(o + 1) * c_out].to_vec()));
+        }
+    }
+    (0..nb)
+        .map(|b| {
+            if warm && !task.research[b] {
+                task.prior.as_ref().expect("warm implies prior")[b].clone()
+            } else {
+                Arc::new(BlockRows {
+                    rows: std::mem::take(&mut fresh[b]),
+                })
+            }
+        })
+        .collect()
+}
+
 /// Per-block FNV-1a over the (sorted) coordinate list: the invalidation
 /// unit. Any voxel appearing, moving, or vanishing anywhere in a block's
 /// (x, y) column changes that block's hash.
@@ -349,6 +564,26 @@ pub fn block_hashes(input: &SparseTensor, part: &BlockPartition) -> Vec<u64> {
             for byte in v.to_le_bytes() {
                 *h = (*h ^ byte as u64).wrapping_mul(FNV_PRIME);
             }
+        }
+    }
+    hashes
+}
+
+/// Per-block FNV-1a over coordinates *and* i8 feature rows: the stricter
+/// invalidation unit compute reuse needs. Geometry-only hashing
+/// ([`block_hashes`]) keeps a rulebook valid when features drift, but a
+/// single changed activation changes every psum downstream of it.
+pub fn block_chashes(input: &SparseTensor, part: &BlockPartition) -> Vec<u64> {
+    let mut hashes = vec![FNV_OFFSET; part.num_blocks()];
+    for (i, c) in input.coords.iter().enumerate() {
+        let h = &mut hashes[block_at(part, *c, 1)];
+        for v in [c.x, c.y, c.z] {
+            for byte in v.to_le_bytes() {
+                *h = (*h ^ byte as u64).wrapping_mul(FNV_PRIME);
+            }
+        }
+        for &f in input.feature(i) {
+            *h = (*h ^ (f as u8) as u64).wrapping_mul(FNV_PRIME);
         }
     }
     hashes
@@ -493,21 +728,48 @@ pub fn delta_search(
         (rb, stats)
     };
 
-    // Fragments for the next frame, binned by output block. Rebuilt from
-    // the merged rulebook every frame — self-correcting by construction,
-    // since the merged rulebook *is* the full-search rulebook.
-    let binned = rb.pairs_by_output_bin(nb, |c| block_at(part, c, scale));
-    let frags = binned
-        .into_iter()
-        .map(|ps| {
-            Arc::new(BlockFragment {
-                pairs: ps
-                    .into_iter()
-                    .map(|p| (p.offset, rb.out_coords[p.output as usize]))
-                    .collect(),
+    // Fragments for the next frame, binned by output block. On a warm
+    // frame only the re-searched blocks' fragments are rebuilt; a clean
+    // block keeps the prior frame's `Arc`. The clone is exact: a clean
+    // block's pair set is identical across the two frames (that is what
+    // splicing relied on), and per-block pair order is the canonical
+    // (offset, input, output) order in both builds — input/output index
+    // order tracks coordinate order, which the clean block shares with
+    // the prior frame. Cold frames rebuild everything.
+    let frags: Vec<Arc<BlockFragment>> = if warm {
+        let prior = task.prior.as_ref().expect("warm implies prior");
+        let mut fresh: Vec<Vec<(u16, Coord3)>> = vec![Vec::new(); nb];
+        for p in &rb.pairs {
+            let out = rb.out_coords[p.output as usize];
+            let b = block_at(part, out, scale);
+            if task.research[b] {
+                fresh[b].push((p.offset, out));
+            }
+        }
+        (0..nb)
+            .map(|b| {
+                if task.research[b] {
+                    Arc::new(BlockFragment {
+                        pairs: std::mem::take(&mut fresh[b]),
+                    })
+                } else {
+                    prior[b].clone()
+                }
             })
-        })
-        .collect();
+            .collect()
+    } else {
+        rb.pairs_by_output_bin(nb, |c| block_at(part, c, scale))
+            .into_iter()
+            .map(|ps| {
+                Arc::new(BlockFragment {
+                    pairs: ps
+                        .into_iter()
+                        .map(|p| (p.offset, rb.out_coords[p.output as usize]))
+                        .collect(),
+                })
+            })
+            .collect()
+    };
 
     let mut searched = 0u64;
     let mut reused = 0u64;
@@ -533,6 +795,11 @@ mod tests {
 
     fn tensor(e: Extent3, sparsity: f64, seed: u64) -> SparseTensor {
         SparseTensor::from_coords(e, Voxelizer::synth_occupancy(e, sparsity, seed).coords(), 1)
+    }
+
+    /// Compute reuse off: the common case for the map-search-only tests.
+    fn no_compute() -> Arc<Vec<SlotSpec>> {
+        Arc::new(Vec::new())
     }
 
     #[test]
@@ -581,7 +848,7 @@ mod tests {
                 ..Default::default()
             });
             // Cold frame A.
-            let mut fd = cache.begin_frame(key, &a, &specs);
+            let mut fd = cache.begin_frame(key, &a, &specs, &no_compute());
             let task = fd.take_slot().unwrap();
             let (rb, _, out) = delta_search(searcher.as_ref(), &a, 3, &task);
             let (want, _) = searcher.search_subm(&a, 3);
@@ -591,7 +858,7 @@ mod tests {
             fd.record(task.index, out.frags);
             cache.commit(fd);
             // Warm frame B.
-            let mut fd = cache.begin_frame(key, &b, &specs);
+            let mut fd = cache.begin_frame(key, &b, &specs, &no_compute());
             let task = fd.take_slot().unwrap();
             assert!(
                 task.research.iter().any(|r| !r),
@@ -605,6 +872,19 @@ mod tests {
             fd.record(task.index, out.frags);
             cache.commit(fd);
             assert_eq!(cache.len(), 1);
+            // Frame C, warm against B's *incrementally* built fragments
+            // (clean blocks of B carry A's Arcs): a far-corner edit.
+            let mut coords = b.coords.clone();
+            coords.push(Coord3::new(29, 29, 2));
+            let c = SparseTensor::from_coords(e, coords, 1);
+            let mut fd = cache.begin_frame(key, &c, &specs, &no_compute());
+            let task = fd.take_slot().unwrap();
+            let (rb, _, out) = delta_search(searcher.as_ref(), &c, 3, &task);
+            let (want, _) = searcher.search_subm(&c, 3);
+            assert_eq!(rb.pairs, want.pairs, "{kind}: chained warm frame diverged");
+            assert!(out.reused > 0);
+            fd.record(task.index, out.frags);
+            cache.commit(fd);
         }
     }
 
@@ -615,17 +895,21 @@ mod tests {
         let specs = Arc::new(vec![SlotSpec { halo: 1, scale: 1 }]);
         let key = DeltaKey { sequence: 0, shard: None };
         let mut cache = DeltaCache::new(DeltaConfig::default());
-        let mut fd = cache.begin_frame(key, &a, &specs);
+        let mut fd = cache.begin_frame(key, &a, &specs, &no_compute());
         let task = fd.take_slot().unwrap();
         let (_, _, out) = delta_search(SearcherKind::Doms.build().as_ref(), &a, 3, &task);
         fd.record(task.index, out.frags);
         cache.commit(fd);
         // Different network shape -> cold plan despite identical coords.
         let other = Arc::new(vec![SlotSpec { halo: 3, scale: 2 }]);
-        let mut fd = cache.begin_frame(key, &a, &other);
+        let mut fd = cache.begin_frame(key, &a, &other, &no_compute());
         let task = fd.take_slot().unwrap();
         assert!(task.prior.is_none());
         assert!(task.research.iter().all(|r| *r));
+        // Turning compute reuse on also changes the signature -> cold.
+        let mut fd = cache.begin_frame(key, &a, &specs, &specs);
+        let task = fd.take_slot().unwrap();
+        assert!(task.prior.is_none());
     }
 
     #[test]
@@ -641,7 +925,7 @@ mod tests {
         let s = SearcherKind::Doms.build();
         for seq in 0..3u32 {
             let key = DeltaKey { sequence: seq, shard: None };
-            let mut fd = cache.begin_frame(key, &t, &specs);
+            let mut fd = cache.begin_frame(key, &t, &specs, &no_compute());
             let task = fd.take_slot().unwrap();
             let (_, _, out) = delta_search(s.as_ref(), &t, 3, &task);
             fd.record(task.index, out.frags);
@@ -658,7 +942,7 @@ mod tests {
         let specs = Arc::new(vec![SlotSpec { halo: 1, scale: 1 }]);
         let key = DeltaKey { sequence: 9, shard: None };
         let mut cache = DeltaCache::new(DeltaConfig::default());
-        let fd = cache.begin_frame(key, &t, &specs); // slot never taken
+        let fd = cache.begin_frame(key, &t, &specs, &no_compute()); // slot never taken
         cache.commit(fd);
         assert!(cache.is_empty());
     }
@@ -666,18 +950,25 @@ mod tests {
     #[test]
     fn config_parses_and_rejects_bad_values() {
         let c = Config::parse(
-            "[runner]\ndelta = true\ndelta_blocks_x = 4\ndelta_blocks_y = 2\ndelta_max_entries = 5",
+            "[runner]\ndelta = true\ndelta_blocks_x = 4\ndelta_blocks_y = 2\ndelta_max_entries = 5\ndelta_compute = true\ndelta_voxelize = true",
         )
         .unwrap();
         let d = DeltaConfig::from_config(&c).unwrap();
         assert_eq!(
             d,
-            DeltaConfig { enabled: true, blocks_x: 4, blocks_y: 2, max_entries: 5 }
+            DeltaConfig {
+                enabled: true,
+                blocks_x: 4,
+                blocks_y: 2,
+                max_entries: 5,
+                compute: true,
+                voxelize: true,
+            }
         );
         // Missing keys: defaults, disabled.
         let d = DeltaConfig::from_config(&Config::parse("").unwrap()).unwrap();
         assert_eq!(d, DeltaConfig::default());
-        assert!(!d.enabled);
+        assert!(!d.enabled && !d.compute && !d.voxelize);
         // Present-but-bad values are errors, not silent fallbacks.
         for bad in [
             "[runner]\ndelta = 3",
@@ -685,9 +976,119 @@ mod tests {
             "[runner]\ndelta_blocks_x = 0",
             "[runner]\ndelta_blocks_y = -1",
             "[runner]\ndelta_max_entries = 0",
+            "[runner]\ndelta_compute = 1",
+            "[runner]\ndelta_voxelize = \"on\"",
         ] {
             let c = Config::parse(bad).unwrap();
             assert!(DeltaConfig::from_config(&c).is_err(), "{bad:?} must be rejected");
         }
+    }
+
+    #[test]
+    fn compute_rows_splice_only_clean_cone_blocks() {
+        let e = Extent3::new(32, 32, 4);
+        let a = tensor(e, 0.08, 7);
+        let mut coords = a.coords.clone();
+        coords.push(Coord3::new(2, 2, 1));
+        let b = SparseTensor::from_coords(e, coords, 1);
+        let specs = Arc::new(vec![SlotSpec { halo: 1, scale: 1 }]);
+        let cspecs = Arc::new(vec![SlotSpec { halo: 1, scale: 1 }]);
+        let key = DeltaKey { sequence: 0, shard: None };
+        let mut cache = DeltaCache::new(DeltaConfig {
+            enabled: true,
+            compute: true,
+            ..Default::default()
+        });
+        let c_out = 2usize;
+        // Cold frame A: psum row o = [o, -o].
+        let mut fd = cache.begin_frame(key, &a, &specs, &cspecs);
+        let task = fd.take_slot().unwrap();
+        let (_, _, out) = delta_search(SearcherKind::Doms.build().as_ref(), &a, 3, &task);
+        fd.record(task.index, out.frags);
+        let ct = fd.take_compute(0).unwrap();
+        assert!(ct.prior.is_none());
+        assert!(ct.splice_plan(&a.coords).is_none(), "cold frame has nothing to splice");
+        let psums: Vec<i32> = (0..a.len() as i32).flat_map(|o| [o, -o]).collect();
+        let rows = bin_compute_rows(&ct, &a.coords, &psums, c_out);
+        let total: usize = rows.iter().map(|r| r.rows.len()).sum();
+        assert_eq!(total, a.len(), "cold frame bins every output row");
+        fd.record_compute(ct.index, rows);
+        cache.commit(fd);
+        // Warm frame B: the (2, 2) edit dirties one block; its cone ring
+        // recomputes, everything else splices A's rows.
+        let mut fd = cache.begin_frame(key, &b, &specs, &cspecs);
+        let ct = fd.take_compute(0).unwrap();
+        assert!(ct.prior.is_some());
+        assert!(ct.research.iter().any(|r| *r) && ct.research.iter().any(|r| !r));
+        let plan = ct.splice_plan(&b.coords).expect("clean blocks must yield a plan");
+        assert_eq!(plan.skip.len(), b.len());
+        assert!(plan.skip.iter().any(|s| *s));
+        for &(o, ref row) in &plan.rows {
+            assert!(plan.skip[o as usize]);
+            // The spliced row is A's row for the same coordinate.
+            let c = b.coords[o as usize];
+            let ao = a.coords.binary_search(&c).expect("clean row exists in A");
+            assert_eq!(row, &vec![ao as i32, -(ao as i32)]);
+            // And it lives outside the re-compute region.
+            let blk = block_at(&ct.part, c, 1);
+            assert!(!ct.research[blk]);
+        }
+        // Skipped rows are exactly the cached clean-block rows.
+        let skipped = plan.skip.iter().filter(|s| **s).count();
+        assert_eq!(skipped, plan.rows.len());
+    }
+
+    #[test]
+    fn feature_change_dirties_compute_but_not_map_search() {
+        let e = Extent3::new(32, 32, 4);
+        let a = tensor(e, 0.08, 19);
+        // Same geometry, one feature flipped: the rulebook is reusable
+        // everywhere, but psums near the edit are not.
+        let mut b = a.clone();
+        b.feature_mut(0)[0] = 7;
+        let specs = Arc::new(vec![SlotSpec { halo: 1, scale: 1 }]);
+        let cspecs = Arc::new(vec![SlotSpec { halo: 1, scale: 1 }]);
+        let key = DeltaKey { sequence: 0, shard: None };
+        let mut cache = DeltaCache::new(DeltaConfig {
+            enabled: true,
+            compute: true,
+            ..Default::default()
+        });
+        let mut fd = cache.begin_frame(key, &a, &specs, &cspecs);
+        let task = fd.take_slot().unwrap();
+        let (_, _, out) = delta_search(SearcherKind::Doms.build().as_ref(), &a, 3, &task);
+        fd.record(task.index, out.frags);
+        let ct = fd.take_compute(0).unwrap();
+        let psums = vec![0i32; a.len()];
+        let rows = bin_compute_rows(&ct, &a.coords, &psums, 1);
+        fd.record_compute(ct.index, rows);
+        cache.commit(fd);
+        let mut fd = cache.begin_frame(key, &b, &specs, &cspecs);
+        let task = fd.take_slot().unwrap();
+        assert!(
+            task.research.iter().all(|r| !r),
+            "identical geometry: no map-search work at all"
+        );
+        let ct = fd.take_compute(0).unwrap();
+        let dirty_blk = block_at(&task.part, b.coords[0], 1);
+        assert!(ct.research[dirty_blk], "feature edit must dirty its block's compute");
+        assert!(ct.research.iter().any(|r| !r), "far blocks keep their psums");
+    }
+
+    #[test]
+    fn partial_compute_commit_drops_entry() {
+        let e = Extent3::new(16, 16, 2);
+        let t = tensor(e, 0.1, 5);
+        let specs = Arc::new(vec![SlotSpec { halo: 1, scale: 1 }]);
+        let cspecs = Arc::new(vec![SlotSpec { halo: 1, scale: 1 }]);
+        let key = DeltaKey { sequence: 9, shard: None };
+        let mut cache = DeltaCache::new(DeltaConfig::default());
+        let mut fd = cache.begin_frame(key, &t, &specs, &cspecs);
+        let task = fd.take_slot().unwrap();
+        let (_, _, out) = delta_search(SearcherKind::Doms.build().as_ref(), &t, 3, &task);
+        fd.record(task.index, out.frags);
+        // Map-search slot recorded, compute slot never recorded.
+        cache.commit(fd);
+        assert!(cache.is_empty(), "a compute hole must drop the entry");
     }
 }

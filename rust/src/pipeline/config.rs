@@ -216,6 +216,12 @@ pub struct Overrides {
     pub native: bool,
     /// `--delta`: enable the temporal delta map-search cache.
     pub delta: bool,
+    /// `--delta-compute`: extend the delta cache through the GEMM core
+    /// (implies `--delta`).
+    pub delta_compute: bool,
+    /// `--delta-voxelize`: extend the delta cache through voxelization
+    /// (implies `--delta`).
+    pub delta_voxelize: bool,
 }
 
 impl Overrides {
@@ -239,6 +245,8 @@ impl Overrides {
             slo: opt("slo"),
             native: args.get_bool("native"),
             delta: args.get_bool("delta"),
+            delta_compute: args.get_bool("delta-compute"),
+            delta_voxelize: args.get_bool("delta-voxelize"),
         }
     }
 }
@@ -335,8 +343,14 @@ impl PipelineConfig {
         if ov.native {
             self.engine = EngineKind::Native;
         }
-        if ov.delta {
+        if ov.delta || ov.delta_compute || ov.delta_voxelize {
             self.runner.delta.enabled = true;
+        }
+        if ov.delta_compute {
+            self.runner.delta.compute = true;
+        }
+        if ov.delta_voxelize {
+            self.runner.delta.voxelize = true;
         }
         Ok(())
     }
@@ -395,8 +409,13 @@ impl PipelineConfig {
         &self,
         extent: Extent3,
     ) -> crate::Result<Option<Box<dyn FrameSource>>> {
+        // Delta voxelization rides the runner's delta block grid: KITTI
+        // sources re-voxelize only dirty blocks (each muxed sequence gets
+        // its own [`DeltaVoxelizer`] state, so streams never cross-talk).
+        let delta_blocks = (self.runner.delta.enabled && self.runner.delta.voxelize)
+            .then(|| (self.runner.delta.blocks_x, self.runner.delta.blocks_y));
         if self.serving.sequences.is_empty() {
-            return self.dataset.build(extent);
+            return self.dataset.build_delta(extent, delta_blocks);
         }
         let mut sources = Vec::with_capacity(self.serving.sequences.len());
         for (i, spec) in self.serving.sequences.iter().enumerate() {
@@ -405,7 +424,7 @@ impl PipelineConfig {
                 seed: self.dataset.seed.wrapping_add(0x9E37 * i as u64),
                 ..self.dataset.clone()
             };
-            let src = ds_i.build(extent)?.ok_or_else(|| {
+            let src = ds_i.build_delta(extent, delta_blocks)?.ok_or_else(|| {
                 anyhow::anyhow!("sequence {i} ({spec:?}) resolved to no source")
             })?;
             sources.push(src);
@@ -469,7 +488,9 @@ mod tests {
             admission: Some("defer-sharding".into()),
             slo: Some("12.5".into()),
             native: true,
-            delta: true,
+            delta: false,
+            delta_compute: true,
+            delta_voxelize: true,
         })
         .unwrap();
         assert_eq!(pc.runner.searcher, SearcherKind::BlockDoms);
@@ -481,7 +502,10 @@ mod tests {
         assert_eq!(pc.serving.admission.policy, AdmissionPolicy::DeferSharding);
         assert!((pc.serving.admission.slo_ms - 12.5).abs() < 1e-12);
         assert_eq!(pc.engine, EngineKind::Native);
+        // Either extension flag implies the base cache.
         assert!(pc.runner.delta.enabled);
+        assert!(pc.runner.delta.compute);
+        assert!(pc.runner.delta.voxelize);
         pc.validate().unwrap();
         for bad in [
             Overrides {

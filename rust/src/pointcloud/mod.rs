@@ -12,4 +12,4 @@ pub mod voxelize;
 
 pub use scene::{Point, SceneConfig, SceneKind};
 pub use vfe::{Vfe, VfeKind};
-pub use voxelize::{VoxelGrid, Voxelizer};
+pub use voxelize::{DeltaVoxelizer, VoxelGrid, Voxelizer};

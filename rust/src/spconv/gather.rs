@@ -109,6 +109,19 @@ pub fn gather_batches_multi(rbs: &[&Rulebook], batch: usize) -> Vec<MultiGatherB
     gather_batches_multi_w2b(rbs, batch, &[])
 }
 
+/// The compute-reuse splice for one frame of one layer: `skip[o]` marks
+/// output rows whose pre-epilogue psums come from the temporal delta
+/// cache, and `rows` carries those `(output index, psum row)` values.
+/// Produced by `mapsearch::delta::ComputeTask::splice_plan`, consumed by
+/// [`gather_batches_multi_w2b_skip`] (spliced rows never enter a wave)
+/// and the layer executor (cached psums are written into the
+/// accumulation buffer before the epilogue).
+#[derive(Clone, Debug, Default)]
+pub struct ComputeSplice {
+    pub skip: Vec<bool>,
+    pub rows: Vec<(u32, Vec<i32>)>,
+}
+
 /// W2B-aware wave packing: `copies[d]` replica tiles hold offset `d`'s
 /// sub-matrix (the `W2bAllocation::copies` of `w2b_allocate`), and that
 /// offset's rows are split into `copies[d]` contiguous runs — one per
@@ -126,6 +139,21 @@ pub fn gather_batches_multi_w2b(
     batch: usize,
     copies: &[u32],
 ) -> Vec<MultiGatherBatch> {
+    gather_batches_multi_w2b_skip(rbs, batch, copies, &[])
+}
+
+/// [`gather_batches_multi_w2b`] minus the spliced rows: `skips[f]`, when
+/// present, marks frame `f`'s output rows whose psums the temporal delta
+/// cache supplies — every rule pair landing on such a row is dropped
+/// *before* the per-offset rows are split and chunked, so the surviving
+/// rows repack densely and a warm frame issues strictly fewer waves (not
+/// just emptier ones). An empty `skips` slice is the plain packing.
+pub fn gather_batches_multi_w2b_skip(
+    rbs: &[&Rulebook],
+    batch: usize,
+    copies: &[u32],
+    skips: &[Option<&[bool]>],
+) -> Vec<MultiGatherBatch> {
     assert!(batch > 0);
     if rbs.is_empty() {
         return Vec::new();
@@ -139,13 +167,23 @@ pub fn gather_batches_multi_w2b(
         copies.is_empty() || copies.len() == k_vol,
         "copies must carry one entry per kernel offset"
     );
+    assert!(
+        skips.is_empty() || skips.len() == rbs.len(),
+        "one skip-mask slot per frame"
+    );
     let per_frame: Vec<Vec<Vec<crate::sparse::rulebook::RulePair>>> =
         rbs.iter().map(|rb| rb.pairs_by_offset()).collect();
     let mut out = Vec::new();
     for d in 0..k_vol {
         let mut rows: Vec<(u32, u32, u32)> = Vec::new();
         for (f, groups) in per_frame.iter().enumerate() {
-            rows.extend(groups[d].iter().map(|p| (f as u32, p.input, p.output)));
+            let skip = skips.get(f).copied().flatten();
+            rows.extend(
+                groups[d]
+                    .iter()
+                    .filter(|p| skip.map_or(true, |s| !s[p.output as usize]))
+                    .map(|p| (f as u32, p.input, p.output)),
+            );
         }
         if rows.is_empty() {
             continue;
@@ -334,6 +372,49 @@ mod tests {
         assert!(tile_makespan_rows(&w2b) < tile_makespan_rows(&fcfs));
         // FCFS via the same code path: all replica 0.
         assert!(fcfs.iter().all(|w| w.replica == 0));
+    }
+
+    #[test]
+    fn skip_packing_drops_exactly_the_skipped_outputs_and_repacks() {
+        let (_, rb) = rulebook(300, 60);
+        let n_out = rb.out_coords.len();
+        // Skip roughly half the outputs.
+        let skip: Vec<bool> = (0..n_out).map(|o| o % 2 == 0).collect();
+        let batch = 8;
+        let plain = gather_batches_multi_w2b(&[&rb], batch, &[]);
+        let skipped = gather_batches_multi_w2b_skip(&[&rb], batch, &[], &[Some(&skip)]);
+        // Coverage: exactly the pairs whose output survives the mask.
+        let mut got: Vec<(u16, u32, u32)> = skipped
+            .iter()
+            .flat_map(|w| w.rows.iter().map(move |&(_, i, o)| (w.offset, i, o)))
+            .collect();
+        got.sort_unstable();
+        let mut want: Vec<(u16, u32, u32)> = rb
+            .pairs
+            .iter()
+            .filter(|p| !skip[p.output as usize])
+            .map(|p| (p.offset, p.input, p.output))
+            .collect();
+        want.sort_unstable();
+        assert_eq!(got, want);
+        assert!(!want.is_empty(), "fixture must keep some rows");
+        assert!(want.len() < rb.len(), "fixture must drop some rows");
+        // Dropped rows repack densely: strictly fewer dispatches.
+        assert!(
+            skipped.len() < plain.len(),
+            "skip packing must shrink the wave count: {} vs {}",
+            skipped.len(),
+            plain.len()
+        );
+        // No skips == plain packing, bit for bit.
+        let none = gather_batches_multi_w2b_skip(&[&rb], batch, &[], &[None]);
+        let fmt = |waves: &[MultiGatherBatch]| {
+            waves
+                .iter()
+                .map(|w| (w.offset, w.replica, w.rows.clone()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(fmt(&none), fmt(&plain));
     }
 
     #[test]

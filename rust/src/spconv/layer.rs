@@ -15,7 +15,8 @@ use crate::coordinator::executor::WorkerPool;
 use crate::sparse::rulebook::Rulebook;
 use crate::sparse::tensor::SparseTensor;
 use crate::spconv::gather::{
-    gather_batches_multi, gather_batches_multi_w2b, MultiGatherBatch,
+    gather_batches_multi, gather_batches_multi_w2b, gather_batches_multi_w2b_skip,
+    ComputeSplice, MultiGatherBatch,
 };
 use crate::spconv::quant;
 
@@ -212,6 +213,17 @@ impl TiledWeights {
 /// One GEMM-tile result awaiting scatter: `(wave, c1-tile, c2-tile,
 /// psums)`.
 type TileResult = (usize, usize, usize, Vec<i32>);
+
+/// Per-frame compute-reuse accounting of one delta-executed layer
+/// ([`SpconvLayer::execute_batch_delta`]).
+#[derive(Clone, Debug, Default)]
+pub struct DeltaComputeStats {
+    /// Gather rows (rule pairs) the splice removed from wave packing.
+    pub rows_saved: Vec<u64>,
+    /// Shared GEMM waves the frame would have participated in under the
+    /// plain packing but did not under the skip packing.
+    pub waves_skipped: Vec<u64>,
+}
 
 impl SpconvLayer {
     pub fn new(weights: LayerWeights, batch: usize) -> Self {
@@ -468,6 +480,207 @@ impl SpconvLayer {
         }
 
         Ok(self.finish_batch(&rbs, psums, &gemm_calls, &gathered_rows))
+    }
+
+    /// [`Self::execute_batch_pooled`] with temporal compute reuse:
+    /// `splices[f]`, when present, carries frame `f`'s cached psum rows
+    /// and skip mask (from `mapsearch::delta::ComputeTask::splice_plan`).
+    /// Spliced rows are written into the zero-initialized psum buffer and
+    /// their rule pairs never enter a wave — the surviving rows repack
+    /// densely, so warm frames gather fewer rows and dispatch fewer GEMM
+    /// waves while producing bit-identical psums (the skipped rows'
+    /// scatter-adds are exactly the cached values, and i32 accumulation
+    /// of the remaining rows is untouched). With no splices present this
+    /// is `execute_batch_pooled` verbatim, zero-overhead.
+    pub fn execute_batch_delta<E: GemmEngine>(
+        &self,
+        inputs: &[(Arc<SparseTensor>, Arc<Rulebook>)],
+        engine: &mut E,
+        pool: Option<&WorkerPool>,
+        splices: &[Option<ComputeSplice>],
+    ) -> crate::Result<(Vec<SpconvOutput>, DeltaComputeStats)> {
+        assert!(
+            splices.is_empty() || splices.len() == inputs.len(),
+            "one splice slot per frame"
+        );
+        let n = inputs.len();
+        let mut stats = DeltaComputeStats {
+            rows_saved: vec![0; n],
+            waves_skipped: vec![0; n],
+        };
+        if splices.iter().all(Option::is_none) {
+            return Ok((self.execute_batch_pooled(inputs, engine, pool)?, stats));
+        }
+        let c2 = self.weights.c_out;
+        for (t, rb) in inputs {
+            assert_eq!(t.channels, self.weights.c_in, "channel mismatch");
+            assert_eq!(rb.kind.kernel_volume(), self.weights.k_volume);
+        }
+        let rbs: Vec<&Rulebook> = inputs.iter().map(|(_, rb)| rb.as_ref()).collect();
+        let skips: Vec<Option<&[bool]>> = splices
+            .iter()
+            .map(|s| s.as_ref().map(|s| s.skip.as_slice()))
+            .collect();
+        let copies: &[u32] = self.w2b_copies.as_deref().unwrap_or(&[]);
+        let waves = gather_batches_multi_w2b_skip(&rbs, self.batch, copies, &skips);
+
+        // Reuse accounting: dropped pairs per frame, and the per-frame
+        // wave-participation shrinkage vs the plain packing of the same
+        // rulebooks (the packing is deterministic, so the diff is exact).
+        let participation = |waves: &[MultiGatherBatch]| {
+            let mut per = vec![0u64; n];
+            for w in waves {
+                let mut last = None;
+                for &(f, _, _) in &w.rows {
+                    if last != Some(f) {
+                        per[f as usize] += 1;
+                        last = Some(f);
+                    }
+                }
+            }
+            per
+        };
+        let cold_p = participation(&self.waves_for(&rbs));
+        let warm_p = participation(&waves);
+        for f in 0..n {
+            if let Some(s) = &splices[f] {
+                stats.rows_saved[f] = rbs[f]
+                    .pairs
+                    .iter()
+                    .filter(|p| s.skip[p.output as usize])
+                    .count() as u64;
+            }
+            stats.waves_skipped[f] = cold_p[f].saturating_sub(warm_p[f]);
+        }
+
+        // Psums: zero-init, then splice the cached rows. Their pairs were
+        // dropped from every wave above, so no scatter-add ever lands on
+        // a spliced row — the write is the row's final pre-epilogue value.
+        let mut psums: Vec<Vec<i32>> = rbs
+            .iter()
+            .map(|rb| vec![0i32; rb.out_coords.len() * c2])
+            .collect();
+        for (f, s) in splices.iter().enumerate() {
+            if let Some(s) = s {
+                for (o, row) in &s.rows {
+                    let lo = *o as usize * c2;
+                    psums[f][lo..lo + c2].copy_from_slice(row);
+                }
+            }
+        }
+
+        // Per-frame stats over the warm wave list, matching the plain
+        // batch paths' accounting semantics exactly.
+        let tw_shape = TiledWeights::new(&self.weights);
+        let tiles_per_wave = (tw_shape.c1_tiles.len() * tw_shape.c2_tiles.len()) as u64;
+        let mut gemm_calls = vec![0u64; n];
+        let mut gathered_rows = vec![0u64; n];
+        for wave in &waves {
+            let mut last = None;
+            for &(f, _, _) in &wave.rows {
+                gathered_rows[f as usize] += 1;
+                if last != Some(f) {
+                    gemm_calls[f as usize] += tiles_per_wave;
+                    last = Some(f);
+                }
+            }
+        }
+
+        let tensors: Vec<Arc<SparseTensor>> =
+            inputs.iter().map(|(t, _)| Arc::clone(t)).collect();
+        self.run_waves(&tensors, &waves, &mut psums, engine, pool)?;
+        Ok((
+            self.finish_batch(&rbs, psums, &gemm_calls, &gathered_rows),
+            stats,
+        ))
+    }
+
+    /// Execute a prebuilt wave list into `psums`, pooled when the pool
+    /// and engine allow it, serially otherwise — the shared compute body
+    /// of the delta path. Bit-identical either way: every GEMM row is
+    /// independent and the i32 scatter-add commutes.
+    fn run_waves<E: GemmEngine>(
+        &self,
+        tensors: &[Arc<SparseTensor>],
+        waves: &[MultiGatherBatch],
+        psums: &mut [Vec<i32>],
+        engine: &mut E,
+        pool: Option<&WorkerPool>,
+    ) -> crate::Result<()> {
+        let c2 = self.weights.c_out;
+        let tw = TiledWeights::new(&self.weights);
+        let first_fork = match pool {
+            Some(p) if p.size() >= 2 && waves.len() >= 2 => engine.fork(),
+            _ => None,
+        };
+        let (Some(pool), Some(first_fork)) = (pool, first_fork) else {
+            let mut acts_tile: Vec<i8> = Vec::new();
+            for wave in waves {
+                let b = wave.rows.len();
+                for (i1, &(c1_lo, c1_len)) in tw.c1_tiles.iter().enumerate() {
+                    acts_tile.clear();
+                    acts_tile.reserve(b * c1_len);
+                    for &(f, i, _) in &wave.rows {
+                        let row = tensors[f as usize].feature(i as usize);
+                        acts_tile.extend_from_slice(&row[c1_lo..c1_lo + c1_len]);
+                    }
+                    for (i2, &(c2_lo, c2_len)) in tw.c2_tiles.iter().enumerate() {
+                        let wtile = tw.get(wave.offset as usize, i1, i2);
+                        let out = engine.gemm_i8(&acts_tile, wtile, b, c1_len, c2_len)?;
+                        scatter_add_multi(psums, c2, c2_lo, c2_len, &out, &wave.rows);
+                    }
+                }
+            }
+            return Ok(());
+        };
+        let tw = Arc::new(tw);
+        let waves_arc: Arc<Vec<MultiGatherBatch>> = Arc::new(waves.to_vec());
+        let n_chunks = (pool.size() * 2).min(waves_arc.len());
+        let mut next_engine = Some(first_fork);
+        let mut handles = Vec::with_capacity(n_chunks);
+        for chunk in 0..n_chunks {
+            let lo = chunk * waves_arc.len() / n_chunks;
+            let hi = (chunk + 1) * waves_arc.len() / n_chunks;
+            if lo == hi {
+                continue;
+            }
+            let mut eng = match next_engine.take() {
+                Some(e) => e,
+                None => engine.fork().expect("engine forked once already"),
+            };
+            let (waves, tw) = (Arc::clone(&waves_arc), Arc::clone(&tw));
+            let tensors = tensors.to_vec();
+            handles.push(pool.submit(move || -> crate::Result<Vec<TileResult>> {
+                let mut outs = Vec::new();
+                let mut acts_tile: Vec<i8> = Vec::new();
+                for wi in lo..hi {
+                    let wave = &waves[wi];
+                    let b = wave.rows.len();
+                    for (i1, &(c1_lo, c1_len)) in tw.c1_tiles.iter().enumerate() {
+                        acts_tile.clear();
+                        acts_tile.reserve(b * c1_len);
+                        for &(f, i, _) in &wave.rows {
+                            let row = tensors[f as usize].feature(i as usize);
+                            acts_tile.extend_from_slice(&row[c1_lo..c1_lo + c1_len]);
+                        }
+                        for (i2, &(_, c2_len)) in tw.c2_tiles.iter().enumerate() {
+                            let wtile = tw.get(wave.offset as usize, i1, i2);
+                            let out = eng.gemm_i8(&acts_tile, wtile, b, c1_len, c2_len)?;
+                            outs.push((wi, i1, i2, out));
+                        }
+                    }
+                }
+                Ok(outs)
+            }));
+        }
+        for h in handles {
+            for (wi, _i1, i2, out) in h.join()? {
+                let wave = &waves_arc[wi];
+                let (c2_lo, c2_len) = tw.c2_tiles[i2];
+                scatter_add_multi(psums, c2, c2_lo, c2_len, &out, &wave.rows);
+            }
+        }
+        Ok(())
     }
 
     /// Shared epilogue of the batch paths: per-frame dequant/ReLU/requant
@@ -727,6 +940,86 @@ mod tests {
         assert_eq!(plain[0].psums, packed[0].psums);
         assert_eq!(plain[0].tensor.features, packed[0].tensor.features);
         assert_eq!(plain[0].gathered_rows, packed[0].gathered_rows);
+    }
+
+    #[test]
+    fn delta_splice_is_bit_identical_and_dispatches_fewer() {
+        let t = tensor_with_features(200, 8, 93);
+        let rb = hash_map_search(&t, ConvKind::subm3());
+        let w = LayerWeights::random(27, 8, 8, 94);
+        // Small batch: dropped rows must repack into fewer waves.
+        let layer = SpconvLayer::new(w, 8);
+        let mut cold_eng = NativeEngine::default();
+        let cold = layer.execute(&t, &rb, &mut cold_eng).unwrap();
+        // Simulated cache: splice every other output row from the cold
+        // psums — exactly what a clean-cone block's cache would hold.
+        let n_out = rb.out_coords.len();
+        let c2 = 8usize;
+        let skip: Vec<bool> = (0..n_out).map(|o| o % 2 == 0).collect();
+        let rows: Vec<(u32, Vec<i32>)> = (0..n_out)
+            .filter(|&o| skip[o])
+            .map(|o| (o as u32, cold.psums[o * c2..(o + 1) * c2].to_vec()))
+            .collect();
+        let splice = ComputeSplice { skip, rows };
+        let inputs = [(Arc::new(t), Arc::new(rb))];
+        let mut warm_eng = NativeEngine::default();
+        let (outs, stats) = layer
+            .execute_batch_delta(&inputs, &mut warm_eng, None, &[Some(splice)])
+            .unwrap();
+        assert_eq!(outs[0].psums, cold.psums, "spliced psums diverged");
+        assert_eq!(outs[0].tensor.features, cold.tensor.features);
+        assert!(stats.rows_saved[0] > 0);
+        assert!(stats.waves_skipped[0] > 0, "small batch must shed whole waves");
+        assert!(
+            warm_eng.calls < cold_eng.calls,
+            "warm dispatches {} must undercut cold {}",
+            warm_eng.calls,
+            cold_eng.calls
+        );
+        assert_eq!(outs[0].gathered_rows, cold.gathered_rows - stats.rows_saved[0]);
+        // No splices: delegates to the plain pooled path, zero stats.
+        let (outs, stats) = layer
+            .execute_batch_delta(&inputs, &mut NativeEngine::default(), None, &[None])
+            .unwrap();
+        assert_eq!(outs[0].psums, cold.psums);
+        assert_eq!(stats.rows_saved, vec![0]);
+        assert_eq!(stats.waves_skipped, vec![0]);
+    }
+
+    #[test]
+    fn delta_splice_pooled_matches_serial() {
+        let pool = WorkerPool::new(3);
+        let t = tensor_with_features(180, 8, 95);
+        let rb = hash_map_search(&t, ConvKind::subm3());
+        let layer = SpconvLayer::new(LayerWeights::random(27, 8, 8, 96), 8);
+        let cold = layer.execute(&t, &rb, &mut NativeEngine::default()).unwrap();
+        let n_out = rb.out_coords.len();
+        let skip: Vec<bool> = (0..n_out).map(|o| o % 3 == 0).collect();
+        let rows: Vec<(u32, Vec<i32>)> = (0..n_out)
+            .filter(|&o| skip[o])
+            .map(|o| (o as u32, cold.psums[o * 8..(o + 1) * 8].to_vec()))
+            .collect();
+        let splice = ComputeSplice { skip, rows };
+        let inputs = [(Arc::new(t), Arc::new(rb))];
+        let (serial, _) = layer
+            .execute_batch_delta(
+                &inputs,
+                &mut NativeEngine::default(),
+                None,
+                &[Some(splice.clone())],
+            )
+            .unwrap();
+        let (pooled, _) = layer
+            .execute_batch_delta(
+                &inputs,
+                &mut NativeEngine::default(),
+                Some(&pool),
+                &[Some(splice)],
+            )
+            .unwrap();
+        assert_eq!(serial[0].psums, pooled[0].psums);
+        assert_eq!(serial[0].tensor.features, pooled[0].tensor.features);
+        assert_eq!(serial[0].psums, cold.psums);
     }
 
     #[test]

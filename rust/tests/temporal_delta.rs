@@ -1,21 +1,27 @@
-//! Integration: the temporal delta map-search cache. Warm stream frames
-//! must be bit-identical to a cold full search across every
-//! `SearcherKind`, sharded and unsharded, solo and muxed — while
-//! performing strictly fewer block map-searches on temporally coherent
+//! Integration: the temporal delta cache, all three reuse rungs —
+//! map-search splicing, compute (psum) reuse, and delta voxelization.
+//! Warm stream frames must be bit-identical to a cold full pass across
+//! every `SearcherKind`, sharded and unsharded, solo and muxed, and
+//! under admission shedding — while searching fewer blocks, gathering
+//! fewer rows, and dispatching fewer GEMM waves on temporally coherent
 //! frames. The cache is off by default, and its per-sequence memory is
 //! bounded by `delta_max_entries` (evictions are counted, never wrong).
 
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use voxel_cim::coordinator::scheduler::RunnerConfig;
 use voxel_cim::coordinator::shard::ShardConfig;
 use voxel_cim::coordinator::stream::{StreamReport, StreamServer};
-use voxel_cim::dataset::{FrameSource, KittiSource, ProfileSource, ScenarioProfile};
+use voxel_cim::dataset::{
+    ClosureSource, FrameSource, KittiSource, ProfileSource, ScenarioProfile,
+};
 use voxel_cim::geom::Extent3;
 use voxel_cim::mapsearch::{DeltaConfig, SearcherKind};
 use voxel_cim::model::layer::{LayerSpec, NetworkSpec, TaskKind};
 use voxel_cim::pointcloud::voxelize::Voxelizer;
-use voxel_cim::serving::{MuxPolicy, SequenceMux};
+use voxel_cim::serving::{AdmissionConfig, AdmissionPolicy, MuxPolicy, SequenceMux};
+use voxel_cim::sparse::tensor::SparseTensor;
 use voxel_cim::spconv::layer::NativeEngine;
 
 const EXTENT: Extent3 = Extent3::new(64, 64, 6);
@@ -49,6 +55,11 @@ fn cfg(kind: SearcherKind, shard: ShardConfig, delta_on: bool) -> RunnerConfig {
         seed: 33,
         delta: DeltaConfig {
             enabled: delta_on,
+            // Compute reuse rides along wherever the cache is on. Drift
+            // profiles re-randomize per-voxel features every frame, so
+            // on those sources the psum rung must stay bit-identical
+            // precisely when nothing is compute-clean.
+            compute: delta_on,
             // 4x4-voxel blocks: fine enough that the drift edge and the
             // per-frame dynamic blob leave most of the field clean.
             blocks_x: 16,
@@ -119,11 +130,15 @@ fn warm_serving_is_bit_identical_and_reuses_blocks_for_every_searcher() {
                     c.id
                 );
                 assert_eq!(c.result.shards, w.result.shards, "frame {}", c.id);
-                // Cold runs never touch the cache or its counters.
+                // Cold runs never touch the cache or its counters —
+                // neither the map-search rung nor the compute rung.
                 assert_eq!(
-                    c.result.blocks_searched + c.result.blocks_reused,
+                    c.result.blocks_searched
+                        + c.result.blocks_reused
+                        + c.result.waves_skipped
+                        + c.result.rows_gathered_saved,
                     0,
-                    "{kind} sharding={sharding}: cold frame {} counted blocks",
+                    "{kind} sharding={sharding}: cold frame {} counted reuse",
                     c.id
                 );
             }
@@ -152,13 +167,116 @@ fn warm_serving_is_bit_identical_and_reuses_blocks_for_every_searcher() {
     }
 }
 
+/// A temporally coherent scene with *stable* features: every voxel's
+/// features are a pure function of its coordinate, so a geometrically
+/// clean block is psum-clean too. (Drift profiles re-randomize features
+/// each frame — correct for them, but it means they never exercise the
+/// splice arm.) With `edited`, one spatial neighbourhood around the
+/// first voxel is re-weighted; everything else is untouched.
+fn coherent_tensor(edited: bool) -> SparseTensor {
+    let coords = Voxelizer::synth_clustered(EXTENT, 0.03, 8, 0.3, 0xBA5E).coords();
+    let mut t = SparseTensor::from_coords(EXTENT, coords, 4);
+    let anchor = t.coords[0];
+    for (i, c) in t.coords.iter().enumerate() {
+        for ch in 0..4usize {
+            let mut v = ((c.x + 3 * c.y + 5 * c.z + 7 * ch as i32) % 15 - 7) as i8;
+            if edited && (c.x - anchor.x).abs() <= 4 && (c.y - anchor.y).abs() <= 4 {
+                v = v.wrapping_add(3);
+            }
+            t.features[i * 4 + ch] = v;
+        }
+    }
+    t
+}
+
+/// The compute rung's acceptance matrix: on a feature-stable scene the
+/// warm pass splices cached psum rows, gathers strictly fewer rows,
+/// skips whole GEMM waves, and issues strictly fewer engine dispatches
+/// — bit-identically, for every searcher kind, sharded and unsharded.
+/// Frame 1 repeats frame 0 (the full-splice path: every prefix layer's
+/// output comes from the cache); frame 2 re-weights one neighbourhood
+/// (partial invalidation through the accumulated receptive cone);
+/// frame 3 repeats the base scene against the edited prior.
+#[test]
+fn compute_reuse_skips_waves_and_stays_bit_identical_for_every_searcher() {
+    const FRAMES: u64 = 4;
+    let source = || {
+        let base = coherent_tensor(false);
+        let edited = coherent_tensor(true);
+        ClosureSource::new(move |id| if id == 2 { edited.clone() } else { base.clone() })
+    };
+    let shard_modes = [
+        ShardConfig::default(),
+        ShardConfig {
+            auto_threshold: 1,
+            ..ShardConfig::grid(2, 2).unwrap()
+        },
+    ];
+    for kind in SearcherKind::ALL {
+        for shard in shard_modes {
+            let sharding = shard.num_blocks() > 1;
+            let serve_once = |delta_on: bool, eng: &mut NativeEngine| {
+                let srv = StreamServer::new(stream_net(), cfg(kind, shard, delta_on), 4);
+                let mut src = source();
+                srv.serve(FRAMES, &mut src, eng).unwrap()
+            };
+            let mut cold_eng = NativeEngine::default();
+            let cold = serve_once(false, &mut cold_eng);
+            let mut warm_eng = NativeEngine::default();
+            let warm = serve_once(true, &mut warm_eng);
+            assert_eq!(cold.completions.len(), FRAMES as usize);
+            assert_eq!(warm.completions.len(), FRAMES as usize);
+            for (c, w) in cold.completions.iter().zip(&warm.completions) {
+                assert_eq!(c.id, w.id);
+                assert_eq!(
+                    c.result.checksum, w.result.checksum,
+                    "{kind} sharding={sharding}: frame {} diverged with psum splicing",
+                    c.id
+                );
+                assert_eq!(
+                    c.result.total_pairs(),
+                    w.result.total_pairs(),
+                    "{kind} sharding={sharding}: frame {} pair count",
+                    c.id
+                );
+            }
+            // Every warm frame finds psum-clean blocks: frames 1 and 3
+            // away from nothing, frame 2 away from the edited
+            // neighbourhood's dilated cone.
+            for w in &warm.completions[1..] {
+                assert!(
+                    w.result.rows_gathered_saved > 0,
+                    "{kind} sharding={sharding}: warm frame {} saved no gather rows",
+                    w.id
+                );
+            }
+            // Frame 1 repeats frame 0 bit-for-bit, so whole waves drop
+            // out of the dispatch, not just rows out of the gather.
+            assert!(
+                warm.completions[1].result.waves_skipped > 0,
+                "{kind} sharding={sharding}: full-splice frame skipped no waves"
+            );
+            // Strictly fewer engine dispatches over the whole warm serve
+            // — the claim the CI stream-smoke gate holds the line on.
+            assert!(
+                warm_eng.calls < cold_eng.calls,
+                "{kind} sharding={sharding}: warm {} !< cold {} GEMM dispatches",
+                warm_eng.calls,
+                cold_eng.calls
+            );
+        }
+    }
+}
+
 fn fixture_dir() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/kitti")
 }
 
 /// Real-data spot check: the KITTI fixture's two (largely disjoint)
-/// frames through a warm cache are bit-identical to cold — dirty-block
-/// invalidation must stay correct even when almost nothing is reusable.
+/// frames through a warm cache — with all three rungs on, including
+/// delta voxelization on the raw point stream — are bit-identical to
+/// cold. Dirty-block invalidation must stay correct even when almost
+/// nothing is reusable.
 #[test]
 fn kitti_fixture_is_bit_identical_through_a_warm_cache() {
     let extent = Extent3::new(16, 16, 8);
@@ -177,12 +295,17 @@ fn kitti_fixture_is_bit_identical_through_a_warm_cache() {
         let rc = RunnerConfig {
             delta: DeltaConfig {
                 enabled: delta_on,
+                compute: delta_on,
+                voxelize: delta_on,
                 ..DeltaConfig::default()
             },
             ..Default::default()
         };
         let srv = StreamServer::new(net(), rc, 2);
         let mut src = KittiSource::open(fixture_dir(), voxelizer()).unwrap();
+        if delta_on {
+            src = src.with_delta(8, 8);
+        }
         srv.serve(8, &mut src, &mut NativeEngine::default()).unwrap()
     };
     let cold = serve_once(false);
@@ -195,6 +318,17 @@ fn kitti_fixture_is_bit_identical_through_a_warm_cache() {
     }
     assert!(warm.blocks_searched > 0);
     assert_eq!(cold.blocks_searched + cold.blocks_reused, 0);
+    // Both runs voxelize from raw points: the plain path counts every
+    // voxel it bins, the delta path only the dirty blocks' voxels —
+    // never more, and identically on the priorless first frame.
+    assert!(cold.voxels_rebinned > 0);
+    assert!(warm.voxels_rebinned > 0, "frame 0 is compulsorily all-dirty");
+    assert!(warm.voxels_rebinned <= cold.voxels_rebinned);
+    assert_eq!(
+        warm.completions[0].result.voxels_rebinned,
+        cold.completions[0].result.voxels_rebinned,
+        "first frame has no prior: every block re-bins"
+    );
 }
 
 /// Muxed serving: two interleaved drift sequences keep separate cache
@@ -296,6 +430,157 @@ fn eviction_bound_keeps_memory_capped_and_bits_identical() {
     }
 }
 
+/// Frames the admission layer sheds must never commit partial cache
+/// state. `DropOldest` and `RejectOverDepth` under a sub-microsecond
+/// SLO shed aggressively; every survivor must be bit-identical to the
+/// unshedded cold reference (matched by id — the warm cache sees id
+/// *gaps*, never adjacency), and reuse must keep working across those
+/// gaps by splicing against the last *served* frame.
+#[test]
+fn shed_frames_never_commit_partial_cache_state() {
+    const FRAMES: u64 = 8;
+    const SEED: u64 = 0x5AED;
+    let reference: HashMap<u64, (u64, u64)> = {
+        let srv = StreamServer::new(
+            stream_net(),
+            cfg(SearcherKind::Octree, ShardConfig::default(), false),
+            4,
+        );
+        let mut src = drift_source(FRAMES, SEED);
+        let cold = srv
+            .serve(FRAMES, src.as_mut(), &mut NativeEngine::default())
+            .unwrap();
+        assert_eq!(cold.completions.len(), FRAMES as usize);
+        cold.completions
+            .iter()
+            .map(|c| (c.id, (c.result.checksum, c.result.total_pairs())))
+            .collect()
+    };
+    for policy in [AdmissionPolicy::DropOldest, AdmissionPolicy::RejectOverDepth] {
+        let srv = StreamServer::new(
+            stream_net(),
+            cfg(SearcherKind::Octree, ShardConfig::default(), true),
+            4,
+        )
+        .with_admission(AdmissionConfig {
+            policy,
+            // Any positive attributed latency trips the policy, so
+            // shedding starts right after the first completed window.
+            slo_ms: 1e-9,
+            ..AdmissionConfig::default()
+        });
+        let mut src = drift_source(FRAMES, SEED);
+        let warm = srv
+            .serve(FRAMES, src.as_mut(), &mut NativeEngine::default())
+            .unwrap();
+        let shed = warm.admission.dropped + warm.admission.rejected;
+        assert!(shed > 0, "{policy:?}: a sub-microsecond SLO must shed load");
+        assert_eq!(
+            warm.completions.len() as u64 + shed,
+            FRAMES,
+            "{policy:?}: every pulled frame is served or counted shed"
+        );
+        let mut prev_id = None;
+        let mut gap_reuse = false;
+        for w in &warm.completions {
+            let (checksum, pairs) = reference[&w.id];
+            assert_eq!(
+                w.result.checksum, checksum,
+                "{policy:?}: survivor frame {} diverged after shedding",
+                w.id
+            );
+            assert_eq!(w.result.total_pairs(), pairs, "{policy:?}: frame {}", w.id);
+            if prev_id.is_some_and(|p| w.id > p + 1) && w.result.blocks_reused > 0 {
+                gap_reuse = true;
+            }
+            prev_id = Some(w.id);
+        }
+        assert!(
+            gap_reuse,
+            "{policy:?}: no survivor reused across a shed gap — the cache must \
+             splice against the last served frame, not require adjacency"
+        );
+    }
+}
+
+/// Deferred (reordered) frames: a round-robin mux of a sparse sequence
+/// and a dense, sharding sequence under `DeferSharding` and a
+/// sub-microsecond SLO. Dense scenes get pushed behind queued sparse
+/// frames — the service order changes, nothing is dropped — and each
+/// sequence's cache lineage still sees its own frames in order, so both
+/// keep reusing and every frame stays bit-identical to the unshedded
+/// cold reference.
+#[test]
+fn deferred_frames_reorder_without_corrupting_the_cache() {
+    const FRAMES: u64 = 4;
+    let mux = || {
+        let sparse = Box::new(
+            ProfileSource::new(ScenarioProfile::Urban, EXTENT, 0.01, 0xDEF1)
+                .with_drift(1.0)
+                .with_frames(FRAMES),
+        ) as Box<dyn FrameSource>;
+        let dense = Box::new(
+            ProfileSource::new(ScenarioProfile::Urban, EXTENT, 0.08, 0xDEF2)
+                .with_drift(1.0)
+                .with_frames(FRAMES),
+        ) as Box<dyn FrameSource>;
+        SequenceMux::new(vec![sparse, dense], MuxPolicy::RoundRobin).unwrap()
+    };
+    // ~0.01 * |extent| ≈ 250 voxels vs ~0.08 * |extent| ≈ 2000: the
+    // threshold splits the classes, so exactly the dense frames shard
+    // (and therefore defer).
+    let shard = ShardConfig {
+        auto_threshold: 900,
+        ..ShardConfig::grid(2, 2).unwrap()
+    };
+    let serve_once = |delta_on: bool, defer: bool| {
+        let mut srv =
+            StreamServer::new(stream_net(), cfg(SearcherKind::Octree, shard, delta_on), 8);
+        if defer {
+            srv = srv.with_admission(AdmissionConfig {
+                policy: AdmissionPolicy::DeferSharding,
+                slo_ms: 1e-9,
+                ..AdmissionConfig::default()
+            });
+        }
+        let mut m = mux();
+        srv.serve(2 * FRAMES, &mut m, &mut NativeEngine::default())
+            .unwrap()
+    };
+    let cold = serve_once(false, false);
+    let warm = serve_once(true, true);
+    assert_eq!(cold.completions.len(), 2 * FRAMES as usize);
+    assert_eq!(
+        warm.completions.len(),
+        2 * FRAMES as usize,
+        "deferral reorders, it never drops"
+    );
+    assert!(warm.admission.deferred > 0, "dense scenes must be deferred");
+    assert_eq!(warm.admission.dropped + warm.admission.rejected, 0);
+    let reference: HashMap<(u32, u64), u64> = cold
+        .completions
+        .iter()
+        .map(|c| ((c.sequence, c.id), c.result.checksum))
+        .collect();
+    for w in &warm.completions {
+        assert_eq!(
+            w.result.checksum,
+            reference[&(w.sequence, w.id)],
+            "seq {} frame {} diverged through deferral",
+            w.sequence,
+            w.id
+        );
+        if w.id > 0 {
+            assert!(
+                w.result.blocks_reused > 0,
+                "seq {} frame {}: deferral broke its lineage's reuse",
+                w.sequence,
+                w.id
+            );
+        }
+    }
+}
+
 /// The cache is strictly opt-in: a default `RunnerConfig` never touches
 /// it and reports zero counters.
 #[test]
@@ -312,8 +597,16 @@ fn delta_cache_is_off_by_default() {
     assert_eq!(report.blocks_reused, 0);
     assert_eq!(report.evictions, 0);
     assert_eq!(report.reuse_ratio(), 0.0);
-    assert!(report
-        .completions
-        .iter()
-        .all(|c| c.result.blocks_searched == 0 && c.result.blocks_reused == 0));
+    // The compute and voxelize rungs are off too: profile sources
+    // synthesize voxels directly (nothing to re-bin) and no psum is
+    // ever cached or spliced.
+    assert_eq!(report.voxels_rebinned, 0);
+    assert_eq!(report.waves_skipped, 0);
+    assert_eq!(report.rows_gathered_saved, 0);
+    assert!(report.completions.iter().all(|c| {
+        c.result.blocks_searched == 0
+            && c.result.blocks_reused == 0
+            && c.result.waves_skipped == 0
+            && c.result.rows_gathered_saved == 0
+    }));
 }
