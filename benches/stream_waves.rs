@@ -33,8 +33,12 @@
 //!                                              # + serving + warm-cache
 //!                                              # + compute-reuse ticks
 //! cargo bench --bench stream_waves -- --json BENCH_stream_waves.json
-//!     # machine-readable sweep points (fps, p50/p95, dispatches, and
-//!     # the reuse/skip counters); composes with --smoke
+//!     # machine-readable sweep points (fps, p50/p95, dispatches, the
+//!     # reuse/skip counters, and per-stage span p50/p95); composes
+//!     # with --smoke
+//! cargo bench --bench stream_waves -- --smoke --trace-out BENCH_trace.json
+//!     # also export the warm delta tick's stage spans as Chrome
+//!     # trace-event JSON (loads in Perfetto / chrome://tracing)
 //! ```
 
 use voxel_cim::bench_util::bench;
@@ -55,6 +59,17 @@ use voxel_cim::serving::{
 };
 use voxel_cim::sparse::tensor::SparseTensor;
 use voxel_cim::spconv::layer::NativeEngine;
+use voxel_cim::util::json::Json;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Whether the bench pipelines record stage spans: set in `main` when
+/// `--json` or `--trace-out` is given, so the machine-readable report
+/// carries per-stage p50/p95 and the trace export has spans to write.
+/// Span recording stays off the measured `bench(..)` timing loops'
+/// critical claims — the sweeps compare configurations under the *same*
+/// recording mode.
+static TRACE: AtomicBool = AtomicBool::new(false);
 
 fn net() -> NetworkSpec {
     NetworkSpec {
@@ -84,7 +99,7 @@ fn make_frame(id: u64) -> SparseTensor {
 /// One facade per measured serve: the owned `NativeEngine`'s dispatch
 /// counter then measures exactly that stream (`pipe.dispatches()`).
 fn mk_pipe(net: NetworkSpec, runner: RunnerConfig, serving: ServingConfig, frames: u64) -> Pipeline {
-    let cfg = PipelineConfig {
+    let mut cfg = PipelineConfig {
         runner,
         serving,
         dataset: DatasetConfig {
@@ -93,6 +108,7 @@ fn mk_pipe(net: NetworkSpec, runner: RunnerConfig, serving: ServingConfig, frame
         },
         ..Default::default()
     };
+    cfg.observability.trace = TRACE.load(Ordering::Relaxed);
     Pipeline::builder()
         .config(cfg)
         .network(net)
@@ -122,8 +138,9 @@ fn latency_line(report: &StreamReport) -> String {
 }
 
 /// One sweep point of the machine-readable report (`--json <path>`):
-/// throughput, the latency distribution, the engine dispatch count, and
-/// every delta-reuse counter the stream report carries.
+/// throughput, the latency distribution, the engine dispatch count,
+/// every delta-reuse counter the stream report carries, and (when span
+/// recording is on) per-stage latency summaries.
 struct JsonPoint {
     sweep: String,
     label: String,
@@ -136,6 +153,9 @@ struct JsonPoint {
     voxels_rebinned: u64,
     waves_skipped: u64,
     rows_gathered_saved: u64,
+    /// Per-stage `(name, p50 ms, p95 ms)` from `StreamReport::stage_summary`
+    /// — empty when span recording is off.
+    stages: Vec<(String, f64, f64)>,
 }
 
 impl JsonPoint {
@@ -156,29 +176,51 @@ impl JsonPoint {
             voxels_rebinned: report.voxels_rebinned,
             waves_skipped: report.waves_skipped,
             rows_gathered_saved: report.rows_gathered_saved,
+            stages: report
+                .stage_summary()
+                .iter()
+                .map(|(name, s)| (name.to_string(), s.p50 * 1e3, s.p95 * 1e3))
+                .collect(),
         }
     }
 
-    // `{:?}` on the ASCII sweep/label strings is valid JSON escaping.
-    fn render(&self) -> String {
-        format!(
-            "    {{\"sweep\": {:?}, \"label\": {:?}, \"fps\": {:.3}, \
-             \"p50_ms\": {:.4}, \"p95_ms\": {:.4}, \"dispatches\": {}, \
-             \"blocks_searched\": {}, \"blocks_reused\": {}, \
-             \"voxels_rebinned\": {}, \"waves_skipped\": {}, \
-             \"rows_gathered_saved\": {}}}",
-            self.sweep,
-            self.label,
-            self.fps,
-            self.p50_ms,
-            self.p95_ms,
-            self.dispatches,
-            self.blocks_searched,
-            self.blocks_reused,
-            self.voxels_rebinned,
-            self.waves_skipped,
-            self.rows_gathered_saved,
-        )
+    fn json(&self) -> Json {
+        let mut obj: Vec<(String, Json)> = vec![
+            ("sweep".into(), Json::str(&self.sweep)),
+            ("label".into(), Json::str(&self.label)),
+            ("fps".into(), Json::Num(self.fps)),
+            ("p50_ms".into(), Json::Num(self.p50_ms)),
+            ("p95_ms".into(), Json::Num(self.p95_ms)),
+            ("dispatches".into(), Json::UInt(self.dispatches)),
+            ("blocks_searched".into(), Json::UInt(self.blocks_searched)),
+            ("blocks_reused".into(), Json::UInt(self.blocks_reused)),
+            ("voxels_rebinned".into(), Json::UInt(self.voxels_rebinned)),
+            ("waves_skipped".into(), Json::UInt(self.waves_skipped)),
+            (
+                "rows_gathered_saved".into(),
+                Json::UInt(self.rows_gathered_saved),
+            ),
+        ];
+        if !self.stages.is_empty() {
+            obj.push((
+                "stages".into(),
+                Json::Obj(
+                    self.stages
+                        .iter()
+                        .map(|(name, p50, p95)| {
+                            (
+                                name.clone(),
+                                Json::obj(vec![
+                                    ("p50_ms", Json::Num(*p50)),
+                                    ("p95_ms", Json::Num(*p95)),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        Json::Obj(obj)
     }
 }
 
@@ -194,18 +236,45 @@ fn json_path() -> Option<String> {
     })
 }
 
+/// `--trace-out <path>`; a bare `--trace-out` falls back to the CI
+/// convention, `BENCH_trace.json` in the working directory.
+fn trace_out_path() -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter().position(|a| a == "--trace-out").map(|i| {
+        args.get(i + 1)
+            .filter(|p| !p.starts_with("--"))
+            .cloned()
+            .unwrap_or_else(|| "BENCH_trace.json".into())
+    })
+}
+
 fn write_json(path: &str, points: &[JsonPoint]) {
-    let body: Vec<String> = points.iter().map(JsonPoint::render).collect();
-    let doc = format!(
-        "{{\n  \"bench\": \"stream_waves\",\n  \"points\": [\n{}\n  ]\n}}\n",
-        body.join(",\n")
-    );
-    std::fs::write(path, doc).expect("write --json report");
+    let doc = Json::obj(vec![
+        ("bench", Json::str("stream_waves")),
+        ("points", Json::arr(points.iter().map(JsonPoint::json).collect())),
+    ]);
+    std::fs::write(path, doc.render()).expect("write --json report");
     println!("wrote {path} ({} sweep points)", points.len());
+}
+
+/// Export the recorded spans of `pipe` when `--trace-out` was given.
+fn maybe_write_trace(pipe: &Pipeline) {
+    if let Some(path) = trace_out_path() {
+        pipe.observer()
+            .write_chrome_trace(std::path::Path::new(&path))
+            .expect("write --trace-out");
+        println!("trace written to {path} (load in Perfetto / chrome://tracing)");
+    }
 }
 
 fn main() {
     let json = json_path();
+    // Record stage spans whenever a machine-readable artifact is being
+    // produced: the JSON report then carries per-stage p50/p95, and the
+    // Chrome trace export has spans to write.
+    if json.is_some() || trace_out_path().is_some() {
+        TRACE.store(true, Ordering::Relaxed);
+    }
     let mut points: Vec<JsonPoint> = Vec::new();
     if std::env::args().any(|a| a == "--smoke") {
         smoke(&mut points);
@@ -625,6 +694,12 @@ fn delta_sweep(points: &mut Vec<JsonPoint>) {
             pipe.dispatches(),
         );
         points.push(JsonPoint::of("delta", label, &report, pipe.dispatches()));
+        if label == "map" {
+            // The warm drift stream is the interesting trace: cold frame
+            // 0 map-searches everything, warm frames only dirty blocks —
+            // visibly shorter map_search spans in Perfetto.
+            maybe_write_trace(&pipe);
+        }
         reports.push(report);
     }
     let cold = &reports[0];
@@ -887,6 +962,11 @@ fn delta_smoke(net: NetworkSpec, points: &mut Vec<JsonPoint>) {
             &report,
             pipe.dispatches(),
         ));
+        if enabled {
+            // CI validates this export: the warm drift tick's spans as
+            // Chrome trace-event JSON.
+            maybe_write_trace(&pipe);
+        }
         reports.push(report);
     }
     let (cold, warm) = (&reports[0], &reports[1]);

@@ -23,6 +23,7 @@ use crate::geom::{Coord3, Extent3};
 use crate::mapsearch::delta::{self, DeltaCache, DeltaConfig, DeltaKey, FrameDelta, SlotSpec};
 use crate::mapsearch::{AccessStats, MapSearch, SearcherKind};
 use crate::model::layer::{LayerSpec, NetworkSpec};
+use crate::obs::{Recorder, Stage};
 use crate::sparse::rulebook::{ConvKind, Rulebook};
 use crate::sparse::tensor::SparseTensor;
 use crate::spconv::conv2d::{conv2d_im2col, DenseMap};
@@ -250,6 +251,9 @@ pub struct NetworkRunner {
     searcher: Arc<dyn MapSearch + Send + Sync>,
     pool: WorkerPool,
     compute_pool: Option<WorkerPool>,
+    /// Stage-span recorder (see [`Self::set_observer`]); `Disabled`
+    /// keeps every hot path allocation- and lock-free.
+    obs: Recorder,
 }
 
 impl NetworkRunner {
@@ -279,12 +283,26 @@ impl NetworkRunner {
             searcher,
             pool,
             compute_pool,
+            obs: Recorder::Disabled,
         }
     }
 
     /// The active map-search engine.
     pub fn searcher(&self) -> &dyn MapSearch {
         self.searcher.as_ref()
+    }
+
+    /// Attach a stage-span recorder: map-search / delta-plan / merge /
+    /// dense-head spans record in the scheduler (worker closures clone
+    /// the recorder), and every executed `SpconvLayer` inherits it for
+    /// gather / GEMM-wave / scatter / requant spans.
+    pub fn set_observer(&mut self, obs: Recorder) {
+        self.obs = obs;
+    }
+
+    /// The attached recorder (`Disabled` unless [`Self::set_observer`]).
+    pub fn observer(&self) -> &Recorder {
+        &self.obs
     }
 
     /// Run one frame through the network (never block-sharded).
@@ -415,9 +433,11 @@ impl NetworkRunner {
                             // stage. Geometry comes from the skip target,
                             // so this path is searcher-independent.
                             let t = Instant::now();
+                            let _g = self.obs.span(Stage::MapSearch).layer(li as u32);
                             let rb = crate::sparse::hash_search::tconv_pruned(
                                 &f.cur, k, stride, ext, &target,
                             );
+                            drop(_g);
                             let access = AccessStats {
                                 voxel_reads: f.cur.len() as u64 + target.len() as u64,
                                 ..Default::default()
@@ -447,7 +467,9 @@ impl NetworkRunner {
                                     .map(|task| (k, task)),
                                 _ => None,
                             };
+                            let obs = self.obs.clone();
                             handles.push((plans.len(), self.pool.submit(move || {
+                                let _g = obs.span(Stage::MapSearch).layer(li as u32);
                                 let t = Instant::now();
                                 let (rb, st, outcome) = match slot {
                                     Some((k, task)) => {
@@ -510,7 +532,8 @@ impl NetworkRunner {
                     let weights =
                         LayerWeights::random(spec.kernel_volume(), c_in, c_out, weight_seed);
                     weight_seed = weight_seed.wrapping_add(1);
-                    let mut layer = SpconvLayer::new(weights, self.cfg.batch);
+                    let mut layer = SpconvLayer::new(weights, self.cfg.batch)
+                        .with_observer(self.obs.clone(), li as u32);
                     if self.cfg.w2b_factor > 0 {
                         // W2B-aware wave packing: replica copies from the
                         // group's combined per-offset workload, so hot
@@ -600,7 +623,9 @@ impl NetworkRunner {
                 }
                 LayerSpec::ToBev => {
                     for f in frames.iter_mut() {
+                        let _g = self.obs.span(Stage::DenseHead).layer(li as u32);
                         f.bev = Some(to_bev(&f.cur));
+                        drop(_g);
                         f.records.push(LayerRecord {
                             name: "ToBev".into(),
                             pairs: 0,
@@ -623,7 +648,9 @@ impl NetworkRunner {
                     weight_seed = weight_seed.wrapping_add(1);
                     for f in frames.iter_mut() {
                         let x = f.bev.take().expect("Conv2d before ToBev");
+                        let _g = self.obs.span(Stage::DenseHead).layer(li as u32);
                         let (y, secs) = run_conv2d(&x, &w, c_out, k, stride, 1, engine)?;
+                        drop(_g);
                         f.records.push(LayerRecord {
                             name: format!("{spec:?}"),
                             pairs: (y.h * y.w) as u64 * (k * k) as u64,
@@ -647,7 +674,9 @@ impl NetworkRunner {
                     weight_seed = weight_seed.wrapping_add(1);
                     for f in frames.iter_mut() {
                         let x = f.bev.take().expect("Deconv2d before ToBev");
+                        let _g = self.obs.span(Stage::DenseHead).layer(li as u32);
                         let (y, secs) = run_conv2d(&x, &w, c_out, k, 1, up, engine)?;
+                        drop(_g);
                         f.records.push(LayerRecord {
                             name: format!("{spec:?}"),
                             pairs: (y.h * y.w) as u64 * (k * k) as u64,
@@ -808,6 +837,7 @@ impl NetworkRunner {
                     .iter()
                     .zip(seqs.iter())
                     .map(|(t, &sequence)| {
+                        let _g = self.obs.span(Stage::DeltaPlan).sequence(sequence);
                         Some(cache.begin_frame(
                             DeltaKey { sequence, shard: None },
                             t,
@@ -841,8 +871,13 @@ impl NetworkRunner {
         for (i, (input, plan)) in inputs.into_iter().zip(&plans).enumerate() {
             match plan {
                 Some(p) => {
-                    for s in &p.shards {
+                    for (si, s) in p.shards.iter().enumerate() {
                         if let Some((seqs, cache)) = &delta {
+                            let _g = self
+                                .obs
+                                .span(Stage::DeltaPlan)
+                                .sequence(seqs[i])
+                                .shard(si as u32);
                             frame_deltas.push(Some(cache.begin_frame(
                                 DeltaKey { sequence: seqs[i], shard: Some(s.block) },
                                 &s.tensor,
@@ -855,6 +890,7 @@ impl NetworkRunner {
                 }
                 None => {
                     if let Some((seqs, cache)) = &delta {
+                        let _g = self.obs.span(Stage::DeltaPlan).sequence(seqs[i]);
                         frame_deltas.push(Some(cache.begin_frame(
                             DeltaKey { sequence: seqs[i], shard: None },
                             &input,
@@ -883,6 +919,7 @@ impl NetworkRunner {
         for plan in &plans {
             match plan {
                 Some(p) => {
+                    let _g = self.obs.span(Stage::Merge);
                     let scene_runs: Vec<GroupRun> =
                         runs.by_ref().take(p.shards.len()).collect();
                     debug_assert_eq!(scene_runs.len(), p.shards.len());

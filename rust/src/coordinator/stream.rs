@@ -30,6 +30,7 @@ use crate::coordinator::pipeline::{HybridPipeline, PhaseTiming};
 use crate::coordinator::scheduler::{FrameResult, NetworkRunner, RunnerConfig};
 use crate::dataset::{ClosureSource, FramePoll, FrameSource, PrefetchSource, SourcedFrame};
 use crate::model::layer::NetworkSpec;
+use crate::obs::{Recorder, Stage};
 use crate::serving::{AdmissionConfig, AdmissionController, AdmissionReport, WindowPolicy};
 use crate::sparse::tensor::SparseTensor;
 use crate::spconv::layer::GemmEngine;
@@ -91,20 +92,55 @@ pub struct StreamReport {
     /// Gather rows (rule pairs) compute-core reuse dropped from wave
     /// packing across the stream (zero unless `delta_compute` is on).
     pub rows_gathered_saved: u64,
+    /// Per-stage span durations (seconds) recorded while this stream was
+    /// served, indexed by [`Stage::index`] — always [`Stage::COUNT`]
+    /// buckets, all empty when observability is off.
+    pub stage_seconds: Vec<Vec<f64>>,
 }
 
 impl StreamReport {
+    /// Frames per wall second; 0 for an empty stream (never NaN).
     pub fn throughput_fps(&self) -> f64 {
+        if self.completions.is_empty() || self.wall_seconds <= 0.0 {
+            return 0.0;
+        }
         self.completions.len() as f64 / self.wall_seconds
     }
+    /// Median end-to-end latency, seconds; 0 for an empty stream.
     pub fn latency_p50(&self) -> f64 {
-        percentile(&self.latencies(), 50.0)
+        let xs = self.latencies();
+        if xs.is_empty() {
+            0.0
+        } else {
+            percentile(&xs, 50.0)
+        }
     }
+    /// p95 end-to-end latency, seconds; 0 for an empty stream.
     pub fn latency_p95(&self) -> f64 {
-        percentile(&self.latencies(), 95.0)
+        let xs = self.latencies();
+        if xs.is_empty() {
+            0.0
+        } else {
+            percentile(&xs, 95.0)
+        }
     }
     fn latencies(&self) -> Vec<f64> {
         self.completions.iter().map(|c| c.latency).collect()
+    }
+
+    /// Per-stage latency summaries over the spans recorded during this
+    /// serve, in dataflow order (keys match [`Stage::key`]). Empty when
+    /// observability is off or no spans were recorded.
+    pub fn stage_summary(&self) -> Vec<(&'static str, LatencySummary)> {
+        Stage::ALL
+            .iter()
+            .filter_map(|s| {
+                self.stage_seconds
+                    .get(s.index())
+                    .and_then(|durs| LatencySummary::of(durs))
+                    .map(|sum| (s.key(), sum))
+            })
+            .collect()
     }
 
     /// Fraction of occupied blocks served from the temporal delta cache
@@ -164,6 +200,9 @@ pub struct StreamServer {
     /// SLO-aware admission (policy `None` by default: every offered
     /// frame is admitted and the pending bound is plain backpressure).
     admission: AdmissionConfig,
+    /// Stage-span / metrics recorder ([`Recorder::Disabled`] by default:
+    /// every hot path stays allocation- and lock-free).
+    obs: Recorder,
 }
 
 impl StreamServer {
@@ -174,6 +213,7 @@ impl StreamServer {
             queue_depth,
             window: WindowPolicy::Exclusive,
             admission: AdmissionConfig::default(),
+            obs: Recorder::Disabled,
         }
     }
 
@@ -195,6 +235,21 @@ impl StreamServer {
     pub fn with_admission(mut self, admission: AdmissionConfig) -> Self {
         self.admission = admission;
         self
+    }
+
+    /// Attach a stage-span / metrics recorder. The engine-layer runner
+    /// shares the same recorder, so map-search / gather / GEMM / scatter
+    /// spans and the serving spans (admission, window packing) land in
+    /// one trace.
+    pub fn with_observer(mut self, obs: Recorder) -> Self {
+        self.runner.set_observer(obs.clone());
+        self.obs = obs;
+        self
+    }
+
+    /// The attached recorder ([`Recorder::Disabled`] by default).
+    pub fn observer(&self) -> &Recorder {
+        &self.obs
     }
 
     /// Serve up to `n_frames` frames from any [`FrameSource`] — a KITTI
@@ -253,6 +308,9 @@ impl StreamServer {
         // `n_frames` even over endless sources).
         let mut pulled: u64 = 0;
         let mut exhausted = false;
+        // Spans committed before this serve (a reused recorder carries
+        // prior streams' spans): this report buckets only what follows.
+        let span_base = self.obs.span_count();
         while (completions.len() as u64) < n_frames {
             // Refill: block for one frame when nothing is queued, then
             // top up opportunistically ([`FrameSource::poll_frame`] —
@@ -262,6 +320,11 @@ impl StreamServer {
                 match source.next_frame() {
                     Some(f) => {
                         pulled += 1;
+                        let _g = self
+                            .obs
+                            .span(Stage::Admission)
+                            .frame(f.meta.id)
+                            .sequence(f.meta.sequence);
                         admission.offer(&mut pending, f, inflight, planned);
                     }
                     None => exhausted = true,
@@ -271,7 +334,14 @@ impl StreamServer {
                 match source.poll_frame() {
                     FramePoll::Ready(Some(f)) => {
                         pulled += 1;
-                        if admission.offer(&mut pending, f, inflight, planned) {
+                        let g = self
+                            .obs
+                            .span(Stage::Admission)
+                            .frame(f.meta.id)
+                            .sequence(f.meta.sequence);
+                        let shed = admission.offer(&mut pending, f, inflight, planned);
+                        drop(g);
+                        if shed {
                             // The offer shed load: pause this refill
                             // pass so pressure is re-evaluated against
                             // the next window's completions instead of
@@ -291,9 +361,18 @@ impl StreamServer {
                 break;
             }
             // SLO pressure: defer-sharding reorders the backlog before
-            // the window is cut.
-            admission.reorder(&mut pending, planned);
-            let window = self.take_window(&mut pending, inflight);
+            // the window is cut. The ambient window id is set first so
+            // every span recorded from here through the engine inherits
+            // it without plumbing.
+            self.obs.set_window(windows);
+            {
+                let _g = self.obs.span(Stage::Admission);
+                admission.reorder(&mut pending, planned);
+            }
+            let window = {
+                let _g = self.obs.span(Stage::WindowPack);
+                self.take_window(&mut pending, inflight)
+            };
             windows += 1;
             let started = Instant::now();
             let metas: Vec<(u64, u32, Instant, u64)> = window
@@ -345,18 +424,60 @@ impl StreamServer {
                     result,
                 });
             }
+            // Window commit: sweep every stripe's buffered spans into
+            // the ordered log while the workers are quiescent.
+            self.obs.drain();
+        }
+        self.obs.clear_window();
+        let mut stage_seconds = vec![Vec::new(); Stage::COUNT];
+        for s in self.obs.spans().iter().skip(span_base) {
+            stage_seconds[s.stage.index()].push(s.dur);
+        }
+        let mut evictions = cache.as_ref().map_or(0, |c| c.evictions);
+        let mut admission_report = admission.report;
+        if let Some(m) = self.obs.metrics() {
+            // One counter surface: route the ad-hoc counters through the
+            // registry and read the report fields back out of it. The
+            // before/after delta keeps repeated serves on one recorder
+            // value-identical to the metrics-off path.
+            let routed = |name: &str, v: u64| {
+                let before = m.counter(name);
+                m.add(name, v);
+                m.counter(name) - before
+            };
+            windows = routed("stream.windows", windows);
+            blocks_searched = routed("delta.blocks_searched", blocks_searched);
+            blocks_reused = routed("delta.blocks_reused", blocks_reused);
+            evictions = routed("delta.evictions", evictions);
+            voxels_rebinned = routed("stream.voxels_rebinned", voxels_rebinned);
+            waves_skipped = routed("compute.waves_skipped", waves_skipped);
+            rows_gathered_saved =
+                routed("compute.rows_gathered_saved", rows_gathered_saved);
+            admission_report.admitted =
+                routed("admission.admitted", admission_report.admitted);
+            admission_report.dropped =
+                routed("admission.dropped", admission_report.dropped);
+            admission_report.rejected =
+                routed("admission.rejected", admission_report.rejected);
+            admission_report.deferred =
+                routed("admission.deferred", admission_report.deferred);
+            for c in &completions {
+                m.observe("stream.latency", c.latency);
+                m.observe("stream.attributed", c.attributed);
+            }
         }
         Ok(StreamReport {
             completions,
             wall_seconds: t0.elapsed().as_secs_f64(),
             windows,
-            admission: admission.report,
+            admission: admission_report,
             blocks_searched,
             blocks_reused,
-            evictions: cache.as_ref().map_or(0, |c| c.evictions),
+            evictions,
             voxels_rebinned,
             waves_skipped,
             rows_gathered_saved,
+            stage_seconds,
         })
     }
 
@@ -726,6 +847,82 @@ mod tests {
         assert_eq!(a.waves_skipped + a.rows_gathered_saved, 0);
         assert!(b.rows_gathered_saved > 0, "static stream saved no gather rows");
         assert!(b.waves_skipped > 0, "static stream skipped no waves");
+    }
+
+    #[test]
+    fn empty_stream_report_returns_zeroes_not_nan() {
+        let srv = StreamServer::new(tiny_net(), RunnerConfig::default(), 2);
+        let report = srv
+            .serve(0, &mut ClosureSource::new(make_frame), &mut NativeEngine::default())
+            .unwrap();
+        assert!(report.completions.is_empty());
+        // Every ratio / percentile degrades to 0, never NaN or a panic.
+        assert_eq!(report.throughput_fps(), 0.0);
+        assert_eq!(report.latency_p50(), 0.0);
+        assert_eq!(report.latency_p95(), 0.0);
+        assert_eq!(report.reuse_ratio(), 0.0);
+        assert!(report.latency_summary().is_none());
+        assert!(report.attributed_summary().is_none());
+        assert!(report.stage_summary().is_empty());
+        assert_eq!(report.stage_seconds.len(), Stage::COUNT);
+    }
+
+    #[test]
+    fn observed_stream_reports_stage_summaries() {
+        use crate::obs::ObsConfig;
+        let obs = Recorder::from_config(&ObsConfig {
+            trace: true,
+            ..ObsConfig::default()
+        });
+        let srv = StreamServer::new(tiny_net(), RunnerConfig::default(), 2)
+            .with_observer(obs);
+        let report = srv
+            .serve(4, &mut ClosureSource::new(make_frame), &mut NativeEngine::default())
+            .unwrap();
+        assert_eq!(report.completions.len(), 4);
+        let summary = report.stage_summary();
+        let keys: Vec<&str> = summary.iter().map(|(k, _)| *k).collect();
+        for want in ["map_search", "gather", "gemm_wave", "scatter", "requant",
+            "admission", "window_pack"]
+        {
+            assert!(keys.contains(&want), "missing stage {want:?} in {keys:?}");
+        }
+        for (k, s) in &summary {
+            assert!(s.n >= 1 && s.p95 >= s.p50 && s.p50 >= 0.0, "stage {k}");
+        }
+        // The observer also kept the recorded spans for export.
+        assert!(srv.observer().span_count() > 0);
+    }
+
+    #[test]
+    fn unobserved_stream_records_no_spans_and_identical_bits() {
+        use crate::obs::ObsConfig;
+        let plain = StreamServer::new(tiny_net(), RunnerConfig::default(), 2);
+        let observed = StreamServer::new(tiny_net(), RunnerConfig::default(), 2)
+            .with_observer(Recorder::from_config(&ObsConfig {
+                trace: true,
+                metrics: true,
+                ..ObsConfig::default()
+            }));
+        let a = plain
+            .serve(4, &mut ClosureSource::new(make_frame), &mut NativeEngine::default())
+            .unwrap();
+        let b = observed
+            .serve(4, &mut ClosureSource::new(make_frame), &mut NativeEngine::default())
+            .unwrap();
+        assert!(!plain.observer().enabled());
+        assert!(a.stage_seconds.iter().all(Vec::is_empty));
+        assert!(a.stage_summary().is_empty());
+        for (x, y) in a.completions.iter().zip(&b.completions) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.result.checksum, y.result.checksum, "frame {}", x.id);
+        }
+        // Metrics routing read the counters back bit-identically.
+        assert_eq!(a.windows, b.windows);
+        assert_eq!(a.admission, b.admission);
+        let m = observed.observer().metrics().expect("metrics half on");
+        assert_eq!(m.counter("stream.windows"), b.windows);
+        assert_eq!(m.counter("admission.admitted"), b.admission.admitted);
     }
 
     #[test]

@@ -39,6 +39,7 @@ pub mod experiments;
 pub mod geom;
 pub mod mapsearch;
 pub mod model;
+pub mod obs;
 pub mod pipeline;
 pub mod pointcloud;
 pub mod runtime;
@@ -70,6 +71,7 @@ pub mod prelude {
         SearcherKind, WeightMajor,
     };
     pub use crate::model::{minkunet, second, LayerSpec, NetworkSpec};
+    pub use crate::obs::{MetricsRegistry, ObsConfig, Recorder, Stage};
     pub use crate::pipeline::{
         EngineKind, Job, NetworkKind, Overrides, Pipeline, PipelineConfig, PipelineError,
         RunOutcome,

@@ -7,6 +7,8 @@
 //! voxel-cim stream [--dataset D] [--frames N]  serve a frame stream
 //!                  [--sequences A,B] [--admission P] [--slo MS] [--delta]
 //!                  multi-sequence muxing + SLO-aware admission
+//!                  [--trace] [--trace-out T.json] [--metrics-out M.json]
+//!                  stage-span tracing + metrics export
 //! voxel-cim info                               config + artifact status
 //! ```
 //!
@@ -102,6 +104,23 @@ fn main() -> voxel_cim::Result<()> {
         "delta-voxelize",
         "extend the delta cache through voxelization: KITTI sources re-bin only \
          dirty blocks' points (implies --delta; bit-identical)",
+    )
+    .switch(
+        "trace",
+        "record stage spans (voxelize/map_search/gemm_wave/...) and print the \
+         per-stage breakdown in the stream footer (overrides [observability] trace)",
+    )
+    .opt(
+        "trace-out",
+        "",
+        "write the recorded spans as Chrome trace-event JSON to this path \
+         (loads in Perfetto / chrome://tracing; implies --trace)",
+    )
+    .opt(
+        "metrics-out",
+        "",
+        "write a JSON snapshot of the metrics registry (counters, gauges, \
+         per-stage histograms) to this path",
     )
     .parse();
 
@@ -328,6 +347,8 @@ fn run_stream(args: &Args) -> voxel_cim::Result<()> {
     );
     println!("engine: {}", pipe.engine_desc());
     let delta_voxelize = cfg.runner.delta.enabled && cfg.runner.delta.voxelize;
+    let trace_out = cfg.observability.trace_out.clone();
+    let metrics_out = cfg.observability.metrics_out.clone();
     let report = pipe.run(Job::Stream(source))?.into_stream()?;
     for c in &report.completions {
         println!(
@@ -389,6 +410,30 @@ fn run_stream(args: &Args) -> voxel_cim::Result<()> {
             "admission: {} admitted | {} dropped | {} rejected | {} deferrals",
             adm.admitted, adm.dropped, adm.rejected, adm.deferred
         );
+    }
+    let stages = report.stage_summary();
+    if !stages.is_empty() {
+        println!("\nper-stage breakdown (recorded spans):");
+        for (name, s) in &stages {
+            println!(
+                "  {:<12} n {:>6} | p50 {:>8.3} ms | p95 {:>8.3} ms | max {:>8.3} ms",
+                name,
+                s.n,
+                s.p50 * 1e3,
+                s.p95 * 1e3,
+                s.max * 1e3,
+            );
+        }
+    }
+    if !trace_out.is_empty() {
+        pipe.observer()
+            .write_chrome_trace(std::path::Path::new(&trace_out))?;
+        println!("trace written to {trace_out} (load in Perfetto / chrome://tracing)");
+    }
+    if !metrics_out.is_empty() {
+        pipe.observer()
+            .write_metrics_json(std::path::Path::new(&metrics_out))?;
+        println!("metrics snapshot written to {metrics_out}");
     }
     Ok(())
 }

@@ -1,0 +1,911 @@
+//! Stage-level observability: timed spans, a unified metrics registry,
+//! and Chrome-trace / metrics-JSON exporters — zero dependencies, wired
+//! through the [`crate::pipeline`] facade only.
+//!
+//! Voxel-CIM's claims are *per-stage* claims (O(N) map-search access,
+//! fewer GEMM dispatches from W2B packing, delta-cache reuse), so the
+//! pipeline records where frame time actually goes: every stage of the
+//! voxelize → map-search → gather → GEMM → scatter → requant path (plus
+//! the serving stages around it) can open a [`SpanGuard`] carrying
+//! frame / window / sequence / shard / layer attribution.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Off by default and provably cheap.** [`Recorder`] is a two-arm
+//!    enum; the `Disabled` arm makes [`Recorder::span`] return an inert
+//!    guard — no allocation, no clock read, no lock. Bit-identity tests
+//!    run against both arms (`rust/tests/observability.rs`).
+//! 2. **Worker threads log without contention.** Spans land in striped
+//!    per-thread buffers (a thread-local slot index picks the stripe),
+//!    drained into one ordered vector at window commit
+//!    ([`Recorder::drain`]) — the `WorkerPool` fork paths in
+//!    `coordinator::executor` / `spconv::layer` never share a hot lock.
+//! 3. **One counter surface.** [`MetricsRegistry`] subsumes the ad-hoc
+//!    report counters (blocks searched/reused, waves skipped, rows
+//!    saved, admission drops/defers/rejects, engine dispatches): the
+//!    public `StreamReport` fields stay, but with `metrics` enabled the
+//!    serve loop routes them through the registry and reads them back.
+//!
+//! Exporter formats: [`Recorder::write_chrome_trace`] emits the Chrome
+//! trace-event JSON array (`ph: "X"` complete events, microsecond
+//! timestamps) that loads directly in Perfetto / `chrome://tracing`;
+//! [`Recorder::write_metrics_json`] emits a flat snapshot of counters,
+//! gauges, and histogram summaries. Both share the escaping-correct
+//! writer in [`crate::util::json`] with the stream bench.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context};
+
+use crate::dataset::{FramePoll, FrameSource, SourcedFrame};
+use crate::util::config::{Config, Value};
+use crate::util::json::Json;
+use crate::util::stats::LatencySummary;
+
+/// The instrumented pipeline stages, in dataflow order.
+///
+/// `voxelize` covers frame acquisition (source production + prefetch
+/// wait, timed at the consumer); `admission` and `window_pack` are the
+/// serving stages around the engine; everything else is the engine
+/// layer itself. `dense_head` covers the BEV suffix (ToBev / Conv2d /
+/// Deconv2d layers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Stage {
+    Voxelize,
+    MapSearch,
+    DeltaPlan,
+    Gather,
+    GemmWave,
+    Scatter,
+    Requant,
+    Merge,
+    DenseHead,
+    Admission,
+    WindowPack,
+}
+
+impl Stage {
+    /// Number of stages (array-index domain of [`Stage::index`]).
+    pub const COUNT: usize = 11;
+
+    /// Every stage, in dataflow order (`index()` order).
+    pub const ALL: [Stage; Stage::COUNT] = [
+        Stage::Voxelize,
+        Stage::MapSearch,
+        Stage::DeltaPlan,
+        Stage::Gather,
+        Stage::GemmWave,
+        Stage::Scatter,
+        Stage::Requant,
+        Stage::Merge,
+        Stage::DenseHead,
+        Stage::Admission,
+        Stage::WindowPack,
+    ];
+
+    /// Stable snake_case name (trace-event `name`, metrics key suffix).
+    pub fn key(self) -> &'static str {
+        match self {
+            Stage::Voxelize => "voxelize",
+            Stage::MapSearch => "map_search",
+            Stage::DeltaPlan => "delta_plan",
+            Stage::Gather => "gather",
+            Stage::GemmWave => "gemm_wave",
+            Stage::Scatter => "scatter",
+            Stage::Requant => "requant",
+            Stage::Merge => "merge",
+            Stage::DenseHead => "dense_head",
+            Stage::Admission => "admission",
+            Stage::WindowPack => "window_pack",
+        }
+    }
+
+    /// Dense index into per-stage arrays (`Stage::ALL[s.index()] == s`).
+    pub fn index(self) -> usize {
+        match self {
+            Stage::Voxelize => 0,
+            Stage::MapSearch => 1,
+            Stage::DeltaPlan => 2,
+            Stage::Gather => 3,
+            Stage::GemmWave => 4,
+            Stage::Scatter => 5,
+            Stage::Requant => 6,
+            Stage::Merge => 7,
+            Stage::DenseHead => 8,
+            Stage::Admission => 9,
+            Stage::WindowPack => 10,
+        }
+    }
+}
+
+/// One recorded span: a stage interval with whatever attribution the
+/// recording site knew. Times are seconds relative to the recorder's
+/// construction instant.
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub stage: Stage,
+    /// Start offset from the recorder epoch, seconds.
+    pub start: f64,
+    /// Duration, seconds.
+    pub dur: f64,
+    /// Recording thread's slot id (stable per thread, process-wide).
+    pub tid: u32,
+    pub frame: Option<u64>,
+    pub sequence: Option<u32>,
+    pub window: Option<u64>,
+    pub shard: Option<u32>,
+    pub layer: Option<u32>,
+}
+
+/// `[observability]` config section (strict parse, every key optional):
+///
+/// ```toml
+/// [observability]
+/// trace = true          # record stage spans
+/// trace_out = "t.json"  # Chrome trace-event output path (implies trace)
+/// metrics = true        # route report counters through the registry
+/// sample_every = 1      # record every Nth span per stage (>= 1)
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObsConfig {
+    /// Record stage spans (the tracing half of the subsystem).
+    pub trace: bool,
+    /// Chrome trace-event output path; empty = no file. Non-empty
+    /// implies `trace`.
+    pub trace_out: String,
+    /// Enable the metrics registry (counters / gauges / histograms).
+    pub metrics: bool,
+    /// Metrics-snapshot output path (CLI `--metrics-out` only — not a
+    /// TOML key); empty = no file. Non-empty implies `metrics`.
+    pub metrics_out: String,
+    /// Record every Nth span per stage (1 = all). Lossy by design: a
+    /// sampled trace keeps the shape of a long stream affordable.
+    pub sample_every: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        Self {
+            trace: false,
+            trace_out: String::new(),
+            metrics: false,
+            metrics_out: String::new(),
+            sample_every: 1,
+        }
+    }
+}
+
+impl ObsConfig {
+    /// Parse the `[observability]` section with the same strictness
+    /// contract as the rest of the pipeline config: missing keys
+    /// default, present-but-mistyped values error.
+    pub fn from_config(cfg: &Config) -> crate::Result<Self> {
+        let d = Self::default();
+        let trace = match cfg.get("observability.trace") {
+            None => d.trace,
+            Some(Value::Bool(b)) => *b,
+            Some(v) => bail!("observability.trace must be a boolean, got {v:?}"),
+        };
+        let trace_out = match cfg.get("observability.trace_out") {
+            None => d.trace_out.clone(),
+            Some(Value::Str(s)) => s.clone(),
+            Some(v) => bail!("observability.trace_out must be a string path, got {v:?}"),
+        };
+        let metrics = match cfg.get("observability.metrics") {
+            None => d.metrics,
+            Some(Value::Bool(b)) => *b,
+            Some(v) => bail!("observability.metrics must be a boolean, got {v:?}"),
+        };
+        let sample_every = cfg.usize_or("observability.sample_every", d.sample_every)?;
+        anyhow::ensure!(sample_every >= 1, "observability.sample_every must be >= 1");
+        Ok(Self {
+            // An output path is an unambiguous request to trace.
+            trace: trace || !trace_out.is_empty(),
+            trace_out,
+            metrics,
+            metrics_out: d.metrics_out.clone(),
+            sample_every,
+        })
+    }
+
+    /// Whether any half of the subsystem is on.
+    pub fn enabled(&self) -> bool {
+        self.trace || self.metrics
+    }
+}
+
+/// How many span stripes the recorder shards its buffers over. Threads
+/// map to stripes by a process-wide slot counter, so any realistic
+/// worker-pool size gets a private stripe.
+const STRIPES: usize = 64;
+
+static NEXT_THREAD_SLOT: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static THREAD_SLOT: usize = NEXT_THREAD_SLOT.fetch_add(1, Ordering::Relaxed);
+}
+
+fn thread_slot() -> usize {
+    THREAD_SLOT.with(|s| *s)
+}
+
+/// The span/metrics recorder handed through the facade. Cheap to clone
+/// (`Disabled` is a unit arm; `Enabled` clones an `Arc`), so every
+/// worker closure can own one.
+#[derive(Clone, Debug, Default)]
+pub enum Recorder {
+    /// The no-op arm: `span()` returns an inert guard — no clock read,
+    /// no allocation, no lock — and every other method is a no-op.
+    #[default]
+    Disabled,
+    Enabled(Arc<RecorderInner>),
+}
+
+/// Shared state behind an enabled [`Recorder`].
+#[derive(Debug)]
+pub struct RecorderInner {
+    epoch: Instant,
+    trace: bool,
+    sample_every: u64,
+    /// Per-stage creation counters driving `sample_every`.
+    sampled: [AtomicU64; Stage::COUNT],
+    /// Ambient window id (stored +1; 0 = outside any window). The serve
+    /// loop sets it before packing each window so spans recorded deep in
+    /// the engine inherit window attribution without plumbing.
+    window: AtomicU64,
+    /// Striped span buffers: a thread writes only its own stripe.
+    stripes: Vec<Mutex<Vec<Span>>>,
+    /// Committed spans, appended stripe-by-stripe at each `drain()`.
+    drained: Mutex<Vec<Span>>,
+    metrics: Option<MetricsRegistry>,
+}
+
+impl Recorder {
+    /// Build from the `[observability]` section; `Disabled` unless a
+    /// half of the subsystem is switched on.
+    pub fn from_config(cfg: &ObsConfig) -> Self {
+        if !cfg.enabled() {
+            return Recorder::Disabled;
+        }
+        Recorder::Enabled(Arc::new(RecorderInner {
+            epoch: Instant::now(),
+            trace: cfg.trace,
+            sample_every: cfg.sample_every.max(1) as u64,
+            sampled: std::array::from_fn(|_| AtomicU64::new(0)),
+            window: AtomicU64::new(0),
+            stripes: (0..STRIPES).map(|_| Mutex::new(Vec::new())).collect(),
+            drained: Mutex::new(Vec::new()),
+            metrics: cfg.metrics.then(MetricsRegistry::default),
+        }))
+    }
+
+    /// Whether the recorder records anything at all.
+    pub fn enabled(&self) -> bool {
+        matches!(self, Recorder::Enabled(_))
+    }
+
+    /// Whether spans are being recorded (the `trace` half).
+    pub fn tracing(&self) -> bool {
+        matches!(self, Recorder::Enabled(i) if i.trace)
+    }
+
+    /// The metrics registry, when the `metrics` half is on.
+    pub fn metrics(&self) -> Option<&MetricsRegistry> {
+        match self {
+            Recorder::Disabled => None,
+            Recorder::Enabled(i) => i.metrics.as_ref(),
+        }
+    }
+
+    /// Open a span: the guard records `stage` from now until drop.
+    /// Attribution is attached on the guard (builder or `set_*`). On
+    /// the `Disabled` arm (or a sampled-out span) the guard is inert.
+    pub fn span(&self, stage: Stage) -> SpanGuard<'_> {
+        let inner = match self {
+            Recorder::Disabled => return SpanGuard { state: None },
+            Recorder::Enabled(i) => i,
+        };
+        if !inner.trace {
+            return SpanGuard { state: None };
+        }
+        if inner.sample_every > 1 {
+            let n = inner.sampled[stage.index()].fetch_add(1, Ordering::Relaxed);
+            if n % inner.sample_every != 0 {
+                return SpanGuard { state: None };
+            }
+        }
+        SpanGuard {
+            state: Some((
+                inner.as_ref(),
+                PendingSpan {
+                    stage,
+                    t0: Instant::now(),
+                    frame: None,
+                    sequence: None,
+                    shard: None,
+                    layer: None,
+                },
+            )),
+        }
+    }
+
+    /// Set the ambient window id inherited by subsequently recorded
+    /// spans (serve loop: once per packed window).
+    pub fn set_window(&self, window: u64) {
+        if let Recorder::Enabled(i) = self {
+            i.window.store(window + 1, Ordering::Relaxed);
+        }
+    }
+
+    /// Clear the ambient window id (outside the serve loop).
+    pub fn clear_window(&self) {
+        if let Recorder::Enabled(i) = self {
+            i.window.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Commit every stripe's buffered spans into the drained log (and,
+    /// with metrics on, feed the per-stage duration histograms). The
+    /// serve loop calls this at each window commit; worker threads are
+    /// quiescent between windows, so nothing races the sweep.
+    pub fn drain(&self) {
+        let inner = match self {
+            Recorder::Disabled => return,
+            Recorder::Enabled(i) => i,
+        };
+        let mut drained = inner.drained.lock().expect("span log lock");
+        for stripe in &inner.stripes {
+            let mut buf = stripe.lock().expect("span stripe lock");
+            if let Some(m) = inner.metrics.as_ref() {
+                for s in buf.iter() {
+                    m.observe(&format!("stage.{}", s.stage.key()), s.dur);
+                }
+            }
+            drained.append(&mut buf);
+        }
+    }
+
+    /// All committed spans (drains first). `Disabled` → empty.
+    pub fn spans(&self) -> Vec<Span> {
+        self.drain();
+        match self {
+            Recorder::Disabled => Vec::new(),
+            Recorder::Enabled(i) => i.drained.lock().expect("span log lock").clone(),
+        }
+    }
+
+    /// Number of committed spans (drains first).
+    pub fn span_count(&self) -> usize {
+        self.drain();
+        match self {
+            Recorder::Disabled => 0,
+            Recorder::Enabled(i) => i.drained.lock().expect("span log lock").len(),
+        }
+    }
+
+    /// Per-stage span durations, indexed by [`Stage::index`] (always
+    /// `Stage::COUNT` buckets; all empty when disabled or span-free).
+    pub fn stage_seconds(&self) -> Vec<Vec<f64>> {
+        let mut out = vec![Vec::new(); Stage::COUNT];
+        for s in self.spans() {
+            out[s.stage.index()].push(s.dur);
+        }
+        out
+    }
+
+    /// Write every committed span as a Chrome trace-event JSON array
+    /// (complete `"ph": "X"` events, microsecond timestamps). The file
+    /// loads directly in Perfetto / `chrome://tracing`.
+    pub fn write_chrome_trace(&self, path: &Path) -> crate::Result<()> {
+        let spans = self.spans();
+        let mut events = Vec::with_capacity(spans.len());
+        for s in &spans {
+            let mut args = Vec::new();
+            if let Some(f) = s.frame {
+                args.push(("frame".to_string(), Json::UInt(f)));
+            }
+            if let Some(q) = s.sequence {
+                args.push(("sequence".to_string(), Json::UInt(q as u64)));
+            }
+            if let Some(w) = s.window {
+                args.push(("window".to_string(), Json::UInt(w)));
+            }
+            if let Some(h) = s.shard {
+                args.push(("shard".to_string(), Json::UInt(h as u64)));
+            }
+            if let Some(l) = s.layer {
+                args.push(("layer".to_string(), Json::UInt(l as u64)));
+            }
+            let mut ev = vec![
+                ("name".to_string(), Json::str(s.stage.key())),
+                ("cat".to_string(), Json::str("stage")),
+                ("ph".to_string(), Json::str("X")),
+                ("ts".to_string(), Json::Num(s.start * 1e6)),
+                ("dur".to_string(), Json::Num(s.dur * 1e6)),
+                ("pid".to_string(), Json::UInt(0)),
+                ("tid".to_string(), Json::UInt(s.tid as u64)),
+            ];
+            if !args.is_empty() {
+                ev.push(("args".to_string(), Json::Obj(args)));
+            }
+            events.push(Json::Obj(ev));
+        }
+        std::fs::write(path, Json::Arr(events).render())
+            .with_context(|| format!("writing Chrome trace to {}", path.display()))
+    }
+
+    /// Write a flat JSON snapshot: registry counters / gauges /
+    /// histogram summaries plus per-stage span summaries.
+    pub fn write_metrics_json(&self, path: &Path) -> crate::Result<()> {
+        // Commit buffered spans first so the stage-duration histograms
+        // below see everything recorded so far.
+        self.drain();
+        let mut counters = Vec::new();
+        let mut gauges = Vec::new();
+        let mut hists = Vec::new();
+        if let Some(m) = self.metrics() {
+            for (k, v) in m.counters() {
+                counters.push((k, Json::UInt(v)));
+            }
+            for (k, v) in m.gauges() {
+                gauges.push((k, Json::Num(v)));
+            }
+            for (k, s) in m.histograms() {
+                hists.push((k, summary_json(&s)));
+            }
+        }
+        let mut stages = Vec::new();
+        for (i, durs) in self.stage_seconds().iter().enumerate() {
+            if let Some(s) = LatencySummary::of(durs) {
+                stages.push((Stage::ALL[i].key().to_string(), summary_json(&s)));
+            }
+        }
+        let doc = Json::obj(vec![
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("histograms", Json::Obj(hists)),
+            ("stages", Json::Obj(stages)),
+        ]);
+        std::fs::write(path, doc.render())
+            .with_context(|| format!("writing metrics snapshot to {}", path.display()))
+    }
+}
+
+fn summary_json(s: &LatencySummary) -> Json {
+    Json::obj(vec![
+        ("n", Json::UInt(s.n as u64)),
+        ("mean_ms", Json::Num(s.mean * 1e3)),
+        ("p50_ms", Json::Num(s.p50 * 1e3)),
+        ("p95_ms", Json::Num(s.p95 * 1e3)),
+        ("max_ms", Json::Num(s.max * 1e3)),
+    ])
+}
+
+#[derive(Debug)]
+struct PendingSpan {
+    stage: Stage,
+    t0: Instant,
+    frame: Option<u64>,
+    sequence: Option<u32>,
+    shard: Option<u32>,
+    layer: Option<u32>,
+}
+
+/// RAII span: records `[creation, drop)` of its stage into the
+/// recording thread's stripe. Inert (a `None` state) when the recorder
+/// is disabled or the span was sampled out — every method is then free.
+#[must_use = "a span guard records until dropped; binding it to _ drops immediately"]
+#[derive(Debug)]
+pub struct SpanGuard<'a> {
+    state: Option<(&'a RecorderInner, PendingSpan)>,
+}
+
+impl SpanGuard<'_> {
+    /// Attach a frame id (builder form).
+    pub fn frame(mut self, id: u64) -> Self {
+        self.set_frame(id);
+        self
+    }
+
+    /// Attach a sequence id (builder form).
+    pub fn sequence(mut self, seq: u32) -> Self {
+        self.set_sequence(seq);
+        self
+    }
+
+    /// Attach a shard index (builder form).
+    pub fn shard(mut self, shard: u32) -> Self {
+        self.set_shard(shard);
+        self
+    }
+
+    /// Attach a layer index (builder form).
+    pub fn layer(mut self, layer: u32) -> Self {
+        self.set_layer(layer);
+        self
+    }
+
+    /// Attach a frame id after creation (e.g. once the frame arrived).
+    pub fn set_frame(&mut self, id: u64) {
+        if let Some((_, p)) = self.state.as_mut() {
+            p.frame = Some(id);
+        }
+    }
+
+    /// Attach a sequence id after creation.
+    pub fn set_sequence(&mut self, seq: u32) {
+        if let Some((_, p)) = self.state.as_mut() {
+            p.sequence = Some(seq);
+        }
+    }
+
+    /// Attach a shard index after creation.
+    pub fn set_shard(&mut self, shard: u32) {
+        if let Some((_, p)) = self.state.as_mut() {
+            p.shard = Some(shard);
+        }
+    }
+
+    /// Attach a layer index after creation.
+    pub fn set_layer(&mut self, layer: u32) {
+        if let Some((_, p)) = self.state.as_mut() {
+            p.layer = Some(layer);
+        }
+    }
+
+    /// Drop without recording (e.g. a poll that returned `Pending`).
+    pub fn cancel(mut self) {
+        self.state = None;
+    }
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        let (inner, p) = match self.state.take() {
+            None => return,
+            Some(s) => s,
+        };
+        let dur = p.t0.elapsed().as_secs_f64();
+        let start = p.t0.saturating_duration_since(inner.epoch).as_secs_f64();
+        let slot = thread_slot();
+        let span = Span {
+            stage: p.stage,
+            start,
+            dur,
+            tid: slot as u32,
+            frame: p.frame,
+            sequence: p.sequence,
+            window: inner.window.load(Ordering::Relaxed).checked_sub(1),
+            shard: p.shard,
+            layer: p.layer,
+        };
+        inner.stripes[slot % STRIPES]
+            .lock()
+            .expect("span stripe lock")
+            .push(span);
+    }
+}
+
+/// Named counters / gauges / duration histograms behind one lock. The
+/// registry is cold-path only (the serve loop publishes accumulated
+/// totals once per stream, not per frame), so a single mutex is fine.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<RegistryInner>,
+}
+
+#[derive(Debug, Default)]
+struct RegistryInner {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Vec<f64>>,
+}
+
+impl MetricsRegistry {
+    /// Add to a named monotonic counter (created at 0 on first use).
+    pub fn add(&self, name: &str, v: u64) {
+        let mut i = self.inner.lock().expect("metrics lock");
+        *i.counters.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    /// Read a counter (0 when never written).
+    pub fn counter(&self, name: &str) -> u64 {
+        let i = self.inner.lock().expect("metrics lock");
+        i.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Set a named gauge to its latest value.
+    pub fn set_gauge(&self, name: &str, v: f64) {
+        let mut i = self.inner.lock().expect("metrics lock");
+        i.gauges.insert(name.to_string(), v);
+    }
+
+    /// Read a gauge.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        let i = self.inner.lock().expect("metrics lock");
+        i.gauges.get(name).copied()
+    }
+
+    /// Record one observation into a named histogram.
+    pub fn observe(&self, name: &str, v: f64) {
+        let mut i = self.inner.lock().expect("metrics lock");
+        i.histograms.entry(name.to_string()).or_default().push(v);
+    }
+
+    /// Summarize a histogram (`None` when absent or empty).
+    pub fn histogram(&self, name: &str) -> Option<LatencySummary> {
+        let i = self.inner.lock().expect("metrics lock");
+        i.histograms.get(name).and_then(|xs| LatencySummary::of(xs))
+    }
+
+    /// All counters, name-sorted.
+    pub fn counters(&self) -> Vec<(String, u64)> {
+        let i = self.inner.lock().expect("metrics lock");
+        i.counters.iter().map(|(k, v)| (k.clone(), *v)).collect()
+    }
+
+    /// All gauges, name-sorted.
+    pub fn gauges(&self) -> Vec<(String, f64)> {
+        let i = self.inner.lock().expect("metrics lock");
+        i.gauges.iter().map(|(k, v)| (k.clone(), *v)).collect()
+    }
+
+    /// All non-empty histograms as summaries, name-sorted.
+    pub fn histograms(&self) -> Vec<(String, LatencySummary)> {
+        let i = self.inner.lock().expect("metrics lock");
+        i.histograms
+            .iter()
+            .filter_map(|(k, xs)| LatencySummary::of(xs).map(|s| (k.clone(), s)))
+            .collect()
+    }
+}
+
+/// A [`FrameSource`] adapter that times frame acquisition as `voxelize`
+/// spans: each successful `next_frame` / `poll_frame` records how long
+/// the serve loop waited for the frame (source production + prefetch
+/// handoff), attributed to the frame it yielded. Pending polls and
+/// end-of-stream record nothing. Frame *content* passes through
+/// untouched, so streams are bit-identical under observation.
+pub struct ObservedSource {
+    inner: Box<dyn FrameSource>,
+    obs: Recorder,
+}
+
+impl ObservedSource {
+    pub fn new(inner: Box<dyn FrameSource>, obs: Recorder) -> Self {
+        Self { inner, obs }
+    }
+}
+
+impl FrameSource for ObservedSource {
+    fn next_frame(&mut self) -> Option<SourcedFrame> {
+        let mut g = self.obs.span(Stage::Voxelize);
+        match self.inner.next_frame() {
+            Some(f) => {
+                g.set_frame(f.meta.id);
+                g.set_sequence(f.meta.sequence);
+                Some(f)
+            }
+            None => {
+                g.cancel();
+                None
+            }
+        }
+    }
+
+    fn poll_frame(&mut self) -> FramePoll {
+        let mut g = self.obs.span(Stage::Voxelize);
+        match self.inner.poll_frame() {
+            FramePoll::Ready(Some(f)) => {
+                g.set_frame(f.meta.id);
+                g.set_sequence(f.meta.sequence);
+                FramePoll::Ready(Some(f))
+            }
+            other => {
+                g.cancel();
+                other
+            }
+        }
+    }
+
+    fn label(&self) -> String {
+        self.inner.label()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::config::Config;
+
+    fn tracing_recorder() -> Recorder {
+        Recorder::from_config(&ObsConfig {
+            trace: true,
+            ..ObsConfig::default()
+        })
+    }
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let r = Recorder::Disabled;
+        assert!(!r.enabled());
+        {
+            let g = r.span(Stage::MapSearch).frame(7).layer(2);
+            drop(g);
+        }
+        r.set_window(3);
+        r.drain();
+        assert_eq!(r.span_count(), 0);
+        assert!(r.metrics().is_none());
+        assert!(r.stage_seconds().iter().all(Vec::is_empty));
+    }
+
+    #[test]
+    fn spans_carry_attribution_and_ambient_window() {
+        let r = tracing_recorder();
+        r.set_window(4);
+        {
+            let _g = r.span(Stage::GemmWave).frame(9).sequence(1).shard(2).layer(3);
+        }
+        r.clear_window();
+        {
+            let _g = r.span(Stage::Admission);
+        }
+        let spans = r.spans();
+        assert_eq!(spans.len(), 2);
+        let g = &spans[0];
+        assert_eq!(g.stage, Stage::GemmWave);
+        assert_eq!(g.frame, Some(9));
+        assert_eq!(g.sequence, Some(1));
+        assert_eq!(g.shard, Some(2));
+        assert_eq!(g.layer, Some(3));
+        assert_eq!(g.window, Some(4));
+        assert!(g.dur >= 0.0 && g.start >= 0.0);
+        assert_eq!(spans[1].window, None);
+    }
+
+    #[test]
+    fn cancel_records_nothing() {
+        let r = tracing_recorder();
+        r.span(Stage::Voxelize).cancel();
+        assert_eq!(r.span_count(), 0);
+    }
+
+    #[test]
+    fn sampling_keeps_every_nth_span() {
+        let r = Recorder::from_config(&ObsConfig {
+            trace: true,
+            sample_every: 4,
+            ..ObsConfig::default()
+        });
+        for _ in 0..16 {
+            let _g = r.span(Stage::Scatter);
+        }
+        // Per-stage counters: an unrelated stage is not starved.
+        let _g = r.span(Stage::Gather);
+        drop(_g);
+        let spans = r.spans();
+        let scat = spans.iter().filter(|s| s.stage == Stage::Scatter).count();
+        let gath = spans.iter().filter(|s| s.stage == Stage::Gather).count();
+        assert_eq!(scat, 4, "16 spans at sample_every = 4");
+        assert_eq!(gath, 1, "first span of a stage always records");
+    }
+
+    #[test]
+    fn registry_counts_gauges_and_histograms() {
+        let m = MetricsRegistry::default();
+        m.add("delta.blocks_reused", 3);
+        m.add("delta.blocks_reused", 4);
+        assert_eq!(m.counter("delta.blocks_reused"), 7);
+        assert_eq!(m.counter("absent"), 0);
+        m.set_gauge("engine.dispatches", 12.0);
+        assert_eq!(m.gauge("engine.dispatches"), Some(12.0));
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            m.observe("stage.gather", v);
+        }
+        let h = m.histogram("stage.gather").expect("4 samples");
+        assert_eq!(h.n, 4);
+        assert!(m.histogram("absent").is_none());
+        assert_eq!(m.counters().len(), 1);
+        assert_eq!(m.histograms().len(), 1);
+    }
+
+    #[test]
+    fn obs_config_parses_strictly() {
+        let good = Config::parse(
+            "[observability]\ntrace = true\ntrace_out = \"t.json\"\n\
+             metrics = true\nsample_every = 8\n",
+        )
+        .unwrap();
+        let c = ObsConfig::from_config(&good).unwrap();
+        assert!(c.trace && c.metrics);
+        assert_eq!(c.trace_out, "t.json");
+        assert_eq!(c.sample_every, 8);
+
+        // trace_out alone implies trace.
+        let implied =
+            Config::parse("[observability]\ntrace_out = \"t.json\"\n").unwrap();
+        assert!(ObsConfig::from_config(&implied).unwrap().trace);
+
+        // Missing section = defaults (off).
+        let empty = Config::parse("").unwrap();
+        let d = ObsConfig::from_config(&empty).unwrap();
+        assert_eq!(d, ObsConfig::default());
+        assert!(!d.enabled());
+
+        for bad in [
+            "[observability]\ntrace = 1\n",
+            "[observability]\ntrace = \"yes\"\n",
+            "[observability]\ntrace_out = 3\n",
+            "[observability]\nmetrics = \"on\"\n",
+            "[observability]\nsample_every = true\n",
+            "[observability]\nsample_every = 0\n",
+        ] {
+            let cfg = Config::parse(bad).unwrap();
+            assert!(ObsConfig::from_config(&cfg).is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn chrome_trace_export_is_wellformed() {
+        let r = tracing_recorder();
+        r.set_window(0);
+        {
+            let _g = r.span(Stage::MapSearch).frame(1).layer(0);
+        }
+        {
+            let _g = r.span(Stage::GemmWave).frame(1);
+        }
+        let path = std::env::temp_dir().join(format!(
+            "voxel-cim-obs-test-{}.json",
+            std::process::id()
+        ));
+        r.write_chrome_trace(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(body.starts_with('[') && body.trim_end().ends_with(']'));
+        assert!(body.contains("\"name\":\"map_search\""));
+        assert!(body.contains("\"name\":\"gemm_wave\""));
+        assert!(body.contains("\"ph\":\"X\""));
+        assert!(body.contains("\"window\":0"));
+    }
+
+    #[test]
+    fn metrics_export_includes_stage_summaries() {
+        let r = Recorder::from_config(&ObsConfig {
+            trace: true,
+            metrics: true,
+            ..ObsConfig::default()
+        });
+        {
+            let _g = r.span(Stage::Requant);
+        }
+        r.metrics().unwrap().add("stream.windows", 2);
+        let path = std::env::temp_dir().join(format!(
+            "voxel-cim-obs-metrics-{}.json",
+            std::process::id()
+        ));
+        r.write_metrics_json(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(body.contains("\"counters\""));
+        assert!(body.contains("\"stream.windows\":2"));
+        assert!(body.contains("\"requant\""));
+        // Drained spans also fed the duration histogram.
+        assert!(body.contains("\"stage.requant\""));
+    }
+
+    #[test]
+    fn stage_index_matches_all_order() {
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(s.index(), i);
+        }
+        let keys: std::collections::BTreeSet<_> =
+            Stage::ALL.iter().map(|s| s.key()).collect();
+        assert_eq!(keys.len(), Stage::COUNT, "stage keys must be distinct");
+    }
+}

@@ -22,6 +22,7 @@ use crate::dataset::{DatasetConfig, FrameSource};
 use crate::geom::Extent3;
 use crate::model::layer::{LayerSpec, NetworkSpec, TaskKind};
 use crate::model::{minkunet, second};
+use crate::obs::ObsConfig;
 use crate::runtime::RuntimeConfig;
 use crate::serving::{SequenceMux, ServingConfig};
 use crate::util::cli::Args;
@@ -222,6 +223,15 @@ pub struct Overrides {
     /// `--delta-voxelize`: extend the delta cache through voxelization
     /// (implies `--delta`).
     pub delta_voxelize: bool,
+    /// `--trace`: record stage spans (no file output unless
+    /// `--trace-out` names one).
+    pub trace: bool,
+    /// `--trace-out`: Chrome trace-event output path (implies
+    /// `--trace`).
+    pub trace_out: Option<String>,
+    /// `--metrics-out`: metrics-snapshot output path (implies the
+    /// metrics registry).
+    pub metrics_out: Option<String>,
 }
 
 impl Overrides {
@@ -247,6 +257,9 @@ impl Overrides {
             delta: args.get_bool("delta"),
             delta_compute: args.get_bool("delta-compute"),
             delta_voxelize: args.get_bool("delta-voxelize"),
+            trace: args.get_bool("trace"),
+            trace_out: opt("trace-out"),
+            metrics_out: opt("metrics-out"),
         }
     }
 }
@@ -271,6 +284,9 @@ pub struct PipelineConfig {
     /// PJRT artifacts directory (`[pipeline] artifacts`); `None`
     /// discovers `artifacts/manifest.txt` upward from the cwd.
     pub artifacts: Option<PathBuf>,
+    /// Stage-span tracing / metrics registry: `[observability]` (off by
+    /// default — the built pipeline then carries a no-op recorder).
+    pub observability: ObsConfig,
 }
 
 impl PipelineConfig {
@@ -289,6 +305,7 @@ impl PipelineConfig {
             network: cfg.parsed_or("pipeline.network", NetworkKind::default())?,
             engine: cfg.parsed_or("pipeline.engine", EngineKind::default())?,
             artifacts,
+            observability: ObsConfig::from_config(cfg)?,
         })
     }
 
@@ -351,6 +368,17 @@ impl PipelineConfig {
         }
         if ov.delta_voxelize {
             self.runner.delta.voxelize = true;
+        }
+        if ov.trace {
+            self.observability.trace = true;
+        }
+        if let Some(p) = &ov.trace_out {
+            self.observability.trace = true;
+            self.observability.trace_out = p.clone();
+        }
+        if let Some(p) = &ov.metrics_out {
+            self.observability.metrics = true;
+            self.observability.metrics_out = p.clone();
         }
         Ok(())
     }
@@ -446,10 +474,13 @@ mod tests {
              [shard]\nblocks_x = 2\nblocks_y = 2\n\
              [dataset]\nsource = \"highway\"\nframes = 5\n\
              [serving]\nsequences = \"urban, far-field\"\nadmission = \"drop-oldest\"\nslo_ms = 25.0\n\
-             [pipeline]\nnetwork = \"minkunet-small\"\nengine = \"native\"",
+             [pipeline]\nnetwork = \"minkunet-small\"\nengine = \"native\"\n\
+             [observability]\ntrace = true\nsample_every = 2\n",
         )
         .unwrap();
         let pc = PipelineConfig::from_config(&cfg).unwrap();
+        assert!(pc.observability.trace && !pc.observability.metrics);
+        assert_eq!(pc.observability.sample_every, 2);
         assert_eq!(pc.runner.searcher, SearcherKind::Octree);
         assert_eq!(pc.runner.inflight, 3);
         assert_eq!(pc.runner.w2b_factor, 2);
@@ -469,6 +500,8 @@ mod tests {
             "[serving]\nmux = \"fifo\"",
             "[pipeline]\nnetwork = \"resnet\"",
             "[pipeline]\nengine = \"gpu\"",
+            "[observability]\ntrace = \"yes\"",
+            "[observability]\nsample_every = 0",
         ] {
             let cfg = Config::parse(bad).unwrap();
             assert!(PipelineConfig::from_config(&cfg).is_err(), "{bad}");
@@ -491,6 +524,9 @@ mod tests {
             delta: false,
             delta_compute: true,
             delta_voxelize: true,
+            trace: false,
+            trace_out: Some("trace.json".into()),
+            metrics_out: Some("metrics.json".into()),
         })
         .unwrap();
         assert_eq!(pc.runner.searcher, SearcherKind::BlockDoms);
@@ -506,6 +542,10 @@ mod tests {
         assert!(pc.runner.delta.enabled);
         assert!(pc.runner.delta.compute);
         assert!(pc.runner.delta.voxelize);
+        // Output paths imply their half of the observability subsystem.
+        assert!(pc.observability.trace && pc.observability.metrics);
+        assert_eq!(pc.observability.trace_out, "trace.json");
+        assert_eq!(pc.observability.metrics_out, "metrics.json");
         pc.validate().unwrap();
         for bad in [
             Overrides {

@@ -12,6 +12,7 @@
 use std::sync::Arc;
 
 use crate::coordinator::executor::WorkerPool;
+use crate::obs::{Recorder, Stage};
 use crate::sparse::rulebook::Rulebook;
 use crate::sparse::tensor::SparseTensor;
 use crate::spconv::gather::{
@@ -154,6 +155,11 @@ pub struct SpconvLayer {
     /// W2B replica counts per offset (see [`Self::with_w2b`]); `None`
     /// packs waves first-come-first-served onto one tile per offset.
     pub w2b_copies: Option<Vec<u32>>,
+    /// Stage-span recorder (see [`Self::with_observer`]); the default
+    /// `Disabled` arm keeps every execution path allocation-free.
+    obs: Recorder,
+    /// Layer index stamped on recorded spans.
+    obs_layer: u32,
 }
 
 /// Result of executing a layer: the output tensor plus execution stats.
@@ -234,7 +240,20 @@ impl SpconvLayer {
             zero: vec![0.0; c_out],
             batch,
             w2b_copies: None,
+            obs: Recorder::Disabled,
+            obs_layer: 0,
         }
+    }
+
+    /// Attach a span recorder and this layer's index for attribution:
+    /// `gather` / `gemm_wave` / `scatter` / `requant` intervals are then
+    /// recorded on whichever thread executes them (worker closures clone
+    /// the recorder — striped buffers, no shared hot lock). With the
+    /// default `Disabled` recorder every guard is inert.
+    pub fn with_observer(mut self, obs: Recorder, layer: u32) -> Self {
+        self.obs = obs;
+        self.obs_layer = layer;
+        self
     }
 
     /// Enable W2B-aware wave packing: `copies[d]` replica tiles hold
@@ -345,18 +364,25 @@ impl SpconvLayer {
                 }
             }
             for (i1, &(c1_lo, c1_len)) in tw.c1_tiles.iter().enumerate() {
-                acts_tile.clear();
-                acts_tile.reserve(b * c1_len);
-                for &(f, i, _) in &wave.rows {
-                    let row = inputs[f as usize].0.feature(i as usize);
-                    acts_tile.extend_from_slice(&row[c1_lo..c1_lo + c1_len]);
+                {
+                    let _g = self.obs.span(Stage::Gather).layer(self.obs_layer);
+                    acts_tile.clear();
+                    acts_tile.reserve(b * c1_len);
+                    for &(f, i, _) in &wave.rows {
+                        let row = inputs[f as usize].0.feature(i as usize);
+                        acts_tile.extend_from_slice(&row[c1_lo..c1_lo + c1_len]);
+                    }
                 }
                 for (i2, &(c2_lo, c2_len)) in tw.c2_tiles.iter().enumerate() {
                     let wtile = tw.get(wave.offset as usize, i1, i2);
-                    let out = engine.gemm_i8(&acts_tile, wtile, b, c1_len, c2_len)?;
+                    let out = {
+                        let _g = self.obs.span(Stage::GemmWave).layer(self.obs_layer);
+                        engine.gemm_i8(&acts_tile, wtile, b, c1_len, c2_len)?
+                    };
                     for &f in &frames_in_wave {
                         gemm_calls[f as usize] += 1;
                     }
+                    let _g = self.obs.span(Stage::Scatter).layer(self.obs_layer);
                     scatter_add_multi(&mut psums, c2, c2_lo, c2_len, &out, &wave.rows);
                 }
             }
@@ -430,6 +456,7 @@ impl SpconvLayer {
             };
             let (waves, tw) = (Arc::clone(&waves), Arc::clone(&tw));
             let tensors = tensors.clone();
+            let (obs, obs_layer) = (self.obs.clone(), self.obs_layer);
             handles.push(pool.submit(move || -> crate::Result<Vec<TileResult>> {
                 let mut outs = Vec::new();
                 let mut acts_tile: Vec<i8> = Vec::new();
@@ -437,15 +464,20 @@ impl SpconvLayer {
                     let wave = &waves[wi];
                     let b = wave.rows.len();
                     for (i1, &(c1_lo, c1_len)) in tw.c1_tiles.iter().enumerate() {
-                        acts_tile.clear();
-                        acts_tile.reserve(b * c1_len);
-                        for &(f, i, _) in &wave.rows {
-                            let row = tensors[f as usize].feature(i as usize);
-                            acts_tile.extend_from_slice(&row[c1_lo..c1_lo + c1_len]);
+                        {
+                            let _g = obs.span(Stage::Gather).layer(obs_layer);
+                            acts_tile.clear();
+                            acts_tile.reserve(b * c1_len);
+                            for &(f, i, _) in &wave.rows {
+                                let row = tensors[f as usize].feature(i as usize);
+                                acts_tile.extend_from_slice(&row[c1_lo..c1_lo + c1_len]);
+                            }
                         }
                         for (i2, &(_, c2_len)) in tw.c2_tiles.iter().enumerate() {
                             let wtile = tw.get(wave.offset as usize, i1, i2);
+                            let _g = obs.span(Stage::GemmWave).layer(obs_layer);
                             let out = eng.gemm_i8(&acts_tile, wtile, b, c1_len, c2_len)?;
+                            drop(_g);
                             outs.push((wi, i1, i2, out));
                         }
                     }
@@ -475,6 +507,7 @@ impl SpconvLayer {
             for (wi, _i1, i2, out) in h.join()? {
                 let wave = &waves[wi];
                 let (c2_lo, c2_len) = tw.c2_tiles[i2];
+                let _g = self.obs.span(Stage::Scatter).layer(self.obs_layer);
                 scatter_add_multi(&mut psums, c2, c2_lo, c2_len, &out, &wave.rows);
             }
         }
@@ -618,15 +651,23 @@ impl SpconvLayer {
             for wave in waves {
                 let b = wave.rows.len();
                 for (i1, &(c1_lo, c1_len)) in tw.c1_tiles.iter().enumerate() {
-                    acts_tile.clear();
-                    acts_tile.reserve(b * c1_len);
-                    for &(f, i, _) in &wave.rows {
-                        let row = tensors[f as usize].feature(i as usize);
-                        acts_tile.extend_from_slice(&row[c1_lo..c1_lo + c1_len]);
+                    {
+                        let _g = self.obs.span(Stage::Gather).layer(self.obs_layer);
+                        acts_tile.clear();
+                        acts_tile.reserve(b * c1_len);
+                        for &(f, i, _) in &wave.rows {
+                            let row = tensors[f as usize].feature(i as usize);
+                            acts_tile.extend_from_slice(&row[c1_lo..c1_lo + c1_len]);
+                        }
                     }
                     for (i2, &(c2_lo, c2_len)) in tw.c2_tiles.iter().enumerate() {
                         let wtile = tw.get(wave.offset as usize, i1, i2);
-                        let out = engine.gemm_i8(&acts_tile, wtile, b, c1_len, c2_len)?;
+                        let out = {
+                            let _g =
+                                self.obs.span(Stage::GemmWave).layer(self.obs_layer);
+                            engine.gemm_i8(&acts_tile, wtile, b, c1_len, c2_len)?
+                        };
+                        let _g = self.obs.span(Stage::Scatter).layer(self.obs_layer);
                         scatter_add_multi(psums, c2, c2_lo, c2_len, &out, &wave.rows);
                     }
                 }
@@ -650,6 +691,7 @@ impl SpconvLayer {
             };
             let (waves, tw) = (Arc::clone(&waves_arc), Arc::clone(&tw));
             let tensors = tensors.to_vec();
+            let (obs, obs_layer) = (self.obs.clone(), self.obs_layer);
             handles.push(pool.submit(move || -> crate::Result<Vec<TileResult>> {
                 let mut outs = Vec::new();
                 let mut acts_tile: Vec<i8> = Vec::new();
@@ -657,15 +699,20 @@ impl SpconvLayer {
                     let wave = &waves[wi];
                     let b = wave.rows.len();
                     for (i1, &(c1_lo, c1_len)) in tw.c1_tiles.iter().enumerate() {
-                        acts_tile.clear();
-                        acts_tile.reserve(b * c1_len);
-                        for &(f, i, _) in &wave.rows {
-                            let row = tensors[f as usize].feature(i as usize);
-                            acts_tile.extend_from_slice(&row[c1_lo..c1_lo + c1_len]);
+                        {
+                            let _g = obs.span(Stage::Gather).layer(obs_layer);
+                            acts_tile.clear();
+                            acts_tile.reserve(b * c1_len);
+                            for &(f, i, _) in &wave.rows {
+                                let row = tensors[f as usize].feature(i as usize);
+                                acts_tile.extend_from_slice(&row[c1_lo..c1_lo + c1_len]);
+                            }
                         }
                         for (i2, &(_, c2_len)) in tw.c2_tiles.iter().enumerate() {
                             let wtile = tw.get(wave.offset as usize, i1, i2);
+                            let _g = obs.span(Stage::GemmWave).layer(obs_layer);
                             let out = eng.gemm_i8(&acts_tile, wtile, b, c1_len, c2_len)?;
+                            drop(_g);
                             outs.push((wi, i1, i2, out));
                         }
                     }
@@ -677,6 +724,7 @@ impl SpconvLayer {
             for (wi, _i1, i2, out) in h.join()? {
                 let wave = &waves_arc[wi];
                 let (c2_lo, c2_len) = tw.c2_tiles[i2];
+                let _g = self.obs.span(Stage::Scatter).layer(self.obs_layer);
                 scatter_add_multi(psums, c2, c2_lo, c2_len, &out, &wave.rows);
             }
         }
@@ -697,8 +745,10 @@ impl SpconvLayer {
             .zip(psums)
             .zip(gemm_calls.iter().zip(gathered_rows))
             .map(|((rb, psums), (&gemm_calls, &gathered_rows))| {
-                let features =
-                    quant::dequant_relu_quant(&psums, &self.scale, &self.zero, c2);
+                let features = {
+                    let _g = self.obs.span(Stage::Requant).layer(self.obs_layer);
+                    quant::dequant_relu_quant(&psums, &self.scale, &self.zero, c2)
+                };
                 SpconvOutput {
                     tensor: SparseTensor {
                         extent: rb.out_extent,

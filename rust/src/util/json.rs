@@ -1,0 +1,180 @@
+//! A minimal hand-rolled JSON writer (the vendored registry has no
+//! serde) shared by the bench's `--json` report and the observability
+//! exporters (`obs::Recorder::write_chrome_trace` /
+//! `write_metrics_json`).
+//!
+//! Only *writing* is supported — the repo never parses JSON — so the
+//! surface is a small value tree plus an escaping-correct renderer.
+//! Object keys keep insertion order (exporters sort where determinism
+//! matters).
+
+use std::fmt::Write as _;
+
+/// A JSON value tree. Build it with the enum constructors (or the
+/// [`Json::obj`] / [`Json::arr`] helpers) and render with
+/// [`Json::render`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    /// Signed integer — rendered without a decimal point.
+    Int(i64),
+    /// Unsigned integer — rendered without a decimal point.
+    UInt(u64),
+    /// Finite floats render via `f64`'s shortest-roundtrip `Display`
+    /// (never exponent notation, so always valid JSON); non-finite
+    /// values render as `0` — JSON has no NaN/Infinity literal.
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    /// Ordered key/value pairs (insertion order is preserved).
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Convenience: an object from `(&str, Json)` pairs.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Self {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Convenience: an array.
+    pub fn arr(items: Vec<Json>) -> Self {
+        Json::Arr(items)
+    }
+
+    /// Convenience: a string value.
+    pub fn str(s: &str) -> Self {
+        Json::Str(s.to_string())
+    }
+
+    /// Render to a compact JSON string.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    /// Render appending to `out`.
+    pub fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Int(i) => {
+                let _ = write!(out, "{i}");
+            }
+            Json::UInt(u) => {
+                let _ = write!(out, "{u}");
+            }
+            Json::Num(f) => {
+                if f.is_finite() {
+                    let _ = write!(out, "{f}");
+                } else {
+                    out.push('0');
+                }
+            }
+            Json::Str(s) => escape_into(out, s),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    escape_into(out, k);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Append `s` to `out` as a quoted, escaped JSON string: `"` and `\`
+/// are backslash-escaped, the common control characters get their short
+/// forms (`\n`, `\r`, `\t`), and every other control char (U+0000 —
+/// U+001F) becomes a `\u00XX` escape. Everything else — including
+/// non-ASCII — passes through as UTF-8, which JSON permits.
+pub fn escape_into(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Quote + escape a string (allocating convenience over [`escape_into`]).
+pub fn escape(s: &str) -> String {
+    let mut out = String::new();
+    escape_into(&mut out, s);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escapes_quotes_backslashes_and_control_chars() {
+        assert_eq!(escape("plain"), "\"plain\"");
+        assert_eq!(escape("a\"b"), "\"a\\\"b\"");
+        assert_eq!(escape("a\\b"), "\"a\\\\b\"");
+        assert_eq!(escape("line\nbreak"), "\"line\\nbreak\"");
+        assert_eq!(escape("cr\rtab\t"), "\"cr\\rtab\\t\"");
+        assert_eq!(escape("nul\u{0}bel\u{7}"), "\"nul\\u0000bel\\u0007\"");
+        // Non-ASCII passes through as UTF-8 (valid JSON).
+        assert_eq!(escape("voxel-μ"), "\"voxel-μ\"");
+    }
+
+    #[test]
+    fn renders_scalars() {
+        assert_eq!(Json::Null.render(), "null");
+        assert_eq!(Json::Bool(true).render(), "true");
+        assert_eq!(Json::Int(-3).render(), "-3");
+        assert_eq!(Json::UInt(u64::MAX).render(), "18446744073709551615");
+        assert_eq!(Json::Num(1.5).render(), "1.5");
+        // `Display` for f64 never emits exponent notation.
+        assert!(!Json::Num(1e-7).render().contains('e'));
+        // Non-finite floats must stay valid JSON.
+        assert_eq!(Json::Num(f64::NAN).render(), "0");
+        assert_eq!(Json::Num(f64::INFINITY).render(), "0");
+    }
+
+    #[test]
+    fn renders_nested_structures() {
+        let doc = Json::obj(vec![
+            ("name", Json::str("a\"b")),
+            ("xs", Json::arr(vec![Json::Int(1), Json::Int(2)])),
+            ("inner", Json::obj(vec![("ok", Json::Bool(false))])),
+        ]);
+        assert_eq!(
+            doc.render(),
+            "{\"name\":\"a\\\"b\",\"xs\":[1,2],\"inner\":{\"ok\":false}}"
+        );
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(Json::Arr(vec![]).render(), "[]");
+        assert_eq!(Json::Obj(vec![]).render(), "{}");
+    }
+}

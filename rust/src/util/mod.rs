@@ -4,6 +4,7 @@
 
 pub mod cli;
 pub mod config;
+pub mod json;
 pub mod rng;
 pub mod stats;
 

@@ -1,0 +1,270 @@
+//! Integration: stage-level observability end to end. The recorder must
+//! be a pure observer — a disabled run records nothing and an enabled
+//! run changes no bit of any result — while an enabled run accounts for
+//! every span recorded from every worker thread, attributes engine-side
+//! spans to their window/shard/layer, and routes the stream counters
+//! through the metrics registry without drift from the report fields.
+
+use std::collections::HashSet;
+
+use voxel_cim::coordinator::executor::WorkerPool;
+use voxel_cim::coordinator::scheduler::RunnerConfig;
+use voxel_cim::coordinator::shard::ShardConfig;
+use voxel_cim::coordinator::stream::{StreamReport, StreamServer};
+use voxel_cim::dataset::{FrameSource, ProfileSource, ScenarioProfile};
+use voxel_cim::geom::Extent3;
+use voxel_cim::mapsearch::{DeltaConfig, SearcherKind};
+use voxel_cim::model::layer::{LayerSpec, NetworkSpec, TaskKind};
+use voxel_cim::obs::{ObsConfig, Recorder, Stage};
+use voxel_cim::spconv::layer::NativeEngine;
+
+const EXTENT: Extent3 = Extent3::new(64, 64, 6);
+const FRAMES: u64 = 4;
+
+/// Same backbone shape as the temporal-delta suite: two submanifold
+/// layers sharing a rulebook, a downsample, and a fresh coarse-scale
+/// submanifold — every engine stage (gather / gemm_wave / scatter /
+/// requant) fires on every frame.
+fn stream_net() -> NetworkSpec {
+    NetworkSpec {
+        name: "obs-stream",
+        task: TaskKind::Segmentation,
+        extent: EXTENT,
+        vfe_channels: 4,
+        layers: vec![
+            LayerSpec::Subm3 { c_in: 4, c_out: 8 },
+            LayerSpec::Subm3 { c_in: 8, c_out: 8 },
+            LayerSpec::GConv2 { c_in: 8, c_out: 16 },
+            LayerSpec::Subm3 { c_in: 16, c_out: 16 },
+        ],
+    }
+}
+
+fn cfg(kind: SearcherKind, shard: ShardConfig, delta_on: bool) -> RunnerConfig {
+    RunnerConfig {
+        searcher: kind,
+        shard,
+        inflight: 1,
+        compute_workers: 2,
+        seed: 33,
+        delta: DeltaConfig {
+            enabled: delta_on,
+            compute: delta_on,
+            blocks_x: 16,
+            blocks_y: 16,
+            ..DeltaConfig::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// An ego-motion sequence: world-anchored field drifting one voxel per
+/// frame plus a per-frame dynamic blob — warm frames reuse cached
+/// rulebook fragments, so the delta stages actually run.
+fn drift_source(frames: u64, seed: u64) -> Box<dyn FrameSource> {
+    Box::new(
+        ProfileSource::new(ScenarioProfile::Urban, EXTENT, 0.03, seed)
+            .with_drift(1.0)
+            .with_frames(frames),
+    )
+}
+
+fn serve_observed(
+    kind: SearcherKind,
+    shard: ShardConfig,
+    delta_on: bool,
+    obs: Recorder,
+) -> StreamReport {
+    let srv = StreamServer::new(stream_net(), cfg(kind, shard, delta_on), 4).with_observer(obs);
+    let mut src = drift_source(FRAMES, 0x0B5);
+    srv.serve(FRAMES, src.as_mut(), &mut NativeEngine::default())
+        .unwrap()
+}
+
+fn tracing_recorder() -> Recorder {
+    Recorder::from_config(&ObsConfig {
+        trace: true,
+        metrics: true,
+        ..ObsConfig::default()
+    })
+}
+
+fn shard_modes() -> [ShardConfig; 2] {
+    [
+        ShardConfig::default(),
+        ShardConfig {
+            auto_threshold: 1,
+            ..ShardConfig::grid(2, 2).unwrap()
+        },
+    ]
+}
+
+/// The pure-observer property, swept over every searcher kind, sharded
+/// and unsharded: a run without an observer records zero spans and
+/// leaves the report's stage buckets empty, and attaching a tracing +
+/// metrics recorder changes no checksum, pair count, or reuse counter.
+#[test]
+fn observation_never_perturbs_results_for_any_searcher() {
+    for kind in SearcherKind::ALL {
+        for shard in shard_modes() {
+            let sharding = shard.num_blocks() > 1;
+            let plain = serve_observed(kind, shard, true, Recorder::Disabled);
+            assert!(
+                plain.stage_seconds.iter().all(Vec::is_empty),
+                "{kind} sharding={sharding}: disabled run bucketed spans"
+            );
+            assert!(plain.stage_summary().is_empty());
+
+            let obs = tracing_recorder();
+            let seen = serve_observed(kind, shard, true, obs.clone());
+            assert!(
+                obs.span_count() > 0,
+                "{kind} sharding={sharding}: enabled run recorded nothing"
+            );
+
+            assert_eq!(plain.completions.len(), FRAMES as usize);
+            assert_eq!(seen.completions.len(), FRAMES as usize);
+            for (p, s) in plain.completions.iter().zip(&seen.completions) {
+                assert_eq!(p.id, s.id);
+                assert_eq!(
+                    p.result.checksum, s.result.checksum,
+                    "{kind} sharding={sharding}: frame {} diverged under observation",
+                    p.id
+                );
+                assert_eq!(p.result.total_pairs(), s.result.total_pairs());
+                assert_eq!(p.result.shards, s.result.shards);
+            }
+            assert_eq!(plain.windows, seen.windows);
+            assert_eq!(plain.blocks_searched, seen.blocks_searched);
+            assert_eq!(plain.blocks_reused, seen.blocks_reused);
+            assert_eq!(plain.waves_skipped, seen.waves_skipped);
+            assert_eq!(plain.rows_gathered_saved, seen.rows_gathered_saved);
+        }
+    }
+}
+
+/// Span conservation under the shared-queue worker pool: N jobs each
+/// recording M attributed spans from whatever thread picked them up
+/// must drain to exactly N*M distinct, well-formed spans — no loss, no
+/// duplication, no stripe corruption.
+#[test]
+fn worker_pool_spans_are_conserved_across_threads() {
+    const JOBS: u64 = 32;
+    const SPANS_PER_JOB: u32 = 8;
+    let obs = tracing_recorder();
+    let pool = WorkerPool::new(4);
+    let handles: Vec<_> = (0..JOBS)
+        .map(|j| {
+            let o = obs.clone();
+            pool.submit(move || {
+                for k in 0..SPANS_PER_JOB {
+                    let _g = o.span(Stage::Gather).frame(j).layer(k);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join();
+    }
+
+    let spans = obs.spans();
+    assert_eq!(spans.len(), (JOBS * SPANS_PER_JOB as u64) as usize);
+    let mut seen = HashSet::new();
+    for s in &spans {
+        assert_eq!(s.stage, Stage::Gather);
+        assert!(s.start >= 0.0 && s.dur >= 0.0, "negative time in {s:?}");
+        assert!(
+            seen.insert((s.frame.unwrap(), s.layer.unwrap())),
+            "span ({:?}, {:?}) drained twice",
+            s.frame,
+            s.layer
+        );
+    }
+}
+
+/// An observed sharded delta stream hits every serving-side stage and
+/// carries the attribution each site knows: delta plans are tagged with
+/// their shard, engine-side work with its window.
+#[test]
+fn observed_delta_stream_records_expected_stages_with_attribution() {
+    let obs = tracing_recorder();
+    let shard = ShardConfig {
+        auto_threshold: 1,
+        ..ShardConfig::grid(2, 2).unwrap()
+    };
+    let report = serve_observed(SearcherKind::BlockDoms, shard, true, obs.clone());
+    assert_eq!(report.completions.len(), FRAMES as usize);
+
+    let spans = obs.spans();
+    let has = |st: Stage| spans.iter().any(|s| s.stage == st);
+    for st in [
+        Stage::MapSearch,
+        Stage::DeltaPlan,
+        Stage::Gather,
+        Stage::GemmWave,
+        Stage::Scatter,
+        Stage::Requant,
+        Stage::Merge,
+        Stage::Admission,
+        Stage::WindowPack,
+    ] {
+        assert!(has(st), "no {} span recorded", st.key());
+    }
+    assert!(
+        spans
+            .iter()
+            .any(|s| s.stage == Stage::DeltaPlan && s.shard.is_some()),
+        "sharded delta plans lost their shard attribution"
+    );
+    assert!(
+        spans
+            .iter()
+            .filter(|s| s.stage == Stage::GemmWave)
+            .all(|s| s.window.is_some()),
+        "engine-side span missing its ambient window id"
+    );
+
+    // The report's summary view agrees with the raw spans.
+    let summary = report.stage_summary();
+    let keys: Vec<&str> = summary.iter().map(|(k, _)| *k).collect();
+    assert!(keys.contains(&"map_search") && keys.contains(&"gemm_wave"));
+    for (key, s) in &summary {
+        assert!(s.n > 0, "{key}: empty summary bucket survived");
+        assert!(s.p95 >= s.p50, "{key}: p95 < p50");
+    }
+}
+
+/// The registry subsumes the ad-hoc stream counters: after one observed
+/// serve on a fresh recorder, every public report field reads back
+/// identically from the metrics registry, and the latency histograms
+/// saw exactly one observation per completed frame.
+#[test]
+fn metrics_registry_matches_report_counters_exactly() {
+    let obs = tracing_recorder();
+    let report =
+        serve_observed(SearcherKind::BlockDoms, ShardConfig::default(), true, obs.clone());
+    let m = obs.metrics().expect("metrics half enabled");
+
+    assert_eq!(m.counter("stream.windows"), report.windows);
+    assert_eq!(m.counter("delta.blocks_searched"), report.blocks_searched);
+    assert_eq!(m.counter("delta.blocks_reused"), report.blocks_reused);
+    assert_eq!(m.counter("delta.evictions"), report.evictions);
+    assert_eq!(m.counter("stream.voxels_rebinned"), report.voxels_rebinned);
+    assert_eq!(m.counter("compute.waves_skipped"), report.waves_skipped);
+    assert_eq!(
+        m.counter("compute.rows_gathered_saved"),
+        report.rows_gathered_saved
+    );
+    assert_eq!(m.counter("admission.admitted"), report.admission.admitted);
+    assert_eq!(m.counter("admission.dropped"), report.admission.dropped);
+    assert_eq!(m.counter("admission.rejected"), report.admission.rejected);
+    assert_eq!(m.counter("admission.deferred"), report.admission.deferred);
+
+    let lat = m.histogram("stream.latency").expect("latency histogram");
+    assert_eq!(lat.n, report.completions.len());
+    let att = m.histogram("stream.attributed").expect("attributed histogram");
+    assert_eq!(att.n, report.completions.len());
+    // Warm frames actually reused: the subsumed counters are live, not
+    // zero-filled placeholders.
+    assert!(m.counter("delta.blocks_reused") > 0);
+}
