@@ -39,6 +39,9 @@
 //! cargo bench --bench stream_waves -- --smoke --trace-out BENCH_trace.json
 //!     # also export the warm delta tick's stage spans as Chrome
 //!     # trace-event JSON (loads in Perfetto / chrome://tracing)
+//! cargo bench --bench stream_waves -- --smoke --metrics-out BENCH_metrics.json
+//!     # also export the warm delta tick's metrics-registry snapshot
+//!     # (cost.* counters, per-wave occupancy, per-stage histograms)
 //! ```
 
 use voxel_cim::bench_util::bench;
@@ -109,6 +112,11 @@ fn mk_pipe(net: NetworkSpec, runner: RunnerConfig, serving: ServingConfig, frame
         ..Default::default()
     };
     cfg.observability.trace = TRACE.load(Ordering::Relaxed);
+    // Cost accounting rides the same switch: the JSON report's cost
+    // fields come from the pure `cost_summary()` either way, but the
+    // metrics snapshot / trace export only carry cost.* counters and
+    // counter tracks when the ledger records live.
+    cfg.observability.cost = TRACE.load(Ordering::Relaxed);
     Pipeline::builder()
         .config(cfg)
         .network(net)
@@ -153,6 +161,15 @@ struct JsonPoint {
     voxels_rebinned: u64,
     waves_skipped: u64,
     rows_gathered_saved: u64,
+    /// Modeled cost of the point (`StreamReport::cost_summary`, the
+    /// calibrated-constant ledger): DRAM/buffer traffic, energy, MACs,
+    /// effective efficiency, and the Fig. 2d/9 normalized access volume.
+    cost_dram_bytes: u64,
+    cost_buffer_bytes: u64,
+    cost_energy_uj: f64,
+    cost_macs: u64,
+    cost_tops_per_watt: f64,
+    cost_normalized_access: f64,
     /// Per-stage `(name, p50 ms, p95 ms)` from `StreamReport::stage_summary`
     /// — empty when span recording is off.
     stages: Vec<(String, f64, f64)>,
@@ -164,6 +181,7 @@ impl JsonPoint {
             .latency_summary()
             .map(|s| (s.p50 * 1e3, s.p95 * 1e3))
             .unwrap_or((0.0, 0.0));
+        let cost = report.cost_summary();
         Self {
             sweep: sweep.into(),
             label: label.into(),
@@ -176,6 +194,12 @@ impl JsonPoint {
             voxels_rebinned: report.voxels_rebinned,
             waves_skipped: report.waves_skipped,
             rows_gathered_saved: report.rows_gathered_saved,
+            cost_dram_bytes: cost.dram_bytes,
+            cost_buffer_bytes: cost.buffer_bytes,
+            cost_energy_uj: cost.joules * 1e6,
+            cost_macs: cost.macs,
+            cost_tops_per_watt: cost.tops_per_watt,
+            cost_normalized_access: cost.normalized_access,
             stages: report
                 .stage_summary()
                 .iter()
@@ -199,6 +223,21 @@ impl JsonPoint {
             (
                 "rows_gathered_saved".into(),
                 Json::UInt(self.rows_gathered_saved),
+            ),
+            ("cost_dram_bytes".into(), Json::UInt(self.cost_dram_bytes)),
+            (
+                "cost_buffer_bytes".into(),
+                Json::UInt(self.cost_buffer_bytes),
+            ),
+            ("cost_energy_uj".into(), Json::Num(self.cost_energy_uj)),
+            ("cost_macs".into(), Json::UInt(self.cost_macs)),
+            (
+                "cost_tops_per_watt".into(),
+                Json::Num(self.cost_tops_per_watt),
+            ),
+            (
+                "cost_normalized_access".into(),
+                Json::Num(self.cost_normalized_access),
             ),
         ];
         if !self.stages.is_empty() {
@@ -248,6 +287,18 @@ fn trace_out_path() -> Option<String> {
     })
 }
 
+/// `--metrics-out <path>`; a bare `--metrics-out` falls back to the CI
+/// convention, `BENCH_metrics.json` in the working directory.
+fn metrics_out_path() -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter().position(|a| a == "--metrics-out").map(|i| {
+        args.get(i + 1)
+            .filter(|p| !p.starts_with("--"))
+            .cloned()
+            .unwrap_or_else(|| "BENCH_metrics.json".into())
+    })
+}
+
 fn write_json(path: &str, points: &[JsonPoint]) {
     let doc = Json::obj(vec![
         ("bench", Json::str("stream_waves")),
@@ -257,13 +308,21 @@ fn write_json(path: &str, points: &[JsonPoint]) {
     println!("wrote {path} ({} sweep points)", points.len());
 }
 
-/// Export the recorded spans of `pipe` when `--trace-out` was given.
+/// Export the recorded spans of `pipe` when `--trace-out` was given,
+/// and the metrics-registry snapshot (cost.* counters, per-wave
+/// occupancy, per-stage histograms) when `--metrics-out` was given.
 fn maybe_write_trace(pipe: &Pipeline) {
     if let Some(path) = trace_out_path() {
         pipe.observer()
             .write_chrome_trace(std::path::Path::new(&path))
             .expect("write --trace-out");
         println!("trace written to {path} (load in Perfetto / chrome://tracing)");
+    }
+    if let Some(path) = metrics_out_path() {
+        pipe.observer()
+            .write_metrics_json(std::path::Path::new(&path))
+            .expect("write --metrics-out");
+        println!("metrics snapshot written to {path}");
     }
 }
 
@@ -272,7 +331,7 @@ fn main() {
     // Record stage spans whenever a machine-readable artifact is being
     // produced: the JSON report then carries per-stage p50/p95, and the
     // Chrome trace export has spans to write.
-    if json.is_some() || trace_out_path().is_some() {
+    if json.is_some() || trace_out_path().is_some() || metrics_out_path().is_some() {
         TRACE.store(true, Ordering::Relaxed);
     }
     let mut points: Vec<JsonPoint> = Vec::new();

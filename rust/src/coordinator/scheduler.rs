@@ -116,6 +116,16 @@ pub struct LayerRecord {
     pub access: AccessStats,
     /// Per-offset workload (for W2B studies).
     pub workload: Vec<u64>,
+    /// Layer channel shape, for cost accounting: the layer's MAC count
+    /// is `pairs * c_in * c_out` (dense 2D layers count `pairs` as
+    /// output positions × k², so the same product holds).
+    pub c_in: u64,
+    pub c_out: u64,
+    /// Activation rows actually gathered into GEMM waves — equals
+    /// `pairs` on a cold frame, strictly less when compute-core reuse
+    /// spliced cached psum rows (`rows_gathered_saved`). Dense 2D
+    /// layers count their im2col rows here.
+    pub gathered_rows: u64,
 }
 
 /// Result of one frame.
@@ -158,6 +168,10 @@ pub struct FrameResult {
     /// Gather rows (rule pairs) compute-core reuse removed from wave
     /// packing. Zero when `delta_compute` is off.
     pub rows_gathered_saved: u64,
+    /// Input voxel count of the scene — the N of the paper's
+    /// normalized access volume (Fig. 2d / Fig. 9), used by the cost
+    /// ledger (`obs::cost`).
+    pub in_voxels: u64,
 }
 
 impl FrameResult {
@@ -337,11 +351,13 @@ impl NetworkRunner {
         engine: &mut E,
     ) -> crate::Result<Vec<FrameResult>> {
         let t0 = Instant::now();
+        let in_lens: Vec<u64> = inputs.iter().map(|t| t.len() as u64).collect();
         let runs = self.run_group(&self.net.layers, inputs, Vec::new(), engine, self.cfg.seed)?;
         let total = t0.elapsed().as_secs_f64();
         Ok(runs
             .into_iter()
-            .map(|r| finalize_frame(r, 1, total))
+            .zip(in_lens)
+            .map(|(r, n)| finalize_frame(r, 1, total, n))
             .collect())
     }
 
@@ -504,7 +520,15 @@ impl NetworkRunner {
                     for (fi, plan) in plans.into_iter().enumerate() {
                         match plan {
                             RbPlan::Reuse(rb) => {
-                                rbs.push((rb, AccessStats::default(), 0.0));
+                                // No search ran, but replaying the
+                                // resident rulebook still re-reads one
+                                // coordinate entry per output voxel —
+                                // reuse is reduced access, not free.
+                                let access = AccessStats {
+                                    voxel_reads: rb.out_coords.len() as u64,
+                                    ..Default::default()
+                                };
+                                rbs.push((rb, access, 0.0));
                             }
                             RbPlan::Inline(rb, st, secs) => rbs.push((rb, st, secs)),
                             RbPlan::Pooled => {
@@ -617,6 +641,9 @@ impl NetworkRunner {
                             compute_seconds: share,
                             access,
                             workload: rb.workload_per_offset(),
+                            c_in: c_in as u64,
+                            c_out: c_out as u64,
+                            gathered_rows: out.gathered_rows,
                         });
                         f.cur = Arc::new(out.tensor);
                     }
@@ -626,15 +653,26 @@ impl NetworkRunner {
                         let _g = self.obs.span(Stage::DenseHead).layer(li as u32);
                         f.bev = Some(to_bev(&f.cur));
                         drop(_g);
+                        // The BEV flatten reads every sparse voxel's
+                        // coordinate and writes it into the dense
+                        // plane — real data movement, not zero-cost.
+                        let n = f.cur.len() as u64;
                         f.records.push(LayerRecord {
                             name: "ToBev".into(),
                             pairs: 0,
-                            out_voxels: f.cur.len() as u64,
+                            out_voxels: n,
                             gemm_calls: 0,
                             ms_seconds: 0.0,
                             compute_seconds: 0.0,
-                            access: AccessStats::default(),
+                            access: AccessStats {
+                                voxel_reads: n,
+                                voxel_writes: n,
+                                ..Default::default()
+                            },
                             workload: Vec::new(),
+                            c_in: f.cur.channels as u64,
+                            c_out: 0,
+                            gathered_rows: 0,
                         });
                     }
                 }
@@ -648,18 +686,29 @@ impl NetworkRunner {
                     weight_seed = weight_seed.wrapping_add(1);
                     for f in frames.iter_mut() {
                         let x = f.bev.take().expect("Conv2d before ToBev");
+                        let c_in = x.c as u64;
                         let _g = self.obs.span(Stage::DenseHead).layer(li as u32);
                         let (y, secs) = run_conv2d(&x, &w, c_out, k, stride, 1, engine)?;
                         drop(_g);
+                        let pairs = (y.h * y.w) as u64 * (k * k) as u64;
                         f.records.push(LayerRecord {
                             name: format!("{spec:?}"),
-                            pairs: (y.h * y.w) as u64 * (k * k) as u64,
+                            pairs,
                             out_voxels: (y.h * y.w) as u64,
                             gemm_calls: 0,
                             ms_seconds: 0.0,
                             compute_seconds: secs,
-                            access: AccessStats::default(),
+                            // Im2col reads one plane position per rule
+                            // pair and writes each output position.
+                            access: AccessStats {
+                                voxel_reads: pairs,
+                                voxel_writes: (y.h * y.w) as u64,
+                                ..Default::default()
+                            },
                             workload: Vec::new(),
+                            c_in,
+                            c_out: c_out as u64,
+                            gathered_rows: pairs,
                         });
                         f.bev = Some(y);
                     }
@@ -674,18 +723,29 @@ impl NetworkRunner {
                     weight_seed = weight_seed.wrapping_add(1);
                     for f in frames.iter_mut() {
                         let x = f.bev.take().expect("Deconv2d before ToBev");
+                        let c_in = x.c as u64;
                         let _g = self.obs.span(Stage::DenseHead).layer(li as u32);
                         let (y, secs) = run_conv2d(&x, &w, c_out, k, 1, up, engine)?;
                         drop(_g);
+                        let pairs = (y.h * y.w) as u64 * (k * k) as u64;
                         f.records.push(LayerRecord {
                             name: format!("{spec:?}"),
-                            pairs: (y.h * y.w) as u64 * (k * k) as u64,
+                            pairs,
                             out_voxels: (y.h * y.w) as u64,
                             gemm_calls: 0,
                             ms_seconds: 0.0,
                             compute_seconds: secs,
-                            access: AccessStats::default(),
+                            // Upsample + im2col read one position per
+                            // pair; each output position is written.
+                            access: AccessStats {
+                                voxel_reads: pairs,
+                                voxel_writes: (y.h * y.w) as u64,
+                                ..Default::default()
+                            },
                             workload: Vec::new(),
+                            c_in,
+                            c_out: c_out as u64,
+                            gathered_rows: pairs,
                         });
                         f.bev = Some(y);
                     }
@@ -818,6 +878,7 @@ impl NetworkRunner {
             },
         );
         let t0 = Instant::now();
+        let in_lens: Vec<u64> = inputs.iter().map(|t| t.len() as u64).collect();
         let mut plans: Vec<Option<ShardPlan>> = Vec::with_capacity(inputs.len());
         for t in &inputs {
             let plan = if !prefix.is_empty() && sc.active_for(t.len()) {
@@ -860,7 +921,8 @@ impl NetworkRunner {
             let total = t0.elapsed().as_secs_f64();
             return Ok(runs
                 .into_iter()
-                .map(|r| finalize_frame(r, 1, total))
+                .zip(in_lens)
+                .map(|(r, n)| finalize_frame(r, 1, total, n))
                 .collect());
         }
         // The cross-scene pseudo-frame group, in scene order: a planned
@@ -996,7 +1058,8 @@ impl NetworkRunner {
         Ok(finished
             .into_iter()
             .zip(shard_counts)
-            .map(|(run, shards)| finalize_frame(run, shards, total))
+            .zip(in_lens)
+            .map(|((run, shards), n)| finalize_frame(run, shards, total, n))
             .collect())
     }
 
@@ -1014,7 +1077,7 @@ impl NetworkRunner {
 }
 
 /// Assemble a [`FrameResult`] from a finished [`GroupRun`].
-fn finalize_frame(run: GroupRun, shards: u32, total_seconds: f64) -> FrameResult {
+fn finalize_frame(run: GroupRun, shards: u32, total_seconds: f64, in_voxels: u64) -> FrameResult {
     let head_shape = run.bev.as_ref().map(|b| (b.h, b.w, b.c));
     let checksum = match &run.bev {
         Some(b) => checksum_features(&b.data),
@@ -1032,6 +1095,7 @@ fn finalize_frame(run: GroupRun, shards: u32, total_seconds: f64) -> FrameResult
         voxels_rebinned: 0,
         waves_skipped: run.waves_skipped,
         rows_gathered_saved: run.rows_saved,
+        in_voxels,
     }
 }
 
@@ -1049,6 +1113,7 @@ fn merge_records<'a>(mut shards: impl Iterator<Item = &'a Vec<LayerRecord>>) -> 
             a.pairs += r.pairs;
             a.out_voxels += r.out_voxels;
             a.gemm_calls += r.gemm_calls;
+            a.gathered_rows += r.gathered_rows;
             a.ms_seconds += r.ms_seconds;
             a.compute_seconds += r.compute_seconds;
             a.access.add(&r.access);

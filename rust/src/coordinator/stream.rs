@@ -30,6 +30,7 @@ use crate::coordinator::pipeline::{HybridPipeline, PhaseTiming};
 use crate::coordinator::scheduler::{FrameResult, NetworkRunner, RunnerConfig};
 use crate::dataset::{ClosureSource, FramePoll, FrameSource, PrefetchSource, SourcedFrame};
 use crate::model::layer::NetworkSpec;
+use crate::obs::cost::{CostModel, CostSummary, FrameCost};
 use crate::obs::{Recorder, Stage};
 use crate::serving::{AdmissionConfig, AdmissionController, AdmissionReport, WindowPolicy};
 use crate::sparse::tensor::SparseTensor;
@@ -141,6 +142,15 @@ impl StreamReport {
                     .map(|sum| (s.key(), sum))
             })
             .collect()
+    }
+
+    /// Modeled data-movement and energy roll-up of the served frames
+    /// (see [`CostModel`]): total/DRAM/buffer bytes, joules, effective
+    /// TOPS/W, the Fig. 2d / Fig. 9 normalized access volume, and the
+    /// warm-vs-cold delta-cache DRAM split. Pure over the completions —
+    /// available whether or not observability was on during the serve.
+    pub fn cost_summary(&self) -> CostSummary {
+        CostModel::default().summarize(self.completions.iter().map(|c| &c.result))
     }
 
     /// Fraction of occupied blocks served from the temporal delta cache
@@ -416,6 +426,13 @@ impl StreamServer {
                 let attributed = (wait + result.ms_seconds() + result.compute_seconds())
                     .min(latency);
                 admission.record(attributed);
+                if self.obs.costing() {
+                    // Per-completion counter samples for the trace's
+                    // bytes/energy tracks, stamped at completion time
+                    // (dropped internally unless tracing is also on).
+                    let fc = CostModel::default().frame_cost(&result);
+                    self.obs.record_cost_point(id, fc.total_bytes(), fc.total_joules());
+                }
                 completions.push(FrameCompletion {
                     id,
                     sequence,
@@ -464,6 +481,28 @@ impl StreamServer {
             for c in &completions {
                 m.observe("stream.latency", c.latency);
                 m.observe("stream.attributed", c.attributed);
+            }
+        }
+        if let Some(m) = self.obs.cost() {
+            // Cost ledger roll-up: plain adds (nothing reads these back
+            // into report fields — `cost_summary()` is pure over the
+            // completions) plus per-frame distributions. Per-stage byte
+            // counters give the metrics snapshot the same breakdown the
+            // summary carries.
+            let model = CostModel::default();
+            let mut total = FrameCost::default();
+            for c in &completions {
+                let fc = model.frame_cost(&c.result);
+                m.observe("cost.frame_bytes", fc.total_bytes() as f64);
+                m.observe("cost.frame_joules", fc.total_joules());
+                total.add(&fc);
+            }
+            m.add("cost.dram_bytes", total.dram_bytes());
+            m.add("cost.buffer_bytes", total.buffer_bytes());
+            m.add("cost.macs", total.macs);
+            m.add("cost.energy_nj", (total.total_joules() * 1e9).round() as u64);
+            for (key, sc) in total.buckets() {
+                m.add(&format!("cost.stage.{key}.bytes"), sc.bytes);
             }
         }
         Ok(StreamReport {

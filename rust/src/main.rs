@@ -9,6 +9,7 @@
 //!                  multi-sequence muxing + SLO-aware admission
 //!                  [--trace] [--trace-out T.json] [--metrics-out M.json]
 //!                  stage-span tracing + metrics export
+//!                  [--cost]  modeled data-movement / energy footer
 //! voxel-cim info                               config + artifact status
 //! ```
 //!
@@ -121,6 +122,12 @@ fn main() -> voxel_cim::Result<()> {
         "",
         "write a JSON snapshot of the metrics registry (counters, gauges, \
          per-stage histograms) to this path",
+    )
+    .switch(
+        "cost",
+        "account modeled data movement (bytes) and energy (joules) for the served \
+         stream — cost.* counters, per-wave occupancy, and a cost footer \
+         (overrides [observability] cost; implies the metrics registry)",
     )
     .parse();
 
@@ -347,6 +354,7 @@ fn run_stream(args: &Args) -> voxel_cim::Result<()> {
     );
     println!("engine: {}", pipe.engine_desc());
     let delta_voxelize = cfg.runner.delta.enabled && cfg.runner.delta.voxelize;
+    let cost_enabled = cfg.observability.cost;
     let trace_out = cfg.observability.trace_out.clone();
     let metrics_out = cfg.observability.metrics_out.clone();
     let report = pipe.run(Job::Stream(source))?.into_stream()?;
@@ -422,6 +430,41 @@ fn run_stream(args: &Args) -> voxel_cim::Result<()> {
                 s.p50 * 1e3,
                 s.p95 * 1e3,
                 s.max * 1e3,
+            );
+        }
+    }
+    if cost_enabled {
+        let cs = report.cost_summary();
+        println!(
+            "\ncost model (calibrated EnergyModel/DramModel constants):\n  \
+             {:.3} MB moved ({:.3} MB DRAM, {:.3} MB buffers) | {:.2} uJ | \
+             {:.1} MMACs | effective {:.2} TOPS/W",
+            cs.bytes as f64 / 1e6,
+            cs.dram_bytes as f64 / 1e6,
+            cs.buffer_bytes as f64 / 1e6,
+            cs.joules * 1e6,
+            cs.macs as f64 / 1e6,
+            cs.tops_per_watt,
+        );
+        println!(
+            "  map-search access volume: {:.2} per input voxel (Fig. 2d/9 normalization)",
+            cs.normalized_access,
+        );
+        if cs.warm_frames > 0 {
+            println!(
+                "  delta savings: {} warm frames at {:.1} KB DRAM/frame vs {} cold at {:.1} KB",
+                cs.warm_frames,
+                cs.warm_dram_per_frame / 1e3,
+                cs.cold_frames,
+                cs.cold_dram_per_frame / 1e3,
+            );
+        }
+        for (name, sc) in &cs.stages {
+            println!(
+                "  {:<12} {:>12} B | {:>10.3} uJ",
+                name,
+                sc.bytes,
+                sc.joules * 1e6,
             );
         }
     }

@@ -33,6 +33,8 @@
 //! gauges, and histogram summaries. Both share the escaping-correct
 //! writer in [`crate::util::json`] with the stream bench.
 
+pub mod cost;
+
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -40,6 +42,8 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{bail, Context};
+
+pub use cost::{CostModel, CostSummary, FrameCost, StageCost};
 
 use crate::dataset::{FramePoll, FrameSource, SourcedFrame};
 use crate::util::config::{Config, Value};
@@ -145,10 +149,12 @@ pub struct Span {
 ///
 /// ```toml
 /// [observability]
-/// trace = true          # record stage spans
-/// trace_out = "t.json"  # Chrome trace-event output path (implies trace)
-/// metrics = true        # route report counters through the registry
-/// sample_every = 1      # record every Nth span per stage (>= 1)
+/// trace = true            # record stage spans
+/// trace_out = "t.json"    # Chrome trace-event output path (implies trace)
+/// metrics = true          # route report counters through the registry
+/// metrics_out = "m.json"  # metrics-snapshot output path (implies metrics)
+/// cost = true             # modeled bytes/energy accounting (implies metrics)
+/// sample_every = 1        # record every Nth span per stage (>= 1)
 /// ```
 #[derive(Clone, Debug, PartialEq)]
 pub struct ObsConfig {
@@ -159,9 +165,14 @@ pub struct ObsConfig {
     pub trace_out: String,
     /// Enable the metrics registry (counters / gauges / histograms).
     pub metrics: bool,
-    /// Metrics-snapshot output path (CLI `--metrics-out` only — not a
-    /// TOML key); empty = no file. Non-empty implies `metrics`.
+    /// Metrics-snapshot output path; empty = no file. Non-empty implies
+    /// `metrics`.
     pub metrics_out: String,
+    /// Enable cost accounting: `cost.*` counters, per-wave occupancy
+    /// histograms, and Chrome-trace counter tracks from the modeled
+    /// data-movement/energy ledger ([`cost::CostModel`]). Implies
+    /// `metrics` (the ledger publishes through the registry).
+    pub cost: bool,
     /// Record every Nth span per stage (1 = all). Lossy by design: a
     /// sampled trace keeps the shape of a long stream affordable.
     pub sample_every: usize,
@@ -174,6 +185,7 @@ impl Default for ObsConfig {
             trace_out: String::new(),
             metrics: false,
             metrics_out: String::new(),
+            cost: false,
             sample_every: 1,
         }
     }
@@ -200,21 +212,35 @@ impl ObsConfig {
             Some(Value::Bool(b)) => *b,
             Some(v) => bail!("observability.metrics must be a boolean, got {v:?}"),
         };
+        let metrics_out = match cfg.get("observability.metrics_out") {
+            None => d.metrics_out.clone(),
+            Some(Value::Str(s)) => s.clone(),
+            Some(v) => bail!("observability.metrics_out must be a string path, got {v:?}"),
+        };
+        let cost = match cfg.get("observability.cost") {
+            None => d.cost,
+            Some(Value::Bool(b)) => *b,
+            Some(v) => bail!("observability.cost must be a boolean, got {v:?}"),
+        };
         let sample_every = cfg.usize_or("observability.sample_every", d.sample_every)?;
         anyhow::ensure!(sample_every >= 1, "observability.sample_every must be >= 1");
         Ok(Self {
             // An output path is an unambiguous request to trace.
             trace: trace || !trace_out.is_empty(),
             trace_out,
-            metrics,
-            metrics_out: d.metrics_out.clone(),
+            // Same rule for the metrics half: a snapshot path (or cost
+            // accounting, which publishes through the registry) switches
+            // the registry on.
+            metrics: metrics || !metrics_out.is_empty() || cost,
+            metrics_out,
+            cost,
             sample_every,
         })
     }
 
     /// Whether any half of the subsystem is on.
     pub fn enabled(&self) -> bool {
-        self.trace || self.metrics
+        self.trace || self.metrics || self.cost
     }
 }
 
@@ -262,6 +288,25 @@ pub struct RecorderInner {
     /// Committed spans, appended stripe-by-stripe at each `drain()`.
     drained: Mutex<Vec<Span>>,
     metrics: Option<MetricsRegistry>,
+    /// Cost accounting on: `cost.*` counters flow into the registry and
+    /// per-frame [`CostPoint`]s are kept for the trace counter tracks.
+    cost: bool,
+    /// Per-frame cost points (serve loop, once per completed frame —
+    /// cold path, so one mutex is fine).
+    cost_points: Mutex<Vec<CostPoint>>,
+}
+
+/// One per-frame cost observation, timestamped for the Chrome-trace
+/// counter tracks (`ph: "C"` events).
+#[derive(Clone, Copy, Debug)]
+pub struct CostPoint {
+    /// Seconds since the recorder epoch.
+    pub t: f64,
+    pub frame: u64,
+    /// Total modeled bytes moved for the frame.
+    pub bytes: u64,
+    /// Total modeled joules spent for the frame.
+    pub joules: f64,
 }
 
 impl Recorder {
@@ -279,7 +324,9 @@ impl Recorder {
             window: AtomicU64::new(0),
             stripes: (0..STRIPES).map(|_| Mutex::new(Vec::new())).collect(),
             drained: Mutex::new(Vec::new()),
-            metrics: cfg.metrics.then(MetricsRegistry::default),
+            metrics: (cfg.metrics || cfg.cost).then(MetricsRegistry::default),
+            cost: cfg.cost,
+            cost_points: Mutex::new(Vec::new()),
         }))
     }
 
@@ -298,6 +345,46 @@ impl Recorder {
         match self {
             Recorder::Disabled => None,
             Recorder::Enabled(i) => i.metrics.as_ref(),
+        }
+    }
+
+    /// The metrics registry, but only when *cost accounting* is on —
+    /// the gate every `cost.*` recording site checks, so a plain
+    /// metrics/trace run records no cost and a disabled recorder costs
+    /// one enum match.
+    pub fn cost(&self) -> Option<&MetricsRegistry> {
+        match self {
+            Recorder::Enabled(i) if i.cost => i.metrics.as_ref(),
+            _ => None,
+        }
+    }
+
+    /// Whether cost accounting is on.
+    pub fn costing(&self) -> bool {
+        matches!(self, Recorder::Enabled(i) if i.cost)
+    }
+
+    /// Record one per-frame cost point for the Chrome-trace counter
+    /// tracks. No-op unless both `cost` and `trace` are on (the point
+    /// only feeds the trace exporter; counters go through
+    /// [`Self::cost`]).
+    pub fn record_cost_point(&self, frame: u64, bytes: u64, joules: f64) {
+        if let Recorder::Enabled(i) = self {
+            if i.cost && i.trace {
+                let t = i.epoch.elapsed().as_secs_f64();
+                i.cost_points
+                    .lock()
+                    .expect("cost point lock")
+                    .push(CostPoint { t, frame, bytes, joules });
+            }
+        }
+    }
+
+    /// All recorded per-frame cost points (empty unless cost + trace).
+    pub fn cost_points(&self) -> Vec<CostPoint> {
+        match self {
+            Recorder::Disabled => Vec::new(),
+            Recorder::Enabled(i) => i.cost_points.lock().expect("cost point lock").clone(),
         }
     }
 
@@ -398,11 +485,14 @@ impl Recorder {
     }
 
     /// Write every committed span as a Chrome trace-event JSON array
-    /// (complete `"ph": "X"` events, microsecond timestamps). The file
-    /// loads directly in Perfetto / `chrome://tracing`.
+    /// (complete `"ph": "X"` events, microsecond timestamps), plus —
+    /// with cost accounting on — per-frame `"ph": "C"` counter events
+    /// that Perfetto renders as bytes/energy tracks. The file loads
+    /// directly in Perfetto / `chrome://tracing`.
     pub fn write_chrome_trace(&self, path: &Path) -> crate::Result<()> {
         let spans = self.spans();
-        let mut events = Vec::with_capacity(spans.len());
+        let points = self.cost_points();
+        let mut events = Vec::with_capacity(spans.len() + 2 * points.len());
         for s in &spans {
             let mut args = Vec::new();
             if let Some(f) = s.frame {
@@ -433,6 +523,20 @@ impl Recorder {
                 ev.push(("args".to_string(), Json::Obj(args)));
             }
             events.push(Json::Obj(ev));
+        }
+        for p in &points {
+            let counter = |name: &str, value: Json| {
+                Json::obj(vec![
+                    ("name", Json::str(name)),
+                    ("cat", Json::str("cost")),
+                    ("ph", Json::str("C")),
+                    ("ts", Json::Num(p.t * 1e6)),
+                    ("pid", Json::UInt(0)),
+                    ("args", Json::obj(vec![("value", value)])),
+                ])
+            };
+            events.push(counter("cost.bytes", Json::UInt(p.bytes)));
+            events.push(counter("cost.energy_uj", Json::Num(p.joules * 1e6)));
         }
         std::fs::write(path, Json::Arr(events).render())
             .with_context(|| format!("writing Chrome trace to {}", path.display()))
@@ -741,6 +845,10 @@ mod tests {
         r.drain();
         assert_eq!(r.span_count(), 0);
         assert!(r.metrics().is_none());
+        assert!(r.cost().is_none());
+        assert!(!r.costing());
+        r.record_cost_point(0, 100, 1.0);
+        assert!(r.cost_points().is_empty());
         assert!(r.stage_seconds().iter().all(Vec::is_empty));
     }
 
@@ -818,18 +926,32 @@ mod tests {
     fn obs_config_parses_strictly() {
         let good = Config::parse(
             "[observability]\ntrace = true\ntrace_out = \"t.json\"\n\
-             metrics = true\nsample_every = 8\n",
+             metrics = true\nmetrics_out = \"m.json\"\ncost = true\nsample_every = 8\n",
         )
         .unwrap();
         let c = ObsConfig::from_config(&good).unwrap();
-        assert!(c.trace && c.metrics);
+        assert!(c.trace && c.metrics && c.cost);
         assert_eq!(c.trace_out, "t.json");
+        assert_eq!(c.metrics_out, "m.json");
         assert_eq!(c.sample_every, 8);
 
         // trace_out alone implies trace.
         let implied =
             Config::parse("[observability]\ntrace_out = \"t.json\"\n").unwrap();
         assert!(ObsConfig::from_config(&implied).unwrap().trace);
+
+        // metrics_out alone implies metrics — same rule as trace_out.
+        let implied =
+            Config::parse("[observability]\nmetrics_out = \"m.json\"\n").unwrap();
+        let c = ObsConfig::from_config(&implied).unwrap();
+        assert!(c.metrics && !c.trace && !c.cost);
+        assert_eq!(c.metrics_out, "m.json");
+
+        // cost alone implies metrics (the ledger publishes through the
+        // registry) but not tracing.
+        let implied = Config::parse("[observability]\ncost = true\n").unwrap();
+        let c = ObsConfig::from_config(&implied).unwrap();
+        assert!(c.cost && c.metrics && !c.trace);
 
         // Missing section = defaults (off).
         let empty = Config::parse("").unwrap();
@@ -842,12 +964,77 @@ mod tests {
             "[observability]\ntrace = \"yes\"\n",
             "[observability]\ntrace_out = 3\n",
             "[observability]\nmetrics = \"on\"\n",
+            "[observability]\nmetrics_out = 7\n",
+            "[observability]\ncost = \"yes\"\n",
             "[observability]\nsample_every = true\n",
             "[observability]\nsample_every = 0\n",
         ] {
             let cfg = Config::parse(bad).unwrap();
             assert!(ObsConfig::from_config(&cfg).is_err(), "{bad:?}");
         }
+    }
+
+    #[test]
+    fn cost_gate_requires_the_cost_flag() {
+        // Metrics alone: registry on, cost gate closed, points dropped.
+        let m_only = Recorder::from_config(&ObsConfig {
+            metrics: true,
+            ..ObsConfig::default()
+        });
+        assert!(m_only.metrics().is_some());
+        assert!(m_only.cost().is_none() && !m_only.costing());
+        m_only.record_cost_point(0, 64, 1e-6);
+        assert!(m_only.cost_points().is_empty());
+
+        // Cost on: gate open (and the registry exists even without
+        // `metrics`, since cost implies it at Recorder construction).
+        let c = Recorder::from_config(&ObsConfig {
+            cost: true,
+            ..ObsConfig::default()
+        });
+        assert!(c.costing() && c.cost().is_some());
+        c.cost().unwrap().add("cost.dram_bytes", 96);
+        assert_eq!(c.metrics().unwrap().counter("cost.dram_bytes"), 96);
+        // Counter points need the trace half too (they only feed the
+        // trace exporter).
+        c.record_cost_point(1, 64, 1e-6);
+        assert!(c.cost_points().is_empty());
+
+        let ct = Recorder::from_config(&ObsConfig {
+            cost: true,
+            trace: true,
+            ..ObsConfig::default()
+        });
+        ct.record_cost_point(1, 64, 1e-6);
+        let pts = ct.cost_points();
+        assert_eq!(pts.len(), 1);
+        assert_eq!(pts[0].frame, 1);
+        assert_eq!(pts[0].bytes, 64);
+    }
+
+    #[test]
+    fn chrome_trace_includes_cost_counter_tracks() {
+        let r = Recorder::from_config(&ObsConfig {
+            trace: true,
+            cost: true,
+            ..ObsConfig::default()
+        });
+        {
+            let _g = r.span(Stage::GemmWave).frame(0);
+        }
+        r.record_cost_point(0, 4096, 2.5e-6);
+        let path = std::env::temp_dir().join(format!(
+            "voxel-cim-obs-cost-trace-{}.json",
+            std::process::id()
+        ));
+        r.write_chrome_trace(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(body.contains("\"ph\":\"X\""));
+        assert!(body.contains("\"ph\":\"C\""));
+        assert!(body.contains("\"name\":\"cost.bytes\""));
+        assert!(body.contains("\"name\":\"cost.energy_uj\""));
+        assert!(body.contains("\"value\":4096"));
     }
 
     #[test]

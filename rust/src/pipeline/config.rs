@@ -232,6 +232,9 @@ pub struct Overrides {
     /// `--metrics-out`: metrics-snapshot output path (implies the
     /// metrics registry).
     pub metrics_out: Option<String>,
+    /// `--cost`: enable the cost ledger — modeled bytes/joules counters
+    /// plus the stream `--cost` footer (implies the metrics registry).
+    pub cost: bool,
 }
 
 impl Overrides {
@@ -260,6 +263,7 @@ impl Overrides {
             trace: args.get_bool("trace"),
             trace_out: opt("trace-out"),
             metrics_out: opt("metrics-out"),
+            cost: args.get_bool("cost"),
         }
     }
 }
@@ -380,6 +384,10 @@ impl PipelineConfig {
             self.observability.metrics = true;
             self.observability.metrics_out = p.clone();
         }
+        if ov.cost {
+            self.observability.cost = true;
+            self.observability.metrics = true;
+        }
         Ok(())
     }
 
@@ -475,11 +483,14 @@ mod tests {
              [dataset]\nsource = \"highway\"\nframes = 5\n\
              [serving]\nsequences = \"urban, far-field\"\nadmission = \"drop-oldest\"\nslo_ms = 25.0\n\
              [pipeline]\nnetwork = \"minkunet-small\"\nengine = \"native\"\n\
-             [observability]\ntrace = true\nsample_every = 2\n",
+             [observability]\ntrace = true\nsample_every = 2\n\
+             metrics_out = \"m.json\"\ncost = true\n",
         )
         .unwrap();
         let pc = PipelineConfig::from_config(&cfg).unwrap();
-        assert!(pc.observability.trace && !pc.observability.metrics);
+        assert!(pc.observability.trace && pc.observability.metrics);
+        assert!(pc.observability.cost);
+        assert_eq!(pc.observability.metrics_out, "m.json");
         assert_eq!(pc.observability.sample_every, 2);
         assert_eq!(pc.runner.searcher, SearcherKind::Octree);
         assert_eq!(pc.runner.inflight, 3);
@@ -502,6 +513,8 @@ mod tests {
             "[pipeline]\nengine = \"gpu\"",
             "[observability]\ntrace = \"yes\"",
             "[observability]\nsample_every = 0",
+            "[observability]\nmetrics_out = 7",
+            "[observability]\ncost = \"yes\"",
         ] {
             let cfg = Config::parse(bad).unwrap();
             assert!(PipelineConfig::from_config(&cfg).is_err(), "{bad}");
@@ -527,6 +540,7 @@ mod tests {
             trace: false,
             trace_out: Some("trace.json".into()),
             metrics_out: Some("metrics.json".into()),
+            cost: true,
         })
         .unwrap();
         assert_eq!(pc.runner.searcher, SearcherKind::BlockDoms);
@@ -542,8 +556,10 @@ mod tests {
         assert!(pc.runner.delta.enabled);
         assert!(pc.runner.delta.compute);
         assert!(pc.runner.delta.voxelize);
-        // Output paths imply their half of the observability subsystem.
+        // Output paths imply their half of the observability subsystem,
+        // and --cost turns the ledger on alongside the registry.
         assert!(pc.observability.trace && pc.observability.metrics);
+        assert!(pc.observability.cost);
         assert_eq!(pc.observability.trace_out, "trace.json");
         assert_eq!(pc.observability.metrics_out, "metrics.json");
         pc.validate().unwrap();

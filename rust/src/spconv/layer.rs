@@ -276,6 +276,20 @@ impl SpconvLayer {
         }
     }
 
+    /// Record per-wave macro occupancy (`rows / batch`, the paper's
+    /// workload-imbalance axis) into the cost registry. Called once per
+    /// wave schedule at each terminal execution path only — the pooled
+    /// and delta entry points delegate to each other on their fallback
+    /// branches, and recording at a non-terminal site would double-count.
+    fn record_occupancy(&self, waves: &[MultiGatherBatch]) {
+        if let Some(m) = self.obs.cost() {
+            let cap = self.batch.max(1) as f64;
+            for w in waves {
+                m.observe("cost.wave_occupancy", w.rows.len() as f64 / cap);
+            }
+        }
+    }
+
     /// Execute over a prebuilt rulebook, single-threaded: the
     /// one-element group of [`Self::execute_batch`] (single-frame and
     /// batched execution share one gather/GEMM/scatter body; a lone
@@ -345,6 +359,7 @@ impl SpconvLayer {
         let tw = TiledWeights::new(&self.weights);
         let rbs: Vec<&Rulebook> = inputs.iter().map(|&(_, rb)| rb).collect();
         let waves = self.waves_for(&rbs);
+        self.record_occupancy(&waves);
         let mut psums: Vec<Vec<i32>> = inputs
             .iter()
             .map(|&(_, rb)| vec![0i32; rb.out_coords.len() * c2])
@@ -428,6 +443,7 @@ impl SpconvLayer {
                 .collect();
             return self.execute_batch(&borrowed, engine);
         };
+        self.record_occupancy(&waves);
 
         let tw = Arc::new(TiledWeights::new(&self.weights));
         let waves = Arc::new(waves);
@@ -556,6 +572,7 @@ impl SpconvLayer {
             .collect();
         let copies: &[u32] = self.w2b_copies.as_deref().unwrap_or(&[]);
         let waves = gather_batches_multi_w2b_skip(&rbs, self.batch, copies, &skips);
+        self.record_occupancy(&waves);
 
         // Reuse accounting: dropped pairs per frame, and the per-frame
         // wave-participation shrinkage vs the plain packing of the same
