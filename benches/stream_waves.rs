@@ -299,9 +299,40 @@ fn metrics_out_path() -> Option<String> {
     })
 }
 
+/// Lint counts for the report's metadata block: a bench artifact also
+/// records the invariant health of the tree it was built from (the CI
+/// smoke gate asserts `unsuppressed == 0`).
+fn lint_metadata() -> Json {
+    let src = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    match vcim_lint::lint_tree(&src) {
+        Ok(report) => {
+            let rules: Vec<(String, Json)> = report
+                .rule_counts()
+                .into_iter()
+                .map(|(rule, (total, unsup))| {
+                    let counts = Json::obj(vec![
+                        ("total", Json::UInt(total as u64)),
+                        ("unsuppressed", Json::UInt(unsup as u64)),
+                    ]);
+                    (rule, counts)
+                })
+                .collect();
+            Json::obj(vec![
+                ("files", Json::UInt(report.files as u64)),
+                ("total", Json::UInt(report.total() as u64)),
+                ("unsuppressed", Json::UInt(report.unsuppressed() as u64)),
+                ("suppressed", Json::UInt(report.suppressed() as u64)),
+                ("rules", Json::Obj(rules)),
+            ])
+        }
+        Err(e) => Json::obj(vec![("error", Json::str(&e.to_string()))]),
+    }
+}
+
 fn write_json(path: &str, points: &[JsonPoint]) {
     let doc = Json::obj(vec![
         ("bench", Json::str("stream_waves")),
+        ("metadata", Json::obj(vec![("lint", lint_metadata())])),
         ("points", Json::arr(points.iter().map(JsonPoint::json).collect())),
     ]);
     std::fs::write(path, doc.render()).expect("write --json report");

@@ -27,6 +27,7 @@ pub struct JobHandle<T> {
 impl<T> JobHandle<T> {
     /// Block until the job finishes.
     pub fn join(self) -> T {
+        // vcim:allow(panic-freedom) a closed result channel means the job itself panicked; propagating that panic to the joiner is the documented contract
         self.rx.recv().expect("worker dropped result channel")
     }
 
@@ -48,6 +49,7 @@ impl WorkerPool {
                     .name(format!("voxel-cim-worker-{i}"))
                     .spawn(move || loop {
                         let job = {
+                            // vcim:allow(panic-freedom) the mutex guards only `recv()`, which cannot panic, so the lock is never poisoned
                             let guard = rx.lock().expect("poisoned job queue");
                             guard.recv()
                         };
@@ -63,6 +65,7 @@ impl WorkerPool {
                             Err(_) => break, // pool dropped
                         }
                     })
+                    // vcim:allow(panic-freedom) thread spawn fails only on OS resource exhaustion at pool construction; no typed-error path exists from new()
                     .expect("spawning worker")
             })
             .collect();
@@ -90,8 +93,10 @@ impl WorkerPool {
         });
         self.tx
             .as_ref()
+            // vcim:allow(panic-freedom) tx is Some for the pool's whole lifetime; it is taken only in Drop, after which submit() is unreachable
             .expect("pool shut down")
             .send(job)
+            // vcim:allow(panic-freedom) workers only exit after the sender drops, so a send on a live pool cannot fail
             .expect("workers alive");
         JobHandle { rx: rrx }
     }

@@ -14,7 +14,6 @@
 //! compiled, no python anywhere.
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use crate::cim::w2b::copies_for_factor;
 use crate::coordinator::executor::WorkerPool;
@@ -23,7 +22,7 @@ use crate::geom::{Coord3, Extent3};
 use crate::mapsearch::delta::{self, DeltaCache, DeltaConfig, DeltaKey, FrameDelta, SlotSpec};
 use crate::mapsearch::{AccessStats, MapSearch, SearcherKind};
 use crate::model::layer::{LayerSpec, NetworkSpec};
-use crate::obs::{Recorder, Stage};
+use crate::obs::{Recorder, Stage, stopwatch};
 use crate::sparse::rulebook::{ConvKind, Rulebook};
 use crate::sparse::tensor::SparseTensor;
 use crate::spconv::conv2d::{conv2d_im2col, DenseMap};
@@ -197,7 +196,9 @@ fn fnv1a(bytes: &[u8]) -> u64 {
 }
 
 fn i8_bytes(v: &[i8]) -> &[u8] {
-    // i8 and u8 share layout; the checksum only needs stable bytes.
+    // SAFETY: i8 and u8 have identical size and alignment, the pointer
+    // and length come from a live slice borrow, and the returned slice
+    // inherits that borrow's lifetime. The checksum only needs bytes.
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len()) }
 }
 
@@ -334,10 +335,9 @@ impl NetworkRunner {
         input: SparseTensor,
         engine: &mut E,
     ) -> crate::Result<FrameResult> {
-        Ok(self
-            .run_frames(vec![input], engine)?
+        self.run_frames(vec![input], engine)?
             .pop()
-            .expect("one frame in, one result out"))
+            .ok_or_else(|| anyhow::anyhow!("one frame in, one result out"))
     }
 
     /// Run a group of in-flight frames through the network in lockstep,
@@ -350,7 +350,7 @@ impl NetworkRunner {
         inputs: Vec<SparseTensor>,
         engine: &mut E,
     ) -> crate::Result<Vec<FrameResult>> {
-        let t0 = Instant::now();
+        let t0 = stopwatch();
         let in_lens: Vec<u64> = inputs.iter().map(|t| t.len() as u64).collect();
         let runs = self.run_group(&self.net.layers, inputs, Vec::new(), engine, self.cfg.seed)?;
         let total = t0.elapsed().as_secs_f64();
@@ -411,6 +411,7 @@ impl NetworkRunner {
         for (li, &spec) in layers.iter().enumerate() {
             match spec {
                 LayerSpec::Subm3 { .. } | LayerSpec::GConv2 { .. } | LayerSpec::TConv2 { .. } => {
+                    // vcim:allow(panic-freedom) the match arm admits exactly the three sparse-conv specs, for which conv_kind() is Some by definition
                     let kind = spec.conv_kind().unwrap();
                     let (c_in_decl, c_out) = spec.channels();
                     // Per-frame map search: resolve reuse / pruned-tconv
@@ -428,17 +429,20 @@ impl NetworkRunner {
                         if matches!(kind, ConvKind::Generalized { .. }) {
                             f.skip_stack.push((f.cur.extent, f.cur.coords.clone()));
                         }
-                        let reuse = matches!(kind, ConvKind::Submanifold { .. })
-                            && f.shared_rb
+                        let reuse_rb = if matches!(kind, ConvKind::Submanifold { .. }) {
+                            f.shared_rb
                                 .as_ref()
-                                .map(|rb| rb.out_coords == f.cur.coords)
-                                .unwrap_or(false);
+                                .filter(|rb| rb.out_coords == f.cur.coords)
+                                .cloned()
+                        } else {
+                            None
+                        };
                         let skip_target = match kind {
                             ConvKind::Transposed { .. } => f.skip_stack.pop(),
                             _ => None,
                         };
-                        if reuse {
-                            plans.push(RbPlan::Reuse(f.shared_rb.clone().unwrap()));
+                        if let Some(rb) = reuse_rb {
+                            plans.push(RbPlan::Reuse(rb));
                         } else if let (
                             ConvKind::Transposed { k, stride },
                             Some((ext, target)),
@@ -448,7 +452,7 @@ impl NetworkRunner {
                             // outputs restricted to the matching encoder
                             // stage. Geometry comes from the skip target,
                             // so this path is searcher-independent.
-                            let t = Instant::now();
+                            let t = stopwatch();
                             let _g = self.obs.span(Stage::MapSearch).layer(li as u32);
                             let rb = crate::sparse::hash_search::tconv_pruned(
                                 &f.cur, k, stride, ext, &target,
@@ -486,7 +490,7 @@ impl NetworkRunner {
                             let obs = self.obs.clone();
                             handles.push((plans.len(), self.pool.submit(move || {
                                 let _g = obs.span(Stage::MapSearch).layer(li as u32);
-                                let t = Instant::now();
+                                let t = stopwatch();
                                 let (rb, st, outcome) = match slot {
                                     Some((k, task)) => {
                                         let (rb, st, out) = delta::delta_search(
@@ -532,8 +536,9 @@ impl NetworkRunner {
                             }
                             RbPlan::Inline(rb, st, secs) => rbs.push((rb, st, secs)),
                             RbPlan::Pooled => {
-                                let (idx, (rb, st, secs, outcome)) =
-                                    searched.next().expect("one search per pooled plan");
+                                // vcim:allow(panic-freedom) pooled plans and pool results are built in lockstep from the same frame loop; the debug_assert below checks the pairing
+                                let hit = searched.next().expect("one search per pooled plan");
+                                let (idx, (rb, st, secs, outcome)) = hit;
                                 debug_assert_eq!(idx, fi);
                                 if let Some((slot, out)) = outcome {
                                     let f = &mut frames[fi];
@@ -571,7 +576,7 @@ impl NetworkRunner {
                                 .with_w2b(copies_for_factor(&workload, self.cfg.w2b_factor));
                         }
                     }
-                    let tc = Instant::now();
+                    let tc = stopwatch();
                     // Compute-core reuse: each frame's compute slot for
                     // this layer (claimed by layer index — compute specs
                     // are one-per-layer, contiguous from 0 both in the
@@ -677,15 +682,18 @@ impl NetworkRunner {
                     }
                 }
                 LayerSpec::Conv2d { c_out, k, stride, .. } => {
-                    let w = conv2d_weights(
-                        frames[0].bev.as_ref().expect("Conv2d before ToBev").c,
-                        c_out,
-                        k,
-                        weight_seed,
-                    );
+                    let c_in0 = frames[0]
+                        .bev
+                        .as_ref()
+                        .ok_or_else(|| anyhow::anyhow!("layer {li}: Conv2d before ToBev"))?
+                        .c;
+                    let w = conv2d_weights(c_in0, c_out, k, weight_seed);
                     weight_seed = weight_seed.wrapping_add(1);
                     for f in frames.iter_mut() {
-                        let x = f.bev.take().expect("Conv2d before ToBev");
+                        let x = f
+                            .bev
+                            .take()
+                            .ok_or_else(|| anyhow::anyhow!("layer {li}: Conv2d before ToBev"))?;
                         let c_in = x.c as u64;
                         let _g = self.obs.span(Stage::DenseHead).layer(li as u32);
                         let (y, secs) = run_conv2d(&x, &w, c_out, k, stride, 1, engine)?;
@@ -714,15 +722,18 @@ impl NetworkRunner {
                     }
                 }
                 LayerSpec::Deconv2d { c_out, k, up, .. } => {
-                    let w = conv2d_weights(
-                        frames[0].bev.as_ref().expect("Deconv2d before ToBev").c,
-                        c_out,
-                        k,
-                        weight_seed,
-                    );
+                    let c_in0 = frames[0]
+                        .bev
+                        .as_ref()
+                        .ok_or_else(|| anyhow::anyhow!("layer {li}: Deconv2d before ToBev"))?
+                        .c;
+                    let w = conv2d_weights(c_in0, c_out, k, weight_seed);
                     weight_seed = weight_seed.wrapping_add(1);
                     for f in frames.iter_mut() {
-                        let x = f.bev.take().expect("Deconv2d before ToBev");
+                        let x = f
+                            .bev
+                            .take()
+                            .ok_or_else(|| anyhow::anyhow!("layer {li}: Deconv2d before ToBev"))?;
                         let c_in = x.c as u64;
                         let _g = self.obs.span(Stage::DenseHead).layer(li as u32);
                         let (y, secs) = run_conv2d(&x, &w, c_out, k, 1, up, engine)?;
@@ -784,10 +795,9 @@ impl NetworkRunner {
         input: SparseTensor,
         engine: &mut E,
     ) -> crate::Result<FrameResult> {
-        Ok(self
-            .run_scenes(vec![input], engine)?
+        self.run_scenes(vec![input], engine)?
             .pop()
-            .expect("one scene in, one result out"))
+            .ok_or_else(|| anyhow::anyhow!("one scene in, one result out"))
     }
 
     /// Run a *window* of scenes in cross-scene lockstep — the serving
@@ -877,7 +887,7 @@ impl NetworkRunner {
                 Vec::new()
             },
         );
-        let t0 = Instant::now();
+        let t0 = stopwatch();
         let in_lens: Vec<u64> = inputs.iter().map(|t| t.len() as u64).collect();
         let mut plans: Vec<Option<ShardPlan>> = Vec::with_capacity(inputs.len());
         for t in &inputs {
@@ -1001,7 +1011,9 @@ impl NetworkRunner {
                     shard_counts.push(p.shards.len() as u32);
                 }
                 None => {
-                    let r = runs.next().expect("one run per plain scene");
+                    let r = runs
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("one run per plain scene"))?;
                     records_per.push(r.records);
                     counters_per.push((r.searched, r.reused, r.waves_skipped, r.rows_saved));
                     merged.push(
@@ -1171,7 +1183,7 @@ fn run_conv2d<E: GemmEngine>(
     up: usize,
     engine: &mut E,
 ) -> crate::Result<(DenseMap, f64)> {
-    let t = Instant::now();
+    let t = stopwatch();
     let x = upsample(x, up);
     let (psums, ho, wo) = conv2d_im2col(&x, w, k, stride, c_out, engine)?;
     let scale = vec![0.03f32; c_out];

@@ -356,7 +356,8 @@ impl ShardPlan {
                 }
             }
         }
-        let extent = extent.expect("at least one shard");
+        let extent =
+            extent.ok_or_else(|| anyhow::anyhow!("merge called with zero shard outputs"))?;
         Ok(SparseTensor::new(extent, pairs, channels.max(1)))
     }
 }

@@ -31,7 +31,7 @@ use crate::coordinator::scheduler::{FrameResult, NetworkRunner, RunnerConfig};
 use crate::dataset::{ClosureSource, FramePoll, FrameSource, PrefetchSource, SourcedFrame};
 use crate::model::layer::NetworkSpec;
 use crate::obs::cost::{CostModel, CostSummary, FrameCost};
-use crate::obs::{Recorder, Stage};
+use crate::obs::{Recorder, Stage, stopwatch};
 use crate::serving::{AdmissionConfig, AdmissionController, AdmissionReport, WindowPolicy};
 use crate::sparse::tensor::SparseTensor;
 use crate::spconv::layer::GemmEngine;
@@ -294,7 +294,7 @@ impl StreamServer {
     ) -> crate::Result<StreamReport> {
         let inflight = self.runner.cfg.inflight.max(1);
         let depth = self.admission.effective_depth(inflight);
-        let t0 = Instant::now();
+        let t0 = stopwatch();
         let mut admission = AdmissionController::new(self.admission);
         let mut completions = Vec::with_capacity(n_frames as usize);
         let mut windows: u64 = 0;
@@ -384,7 +384,7 @@ impl StreamServer {
                 self.take_window(&mut pending, inflight)
             };
             windows += 1;
-            let started = Instant::now();
+            let started = stopwatch();
             let metas: Vec<(u64, u32, Instant, u64)> = window
                 .iter()
                 .map(|f| {
@@ -529,7 +529,11 @@ impl StreamServer {
         pending: &mut VecDeque<SourcedFrame>,
         inflight: usize,
     ) -> Vec<SourcedFrame> {
-        let first = pending.pop_front().expect("take_window on an empty queue");
+        let Some(first) = pending.pop_front() else {
+            // The serve loop only cuts windows while frames are queued;
+            // an empty queue yields an empty window rather than a panic.
+            return Vec::new();
+        };
         let cost = |f: &SourcedFrame| self.runner.planned_shards(f.tensor.len());
         match self.window {
             WindowPolicy::Exclusive => {
@@ -540,7 +544,9 @@ impl StreamServer {
                 while window.len() < inflight
                     && pending.front().is_some_and(|f| cost(f) == 1)
                 {
-                    window.push(pending.pop_front().expect("front checked"));
+                    if let Some(f) = pending.pop_front() {
+                        window.push(f);
+                    }
                 }
                 window
             }
@@ -556,7 +562,9 @@ impl StreamServer {
                         break;
                     }
                     budget -= c;
-                    window.push(pending.pop_front().expect("front checked"));
+                    if let Some(f) = pending.pop_front() {
+                        window.push(f);
+                    }
                 }
                 window
             }

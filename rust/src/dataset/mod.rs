@@ -85,7 +85,7 @@ impl SourcedFrame {
                 voxels_rebinned: 0,
             },
             tensor,
-            produced: Instant::now(),
+            produced: crate::obs::stopwatch(),
         }
     }
 }
@@ -201,12 +201,9 @@ impl DatasetConfig {
     /// a present-but-malformed `dims` list is an error too.
     pub fn from_config(cfg: &Config) -> crate::Result<Self> {
         let d = Self::default();
-        let extent = match cfg.get("dataset.dims") {
+        let extent = match cfg.opt_int_list("dataset.dims")? {
             None => None,
-            Some(v) => {
-                let dims = v
-                    .as_int_list()
-                    .ok_or_else(|| anyhow::anyhow!("dataset.dims must be an int list"))?;
+            Some(dims) => {
                 anyhow::ensure!(
                     dims.len() == 3 && dims.iter().all(|&d| d > 0),
                     "dataset.dims must be three positive ints, got {dims:?}"

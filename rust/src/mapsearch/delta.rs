@@ -47,15 +47,13 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use anyhow::bail;
-
 use crate::geom::{Coord3, Extent3, KernelOffsets};
 use crate::mapsearch::table::BlockPartition;
 use crate::mapsearch::{AccessStats, MapSearch};
 use crate::sparse::rulebook::{ConvKind, RulePair, Rulebook};
 use crate::sparse::tensor::SparseTensor;
 use crate::spconv::gather::ComputeSplice;
-use crate::util::config::{Config, Value};
+use crate::util::config::Config;
 
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 const FNV_PRIME: u64 = 0x1000_0000_01b3;
@@ -99,24 +97,12 @@ impl DeltaConfig {
     /// values error.
     pub fn from_config(cfg: &Config) -> crate::Result<Self> {
         let d = Self::default();
-        let enabled = match cfg.get("runner.delta") {
-            None => d.enabled,
-            Some(Value::Bool(b)) => *b,
-            Some(v) => bail!("runner.delta must be a boolean, got {v:?}"),
-        };
+        let enabled = cfg.opt_bool("runner.delta")?.unwrap_or(d.enabled);
         let blocks_x = cfg.usize_or("runner.delta_blocks_x", d.blocks_x)?;
         let blocks_y = cfg.usize_or("runner.delta_blocks_y", d.blocks_y)?;
         let max_entries = cfg.usize_or("runner.delta_max_entries", d.max_entries)?;
-        let compute = match cfg.get("runner.delta_compute") {
-            None => d.compute,
-            Some(Value::Bool(b)) => *b,
-            Some(v) => bail!("runner.delta_compute must be a boolean, got {v:?}"),
-        };
-        let voxelize = match cfg.get("runner.delta_voxelize") {
-            None => d.voxelize,
-            Some(Value::Bool(b)) => *b,
-            Some(v) => bail!("runner.delta_voxelize must be a boolean, got {v:?}"),
-        };
+        let compute = cfg.opt_bool("runner.delta_compute")?.unwrap_or(d.compute);
+        let voxelize = cfg.opt_bool("runner.delta_voxelize")?.unwrap_or(d.voxelize);
         anyhow::ensure!(
             blocks_x >= 1 && blocks_y >= 1,
             "runner.delta_blocks_x/delta_blocks_y must be >= 1"
@@ -160,7 +146,7 @@ pub fn specs_sig(specs: &[SlotSpec]) -> u64 {
 /// when the window shards, since each pseudo-frame searches its own
 /// tensor. Non-muxed serves stamp `FrameMeta::sequence = 0`, so solo
 /// streams hit the cache exactly like muxed ones.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct DeltaKey {
     pub sequence: u32,
     pub shard: Option<(usize, usize)>,
@@ -371,12 +357,9 @@ impl DeltaCache {
         }
         self.tick += 1;
         if !self.entries.contains_key(&fd.key) && self.entries.len() >= self.cfg.max_entries {
-            if let Some(lru) = self
-                .entries
-                .iter()
-                .min_by_key(|(_, e)| e.tick)
-                .map(|(k, _)| *k)
-            {
+            // vcim:allow(determinism) unique argmin over the (tick, key) total order — hash-iteration order cannot affect which entry is evicted
+            let lru = self.entries.iter().min_by_key(|(k, e)| (e.tick, **k)).map(|(k, _)| *k);
+            if let Some(lru) = lru {
                 self.entries.remove(&lru);
                 self.evictions += 1;
             }

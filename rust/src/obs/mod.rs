@@ -41,12 +41,12 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{bail, Context};
+use anyhow::Context;
 
 pub use cost::{CostModel, CostSummary, FrameCost, StageCost};
 
 use crate::dataset::{FramePoll, FrameSource, SourcedFrame};
-use crate::util::config::{Config, Value};
+use crate::util::config::Config;
 use crate::util::json::Json;
 use crate::util::stats::LatencySummary;
 
@@ -126,6 +126,20 @@ impl Stage {
     }
 }
 
+/// The one sanctioned wall-clock entry point outside `obs` itself.
+///
+/// Engine code (coordinator, dataset, serving) that needs an interval —
+/// pacing deadlines, span timing, latency estimates — takes its
+/// `Instant` from here instead of calling `Instant::now()` directly, so
+/// every clock read in the tree funnels through the observability
+/// layer. The `determinism` and `observer-purity` lint rules
+/// (`tools/vcim-lint`) enforce exactly this: a raw `Instant::now()`
+/// outside `obs/` and the measurement harnesses is a finding.
+#[inline]
+pub fn stopwatch() -> Instant {
+    Instant::now()
+}
+
 /// One recorded span: a stage interval with whatever attribution the
 /// recording site knew. Times are seconds relative to the recorder's
 /// construction instant.
@@ -197,31 +211,15 @@ impl ObsConfig {
     /// default, present-but-mistyped values error.
     pub fn from_config(cfg: &Config) -> crate::Result<Self> {
         let d = Self::default();
-        let trace = match cfg.get("observability.trace") {
-            None => d.trace,
-            Some(Value::Bool(b)) => *b,
-            Some(v) => bail!("observability.trace must be a boolean, got {v:?}"),
-        };
-        let trace_out = match cfg.get("observability.trace_out") {
-            None => d.trace_out.clone(),
-            Some(Value::Str(s)) => s.clone(),
-            Some(v) => bail!("observability.trace_out must be a string path, got {v:?}"),
-        };
-        let metrics = match cfg.get("observability.metrics") {
-            None => d.metrics,
-            Some(Value::Bool(b)) => *b,
-            Some(v) => bail!("observability.metrics must be a boolean, got {v:?}"),
-        };
-        let metrics_out = match cfg.get("observability.metrics_out") {
-            None => d.metrics_out.clone(),
-            Some(Value::Str(s)) => s.clone(),
-            Some(v) => bail!("observability.metrics_out must be a string path, got {v:?}"),
-        };
-        let cost = match cfg.get("observability.cost") {
-            None => d.cost,
-            Some(Value::Bool(b)) => *b,
-            Some(v) => bail!("observability.cost must be a boolean, got {v:?}"),
-        };
+        let trace = cfg.opt_bool("observability.trace")?.unwrap_or(d.trace);
+        let trace_out = cfg
+            .opt_str("observability.trace_out")?
+            .map_or(d.trace_out.clone(), str::to_string);
+        let metrics = cfg.opt_bool("observability.metrics")?.unwrap_or(d.metrics);
+        let metrics_out = cfg
+            .opt_str("observability.metrics_out")?
+            .map_or(d.metrics_out.clone(), str::to_string);
+        let cost = cfg.opt_bool("observability.cost")?.unwrap_or(d.cost);
         let sample_every = cfg.usize_or("observability.sample_every", d.sample_every)?;
         anyhow::ensure!(sample_every >= 1, "observability.sample_every must be >= 1");
         Ok(Self {

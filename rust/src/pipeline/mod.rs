@@ -302,7 +302,7 @@ impl Pipeline {
                     .runner()
                     .run_scenes(vec![tensor], &mut self.engine)?
                     .pop()
-                    .expect("one scene in, one result out");
+                    .ok_or_else(|| anyhow::anyhow!("one scene in, one result out"))?;
                 RunOutcome::Frame(result)
             }
             Job::Window(tensors) => RunOutcome::Window(

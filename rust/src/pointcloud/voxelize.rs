@@ -119,6 +119,7 @@ impl Voxelizer {
                 }
             }
         }
+        // vcim:allow(determinism) drained into a Vec that is sorted by coord before use — hash order is erased
         let mut voxels: Vec<Voxel> = map
             .into_iter()
             .map(|(coord, points)| Voxel { coord, points })
@@ -147,6 +148,7 @@ impl Voxelizer {
         while taken.len() < target.min(extent.volume()) {
             taken.insert(rng.next_below(vol));
         }
+        // vcim:allow(determinism) drained into a Vec that is sorted by coord below — hash order is erased
         let mut voxels: Vec<Voxel> = taken
             .into_iter()
             .map(|flat| {
@@ -182,6 +184,7 @@ impl Voxelizer {
         while taken.len() < n_bg.min(extent.volume()) {
             taken.insert(rng.next_below(vol));
         }
+        // vcim:allow(determinism) drained hash-to-hash (set to set) — membership only, no order observed
         let mut coords: std::collections::HashSet<Coord3> = taken
             .into_iter()
             .map(|flat| {
@@ -216,6 +219,7 @@ impl Voxelizer {
                 }
             }
         }
+        // vcim:allow(determinism) drained into a Vec that is sorted by coord below — hash order is erased
         let mut voxels: Vec<Voxel> = coords
             .into_iter()
             .map(|coord| Voxel {

@@ -54,6 +54,8 @@ fn compile(client: &PjRtClient, path: &Path) -> crate::Result<PjRtLoadedExecutab
 }
 
 fn i8_literal(data: &[i8], dims: &[usize]) -> crate::Result<Literal> {
+    // SAFETY: i8 and u8 share size and alignment; pointer and length
+    // come from the borrowed slice, and `bytes` does not outlive it.
     let bytes: &[u8] =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
     Ok(Literal::create_from_shape_and_untyped_data(
@@ -64,6 +66,8 @@ fn i8_literal(data: &[i8], dims: &[usize]) -> crate::Result<Literal> {
 }
 
 fn i32_literal(data: &[i32], dims: &[usize]) -> crate::Result<Literal> {
+    // SAFETY: every i32 is 4 initialized bytes with alignment >= u8's;
+    // len*4 covers exactly the borrowed slice, which `bytes` borrows.
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
     };
@@ -75,6 +79,8 @@ fn i32_literal(data: &[i32], dims: &[usize]) -> crate::Result<Literal> {
 }
 
 fn f32_literal(data: &[f32], dims: &[usize]) -> crate::Result<Literal> {
+    // SAFETY: every f32 is 4 initialized bytes with alignment >= u8's;
+    // len*4 covers exactly the borrowed slice, which `bytes` borrows.
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
     };

@@ -303,12 +303,7 @@ impl AdmissionController {
 /// a silently ignored SLO would disable load shedding without a trace.
 pub fn admission_from_config(cfg: &Config) -> crate::Result<AdmissionConfig> {
     let d = AdmissionConfig::default();
-    let slo_ms = match cfg.get("serving.slo_ms") {
-        None => d.slo_ms,
-        Some(v) => v.as_float().ok_or_else(|| {
-            anyhow::anyhow!("serving.slo_ms must be a number, got {v:?}")
-        })?,
-    };
+    let slo_ms = cfg.opt_float("serving.slo_ms")?.unwrap_or(d.slo_ms);
     anyhow::ensure!(
         slo_ms >= 0.0 && slo_ms.is_finite(),
         "serving.slo_ms must be a finite value >= 0, got {slo_ms}"

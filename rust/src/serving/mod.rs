@@ -105,23 +105,15 @@ impl ServingConfig {
     /// lists; empty entries are rejected.
     pub fn from_config(cfg: &Config) -> crate::Result<Self> {
         let d = Self::default();
-        let window = match cfg.get("serving.window") {
+        let window = match cfg.opt_str("serving.window")? {
             None => None,
-            Some(v) => {
-                let s = v.as_str().ok_or_else(|| {
-                    anyhow::anyhow!("serving.window must be a quoted string, got {v:?}")
-                })?;
+            Some(s) => {
                 Some(s.parse().map_err(|e| anyhow::anyhow!("serving.window: {e}"))?)
             }
         };
-        let sequences = match cfg.get("serving.sequences") {
+        let sequences = match cfg.opt_str("serving.sequences")? {
             None => Vec::new(),
-            Some(v) => {
-                let s = v.as_str().ok_or_else(|| {
-                    anyhow::anyhow!("serving.sequences must be a quoted string, got {v:?}")
-                })?;
-                parse_sequences(s)?
-            }
+            Some(s) => parse_sequences(s)?,
         };
         Ok(Self {
             window,

@@ -148,7 +148,9 @@ impl LayerWeights {
 pub struct SpconvLayer {
     pub weights: LayerWeights,
     /// Per-channel requant scale/bias for the epilogue.
+    // vcim:allow(int8-purity) quant parameters consumed only by the allowlisted dequant_relu_quant epilogue
     pub scale: Vec<f32>,
+    // vcim:allow(int8-purity) quant parameters consumed only by the allowlisted dequant_relu_quant epilogue
     pub zero: Vec<f32>,
     /// GEMM wave batch size.
     pub batch: usize,
@@ -283,8 +285,10 @@ impl SpconvLayer {
     /// branches, and recording at a non-terminal site would double-count.
     fn record_occupancy(&self, waves: &[MultiGatherBatch]) {
         if let Some(m) = self.obs.cost() {
+            // vcim:allow(int8-purity) observer-facing occupancy ratio for the cost registry; not datapath arithmetic
             let cap = self.batch.max(1) as f64;
             for w in waves {
+                // vcim:allow(int8-purity) observer-facing occupancy ratio for the cost registry; not datapath arithmetic
                 m.observe("cost.wave_occupancy", w.rows.len() as f64 / cap);
             }
         }

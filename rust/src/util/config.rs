@@ -158,6 +158,52 @@ impl Config {
             Some(v) => bail!("{key} must be a quoted string, got {v:?}"),
         }
     }
+
+    /// Strict optional string: missing yields `Ok(None)`, a present
+    /// non-string is an error. The `opt_*` family exists for keys whose
+    /// *absence* is meaningful (policy off, no override) — unlike the
+    /// `*_or` scalar helpers there is no default to hide a typo'd type
+    /// behind, and the strict-config lint rule expects raw `get` reads
+    /// to migrate here.
+    pub fn opt_str(&self, key: &str) -> crate::Result<Option<&str>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(Value::Str(s)) => Ok(Some(s)),
+            Some(v) => bail!("{key} must be a quoted string, got {v:?}"),
+        }
+    }
+
+    /// Strict optional bool: missing yields `Ok(None)`, a present
+    /// non-bool is an error.
+    pub fn opt_bool(&self, key: &str) -> crate::Result<Option<bool>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(Value::Bool(b)) => Ok(Some(*b)),
+            Some(v) => bail!("{key} must be true/false, got {v:?}"),
+        }
+    }
+
+    /// Strict optional float: missing yields `Ok(None)`; integers
+    /// promote (matching [`Value::as_float`]); anything else is an
+    /// error.
+    pub fn opt_float(&self, key: &str) -> crate::Result<Option<f64>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(Value::Float(f)) => Ok(Some(*f)),
+            Some(Value::Int(i)) => Ok(Some(*i as f64)),
+            Some(v) => bail!("{key} must be a number, got {v:?}"),
+        }
+    }
+
+    /// Strict optional integer list: missing yields `Ok(None)`, a
+    /// present non-list is an error.
+    pub fn opt_int_list(&self, key: &str) -> crate::Result<Option<&[i64]>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(Value::IntList(v)) => Ok(Some(v)),
+            Some(v) => bail!("{key} must be an integer list like [1, 2, 3], got {v:?}"),
+        }
+    }
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -278,6 +324,31 @@ dense = false
         assert_eq!(c.usize_or("shard.missing", 7).unwrap(), 7);
         assert!(c.usize_or("shard.bad", 1).is_err());
         assert!(c.usize_or("shard.kind", 1).is_err());
+    }
+
+    #[test]
+    fn opt_helpers_are_strict_about_present_types() {
+        let c = Config::parse(
+            "[s]\nname = \"x\"\nflag = true\nratio = 0.5\nn = 3\ndims = [1, 2]",
+        )
+        .unwrap();
+        // Missing keys are None, not errors.
+        assert_eq!(c.opt_str("s.missing").unwrap(), None);
+        assert_eq!(c.opt_bool("s.missing").unwrap(), None);
+        assert_eq!(c.opt_float("s.missing").unwrap(), None);
+        assert_eq!(c.opt_int_list("s.missing").unwrap(), None);
+        // Present, right type.
+        assert_eq!(c.opt_str("s.name").unwrap(), Some("x"));
+        assert_eq!(c.opt_bool("s.flag").unwrap(), Some(true));
+        assert_eq!(c.opt_float("s.ratio").unwrap(), Some(0.5));
+        // Ints promote to float (matching as_float).
+        assert_eq!(c.opt_float("s.n").unwrap(), Some(3.0));
+        assert_eq!(c.opt_int_list("s.dims").unwrap(), Some(&[1i64, 2][..]));
+        // Present, wrong type: an error — never a silent None.
+        assert!(c.opt_str("s.flag").is_err());
+        assert!(c.opt_bool("s.ratio").is_err());
+        assert!(c.opt_float("s.name").is_err());
+        assert!(c.opt_int_list("s.n").is_err());
     }
 
     #[test]

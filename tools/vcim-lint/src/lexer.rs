@@ -1,0 +1,557 @@
+//! A comment/string/char-literal-aware Rust tokenizer.
+//!
+//! This is deliberately *not* a full Rust lexer: the rule engine only
+//! needs identifiers, punctuation, literals, and comments, each with an
+//! accurate line:col, and it needs the tricky cases that break naive
+//! `grep`-style linting handled correctly:
+//!
+//! - line comments (`//`, `///`, `//!`) and **nested** block comments,
+//! - string / raw string / byte string / raw byte string literals
+//!   (so `r#"…unwrap()…"#` inside a test fixture never fires a rule),
+//! - char literals vs lifetimes (`'a'` vs `<'a>`),
+//! - raw identifiers (`r#type`),
+//! - `::` folded into a single punct token so rules can match
+//!   `Instant :: now` as a three-token sequence.
+//!
+//! Numeric literals are scanned leniently (one token per literal,
+//! including type suffixes like `1.0f32`), which is all the int8-purity
+//! rule needs.
+
+/// Token classes surfaced to the rule engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (including raw identifiers, text kept as
+    /// written: `r#type`).
+    Ident,
+    /// Punctuation. Single char, except `::` which is one token.
+    Punct,
+    /// Numeric literal, suffix included (`0xff`, `1.0f32`, `1_000`).
+    Num,
+    /// String literal of any flavor (`"…"`, `r#"…"#`, `b"…"`), text
+    /// includes the delimiters.
+    Str,
+    /// Char or byte-char literal (`'a'`, `b'\n'`), delimiters included.
+    Char,
+    /// Lifetime (`'a`, `'static`), leading quote included.
+    Lifetime,
+    /// `//…` comment, text includes the slashes, excludes the newline.
+    LineComment,
+    /// `/* … */` comment (possibly nested), delimiters included.
+    BlockComment,
+}
+
+/// One token with its 1-based source position.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+    /// 1-based column in *chars* (not bytes).
+    pub col: u32,
+}
+
+impl Tok {
+    pub fn is_comment(&self) -> bool {
+        matches!(self.kind, TokKind::LineComment | TokKind::BlockComment)
+    }
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    i: usize,
+    line: u32,
+    col: u32,
+}
+
+impl Lexer {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.i + ahead).copied()
+    }
+
+    /// Consume one char, tracking line/col.
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.i).copied()?;
+        self.i += 1;
+        if c == '\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+
+    fn bump_into(&mut self, buf: &mut String) {
+        if let Some(c) = self.bump() {
+            buf.push(c);
+        }
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Tokenize `src`. Never fails: unrecognized bytes become single-char
+/// `Punct` tokens, and unterminated literals/comments run to EOF —
+/// a linter must degrade gracefully on code it half-understands.
+pub fn tokenize(src: &str) -> Vec<Tok> {
+    let mut lx = Lexer {
+        chars: src.chars().collect(),
+        i: 0,
+        line: 1,
+        col: 1,
+    };
+    let mut toks = Vec::new();
+
+    while let Some(c) = lx.peek(0) {
+        let (line, col) = (lx.line, lx.col);
+        if c.is_whitespace() {
+            lx.bump();
+            continue;
+        }
+
+        // Comments.
+        if c == '/' && lx.peek(1) == Some('/') {
+            let mut text = String::new();
+            while let Some(n) = lx.peek(0) {
+                if n == '\n' {
+                    break;
+                }
+                lx.bump_into(&mut text);
+            }
+            toks.push(Tok { kind: TokKind::LineComment, text, line, col });
+            continue;
+        }
+        if c == '/' && lx.peek(1) == Some('*') {
+            let mut text = String::new();
+            lx.bump_into(&mut text); // '/'
+            lx.bump_into(&mut text); // '*'
+            let mut depth = 1usize;
+            while depth > 0 {
+                match (lx.peek(0), lx.peek(1)) {
+                    (Some('/'), Some('*')) => {
+                        depth += 1;
+                        lx.bump_into(&mut text);
+                        lx.bump_into(&mut text);
+                    }
+                    (Some('*'), Some('/')) => {
+                        depth -= 1;
+                        lx.bump_into(&mut text);
+                        lx.bump_into(&mut text);
+                    }
+                    (Some(_), _) => lx.bump_into(&mut text),
+                    (None, _) => break, // unterminated: run to EOF
+                }
+            }
+            toks.push(Tok { kind: TokKind::BlockComment, text, line, col });
+            continue;
+        }
+
+        // String-ish literals with `r` / `b` prefixes, and raw idents.
+        if c == 'r' || c == 'b' {
+            if let Some(tok) = scan_prefixed(&mut lx, line, col) {
+                toks.push(tok);
+                continue;
+            }
+            // else: fall through to the plain-identifier path below.
+        }
+
+        if c == '"' {
+            toks.push(scan_string(&mut lx, line, col));
+            continue;
+        }
+
+        if c == '\'' {
+            toks.push(scan_quote(&mut lx, line, col));
+            continue;
+        }
+
+        if c.is_ascii_digit() {
+            toks.push(scan_number(&mut lx, line, col));
+            continue;
+        }
+
+        if is_ident_start(c) {
+            let mut text = String::new();
+            while lx.peek(0).is_some_and(is_ident_continue) {
+                lx.bump_into(&mut text);
+            }
+            toks.push(Tok { kind: TokKind::Ident, text, line, col });
+            continue;
+        }
+
+        // Punctuation: fold `::` into one token, everything else is one
+        // char.
+        if c == ':' && lx.peek(1) == Some(':') {
+            lx.bump();
+            lx.bump();
+            toks.push(Tok { kind: TokKind::Punct, text: "::".into(), line, col });
+            continue;
+        }
+        let mut text = String::new();
+        lx.bump_into(&mut text);
+        toks.push(Tok { kind: TokKind::Punct, text, line, col });
+    }
+
+    toks
+}
+
+/// Handle tokens starting with `r` or `b`: raw strings (`r"`, `r#"`),
+/// byte strings (`b"`), raw byte strings (`br"`, `br#"`), byte chars
+/// (`b'x'`), and raw identifiers (`r#type`). Returns `None` when the
+/// lookahead says this is just a plain identifier starting with r/b.
+fn scan_prefixed(lx: &mut Lexer, line: u32, col: u32) -> Option<Tok> {
+    let c0 = lx.peek(0)?;
+    let c1 = lx.peek(1);
+    match (c0, c1) {
+        // r"…"  or r#…#"…"#…#
+        ('r', Some('"')) => Some(scan_raw_string(lx, line, col, 1)),
+        ('r', Some('#')) => {
+            // Count hashes; a quote after them means raw string, an
+            // ident char means raw identifier (`r#type`).
+            let mut hashes = 0usize;
+            while lx.peek(1 + hashes) == Some('#') {
+                hashes += 1;
+            }
+            match lx.peek(1 + hashes) {
+                Some('"') => Some(scan_raw_string(lx, line, col, 1)),
+                Some(c) if is_ident_start(c) && hashes == 1 => {
+                    // Raw identifier: consume `r#` + ident.
+                    let mut text = String::new();
+                    lx.bump_into(&mut text); // r
+                    lx.bump_into(&mut text); // #
+                    while lx.peek(0).is_some_and(is_ident_continue) {
+                        lx.bump_into(&mut text);
+                    }
+                    Some(Tok { kind: TokKind::Ident, text, line, col })
+                }
+                _ => None,
+            }
+        }
+        // b"…" — byte string with ordinary escapes.
+        ('b', Some('"')) => {
+            let mut tok;
+            let mut text = String::new();
+            lx.bump_into(&mut text); // b
+            tok = scan_string(lx, line, col);
+            text.push_str(&tok.text);
+            tok.text = text;
+            Some(tok)
+        }
+        // b'…' — byte char.
+        ('b', Some('\'')) => {
+            let mut text = String::new();
+            lx.bump_into(&mut text); // b
+            let inner = scan_quote(lx, line, col);
+            text.push_str(&inner.text);
+            Some(Tok { kind: TokKind::Char, text, line, col })
+        }
+        // br"…" / br#"…"#
+        ('b', Some('r')) => {
+            let mut hashes = 0usize;
+            while lx.peek(2 + hashes) == Some('#') {
+                hashes += 1;
+            }
+            if lx.peek(2 + hashes) == Some('"') {
+                Some(scan_raw_string(lx, line, col, 2))
+            } else {
+                None
+            }
+        }
+        _ => None,
+    }
+}
+
+/// Scan a raw (byte) string starting at the current position, where
+/// `prefix_len` chars of prefix (`r` or `br`) precede the hashes.
+fn scan_raw_string(lx: &mut Lexer, line: u32, col: u32, prefix_len: usize) -> Tok {
+    let mut text = String::new();
+    for _ in 0..prefix_len {
+        lx.bump_into(&mut text);
+    }
+    let mut hashes = 0usize;
+    while lx.peek(0) == Some('#') {
+        hashes += 1;
+        lx.bump_into(&mut text);
+    }
+    lx.bump_into(&mut text); // opening quote
+    loop {
+        match lx.peek(0) {
+            None => break, // unterminated
+            Some('"') => {
+                // Check for the closing `"` + `#`*hashes.
+                let mut ok = true;
+                for k in 0..hashes {
+                    if lx.peek(1 + k) != Some('#') {
+                        ok = false;
+                        break;
+                    }
+                }
+                lx.bump_into(&mut text);
+                if ok {
+                    for _ in 0..hashes {
+                        lx.bump_into(&mut text);
+                    }
+                    break;
+                }
+            }
+            Some(_) => lx.bump_into(&mut text),
+        }
+    }
+    Tok { kind: TokKind::Str, text, line, col }
+}
+
+/// Scan an ordinary `"…"` string with backslash escapes.
+fn scan_string(lx: &mut Lexer, line: u32, col: u32) -> Tok {
+    let mut text = String::new();
+    lx.bump_into(&mut text); // opening quote
+    loop {
+        match lx.peek(0) {
+            None => break, // unterminated
+            Some('\\') => {
+                lx.bump_into(&mut text);
+                lx.bump_into(&mut text); // escaped char (any, incl. `"` and `\`)
+            }
+            Some('"') => {
+                lx.bump_into(&mut text);
+                break;
+            }
+            Some(_) => lx.bump_into(&mut text),
+        }
+    }
+    Tok { kind: TokKind::Str, text, line, col }
+}
+
+/// Disambiguate `'…` into a char literal or a lifetime.
+///
+/// Char literal iff: the quote is followed by an escape (`'\n'`), or
+/// the char after the next one is a closing quote (`'a'`, `'('`).
+/// Otherwise an ident-start char begins a lifetime (`'a`, `'static`).
+fn scan_quote(lx: &mut Lexer, line: u32, col: u32) -> Tok {
+    let n1 = lx.peek(1);
+    let n2 = lx.peek(2);
+    let is_char = match n1 {
+        Some('\\') => true,
+        Some(_) => n2 == Some('\''),
+        None => false,
+    };
+    let mut text = String::new();
+    if is_char {
+        lx.bump_into(&mut text); // '
+        if lx.peek(0) == Some('\\') {
+            lx.bump_into(&mut text); // backslash
+            lx.bump_into(&mut text); // escape head (n, u, ', …)
+            // `\u{…}` escapes: run to the closing brace.
+            if text.ends_with('u') && lx.peek(0) == Some('{') {
+                while let Some(c) = lx.peek(0) {
+                    lx.bump_into(&mut text);
+                    if c == '}' {
+                        break;
+                    }
+                }
+            }
+        } else {
+            lx.bump_into(&mut text); // the char itself
+        }
+        if lx.peek(0) == Some('\'') {
+            lx.bump_into(&mut text); // closing quote
+        }
+        Tok { kind: TokKind::Char, text, line, col }
+    } else if n1.is_some_and(is_ident_start) {
+        lx.bump_into(&mut text); // '
+        while lx.peek(0).is_some_and(is_ident_continue) {
+            lx.bump_into(&mut text);
+        }
+        Tok { kind: TokKind::Lifetime, text, line, col }
+    } else {
+        // A lone quote (malformed source): surface as punct and move on.
+        lx.bump_into(&mut text);
+        Tok { kind: TokKind::Punct, text, line, col }
+    }
+}
+
+/// Scan a numeric literal leniently: digits, `_`, alphanumerics (hex
+/// digits, exponent markers, type suffixes), plus an embedded `.` when
+/// followed by a digit — so `0..10` stays two tokens and a range, while
+/// `1.5e-3` and `1.0f32` each stay one token.
+fn scan_number(lx: &mut Lexer, line: u32, col: u32) -> Tok {
+    let mut text = String::new();
+    loop {
+        match lx.peek(0) {
+            Some(c) if is_ident_continue(c) => {
+                lx.bump_into(&mut text);
+                // Exponent sign: `1e-3`, `2.5E+10`.
+                if (c == 'e' || c == 'E')
+                    && !text.starts_with("0x")
+                    && matches!(lx.peek(0), Some('+') | Some('-'))
+                    && lx.peek(1).is_some_and(|d| d.is_ascii_digit())
+                {
+                    lx.bump_into(&mut text);
+                }
+            }
+            Some('.') if lx.peek(1).is_some_and(|d| d.is_ascii_digit()) => {
+                lx.bump_into(&mut text);
+            }
+            _ => break,
+        }
+    }
+    Tok { kind: TokKind::Num, text, line, col }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        tokenize(src)
+            .into_iter()
+            .map(|t| (t.kind, t.text))
+            .collect()
+    }
+
+    fn code_texts(src: &str) -> Vec<String> {
+        tokenize(src)
+            .into_iter()
+            .filter(|t| !t.is_comment())
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn idents_puncts_and_paamayim() {
+        let ts = kinds("Instant::now()");
+        assert_eq!(
+            ts,
+            vec![
+                (TokKind::Ident, "Instant".to_string()),
+                (TokKind::Punct, "::".to_string()),
+                (TokKind::Ident, "now".to_string()),
+                (TokKind::Punct, "(".to_string()),
+                (TokKind::Punct, ")".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn single_colon_stays_single() {
+        let ts = kinds("x: HashMap<K, V>");
+        assert_eq!(ts[1], (TokKind::Punct, ":".to_string()));
+        assert_eq!(ts[2], (TokKind::Ident, "HashMap".to_string()));
+    }
+
+    #[test]
+    fn strings_hide_their_contents() {
+        // `.unwrap()` inside a string must not produce ident tokens.
+        let ts = code_texts(r#"let s = "call .unwrap() here";"#);
+        assert!(!ts.iter().any(|t| t == "unwrap"));
+        assert!(ts.iter().any(|t| t.starts_with('"')));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes_and_embedded_quotes() {
+        let src = r####"let s = r#"an "unsafe" Instant::now()"#; x"####;
+        let ts = code_texts(src);
+        assert!(!ts.iter().any(|t| t == "unsafe" || t == "Instant"));
+        // The trailing `x` survives — the raw string closed correctly.
+        assert_eq!(ts.last().unwrap(), "x");
+    }
+
+    #[test]
+    fn raw_identifiers() {
+        let ts = kinds("let r#type = 1;");
+        assert!(ts.iter().any(|(k, t)| *k == TokKind::Ident && t == "r#type"));
+    }
+
+    #[test]
+    fn byte_strings_and_byte_chars() {
+        let ts = kinds(r#"(b"panic!", b'\n', br"todo!")"#);
+        let strs: Vec<_> = ts
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Str)
+            .map(|(_, t)| t.clone())
+            .collect();
+        assert_eq!(strs.len(), 2, "{ts:?}");
+        assert!(ts.iter().any(|(k, t)| *k == TokKind::Char && t == r"b'\n'"));
+        assert!(!ts.iter().any(|(k, t)| *k == TokKind::Ident && t == "panic"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "a /* outer /* inner Instant::now() */ still comment */ b";
+        let ts = kinds(src);
+        let idents: Vec<_> = ts
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Ident)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(idents, vec!["a", "b"]);
+        assert_eq!(
+            ts.iter().filter(|(k, _)| *k == TokKind::BlockComment).count(),
+            1
+        );
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let ts = kinds("fn f<'a>(x: &'a str) -> char { 'x' }");
+        assert!(ts
+            .iter()
+            .any(|(k, t)| *k == TokKind::Lifetime && t == "'a"));
+        assert!(ts.iter().any(|(k, t)| *k == TokKind::Char && t == "'x'"));
+        // 'static is a lifetime, not a char.
+        let ts = kinds("&'static str");
+        assert!(ts
+            .iter()
+            .any(|(k, t)| *k == TokKind::Lifetime && t == "'static"));
+    }
+
+    #[test]
+    fn escaped_char_literals() {
+        let ts = kinds(r"('\n', '\'', '\u{1F600}')");
+        let chars: Vec<_> = ts
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Char)
+            .map(|(_, t)| t.clone())
+            .collect();
+        assert_eq!(chars, vec![r"'\n'", r"'\''", r"'\u{1F600}'"]);
+    }
+
+    #[test]
+    fn numbers_with_suffixes_ranges_and_exponents() {
+        let ts = kinds("0..10");
+        let nums: Vec<_> = ts
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Num)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(nums, vec!["0", "10"]);
+
+        let ts = kinds("let x = 1.0f32 + 0xff + 1.5e-3 + 1_000;");
+        let nums: Vec<_> = ts
+            .iter()
+            .filter(|(k, _)| *k == TokKind::Num)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(nums, vec!["1.0f32", "0xff", "1.5e-3", "1_000"]);
+    }
+
+    #[test]
+    fn positions_are_one_based_lines_and_cols() {
+        let ts = tokenize("ab\n  cd");
+        assert_eq!((ts[0].line, ts[0].col), (1, 1));
+        assert_eq!((ts[1].line, ts[1].col), (2, 3));
+    }
+
+    #[test]
+    fn line_comments_capture_text() {
+        let ts = tokenize("x // vcim:allow(determinism) pinned seed\ny");
+        let c = ts.iter().find(|t| t.kind == TokKind::LineComment).unwrap();
+        assert!(c.text.contains("vcim:allow(determinism)"));
+        assert_eq!(c.line, 1);
+    }
+}

@@ -1,0 +1,517 @@
+//! `vcim-lint` — the repo's zero-dependency invariant lint pass.
+//!
+//! The pipeline per file: tokenize ([`lexer`]) → locate `#[cfg(test)]`
+//! regions (rules do not apply inside test modules) → run the six rules
+//! ([`rules`]) → apply inline `// vcim:allow(<rule>) <justification>`
+//! suppressions → report.
+//!
+//! Suppression contract:
+//! - an allow comment covers findings of the named rule(s) on **its own
+//!   line and the line directly below** it;
+//! - a justification string after the closing paren is **mandatory** —
+//!   a bare allow does not suppress and is itself a finding;
+//! - unknown rule names and allows that match no finding are findings
+//!   (`lint-allow`), so stale suppressions can't linger.
+//!
+//! The JSON writer is the main crate's std-only `util/json.rs`,
+//! included by path so the tool stays dependency-free.
+
+pub mod lexer;
+pub mod rules;
+
+#[path = "../../../rust/src/util/json.rs"]
+pub mod json;
+
+use json::Json;
+use lexer::{Tok, TokKind};
+use rules::{ALLOW_RULE, RULES};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One lint finding, suppressed or not.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Path relative to the lint root, `/`-separated.
+    pub file: String,
+    pub line: u32,
+    pub col: u32,
+    pub rule: String,
+    pub message: String,
+    /// True when a justified `vcim:allow` covers this finding.
+    pub suppressed: bool,
+    /// The justification text of the covering allow, if suppressed.
+    pub justification: Option<String>,
+}
+
+/// The result of linting a tree: every finding plus file count.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files: usize,
+}
+
+impl Report {
+    pub fn total(&self) -> usize {
+        self.findings.len()
+    }
+
+    pub fn unsuppressed(&self) -> usize {
+        self.findings.iter().filter(|f| !f.suppressed).count()
+    }
+
+    pub fn suppressed(&self) -> usize {
+        self.findings.iter().filter(|f| f.suppressed).count()
+    }
+
+    /// Per-rule `(total, unsuppressed)` counts, rule-name ordered.
+    /// Every registered rule appears even at zero, so downstream
+    /// consumers (the bench metadata block) see a stable shape.
+    pub fn rule_counts(&self) -> BTreeMap<String, (usize, usize)> {
+        let mut counts: BTreeMap<String, (usize, usize)> = BTreeMap::new();
+        for rule in RULES {
+            counts.insert((*rule).to_string(), (0, 0));
+        }
+        for f in &self.findings {
+            let e = counts.entry(f.rule.clone()).or_insert((0, 0));
+            e.0 += 1;
+            if !f.suppressed {
+                e.1 += 1;
+            }
+        }
+        counts
+    }
+
+    /// The machine-readable report (`--json`).
+    pub fn to_json(&self, roots: &[String]) -> Json {
+        let rules_obj = Json::Obj(
+            self.rule_counts()
+                .into_iter()
+                .map(|(rule, (total, unsup))| {
+                    (
+                        rule,
+                        Json::obj(vec![
+                            ("total", Json::UInt(total as u64)),
+                            ("unsuppressed", Json::UInt(unsup as u64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let findings = Json::Arr(
+            self.findings
+                .iter()
+                .map(|f| {
+                    let mut pairs = vec![
+                        ("file", Json::str(&f.file)),
+                        ("line", Json::UInt(f.line as u64)),
+                        ("col", Json::UInt(f.col as u64)),
+                        ("rule", Json::str(&f.rule)),
+                        ("message", Json::str(&f.message)),
+                        ("suppressed", Json::Bool(f.suppressed)),
+                    ];
+                    if let Some(j) = &f.justification {
+                        pairs.push(("justification", Json::str(j)));
+                    }
+                    Json::obj(pairs)
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("tool", Json::str("vcim-lint")),
+            (
+                "roots",
+                Json::Arr(roots.iter().map(|r| Json::str(r)).collect()),
+            ),
+            ("files", Json::UInt(self.files as u64)),
+            ("total", Json::UInt(self.total() as u64)),
+            ("unsuppressed", Json::UInt(self.unsuppressed() as u64)),
+            ("suppressed", Json::UInt(self.suppressed() as u64)),
+            ("rules", rules_obj),
+            ("findings", findings),
+        ])
+    }
+}
+
+/// An inline suppression comment, parsed from `// vcim:allow(rule[,
+/// rule…]) justification`.
+#[derive(Debug)]
+struct Allow {
+    line: u32,
+    rules: Vec<String>,
+    justification: Option<String>,
+    malformed: bool,
+    used: bool,
+}
+
+fn parse_allows(comments: &[Tok]) -> Vec<Allow> {
+    let mut out = Vec::new();
+    for c in comments {
+        let Some(at) = c.text.find("vcim:allow") else { continue };
+        let rest = &c.text[at + "vcim:allow".len()..];
+        let (rules_part, tail, malformed) = match (rest.strip_prefix('('), rest.find(')')) {
+            (Some(_), Some(close)) => (&rest[1..close], &rest[close + 1..], false),
+            _ => ("", "", true),
+        };
+        let rules: Vec<String> = rules_part
+            .split(',')
+            .map(|r| r.trim().to_string())
+            .filter(|r| !r.is_empty())
+            .collect();
+        let tail = tail.trim().trim_start_matches([':', '-']).trim();
+        let justification = if tail.is_empty() {
+            None
+        } else {
+            Some(tail.to_string())
+        };
+        out.push(Allow {
+            line: c.line,
+            rules,
+            justification,
+            malformed: malformed || rules.is_empty(),
+            used: false,
+        });
+    }
+    out
+}
+
+/// Line ranges covered by `#[cfg(test)]` items (the trailing unit-test
+/// module in each source file). Rules do not fire inside them.
+fn test_ranges(code: &[Tok]) -> Vec<(u32, u32)> {
+    fn punct(t: &Tok, s: &str) -> bool {
+        t.kind == TokKind::Punct && t.text == s
+    }
+    fn ident(t: &Tok, s: &str) -> bool {
+        t.kind == TokKind::Ident && t.text == s
+    }
+
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < code.len() {
+        let is_cfg_attr = punct(&code[i], "#")
+            && code.get(i + 1).is_some_and(|t| punct(t, "["))
+            && code.get(i + 2).is_some_and(|t| ident(t, "cfg"))
+            && code.get(i + 3).is_some_and(|t| punct(t, "("));
+        if !is_cfg_attr {
+            i += 1;
+            continue;
+        }
+        // Scan the cfg(...) group: it marks a test region when it
+        // mentions `test` and is not negated (`cfg(not(test))` is the
+        // opposite region — never skip those).
+        let mut j = i + 4;
+        let mut paren_depth = 1usize;
+        let (mut has_test, mut has_not) = (false, false);
+        while j < code.len() && paren_depth > 0 {
+            let t = &code[j];
+            if punct(t, "(") {
+                paren_depth += 1;
+            } else if punct(t, ")") {
+                paren_depth -= 1;
+            } else if ident(t, "test") {
+                has_test = true;
+            } else if ident(t, "not") {
+                has_not = true;
+            }
+            j += 1;
+        }
+        let closes = code.get(j).is_some_and(|t| punct(t, "]"));
+        if !(has_test && !has_not && closes) {
+            i = j;
+            continue;
+        }
+        let start_line = code[i].line;
+
+        // Skip any further attributes on the same item.
+        let mut k = j + 1;
+        while k + 1 < code.len() && punct(&code[k], "#") && punct(&code[k + 1], "[") {
+            let mut bracket_depth = 1usize;
+            k += 2;
+            while k < code.len() && bracket_depth > 0 {
+                if punct(&code[k], "[") {
+                    bracket_depth += 1;
+                } else if punct(&code[k], "]") {
+                    bracket_depth -= 1;
+                }
+                k += 1;
+            }
+        }
+
+        // The item runs to its `;` (e.g. `#[cfg(test)] use …;`) or to
+        // the close of its brace block.
+        let mut end_line = u32::MAX; // unterminated → rest of file
+        while k < code.len() {
+            if punct(&code[k], ";") {
+                end_line = code[k].line;
+                break;
+            }
+            if punct(&code[k], "{") {
+                let mut brace_depth = 1usize;
+                let mut m = k + 1;
+                while m < code.len() {
+                    if punct(&code[m], "{") {
+                        brace_depth += 1;
+                    } else if punct(&code[m], "}") {
+                        brace_depth -= 1;
+                        if brace_depth == 0 {
+                            end_line = code[m].line;
+                            break;
+                        }
+                    }
+                    m += 1;
+                }
+                break;
+            }
+            k += 1;
+        }
+        out.push((start_line, end_line));
+        i = j + 1;
+    }
+    out
+}
+
+/// Lint one file's source. `rel` must be `/`-separated and relative to
+/// the lint root (rule scoping keys off it).
+pub fn lint_file(rel: &str, src: &str) -> Vec<Finding> {
+    let toks = lexer::tokenize(src);
+    let comments: Vec<Tok> = toks.iter().filter(|t| t.is_comment()).cloned().collect();
+    let code: Vec<Tok> = toks.into_iter().filter(|t| !t.is_comment()).collect();
+
+    let ranges = test_ranges(&code);
+    let in_test = |line: u32| ranges.iter().any(|&(a, b)| line >= a && line <= b);
+
+    let raw: Vec<rules::RawFinding> = rules::run_rules(rel, &code, &comments)
+        .into_iter()
+        .filter(|f| !in_test(f.line))
+        .collect();
+
+    // Allows inside test regions are ignored entirely (nothing fires
+    // there, so they could only ever be "unused" noise).
+    let mut allows: Vec<Allow> = parse_allows(&comments)
+        .into_iter()
+        .filter(|a| !in_test(a.line))
+        .collect();
+
+    let mut findings = Vec::new();
+    for rf in raw {
+        let mut suppressed = false;
+        let mut justification = None;
+        for a in allows.iter_mut() {
+            let covers_line = a.line == rf.line || a.line + 1 == rf.line;
+            if covers_line && !a.malformed && a.rules.iter().any(|r| r == rf.rule) {
+                a.used = true;
+                if let Some(j) = &a.justification {
+                    suppressed = true;
+                    justification = Some(j.clone());
+                }
+                break;
+            }
+        }
+        findings.push(Finding {
+            file: rel.to_string(),
+            line: rf.line,
+            col: rf.col,
+            rule: rf.rule.to_string(),
+            message: rf.message,
+            suppressed,
+            justification,
+        });
+    }
+
+    // Meta findings about the allows themselves. Never suppressible.
+    for a in &allows {
+        let mut problems: Vec<String> = Vec::new();
+        if a.malformed {
+            problems.push(
+                "malformed vcim:allow — expected `vcim:allow(<rule>) <justification>`".into(),
+            );
+        }
+        for r in &a.rules {
+            if !RULES.contains(&r.as_str()) {
+                problems.push(format!(
+                    "unknown rule `{r}` in vcim:allow (rules: {})",
+                    RULES.join(", ")
+                ));
+            }
+        }
+        if !a.malformed && a.justification.is_none() {
+            problems.push(
+                "vcim:allow without a justification — say why the invariant holds".into(),
+            );
+        }
+        if !a.malformed && a.justification.is_some() && !a.used {
+            problems.push("unused vcim:allow — no finding on this or the next line".into());
+        }
+        for message in problems {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: a.line,
+                col: 1,
+                rule: ALLOW_RULE.to_string(),
+                message,
+                suppressed: false,
+                justification: None,
+            });
+        }
+    }
+
+    findings.sort_by_key(|f| (f.line, f.col));
+    findings
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root` (recursively, path-sorted).
+pub fn lint_tree(root: &Path) -> std::io::Result<Report> {
+    let mut files = Vec::new();
+    walk(root, &mut files)?;
+    let mut report = Report::default();
+    for path in &files {
+        let bytes = std::fs::read(path)?;
+        let src = String::from_utf8_lossy(&bytes);
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        report.findings.extend(lint_file(&rel, &src));
+        report.files += 1;
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allow_parses_rules_and_justification() {
+        let toks = lexer::tokenize("// vcim:allow(determinism, panic-freedom) seed is pinned\n");
+        let comments: Vec<Tok> = toks.into_iter().filter(|t| t.is_comment()).collect();
+        let allows = parse_allows(&comments);
+        assert_eq!(allows.len(), 1);
+        assert_eq!(allows[0].rules, vec!["determinism", "panic-freedom"]);
+        assert_eq!(allows[0].justification.as_deref(), Some("seed is pinned"));
+        assert!(!allows[0].malformed);
+    }
+
+    #[test]
+    fn bare_allow_does_not_suppress_and_is_flagged() {
+        let src = "\
+mod coordinator {}
+// vcim:allow(observer-purity)
+fn f() { let t = std::time::Instant::now(); }
+";
+        let fs = lint_file("dataset/mod.rs", src);
+        // The observer-purity finding stays unsuppressed…
+        assert!(fs
+            .iter()
+            .any(|f| f.rule == "observer-purity" && !f.suppressed));
+        // …and the bare allow is itself a finding.
+        assert!(fs
+            .iter()
+            .any(|f| f.rule == ALLOW_RULE && f.message.contains("justification")));
+    }
+
+    #[test]
+    fn justified_allow_suppresses_same_and_next_line() {
+        let src = "\
+// vcim:allow(observer-purity) harness-local stopwatch for a self-test
+fn f() { let t = std::time::Instant::now(); }
+";
+        let fs = lint_file("dataset/mod.rs", src);
+        let f = fs.iter().find(|f| f.rule == "observer-purity").unwrap();
+        assert!(f.suppressed);
+        assert_eq!(
+            f.justification.as_deref(),
+            Some("harness-local stopwatch for a self-test")
+        );
+        assert!(!fs.iter().any(|f| f.rule == ALLOW_RULE));
+    }
+
+    #[test]
+    fn unknown_rule_and_unused_allow_are_findings() {
+        let src = "\
+// vcim:allow(no-such-rule) whatever
+fn f() {}
+// vcim:allow(determinism) nothing here to suppress
+fn g() {}
+";
+        let fs = lint_file("mapsearch/x.rs", src);
+        assert!(fs
+            .iter()
+            .any(|f| f.rule == ALLOW_RULE && f.message.contains("unknown rule")));
+        assert!(fs
+            .iter()
+            .any(|f| f.rule == ALLOW_RULE && f.message.contains("unused")));
+    }
+
+    #[test]
+    fn test_modules_are_exempt() {
+        let src = "\
+fn live() {}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let _ = std::time::Instant::now();
+        let x: Option<i32> = None;
+        x.unwrap();
+    }
+}
+";
+        let fs = lint_file("coordinator/stream.rs", src);
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_a_test_region() {
+        let src = "\
+#[cfg(not(test))]
+fn live() { let _ = std::time::Instant::now(); }
+";
+        let fs = lint_file("coordinator/stream.rs", src);
+        assert!(fs.iter().any(|f| f.rule == "determinism"));
+    }
+
+    #[test]
+    fn rule_counts_have_stable_shape() {
+        let report = Report::default();
+        let counts = report.rule_counts();
+        for rule in RULES {
+            assert!(counts.contains_key(*rule));
+        }
+    }
+
+    #[test]
+    fn json_report_renders() {
+        let report = Report {
+            findings: vec![Finding {
+                file: "a.rs".into(),
+                line: 3,
+                col: 7,
+                rule: "determinism".into(),
+                message: "m".into(),
+                suppressed: false,
+                justification: None,
+            }],
+            files: 1,
+        };
+        let s = report.to_json(&["rust/src".into()]).render();
+        assert!(s.contains("\"tool\":\"vcim-lint\""));
+        assert!(s.contains("\"unsuppressed\":1"));
+        assert!(s.contains("\"determinism\""));
+    }
+}

@@ -1,0 +1,138 @@
+//! CLI for the invariant lint pass.
+//!
+//! ```text
+//! cargo run -p vcim-lint -- [ROOT …] [--json [PATH]] [--show-suppressed]
+//! ```
+//!
+//! Findings print as `path:line:col: rule: message`. Exit code 0 when
+//! the tree is clean, 1 on any unsuppressed finding, 2 on usage or IO
+//! errors — so CI can gate on it directly.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+const USAGE: &str = "\
+vcim-lint — invariant lint pass over the voxel-cim source tree
+
+USAGE:
+    vcim-lint [ROOT …] [OPTIONS]
+
+ARGS:
+    ROOT …              directories to lint (default: rust/src)
+
+OPTIONS:
+    --json [PATH]       emit the JSON report; to stdout when PATH is
+                        omitted (PATH must end in .json)
+    --show-suppressed   also print findings covered by vcim:allow
+    --list-rules        print the rule names and exit
+    -h, --help          this help
+";
+
+fn main() -> ExitCode {
+    let mut roots: Vec<String> = Vec::new();
+    let mut json_out: Option<Option<String>> = None; // Some(None) = stdout
+    let mut show_suppressed = false;
+
+    let mut args = std::env::args().skip(1).peekable();
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "-h" | "--help" => {
+                print!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            "--list-rules" => {
+                for r in vcim_lint::rules::RULES {
+                    println!("{r}");
+                }
+                return ExitCode::SUCCESS;
+            }
+            "--show-suppressed" => show_suppressed = true,
+            "--json" => {
+                // An optional PATH operand: only a following `*.json`
+                // argument is taken as the output path, so bare
+                // `--json rust/src` keeps rust/src as a root.
+                let takes_path = args.peek().is_some_and(|p| p.ends_with(".json"));
+                json_out = Some(if takes_path { args.next() } else { None });
+            }
+            other if other.starts_with('-') => {
+                eprintln!("vcim-lint: unknown option `{other}`\n\n{USAGE}");
+                return ExitCode::from(2);
+            }
+            root => roots.push(root.to_string()),
+        }
+    }
+    if roots.is_empty() {
+        roots.push("rust/src".to_string());
+    }
+
+    let mut report = vcim_lint::Report::default();
+    for root in &roots {
+        let path = Path::new(root);
+        if !path.is_dir() {
+            eprintln!("vcim-lint: `{root}` is not a directory (run from the repo root?)");
+            return ExitCode::from(2);
+        }
+        match vcim_lint::lint_tree(path) {
+            Ok(mut r) => {
+                // Make finding paths root-relative for clickability.
+                for f in &mut r.findings {
+                    f.file = format!("{}/{}", root.trim_end_matches('/'), f.file);
+                }
+                report.findings.extend(r.findings);
+                report.files += r.files;
+            }
+            Err(e) => {
+                eprintln!("vcim-lint: failed to lint `{root}`: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let json_to_stdout = matches!(json_out, Some(None));
+    if !json_to_stdout {
+        for f in &report.findings {
+            if f.suppressed && !show_suppressed {
+                continue;
+            }
+            let tag = if f.suppressed { " (suppressed)" } else { "" };
+            println!("{}:{}:{}: {}: {}{tag}", f.file, f.line, f.col, f.rule, f.message);
+        }
+        let by_rule: Vec<String> = report
+            .rule_counts()
+            .iter()
+            .filter(|(_, (total, _))| *total > 0)
+            .map(|(rule, (total, unsup))| format!("{rule}: {total} ({unsup} unsuppressed)"))
+            .collect();
+        println!(
+            "vcim-lint: {} files, {} findings ({} suppressed, {} unsuppressed){}",
+            report.files,
+            report.total(),
+            report.suppressed(),
+            report.unsuppressed(),
+            if by_rule.is_empty() {
+                String::new()
+            } else {
+                format!(" — {}", by_rule.join(", "))
+            }
+        );
+    }
+
+    if let Some(path) = &json_out {
+        let rendered = report.to_json(&roots).render();
+        match path {
+            None => println!("{rendered}"),
+            Some(p) => {
+                if let Err(e) = std::fs::write(p, rendered + "\n") {
+                    eprintln!("vcim-lint: failed to write `{p}`: {e}");
+                    return ExitCode::from(2);
+                }
+            }
+        }
+    }
+
+    if report.unsuppressed() > 0 {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

@@ -1,0 +1,452 @@
+//! The six repo-specific invariant rules (see DESIGN.md, "Static
+//! analysis", for the rationale and the exact scopes).
+//!
+//! Rules are token-sequence heuristics over the lexer's output, scoped
+//! by path. They are deliberately shallow — no type inference, no name
+//! resolution — which keeps the linter dependency-free and fast, at the
+//! cost of (a) file-local map tracking for the determinism rule and
+//! (b) an identifier allowlist for the int8 quant boundary. Both
+//! trade-offs are documented with the rule, and every heuristic miss
+//! can be waived in-tree with a justified `// vcim:allow(<rule>)`.
+
+use crate::lexer::{Tok, TokKind};
+use std::collections::BTreeSet;
+
+/// The rule registry. `vcim:allow` comments may only name these (plus
+/// the engine-internal `lint-allow` meta rule, which is not
+/// suppressible — malformed suppressions must be fixed, not waived).
+pub const RULES: &[&str] = &[
+    "determinism",
+    "int8-purity",
+    "panic-freedom",
+    "safety-comments",
+    "strict-config",
+    "observer-purity",
+];
+
+/// Meta rule for malformed / unused / unjustified `vcim:allow`s.
+pub const ALLOW_RULE: &str = "lint-allow";
+
+/// A rule hit before suppression processing.
+#[derive(Clone, Debug)]
+pub struct RawFinding {
+    pub rule: &'static str,
+    pub line: u32,
+    pub col: u32,
+    pub message: String,
+}
+
+fn ident(t: &Tok, s: &str) -> bool {
+    t.kind == TokKind::Ident && t.text == s
+}
+
+fn punct(t: &Tok, s: &str) -> bool {
+    t.kind == TokKind::Punct && t.text == s
+}
+
+fn ident_in(t: &Tok, set: &[&str]) -> bool {
+    t.kind == TokKind::Ident && set.iter().any(|s| *s == t.text)
+}
+
+fn push(out: &mut Vec<RawFinding>, rule: &'static str, t: &Tok, message: String) {
+    out.push(RawFinding { rule, line: t.line, col: t.col, message });
+}
+
+/// Run every rule over one file. `rel` is the path relative to the
+/// lint root (`/`-separated), which is what scopes each rule.
+pub fn run_rules(rel: &str, code: &[Tok], comments: &[Tok]) -> Vec<RawFinding> {
+    let mut out = Vec::new();
+    determinism(rel, code, &mut out);
+    int8_purity(rel, code, &mut out);
+    panic_freedom(rel, code, &mut out);
+    safety_comments(rel, code, comments, &mut out);
+    strict_config(rel, code, &mut out);
+    observer_purity(rel, code, &mut out);
+    out
+}
+
+fn has_prefix(rel: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| rel.starts_with(p))
+}
+
+// ---------------------------------------------------------------- rules
+
+/// Types whose iteration order is nondeterministic across runs.
+const MAP_TYPES: &[&str] = &["HashMap", "HashSet", "FxHashMap", "FxHashSet"];
+
+/// Methods that visit a map/set in hash order.
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "retain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+];
+
+/// **determinism** — the bit-identity modules (`mapsearch/`, `spconv/`,
+/// `pointcloud/`, `coordinator/`) must not read wall clocks or iterate
+/// hash containers in an order-sensitive way. Keyed lookups
+/// (`get`/`contains`/`insert`/`remove`) are fine; `Instant::now`,
+/// `SystemTime`, and hash-order iteration are not.
+///
+/// Map tracking is file-local: a name counts as a hash container when
+/// this file declares it with a `HashMap`/`HashSet`/`FxHashMap`/
+/// `FxHashSet` type ascription (field, binding, or parameter) or
+/// initializes it from one of those types. Iterating a hash container
+/// imported from another module therefore needs a reviewer, not this
+/// linter — keep such iteration out of the bit-identity modules.
+fn determinism(rel: &str, code: &[Tok], out: &mut Vec<RawFinding>) {
+    if !has_prefix(rel, &["mapsearch/", "spconv/", "pointcloud/", "coordinator/"]) {
+        return;
+    }
+
+    // Clock reads.
+    for i in 0..code.len() {
+        let t = &code[i];
+        if ident(t, "Instant")
+            && code.get(i + 1).is_some_and(|n| punct(n, "::"))
+            && code.get(i + 2).is_some_and(|n| ident(n, "now"))
+        {
+            push(
+                out,
+                "determinism",
+                t,
+                "wall-clock read (Instant::now) in a bit-identity module — route timing \
+                 through obs::stopwatch()"
+                    .into(),
+            );
+        }
+        if ident(t, "SystemTime") {
+            push(
+                out,
+                "determinism",
+                t,
+                "wall-clock read (SystemTime) in a bit-identity module".into(),
+            );
+        }
+    }
+
+    // Pass A: collect file-local hash-container names.
+    // Matches `name: [&|&mut|std::collections::]HashMap…` (fields,
+    // params, struct literals) and `name = [FxHashSet::…]` inits.
+    let mut tracked: BTreeSet<String> = BTreeSet::new();
+    for i in 0..code.len() {
+        if code[i].kind != TokKind::Ident {
+            continue;
+        }
+        let Some(sep) = code.get(i + 1) else { continue };
+        if !(punct(sep, ":") || punct(sep, "=")) {
+            continue;
+        }
+        for j in (i + 2)..code.len().min(i + 10) {
+            let t = &code[j];
+            if ident_in(t, MAP_TYPES) {
+                tracked.insert(code[i].text.clone());
+                break;
+            }
+            // Stop at tokens that end the type/init head position —
+            // notably `<`, so `x: Vec<HashMap<…>>` does not track `x`
+            // (iterating the Vec is deterministic).
+            if t.kind == TokKind::Punct
+                && matches!(t.text.as_str(), ";" | "," | ")" | "(" | "{" | "}" | "<")
+            {
+                break;
+            }
+        }
+    }
+
+    // Pass B: flag hash-order iteration over tracked names.
+    for i in 0..code.len() {
+        let t = &code[i];
+        if t.kind == TokKind::Ident && tracked.contains(&t.text) {
+            if code.get(i + 1).is_some_and(|n| punct(n, "."))
+                && code.get(i + 2).is_some_and(|n| ident_in(n, ITER_METHODS))
+                && code.get(i + 3).is_some_and(|n| punct(n, "("))
+            {
+                let method = &code[i + 2].text;
+                push(
+                    out,
+                    "determinism",
+                    t,
+                    format!(
+                        "hash-order iteration `{}.{}()` in a bit-identity module — iterate \
+                         a sorted view or justify order-independence",
+                        t.text, method
+                    ),
+                );
+            }
+        }
+        // `for pat in [&][mut ][self.]tracked {`
+        if ident(t, "in") {
+            let mut j = i + 1;
+            let mut skipped = 0;
+            while j < code.len() && skipped < 4 {
+                let n = &code[j];
+                if punct(n, "&") || ident(n, "mut") || ident(n, "self") || punct(n, ".") {
+                    j += 1;
+                    skipped += 1;
+                } else {
+                    break;
+                }
+            }
+            if j < code.len()
+                && code[j].kind == TokKind::Ident
+                && tracked.contains(&code[j].text)
+                && code.get(j + 1).is_some_and(|n| punct(n, "{"))
+            {
+                push(
+                    out,
+                    "determinism",
+                    &code[j],
+                    format!(
+                        "hash-order iteration `for … in {}` in a bit-identity module — \
+                         iterate a sorted view or justify order-independence",
+                        code[j].text
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Hot-datapath files for the int8-purity rule: the CIM PE model and
+/// the gather/GEMM/scatter modules. The `cim/` analytic cost models
+/// (energy, tile, mapping, w2b) model *costs* in floating point and are
+/// deliberately out of scope — the rule protects the *datapath*.
+const INT8_FILES: &[&str] = &[
+    "cim/pe.rs",
+    "spconv/quant.rs",
+    "spconv/gather.rs",
+    "spconv/layer.rs",
+    "runtime/gemm.rs",
+    "runtime/stub.rs",
+];
+
+/// The sanctioned quant boundary: float touches the datapath only in
+/// these functions (feature quantization on ingress, the
+/// dequant→ReLU→requant epilogue on egress, and the PJRT literal
+/// marshals that feed them).
+const INT8_ALLOW_FNS: &[&str] = &[
+    "quantize_features",
+    "dequant_relu_quant",
+    "epilogue",
+    "vfe_mean",
+    "f32_literal",
+];
+
+/// **int8-purity** — no `f32`/`f64` (idents, `as` casts, or suffixed
+/// literals) in the int8 datapath files outside the allowlisted quant
+/// boundary functions. Tracks enclosing functions via brace depth; the
+/// allowlist covers a function's whole signature + body.
+fn int8_purity(rel: &str, code: &[Tok], out: &mut Vec<RawFinding>) {
+    if !INT8_FILES.contains(&rel) {
+        return;
+    }
+
+    // Attribute each token to its enclosing fn stack.
+    let mut depth = 0usize;
+    let mut stack: Vec<(String, Option<usize>)> = Vec::new();
+    for i in 0..code.len() {
+        let allowed = stack
+            .iter()
+            .any(|(name, _)| INT8_ALLOW_FNS.contains(&name.as_str()));
+        let t = &code[i];
+
+        if !allowed {
+            let is_float_ident = ident(t, "f32") || ident(t, "f64");
+            let is_float_suffix = t.kind == TokKind::Num
+                && (t.text.ends_with("f32") || t.text.ends_with("f64"));
+            if is_float_ident || is_float_suffix {
+                push(
+                    out,
+                    "int8-purity",
+                    t,
+                    format!(
+                        "`{}` in the int8 datapath — floats may only touch the allowlisted \
+                         quant boundary ({})",
+                        t.text,
+                        INT8_ALLOW_FNS.join(", ")
+                    ),
+                );
+            }
+        }
+
+        if ident(t, "fn") && code.get(i + 1).is_some_and(|n| n.kind == TokKind::Ident) {
+            stack.push((code[i + 1].text.clone(), None));
+        } else if punct(t, "{") {
+            depth += 1;
+            if let Some(top) = stack.last_mut() {
+                if top.1.is_none() {
+                    top.1 = Some(depth);
+                }
+            }
+        } else if punct(t, "}") {
+            if stack.last().is_some_and(|top| top.1 == Some(depth)) {
+                stack.pop();
+            }
+            depth = depth.saturating_sub(1);
+        } else if punct(t, ";") {
+            // A `;` before the body closes a signature-only fn (trait
+            // method declarations).
+            if stack.last().is_some_and(|top| top.1.is_none()) {
+                stack.pop();
+            }
+        }
+    }
+}
+
+/// **panic-freedom** — the serving path (`serving/`, `coordinator/`,
+/// `pipeline/`) returns typed errors; `.unwrap()`, `.expect(…)`,
+/// `panic!`, `todo!`, `unimplemented!` are findings. Invariants that
+/// genuinely cannot fail get a justified `vcim:allow(panic-freedom)`.
+fn panic_freedom(rel: &str, code: &[Tok], out: &mut Vec<RawFinding>) {
+    if !has_prefix(rel, &["serving/", "coordinator/", "pipeline/"]) {
+        return;
+    }
+    for i in 0..code.len() {
+        let t = &code[i];
+        if punct(t, ".")
+            && code
+                .get(i + 1)
+                .is_some_and(|n| ident_in(n, &["unwrap", "expect"]))
+            && code.get(i + 2).is_some_and(|n| punct(n, "("))
+        {
+            let name = &code[i + 1].text;
+            push(
+                out,
+                "panic-freedom",
+                &code[i + 1],
+                format!(
+                    "`.{name}(…)` on the serving path — return a typed error, or justify \
+                     the invariant with vcim:allow"
+                ),
+            );
+        }
+        if ident_in(t, &["panic", "todo", "unimplemented"])
+            && code.get(i + 1).is_some_and(|n| punct(n, "!"))
+        {
+            push(
+                out,
+                "panic-freedom",
+                t,
+                format!("`{}!` on the serving path — return a typed error", t.text),
+            );
+        }
+    }
+}
+
+/// **safety-comments** — every `unsafe` keyword (block, fn, impl) needs
+/// a comment containing `SAFETY:` on the same line or within the three
+/// lines above it. Applies tree-wide.
+fn safety_comments(rel: &str, code: &[Tok], comments: &[Tok], out: &mut Vec<RawFinding>) {
+    let _ = rel; // tree-wide
+    for t in code {
+        if !ident(t, "unsafe") {
+            continue;
+        }
+        let covered = comments.iter().any(|c| {
+            c.text.contains("SAFETY:") && c.line + 3 >= t.line && c.line <= t.line
+        });
+        if !covered {
+            push(
+                out,
+                "safety-comments",
+                t,
+                "`unsafe` without a `// SAFETY:` comment on the preceding lines".into(),
+            );
+        }
+    }
+}
+
+/// **strict-config** — raw `.get("dotted.key")` reads bypass the strict
+/// typed helpers in `util/config.rs` (`int_or`/`float_or`/`bool_or`/
+/// `str_or`/`usize_or`/`parsed_or`/`opt_*`), which is how
+/// present-but-mistyped keys silently fall back to defaults. Applies
+/// tree-wide except inside the helpers themselves.
+fn strict_config(rel: &str, code: &[Tok], out: &mut Vec<RawFinding>) {
+    if rel == "util/config.rs" {
+        return;
+    }
+    for i in 0..code.len() {
+        if punct(&code[i], ".")
+            && code.get(i + 1).is_some_and(|n| ident(n, "get"))
+            && code.get(i + 2).is_some_and(|n| punct(n, "("))
+            && code.get(i + 3).is_some_and(|n| {
+                n.kind == TokKind::Str && n.text.contains('.')
+            })
+        {
+            push(
+                out,
+                "strict-config",
+                &code[i + 1],
+                format!(
+                    "raw config read {} — use the strict typed helpers in util/config.rs",
+                    code[i + 3].text
+                ),
+            );
+        }
+    }
+}
+
+/// Modules allowed to construct observers and read clocks: the
+/// observability layer itself, the pipeline facade that wires it, the
+/// CLI/bench/experiment harnesses that *measure*.
+const OBSERVER_EXEMPT_PREFIXES: &[&str] = &["obs/", "pipeline/", "experiments/"];
+const OBSERVER_EXEMPT_FILES: &[&str] = &["bench_util.rs", "main.rs"];
+
+/// **observer-purity** — outside the exempt modules, nothing constructs
+/// a `Recorder`/`MetricsRegistry` or reads a wall clock. Engine code
+/// receives its `Recorder` from the facade and takes timestamps via
+/// `obs::stopwatch()`, keeping the pure-observer guarantee auditable.
+fn observer_purity(rel: &str, code: &[Tok], out: &mut Vec<RawFinding>) {
+    if has_prefix(rel, OBSERVER_EXEMPT_PREFIXES) || OBSERVER_EXEMPT_FILES.contains(&rel) {
+        return;
+    }
+    for i in 0..code.len() {
+        let t = &code[i];
+        let path2 = |a: &str, b: &str| {
+            ident(t, a)
+                && code.get(i + 1).is_some_and(|n| punct(n, "::"))
+                && code.get(i + 2).is_some_and(|n| ident(n, b))
+        };
+        if path2("Recorder", "from_config") {
+            push(
+                out,
+                "observer-purity",
+                t,
+                "Recorder construction outside obs/ and the facade — thread the facade's \
+                 Recorder through instead"
+                    .into(),
+            );
+        }
+        if path2("MetricsRegistry", "new") {
+            push(
+                out,
+                "observer-purity",
+                t,
+                "MetricsRegistry construction outside obs/ and the facade".into(),
+            );
+        }
+        if path2("Instant", "now") {
+            push(
+                out,
+                "observer-purity",
+                t,
+                "wall-clock read (Instant::now) outside obs/ — use obs::stopwatch()".into(),
+            );
+        }
+        if ident(t, "SystemTime") {
+            push(
+                out,
+                "observer-purity",
+                t,
+                "wall-clock read (SystemTime) outside obs/".into(),
+            );
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Fixture tests: every rule fires on its seeded-violation tree and
+//! stays silent on the clean twin, and the suppression contract holds
+//! end to end through `lint_tree` (walking, rel-path scoping, allows).
+//!
+//! The fixture `.rs` files under `tests/fixtures/` are lint *inputs*,
+//! never compiled — some reference types that do not exist.
+
+use std::path::{Path, PathBuf};
+use vcim_lint::Report;
+
+fn fixture(rel: &str) -> PathBuf {
+    let base = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures");
+    base.join(rel)
+}
+
+fn lint(rel: &str) -> Report {
+    vcim_lint::lint_tree(&fixture(rel)).expect("fixture tree readable")
+}
+
+fn unsuppressed_of(r: &Report, rule: &str) -> usize {
+    let mut n = 0;
+    for f in &r.findings {
+        if f.rule == rule && !f.suppressed {
+            n += 1;
+        }
+    }
+    n
+}
+
+fn has_message(r: &Report, rule: &str, needle: &str) -> bool {
+    for f in &r.findings {
+        if f.rule == rule && f.message.contains(needle) {
+            return true;
+        }
+    }
+    false
+}
+
+/// The bad tree has at least `min` unsuppressed findings of `rule`;
+/// the clean twin has no findings of any rule at all.
+fn assert_fires(dir: &str, rule: &str, min: usize) {
+    let bad = lint(&format!("{dir}/bad"));
+    let hits = unsuppressed_of(&bad, rule);
+    assert!(
+        hits >= min,
+        "{dir}/bad: expected >= {min} unsuppressed `{rule}` findings, got {hits}: {:?}",
+        bad.findings
+    );
+    let clean = lint(&format!("{dir}/clean"));
+    assert!(
+        clean.findings.is_empty(),
+        "{dir}/clean should be silent, got: {:?}",
+        clean.findings
+    );
+}
+
+#[test]
+fn determinism_fires_on_bad_and_not_on_clean() {
+    // One clock read + one hash-order iteration.
+    assert_fires("determinism", "determinism", 2);
+}
+
+#[test]
+fn int8_purity_fires_on_bad_and_not_on_clean() {
+    // Return type, `as f32` cast, and `0.5f32` suffix.
+    assert_fires("int8", "int8-purity", 3);
+}
+
+#[test]
+fn panic_freedom_fires_on_bad_and_not_on_clean() {
+    // `.unwrap()` and `panic!`.
+    assert_fires("panic", "panic-freedom", 2);
+}
+
+#[test]
+fn safety_comments_fire_on_bad_and_not_on_clean() {
+    assert_fires("safety", "safety-comments", 1);
+}
+
+#[test]
+fn strict_config_fires_on_bad_and_not_on_clean() {
+    assert_fires("config", "strict-config", 1);
+}
+
+#[test]
+fn observer_purity_fires_on_bad_and_not_on_clean() {
+    // Recorder construction + direct clock read; the clean twin holds
+    // the same code inside exempt `obs/` plus a stopwatch() caller.
+    assert_fires("observer", "observer-purity", 2);
+}
+
+#[test]
+fn justified_allow_suppresses_and_counts_stay_consistent() {
+    let r = lint("suppression/justified");
+    assert_eq!(r.files, 1);
+    assert_eq!(r.total(), 1, "{:?}", r.findings);
+    assert_eq!(r.unsuppressed(), 0, "{:?}", r.findings);
+    let f = &r.findings[0];
+    assert_eq!(f.file, "mapsearch/cache.rs");
+    assert_eq!(f.rule, "determinism");
+    assert!(f.suppressed);
+    let just = f.justification.as_deref();
+    assert_eq!(just, Some("max over values is order-independent"));
+    assert_eq!(r.rule_counts()["determinism"], (1, 0));
+}
+
+#[test]
+fn bare_allow_does_not_suppress_and_is_itself_flagged() {
+    let r = lint("suppression/bare");
+    assert_eq!(unsuppressed_of(&r, "determinism"), 1, "{:?}", r.findings);
+    assert!(
+        has_message(&r, "lint-allow", "justification"),
+        "{:?}",
+        r.findings
+    );
+}
+
+#[test]
+fn json_report_over_fixtures_has_stable_shape() {
+    let r = lint("suppression/justified");
+    let roots = vec!["tests/fixtures/suppression/justified".to_string()];
+    let json = r.to_json(&roots);
+    let s = json.render();
+    assert!(s.contains("\"tool\":\"vcim-lint\""));
+    assert!(s.contains("\"unsuppressed\":0"));
+    // Every rule appears even at zero findings.
+    let rules = [
+        "determinism",
+        "int8-purity",
+        "panic-freedom",
+        "safety-comments",
+        "strict-config",
+        "observer-purity",
+    ];
+    for rule in rules {
+        assert!(s.contains(&format!("\"{rule}\"")), "{rule} missing in {s}");
+    }
+}

@@ -1,0 +1,9 @@
+//! Fixture: raw dotted config read bypassing the typed helpers.
+//! Never compiled — lint input only.
+
+pub fn frames(cfg: &Config) -> i64 {
+    match cfg.get("dataset.frames") {
+        Some(v) => v.as_int().unwrap_or(0),
+        None => 0,
+    }
+}

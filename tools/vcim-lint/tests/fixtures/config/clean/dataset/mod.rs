@@ -1,0 +1,6 @@
+//! Fixture twin: the strict typed helper path. Never compiled — lint
+//! input only.
+
+pub fn frames(cfg: &Config) -> Result<i64> {
+    cfg.int_or("dataset.frames", 0)
+}

@@ -1,0 +1,15 @@
+//! Fixture: hash-order iteration and wall-clock reads in a
+//! bit-identity module. Never compiled — lint input only.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn lru_scan(entries: &HashMap<u64, u64>) -> u64 {
+    let t = Instant::now();
+    let mut worst = 0;
+    for (_, &v) in entries.iter() {
+        worst = worst.max(v);
+    }
+    let _ = t.elapsed();
+    worst
+}

@@ -1,0 +1,13 @@
+//! Fixture twin: keyed lookups only — no hash-order iteration, no
+//! clock reads. Never compiled — lint input only.
+
+use std::collections::HashMap;
+
+pub fn lookup(entries: &HashMap<u64, u64>, k: u64) -> Option<u64> {
+    entries.get(&k).copied()
+}
+
+pub fn in_key_order(entries: &HashMap<u64, u64>, keys: &mut Vec<u64>) -> Vec<u64> {
+    keys.sort_unstable();
+    keys.iter().filter_map(|k| entries.get(k)).copied().collect()
+}

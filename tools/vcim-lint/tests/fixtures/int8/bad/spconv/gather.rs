@@ -1,0 +1,6 @@
+//! Fixture: floats leak into the int8 datapath outside the quant
+//! boundary. Never compiled — lint input only.
+
+pub fn scale_row(row: &[i8]) -> Vec<f32> {
+    row.iter().map(|&v| v as f32 * 0.5f32).collect()
+}

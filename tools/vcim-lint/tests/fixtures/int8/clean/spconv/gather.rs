@@ -1,0 +1,10 @@
+//! Fixture twin: floats appear only inside the allowlisted quant
+//! boundary function. Never compiled — lint input only.
+
+pub fn quantize_features(x: &[f32], scale: f32) -> Vec<i8> {
+    x.iter().map(|&v| (v / scale) as i8).collect()
+}
+
+pub fn gather_rows(rows: &[i8]) -> Vec<i8> {
+    rows.to_vec()
+}

@@ -1,0 +1,8 @@
+//! Fixture: engine-side code constructs an observer and reads the
+//! clock directly. Never compiled — lint input only.
+
+pub fn produce(cfg: &Config) -> Frame {
+    let rec = Recorder::from_config(cfg);
+    let t0 = Instant::now();
+    Frame { produced: t0, rec }
+}

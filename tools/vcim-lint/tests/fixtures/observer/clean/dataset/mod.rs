@@ -1,0 +1,7 @@
+//! Fixture twin: engine code takes timestamps through the sanctioned
+//! funnel. Never compiled — lint input only.
+
+pub fn produce() -> u128 {
+    let t0 = crate::obs::stopwatch();
+    t0.elapsed().as_nanos()
+}

@@ -1,0 +1,10 @@
+//! Fixture twin: the observability layer itself may read clocks and
+//! build observers. Never compiled — lint input only.
+
+pub fn stopwatch() -> Instant {
+    Instant::now()
+}
+
+pub fn build(cfg: &Config) -> Recorder {
+    Recorder::from_config(cfg)
+}

@@ -1,0 +1,12 @@
+//! Fixture: panics on the serving path. Never compiled — lint input
+//! only.
+
+pub fn pick(xs: &[u32]) -> u32 {
+    *xs.first().unwrap()
+}
+
+pub fn must(flag: bool) {
+    if !flag {
+        panic!("flag required");
+    }
+}

@@ -1,0 +1,6 @@
+//! Fixture twin: the serving path returns options and typed errors.
+//! Never compiled — lint input only.
+
+pub fn pick(xs: &[u32]) -> Option<u32> {
+    xs.first().copied()
+}

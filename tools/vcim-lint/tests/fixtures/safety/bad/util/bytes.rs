@@ -1,0 +1,6 @@
+//! Fixture: `unsafe` with no SAFETY comment. Never compiled — lint
+//! input only.
+
+pub fn as_bytes(v: &[i8]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len()) }
+}

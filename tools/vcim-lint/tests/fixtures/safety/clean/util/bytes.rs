@@ -1,0 +1,9 @@
+//! Fixture twin: the same cast with its safety argument written down.
+//! Never compiled — lint input only.
+
+pub fn as_bytes(v: &[i8]) -> &[u8] {
+    // SAFETY: i8 and u8 share size and alignment; pointer and length
+    // come from the borrowed slice and the result inherits its
+    // lifetime.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len()) }
+}

@@ -1,0 +1,9 @@
+//! Fixture: a bare allow suppresses nothing and is itself flagged.
+//! Never compiled — lint input only.
+
+use std::collections::HashMap;
+
+pub fn max_val(entries: &HashMap<u64, u64>) -> u64 {
+    // vcim:allow(determinism)
+    entries.values().copied().max().unwrap_or(0)
+}

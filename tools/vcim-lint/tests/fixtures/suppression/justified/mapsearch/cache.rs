@@ -1,0 +1,9 @@
+//! Fixture: a justified allow suppresses the finding on the next
+//! line. Never compiled — lint input only.
+
+use std::collections::HashMap;
+
+pub fn max_val(entries: &HashMap<u64, u64>) -> u64 {
+    // vcim:allow(determinism) max over values is order-independent
+    entries.values().copied().max().unwrap_or(0)
+}
